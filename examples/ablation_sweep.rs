@@ -1,0 +1,44 @@
+//! Ablation playground: sweep the hybrid's SQ fraction and the VQ
+//! codebook width on one model, reporting divergence vs bpw — the
+//! compression/quality trade-off curve behind the paper's 3.275-bpw
+//! operating point (and its §A.5 future-work directions).
+//!
+//! ```sh
+//! cargo run --release --example ablation_sweep -- --size 1B
+//! ```
+
+use rwkvquant::config::Method;
+use rwkvquant::experiments::*;
+use rwkvquant::report::{Cell, Table};
+use rwkvquant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let size = args.get_or("size", "0.5B");
+    let model = build_model("rwkv6", size, 123);
+    let ps = probes(model.config.vocab, 3, 10, 7);
+
+    let mut t = Table::new(
+        format!("sq-fraction sweep — rwkv6-{size}"),
+        &["SQ fraction", "avg bpw", "divergence"],
+    );
+    for frac in [0.0, 0.25, 0.5, 0.75, 0.9, 1.0] {
+        let mut cfg = bench_config(Method::RwkvQuant, 3.275, 55);
+        cfg.sq_fraction = frac;
+        let cell = run_cell(&model, None, &cfg, &ps);
+        t.row(vec![Cell::f(frac, 2), Cell::f(cell.avg_bpw, 3), Cell::F64(cell.divergence, 5)]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        format!("vq codebook width sweep — rwkv6-{size}"),
+        &["vq bits", "avg bpw", "divergence"],
+    );
+    for bits in [6u32, 7, 8, 9] {
+        let mut cfg = bench_config(Method::Gptvq, 3.5, 56);
+        cfg.vq_bits = bits;
+        let cell = run_cell(&model, None, &cfg, &ps);
+        t2.row(vec![Cell::Int(bits as i64), Cell::f(cell.avg_bpw, 3), Cell::F64(cell.divergence, 5)]);
+    }
+    t2.print();
+}

@@ -1,0 +1,62 @@
+//! Figure 6/7/8 companion: scan a model with the coarse-to-fine proxy
+//! and dump the classification of every layer (uniform / non-uniform /
+//! uniform-with-outliers), plus the Fig. 5 SQ/VQ proportions.
+//!
+//! ```sh
+//! cargo run --release --example proxy_scan -- --arch rwkv6 --size 1B
+//! ```
+
+use rwkvquant::experiments::build_model;
+use rwkvquant::model::synthetic::{generate_llama, size_config};
+use rwkvquant::quant::hybrid::{calibrate_taus, decide, Choice};
+use rwkvquant::quant::proxy;
+use rwkvquant::report::{Cell, Table};
+use rwkvquant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let arch = args.get_or("arch", "rwkv6");
+    let size = args.get_or("size", "1B");
+    let model = if arch == "llama" {
+        generate_llama(&size_config(arch, size), 77)
+    } else {
+        build_model(arch, size, 77)
+    };
+
+    let idx = model.quantizable_indices();
+    let pairs: Vec<proxy::ProxyPair> = idx
+        .iter()
+        .map(|&i| proxy::compute(&model.layers[i].1.data, 4))
+        .collect();
+    let cal = calibrate_taus(&pairs, 0.9);
+    println!(
+        "auto-calibrated τ_c = {:.3}, τ_f = {:.2} (SQ share {:.0}%)",
+        cal.tau_c,
+        cal.tau_f,
+        cal.sq_share * 100.0
+    );
+
+    let mut t = Table::new(
+        format!("proxy scan — {arch}-{size}"),
+        &["Layer", "P_c", "P_f", "class", "Eq.18"],
+    );
+    for (pos, &i) in idx.iter().enumerate() {
+        let p = pairs[pos];
+        let class = if p.p_c >= cal.tau_c {
+            "non-uniform (Fig.7)"
+        } else if p.p_f >= cal.tau_f {
+            "uniform+outliers (Fig.8)"
+        } else {
+            "uniform (Fig.6)"
+        };
+        let ch = decide(p, cal.tau_c, cal.tau_f);
+        t.row(vec![
+            Cell::s(model.layers[i].0.name.clone()),
+            Cell::f(p.p_c, 3),
+            Cell::f(p.p_f, 2),
+            Cell::s(class),
+            Cell::s(if ch == Choice::Sq { "SQ" } else { "VQ" }),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,146 @@
+"""AOT lowering: JAX (+Pallas) → HLO **text** → artifacts/ for the Rust
+PJRT runtime.
+
+HLO text, not ``.serialize()``: the image's xla_extension 0.5.1 rejects
+jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+* ``rwkv_step.hlo.txt``    — one decode token of the trained tiny RWKV;
+  weights are *runtime inputs* (uploaded once as PJRT buffers by Rust),
+  so the same graph serves fp and dequantized-quantized weights.
+* ``rwkv_step.inputs.txt`` — the flattened input ordering contract.
+* ``vq_matvec.hlo.txt``    — the fused codebook-gather matvec kernel
+  (L1, Table 4's quantized hot path), lowered standalone.
+* ``smoke.hlo.txt``        — tiny matmul graph for runtime smoke tests.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dequant_matmul as dq
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_input_names(args_tree):
+    """Names of the flattened inputs, in lowering order."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(args_tree)[0]
+    names = []
+    for path, _leaf in leaves_with_paths:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append("/".join(parts) if parts else "arg")
+    return names
+
+
+def lower_rwkv_step(cfg, params, out_dir):
+    """Decode-step graph with (token, state, params) as runtime inputs."""
+
+    def step(token, state, params):
+        logits, ns = M.model_step(params, cfg, token, state, use_pallas=True)
+        return (logits, ns["aa"], ns["bb"], ns["pp"], ns["x_att"], ns["x_ffn"])
+
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    state_spec = {
+        k: jax.ShapeDtypeStruct((cfg.n_layer, cfg.d_model), jnp.float32)
+        for k in ["aa", "bb", "pp", "x_att", "x_ffn"]
+    }
+    param_spec = {
+        k: jax.ShapeDtypeStruct(np.asarray(v).shape, jnp.float32)
+        for k, v in params.items()
+    }
+    lowered = jax.jit(step).lower(tok_spec, state_spec, param_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "rwkv_step.hlo.txt"), "w") as f:
+        f.write(text)
+
+    names = flat_input_names((tok_spec, state_spec, param_spec))
+    with open(os.path.join(out_dir, "rwkv_step.inputs.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+
+    meta = {
+        "arch": cfg.arch,
+        "n_layer": cfg.n_layer,
+        "d_model": cfg.d_model,
+        "vocab": cfg.vocab,
+        "ffn_dim": cfg.ffn_dim,
+        "outputs": ["logits", "aa", "bb", "pp", "x_att", "x_ffn"],
+        "n_inputs": len(names),
+    }
+    with open(os.path.join(out_dir, "rwkv_step.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"rwkv_step.hlo.txt: {len(text)} chars, {len(names)} inputs")
+
+
+def lower_vq_matvec(out_dir, n_entries=256, d=4, oc=128, ic=128):
+    """Standalone fused VQ dequant-matvec (L1 kernel) artifact."""
+
+    def fn(codebook, idx, x):
+        return (dq.dequant_matvec(codebook, idx, x, oc=oc, ic=ic),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n_entries, d), jnp.float32),
+        jax.ShapeDtypeStruct((oc * ic // d,), jnp.int32),
+        jax.ShapeDtypeStruct((ic,), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "vq_matvec.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, "vq_matvec.meta.json"), "w") as f:
+        json.dump({"n_entries": n_entries, "d": d, "oc": oc, "ic": ic}, f)
+    print(f"vq_matvec.hlo.txt: {len(text)} chars")
+
+
+def lower_smoke(out_dir):
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    with open(os.path.join(out_dir, "smoke.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"smoke.hlo.txt: {len(text)} chars")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    lower_smoke(args.out)
+    lower_vq_matvec(args.out)
+
+    store = os.path.join(args.out, "tiny_rwkv.bin")
+    if os.path.exists(store):
+        cfg, params = M.load_store(store)
+        lower_rwkv_step(cfg, params, args.out)
+    else:
+        print(f"warning: {store} missing — run compile.train first; "
+              "skipping rwkv_step artifact")
+
+
+if __name__ == "__main__":
+    main()

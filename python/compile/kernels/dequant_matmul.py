@@ -1,0 +1,98 @@
+"""Pallas fused codebook-dequantize matvec kernel (L1).
+
+The serving hot-spot of a VQ-quantized RWKV decode step: gather codebook
+entries by index and contract with the activation without materialising
+the full fp weight in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the codebook is tiny
+(2^k × d fp16/fp32) and lives wholly in VMEM — the analogue of the CUDA
+shared-memory LUT in VPTQ's kernels; the index stream is the only
+weight-proportional HBM traffic (k bits/weight after packing). The grid
+tiles the output dimension; each program gathers its `(block_oc × ic)`
+weight tile and reduces against the VMEM-resident activation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dq_matvec_kernel(cb_ref, idx_ref, x_ref, out_ref, *, ic, d):
+    # idx tile: (block_oc * ic // d,) indices for this tile's rows
+    idx = idx_ref[...]
+    gathered = cb_ref[idx, :]  # (tile_vecs, d)
+    block_oc = out_ref.shape[0]
+    w = gathered.reshape(block_oc, ic)
+    out_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("oc", "ic", "block_oc"))
+def dequant_matvec(codebook, idx, x, oc, ic, block_oc=64):
+    """y = (codebook[idx].reshape(oc, ic)) @ x, fused gather+matvec.
+
+    Args:
+      codebook: (n_entries, d) float32.
+      idx: (oc * ic // d,) int32, row-major over the weight.
+      x: (ic,) float32.
+    """
+    n_entries, d = codebook.shape
+    assert (oc * ic) % d == 0 and ic % d == 0
+    block_oc = min(block_oc, oc)
+    assert oc % block_oc == 0
+    vecs_per_block = block_oc * ic // d
+    return pl.pallas_call(
+        functools.partial(_dq_matvec_kernel, ic=ic, d=d),
+        grid=(oc // block_oc,),
+        in_specs=[
+            pl.BlockSpec((n_entries, d), lambda i: (0, 0)),  # codebook resident
+            pl.BlockSpec((vecs_per_block,), lambda i: (i,)),
+            pl.BlockSpec((ic,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_oc,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((oc,), jnp.float32),
+        interpret=True,
+    )(codebook, idx, x)
+
+
+def _sq_dq_matvec_kernel(codes_ref, scales_ref, mins_ref, x_ref, out_ref,
+                         *, ic, group):
+    block_oc = out_ref.shape[0]
+    codes = codes_ref[...].astype(jnp.float32).reshape(block_oc, ic)
+    # per-(row, column-group) grids, row-major group order within the tile
+    n_groups_row = ic // group
+    scales = scales_ref[...].reshape(block_oc, n_groups_row)
+    mins = mins_ref[...].reshape(block_oc, n_groups_row)
+    s = jnp.repeat(scales, group, axis=1)
+    m = jnp.repeat(mins, group, axis=1)
+    w = m + s * codes
+    out_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("oc", "ic", "group", "block_oc"))
+def sq_dequant_matvec(codes, scales, mins, x, oc, ic, group, block_oc=64):
+    """y = dequant(codes; scales, mins) @ x for group-wise SQ weights.
+
+    Args:
+      codes: (oc*ic,) uint8/int32 quantized codes (row-major).
+      scales/mins: (oc*ic//group,) per-group grid parameters.
+      x: (ic,) float32.
+    """
+    assert ic % group == 0
+    block_oc = min(block_oc, oc)
+    assert oc % block_oc == 0
+    groups_per_block = block_oc * ic // group
+    return pl.pallas_call(
+        functools.partial(_sq_dq_matvec_kernel, ic=ic, group=group),
+        grid=(oc // block_oc,),
+        in_specs=[
+            pl.BlockSpec((block_oc * ic,), lambda i: (i,)),
+            pl.BlockSpec((groups_per_block,), lambda i: (i,)),
+            pl.BlockSpec((groups_per_block,), lambda i: (i,)),
+            pl.BlockSpec((ic,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_oc,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((oc,), jnp.float32),
+        interpret=True,
+    )(codes, scales, mins, x)

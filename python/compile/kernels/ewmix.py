@@ -1,0 +1,34 @@
+"""Pallas element-wise mixing kernel (L1).
+
+The token-shift interpolation `mu ⊙ a + (1-mu) ⊙ b` that precedes every
+RWKV projection (Eqs. 20-22, 25-26) — the operator whose weights get the
+§3.2 codebook optimisation. Pure VPU work tiled to lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ewmix_kernel(mu_ref, a_ref, b_ref, out_ref):
+    mu = mu_ref[...]
+    out_ref[...] = mu * a_ref[...] + (1.0 - mu) * b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def ewmix(mu, a, b, block_d=128):
+    """mu ⊙ a + (1-mu) ⊙ b over (d,) vectors, d % block_d == 0."""
+    (d,) = mu.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    return pl.pallas_call(
+        _ewmix_kernel,
+        grid=(d // block_d,),
+        in_specs=[spec] * 3,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(mu, a, b)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness contract).
+
+Every Pallas kernel in this package is validated against these functions
+by ``python/tests/test_kernels.py`` before ``aot.py`` lowers anything.
+The WKV recurrence mirrors ``rust/src/model/rwkv.rs`` exactly (same
+stabilisation, same state layout), so Rust, JAX-ref and Pallas all agree.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ewmix_ref(mu, a, b):
+    """Token-shift interpolation: mu ⊙ a + (1 - mu) ⊙ b (Eqs. 20-22)."""
+    return mu * a + (1.0 - mu) * b
+
+
+def wkv_step_ref(k, v, w, u, aa, bb, pp):
+    """One token of the stabilised channel-wise WKV recurrence (Eq. 23).
+
+    Args:
+      k, v: (d,) current key/value.
+      w:    (d,) positive per-channel decay.
+      u:    (d,) bonus for the current token.
+      aa, bb, pp: (d,) recurrence state (numerator, denominator, max-exp).
+
+    Returns: (wkv, (aa', bb', pp')).
+    """
+    ww = u + k
+    p = jnp.maximum(pp, ww)
+    e1 = jnp.exp(pp - p)
+    e2 = jnp.exp(ww - p)
+    wkv = (e1 * aa + e2 * v) / jnp.maximum(e1 * bb + e2, 1e-30)
+
+    ww2 = pp - w
+    p2 = jnp.maximum(ww2, k)
+    ea = jnp.exp(ww2 - p2)
+    eb = jnp.exp(k - p2)
+    aa2 = ea * aa + eb * v
+    bb2 = ea * bb + eb
+    return wkv, (aa2, bb2, p2)
+
+
+def wkv_sequence_ref(ks, vs, w, u, aa, bb, pp):
+    """Scan `wkv_step_ref` over a (T, d) sequence. Returns (T, d) wkv
+    outputs and the final state."""
+
+    def step(state, kv):
+        saa, sbb, spp = state
+        k, v = kv
+        out, (aa2, bb2, pp2) = wkv_step_ref(k, v, w, u, saa, sbb, spp)
+        return (aa2, bb2, pp2), out
+
+    (aa_f, bb_f, pp_f), outs = lax.scan(step, (aa, bb, pp), (ks, vs))
+    return outs, (aa_f, bb_f, pp_f)
+
+
+def dequant_matvec_ref(codebook, idx, x, oc, ic):
+    """VQ dequantize-then-matvec oracle.
+
+    Args:
+      codebook: (2^k, d) float entries.
+      idx: (oc*ic//d,) int32 codebook indices (row-major over W).
+      x: (ic,) activation.
+
+    Returns: (oc,) y = W @ x with W = codebook[idx].reshape(oc, ic).
+    """
+    w = codebook[idx].reshape(oc, ic)
+    return w @ x
+
+
+def sq_dequant_matvec_ref(codes, scales, mins, group, x, oc, ic):
+    """SQ dequantize-then-matvec oracle: w = min_g + scale_g * code."""
+    g = jnp.arange(oc * ic) // group
+    flat = mins[g] + scales[g] * codes.astype(jnp.float32)
+    return flat.reshape(oc, ic) @ x
+
+
+def layer_norm_ref(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b

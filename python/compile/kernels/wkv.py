@@ -1,0 +1,130 @@
+"""Pallas WKV kernels — the RWKV compute hot-spot (L1).
+
+TPU-oriented design (see DESIGN.md §Hardware-Adaptation): the recurrence
+state lives in VMEM-resident channel tiles; the grid partitions the
+channel dimension so each program instance owns a `(block_d,)` state
+slice, the analogue of the CUDA per-head threadblock in the reference
+RWKV kernels. The sequence kernel walks time inside the kernel with
+`fori_loop`, streaming `(T, block_d)` key/value tiles HBM→VMEM via
+`BlockSpec`.
+
+All kernels run `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the AOT
+artifacts run anywhere (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_D = 128  # one VPU lane row; d is padded to a multiple by callers
+
+
+def _wkv_step_kernel(k_ref, v_ref, w_ref, u_ref, aa_ref, bb_ref, pp_ref,
+                     out_ref, aa2_ref, bb2_ref, pp2_ref):
+    k = k_ref[...]
+    v = v_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    aa = aa_ref[...]
+    bb = bb_ref[...]
+    pp = pp_ref[...]
+
+    ww = u + k
+    p = jnp.maximum(pp, ww)
+    e1 = jnp.exp(pp - p)
+    e2 = jnp.exp(ww - p)
+    out_ref[...] = (e1 * aa + e2 * v) / jnp.maximum(e1 * bb + e2, 1e-30)
+
+    ww2 = pp - w
+    p2 = jnp.maximum(ww2, k)
+    ea = jnp.exp(ww2 - p2)
+    eb = jnp.exp(k - p2)
+    aa2_ref[...] = ea * aa + eb * v
+    bb2_ref[...] = ea * bb + eb
+    pp2_ref[...] = p2
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def wkv_step(k, v, w, u, aa, bb, pp, block_d=DEFAULT_BLOCK_D):
+    """One decode token of the WKV recurrence for all channels.
+
+    Shapes: all (d,) with d % block_d == 0 (callers pad).
+    Returns (wkv, aa', bb', pp').
+    """
+    (d,) = k.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0, f"d={d} not a multiple of block_d={block_d}"
+    grid = (d // block_d,)
+    spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((d,), jnp.float32)] * 4
+    return tuple(
+        pl.pallas_call(
+            _wkv_step_kernel,
+            grid=grid,
+            in_specs=[spec] * 7,
+            out_specs=[spec] * 4,
+            out_shape=out_shape,
+            interpret=True,
+        )(k, v, w, u, aa, bb, pp)
+    )
+
+
+def _wkv_seq_kernel(ks_ref, vs_ref, w_ref, u_ref, aa_ref, bb_ref, pp_ref,
+                    out_ref, aa2_ref, bb2_ref, pp2_ref, *, seq_len):
+    w = w_ref[...]
+    u = u_ref[...]
+
+    def body(t, state):
+        aa, bb, pp = state
+        k = ks_ref[t, :]
+        v = vs_ref[t, :]
+        ww = u + k
+        p = jnp.maximum(pp, ww)
+        e1 = jnp.exp(pp - p)
+        e2 = jnp.exp(ww - p)
+        out_ref[t, :] = (e1 * aa + e2 * v) / jnp.maximum(e1 * bb + e2, 1e-30)
+        ww2 = pp - w
+        p2 = jnp.maximum(ww2, k)
+        ea = jnp.exp(ww2 - p2)
+        eb = jnp.exp(k - p2)
+        return ea * aa + eb * v, ea * bb + eb, p2
+
+    aa, bb, pp = jax.lax.fori_loop(
+        0, seq_len, body, (aa_ref[...], bb_ref[...], pp_ref[...])
+    )
+    aa2_ref[...] = aa
+    bb2_ref[...] = bb
+    pp2_ref[...] = pp
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def wkv_sequence(ks, vs, w, u, aa, bb, pp, block_d=DEFAULT_BLOCK_D):
+    """Full-sequence WKV scan: ks/vs are (T, d); returns ((T, d), state').
+
+    Grid over channel blocks; state stays in VMEM across the whole T loop
+    (the TPU translation of the CUDA persistent-threadblock scan).
+    """
+    t, d = ks.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    grid = (d // block_d,)
+    vec = pl.BlockSpec((block_d,), lambda i: (i,))
+    seq = pl.BlockSpec((t, block_d), lambda i: (0, i))
+    outs = pl.pallas_call(
+        functools.partial(_wkv_seq_kernel, seq_len=t),
+        grid=grid,
+        in_specs=[seq, seq, vec, vec, vec, vec, vec],
+        out_specs=[seq, vec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=True,
+    )(ks, vs, w, u, aa, bb, pp)
+    return outs[0], (outs[1], outs[2], outs[3])

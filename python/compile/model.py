@@ -1,0 +1,220 @@
+"""L2: the RWKV forward pass in JAX, mirroring ``rust/src/model/rwkv.rs``
+equation-for-equation (same parameter names, same WKV stabilisation, same
+token-shift/channel-mixing structure), calling the L1 Pallas kernels.
+
+Also implements the ``RWKVQ1`` binary weight-store codec shared with the
+Rust crate (``rust/src/model/store.rs``) so weights flow
+train.py → artifacts/tiny_rwkv.bin → {aot.py, rust}.
+"""
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ewmix as ewmix_k
+from .kernels import ref as kref
+from .kernels import wkv as wkv_k
+
+# ParamClass tags (must match rust/src/model/store.rs)
+CLASS_MATMUL = 0
+CLASS_ELEMENTWISE = 1
+CLASS_VECTOR = 2
+CLASS_EMBEDDING = 3
+
+MAGIC = b"RWKVQ1\x00\x00"
+
+
+class Config:
+    def __init__(self, arch, n_layer, d_model, vocab, head_dim=64, ffn_ratio=3.5):
+        self.arch = arch
+        self.n_layer = n_layer
+        self.d_model = d_model
+        self.vocab = vocab
+        self.head_dim = head_dim
+        self.ffn_ratio = ffn_ratio
+
+    @property
+    def ffn_dim(self):
+        # mirrors ModelConfig::ffn_dim in rust/src/config/mod.rs
+        return max(int(self.d_model * self.ffn_ratio) // 32, 1) * 32
+
+    @property
+    def gated(self):
+        return self.arch == "rwkv7"
+
+
+# ---------------------------------------------------------------------------
+# RWKVQ1 store codec
+# ---------------------------------------------------------------------------
+
+def save_store(path, cfg, params, classes):
+    """Write params (dict name -> np.ndarray 2-D) in RWKVQ1 format."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        arch = cfg.arch.encode()
+        f.write(struct.pack("<I", len(arch)))
+        f.write(arch)
+        f.write(struct.pack("<IIII", cfg.n_layer, cfg.d_model, cfg.vocab, cfg.head_dim))
+        f.write(struct.pack("<d", cfg.ffn_ratio))
+        f.write(struct.pack("<I", len(params)))
+        for name, arr in params.items():
+            arr = np.asarray(arr, dtype=np.float32)
+            if arr.ndim == 1:
+                arr = arr[None, :]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", classes[name]))
+            f.write(struct.pack("<QQ", arr.shape[0], arr.shape[1]))
+            f.write(arr.tobytes())
+
+
+def load_store(path):
+    """Read an RWKVQ1 store; returns (Config, dict name -> np.ndarray)."""
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, f"bad magic in {path}"
+        (alen,) = struct.unpack("<I", f.read(4))
+        arch = f.read(alen).decode()
+        n_layer, d_model, vocab, head_dim = struct.unpack("<IIII", f.read(16))
+        (ffn_ratio,) = struct.unpack("<d", f.read(8))
+        cfg = Config(arch, n_layer, d_model, vocab, head_dim, ffn_ratio)
+        (count,) = struct.unpack("<I", f.read(4))
+        params = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (_cls,) = struct.unpack("<B", f.read(1))
+            rows, cols = struct.unpack("<QQ", f.read(16))
+            data = np.frombuffer(f.read(rows * cols * 4), dtype=np.float32)
+            params[name] = data.reshape(rows, cols).copy()
+        return cfg, params
+
+
+def param_classes(cfg):
+    """name -> ParamClass for every parameter of this config
+    (mirrors rwkv::init_params)."""
+    classes = {"emb": CLASS_EMBEDDING, "head": CLASS_EMBEDDING,
+               "ln_out.g": CLASS_VECTOR, "ln_out.b": CLASS_VECTOR}
+    for b in range(cfg.n_layer):
+        p = f"blocks.{b}."
+        for v in ["ln1.g", "ln1.b", "ln2.g", "ln2.b", "att.decay", "att.bonus"]:
+            classes[p + v] = CLASS_VECTOR
+        mus = ["att.mu_r", "att.mu_k", "att.mu_v", "ffn.mu_r", "ffn.mu_k"]
+        mats = ["att.w_r", "att.w_k", "att.w_v", "att.w_o",
+                "ffn.w_r", "ffn.w_k", "ffn.w_v"]
+        if cfg.gated:
+            mus.append("att.mu_g")
+            mats.append("att.w_g")
+        for v in mus:
+            classes[p + v] = CLASS_ELEMENTWISE
+        for v in mats:
+            classes[p + v] = CLASS_MATMUL
+    return classes
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def init_state(cfg):
+    """Fresh recurrence state: dict of (n_layer, d) arrays."""
+    z = jnp.zeros((cfg.n_layer, cfg.d_model), jnp.float32)
+    return {
+        "aa": z,
+        "bb": z,
+        "pp": jnp.full((cfg.n_layer, cfg.d_model), -1e30, jnp.float32),
+        "x_att": z,
+        "x_ffn": z,
+    }
+
+
+def _vec(params, name):
+    return params[name].reshape(-1)
+
+
+def model_step(params, cfg, token, state, use_pallas=True):
+    """One decode token. Returns (logits, new_state).
+
+    `use_pallas=True` routes the token-shift mixes and the WKV recurrence
+    through the L1 Pallas kernels (the AOT serving graph);
+    `use_pallas=False` uses the jnp reference path (differentiable, used
+    by train.py).
+    """
+    mix = ewmix_k.ewmix if use_pallas else kref.ewmix_ref
+    d = cfg.d_model
+    x = params["emb"][token]
+
+    new_state = {k: [] for k in ("aa", "bb", "pp", "x_att", "x_ffn")}
+    for b in range(cfg.n_layer):
+        p = f"blocks.{b}."
+        xx = kref.layer_norm_ref(x, _vec(params, p + "ln1.g"), _vec(params, p + "ln1.b"))
+        xa = state["x_att"][b]
+        r_in = mix(_vec(params, p + "att.mu_r"), xx, xa)
+        k_in = mix(_vec(params, p + "att.mu_k"), xx, xa)
+        v_in = mix(_vec(params, p + "att.mu_v"), xx, xa)
+        r = params[p + "att.w_r"] @ r_in
+        k = params[p + "att.w_k"] @ k_in
+        v = params[p + "att.w_v"] @ v_in
+
+        if use_pallas:
+            wkv, aa2, bb2, pp2 = wkv_k.wkv_step(
+                k, v, _vec(params, p + "att.decay"), _vec(params, p + "att.bonus"),
+                state["aa"][b], state["bb"][b], state["pp"][b],
+            )
+        else:
+            wkv, (aa2, bb2, pp2) = kref.wkv_step_ref(
+                k, v, _vec(params, p + "att.decay"), _vec(params, p + "att.bonus"),
+                state["aa"][b], state["bb"][b], state["pp"][b],
+            )
+
+        gate = jax.nn.sigmoid(r)
+        out = gate * wkv
+        if cfg.gated:
+            g_in = mix(_vec(params, p + "att.mu_g"), xx, xa)
+            g = params[p + "att.w_g"] @ g_in
+            out = out * jax.nn.sigmoid(g) * 2.0
+        x = x + params[p + "att.w_o"] @ out
+
+        xc = kref.layer_norm_ref(x, _vec(params, p + "ln2.g"), _vec(params, p + "ln2.b"))
+        xf = state["x_ffn"][b]
+        rp_in = mix(_vec(params, p + "ffn.mu_r"), xc, xf)
+        kp_in = mix(_vec(params, p + "ffn.mu_k"), xc, xf)
+        rp = params[p + "ffn.w_r"] @ rp_in
+        kp = params[p + "ffn.w_k"] @ kp_in
+        kp = jnp.maximum(kp, 0.0) ** 2
+        x = x + jax.nn.sigmoid(rp) * (params[p + "ffn.w_v"] @ kp)
+
+        new_state["aa"].append(aa2)
+        new_state["bb"].append(bb2)
+        new_state["pp"].append(pp2)
+        new_state["x_att"].append(xx)
+        new_state["x_ffn"].append(xc)
+
+    xo = kref.layer_norm_ref(x, _vec(params, "ln_out.g"), _vec(params, "ln_out.b"))
+    logits = params["head"] @ xo
+    ns = {k: jnp.stack(v) for k, v in new_state.items()}
+    return logits, ns
+
+
+def forward_sequence(params, cfg, tokens):
+    """Teacher-forced logits over a token sequence (jnp reference path,
+    differentiable; used by train.py). tokens: (T,) int32.
+    Returns (T, vocab) logits."""
+
+    def step(state, tok):
+        logits, ns = model_step(params, cfg, tok, state, use_pallas=False)
+        return ns, logits
+
+    _, logits = jax.lax.scan(step, init_state(cfg), tokens)
+    return logits
+
+
+def sequence_loss(params, cfg, tokens):
+    """Mean next-token cross-entropy of `tokens` (T,)."""
+    logits = forward_sequence(params, cfg, tokens[:-1])
+    targets = tokens[1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=1).squeeze(1)
+    return jnp.mean(nll)

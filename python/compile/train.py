@@ -1,0 +1,194 @@
+"""Tiny-corpus training (build-time only).
+
+Trains a small RWKV-6 on a synthetic order-2 Markov grammar corpus for a
+few hundred Adam steps — producing the *real small model* used by the
+end-to-end serving example, the Table 5/7 ablations and the perplexity
+evaluations. Writes:
+
+* ``artifacts/tiny_rwkv.bin``  — trained weights (RWKVQ1 store)
+* ``artifacts/corpus.bin``     — the token corpus (RWKVC1, read by Rust)
+* ``artifacts/train_log.txt``  — step/loss curve (quoted in EXPERIMENTS.md)
+
+Usage: python -m compile.train --out ../artifacts [--steps N]
+"""
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Grammar corpus (written to corpus.bin; Rust reads it back for eval)
+# ---------------------------------------------------------------------------
+
+def build_grammar(vocab, branch, rng):
+    """Sparse order-2 Markov grammar: (8 buckets × vocab) states, each with
+    `branch` weighted successors (Zipf-ish)."""
+    buckets = 8
+    succ_tok = rng.integers(0, vocab, size=(buckets * vocab, branch))
+    succ_w = rng.gamma(0.7, 1.0, size=(buckets * vocab, branch)) + 0.05
+    return {"vocab": vocab, "buckets": buckets, "tok": succ_tok, "w": succ_w}
+
+
+def sample_grammar(g, length, rng):
+    out = np.empty(length, dtype=np.int32)
+    p2 = int(rng.integers(g["vocab"]))
+    p1 = int(rng.integers(g["vocab"]))
+    for i in range(length):
+        s = (p2 % g["buckets"]) * g["vocab"] + p1
+        w = g["w"][s]
+        t = int(g["tok"][s][rng.choice(len(w), p=w / w.sum())])
+        out[i] = t
+        p2, p1 = p1, t
+    return out
+
+
+def save_corpus(path, vocab, train_toks, valid_toks):
+    with open(path, "wb") as f:
+        f.write(b"RWKVC1\x00\x00")
+        f.write(struct.pack("<IQQ", vocab, len(train_toks), len(valid_toks)))
+        f.write(np.asarray(train_toks, dtype=np.uint32).tobytes())
+        f.write(np.asarray(valid_toks, dtype=np.uint32).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (mirrors rwkv::init_params in spirit; trained anyway)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    d, ffn, v = cfg.d_model, cfg.ffn_dim, cfg.vocab
+    p = {}
+
+    def mat(rows, cols, std=1.0):
+        return (rng.standard_normal((rows, cols)) * std / np.sqrt(cols)).astype(np.float32)
+
+    p["emb"] = (rng.standard_normal((v, d)) * 0.02).astype(np.float32)
+    for b in range(cfg.n_layer):
+        pre = f"blocks.{b}."
+        p[pre + "ln1.g"] = np.ones((1, d), np.float32)
+        p[pre + "ln1.b"] = np.zeros((1, d), np.float32)
+        for mu in ["att.mu_r", "att.mu_k", "att.mu_v"]:
+            ratio = np.arange(d, dtype=np.float32) / d
+            depth = b / max(cfg.n_layer, 1)
+            p[pre + mu] = (ratio ** (1.0 - depth * 0.5) * 0.9 + 0.05)[None, :]
+        p[pre + "att.w_r"] = mat(d, d)
+        p[pre + "att.w_k"] = mat(d, d)
+        p[pre + "att.w_v"] = mat(d, d)
+        p[pre + "att.w_o"] = mat(d, d, 0.5)
+        decay = 0.3 + 5.7 * (np.arange(d, dtype=np.float32) / max(d, 1)) ** 2
+        p[pre + "att.decay"] = decay[None, :].astype(np.float32)
+        p[pre + "att.bonus"] = rng.uniform(0, 1, (1, d)).astype(np.float32)
+        p[pre + "ln2.g"] = np.ones((1, d), np.float32)
+        p[pre + "ln2.b"] = np.zeros((1, d), np.float32)
+        p[pre + "ffn.mu_r"] = rng.uniform(0.2, 0.9, (1, d)).astype(np.float32)
+        p[pre + "ffn.mu_k"] = rng.uniform(0.2, 0.9, (1, d)).astype(np.float32)
+        p[pre + "ffn.w_r"] = mat(d, d, 0.8)
+        p[pre + "ffn.w_k"] = mat(ffn, d)
+        p[pre + "ffn.w_v"] = mat(d, ffn, 0.5)
+    p["ln_out.g"] = np.ones((1, d), np.float32)
+    p["ln_out.b"] = np.zeros((1, d), np.float32)
+    p["head"] = mat(v, d, 0.5)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+# the recurrence/norm parameters stay frozen during the short run: the
+# decay/bonus dynamics are part of the architecture under study and the
+# paper quantizes projection + μ weights only.
+TRAINABLE_PRED = ("w_", "mu_", "emb", "head", "ln")
+
+
+def is_trainable(name):
+    return any(t in name for t in TRAINABLE_PRED) and "decay" not in name and "bonus" not in name
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.99, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    t = step + 1
+    for k in params:
+        if not is_trainable(k):
+            new_p[k], new_m[k], new_v[k] = params[k], m[k], v[k]
+            continue
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        mhat = m_k / (1 - b1**t)
+        vhat = v_k / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m_k, v_k
+    return new_p, new_m, new_v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=4e-3)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layer", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    rng = np.random.default_rng(args.seed)
+    grammar = build_grammar(args.vocab, branch=6, rng=rng)
+    print("sampling corpus...", flush=True)
+    train_toks = sample_grammar(grammar, 60_000, rng)
+    valid_toks = sample_grammar(grammar, 8_000, rng)
+    save_corpus(os.path.join(args.out, "corpus.bin"), args.vocab, train_toks, valid_toks)
+
+    cfg = M.Config("rwkv6", args.n_layer, args.d_model, args.vocab)
+    params = init_params(cfg, rng)
+    n_params = sum(int(np.prod(v.shape)) for v in params.values())
+    print(f"model: rwkv6 L={cfg.n_layer} d={cfg.d_model} ffn={cfg.ffn_dim} "
+          f"vocab={cfg.vocab} params={n_params/1e6:.2f}M", flush=True)
+
+    def batch_loss(p, toks):
+        return jnp.mean(jax.vmap(lambda t: M.sequence_loss(p, cfg, t))(toks))
+
+    loss_grad = jax.jit(jax.value_and_grad(batch_loss))
+
+    m_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    log_lines = [f"# rwkv6 L={cfg.n_layer} d={cfg.d_model} vocab={cfg.vocab} "
+                 f"params={n_params} steps={args.steps} seq={args.seq} batch={args.batch}"]
+    t0 = time.time()
+    for step in range(args.steps):
+        starts = rng.integers(0, len(train_toks) - args.seq - 1, size=args.batch)
+        toks = np.stack([train_toks[s:s + args.seq + 1] for s in starts])
+        loss, grads = loss_grad(params, jnp.asarray(toks))
+        params, m_state, v_state = adam_update(
+            params, grads, m_state, v_state, step, args.lr)
+        if step % 10 == 0 or step == args.steps - 1:
+            line = f"step {step:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)"
+            print(line, flush=True)
+            log_lines.append(line)
+
+    # held-out perplexity
+    val = jnp.asarray(valid_toks[: args.seq * 16].reshape(16, args.seq))
+    val_loss = float(batch_loss(params, val))
+    uniform = float(np.log(args.vocab))
+    log_lines.append(f"valid loss {val_loss:.4f}  ppl {np.exp(val_loss):.2f} "
+                     f"(uniform {uniform:.2f} / ppl {args.vocab})")
+    print(log_lines[-1], flush=True)
+
+    classes = M.param_classes(cfg)
+    M.save_store(os.path.join(args.out, "tiny_rwkv.bin"), cfg,
+                 {k: np.asarray(v) for k, v in params.items()}, classes)
+    with open(os.path.join(args.out, "train_log.txt"), "w") as f:
+        f.write("\n".join(log_lines) + "\n")
+    print("wrote", os.path.join(args.out, "tiny_rwkv.bin"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

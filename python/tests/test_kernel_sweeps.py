@@ -1,0 +1,88 @@
+"""Hypothesis-style randomized sweeps over the Pallas kernels — shapes,
+dtypes-adjacent ranges and adversarial values, asserting against ref.py.
+(The hypothesis package is not in this image; sweeps are seeded numpy.)"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import dequant_matmul as dq
+from compile.kernels import ewmix as ewmix_k
+from compile.kernels import ref
+from compile.kernels import wkv as wkv_k
+
+
+CASES = 12
+
+
+@pytest.mark.parametrize("case", range(CASES))
+def test_wkv_step_random_sweep(case):
+    r = np.random.default_rng(1000 + case)
+    d = int(r.choice([128, 256, 384, 512]))
+    scale = float(r.uniform(0.1, 5.0))
+    k = (r.standard_normal(d) * scale).astype(np.float32)
+    v = (r.standard_normal(d) * scale).astype(np.float32)
+    w = r.uniform(0.05, 8.0, d).astype(np.float32)
+    u = (r.standard_normal(d)).astype(np.float32)
+    aa = (r.standard_normal(d) * scale).astype(np.float32)
+    bb = r.uniform(0.1, 3.0, d).astype(np.float32)
+    pp = r.uniform(-5, 5, d).astype(np.float32)
+    got = wkv_k.wkv_step(*map(jnp.asarray, (k, v, w, u, aa, bb, pp)))
+    want_wkv, (waa, wbb, wpp) = ref.wkv_step_ref(k, v, w, u, aa, bb, pp)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want_wkv),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(wpp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", range(CASES))
+def test_ewmix_random_sweep(case):
+    r = np.random.default_rng(2000 + case)
+    d = int(r.choice([128, 256, 512, 1024]))
+    mu = r.uniform(0, 1, d).astype(np.float32)
+    # adversarial: exact 0/1 pins and large activations
+    mu[: d // 8] = 0.0
+    mu[d // 8: d // 4] = 1.0
+    a = (r.standard_normal(d) * 100).astype(np.float32)
+    b = (r.standard_normal(d) * 100).astype(np.float32)
+    got = ewmix_k.ewmix(jnp.asarray(mu), jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), ref.ewmix_ref(mu, a, b),
+                               rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_vq_matvec_random_sweep(case):
+    r = np.random.default_rng(3000 + case)
+    d = int(r.choice([2, 4, 8]))
+    oc = int(r.choice([64, 128, 192]))
+    ic = int(r.choice([128, 256]))
+    if ic % d != 0 or oc % 64 != 0:
+        pytest.skip("shape not tile-aligned")
+    k_bits = int(r.choice([4, 6, 8]))
+    n_entries = 1 << k_bits
+    cb = (r.standard_normal((n_entries, d)) * 0.1).astype(np.float32)
+    idx = r.integers(0, n_entries, oc * ic // d).astype(np.int32)
+    x = r.standard_normal(ic).astype(np.float32)
+    got = dq.dequant_matvec(jnp.asarray(cb), jnp.asarray(idx), jnp.asarray(x),
+                            oc=oc, ic=ic)
+    want = ref.dequant_matvec_ref(cb, idx, x, oc, ic)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_step_extreme_state_values():
+    """pp starting at -1e30 (fresh state) and huge k spikes must not
+    produce NaNs — the stabilised form's whole point."""
+    d = 128
+    k = np.full(d, 80.0, np.float32)  # exp(80) overflows fp32 if naive
+    v = np.ones(d, np.float32)
+    w = np.full(d, 0.5, np.float32)
+    u = np.full(d, 1.0, np.float32)
+    aa = np.zeros(d, np.float32)
+    bb = np.zeros(d, np.float32)
+    pp = np.full(d, -1e30, np.float32)
+    out, aa2, bb2, pp2 = wkv_k.wkv_step(*map(jnp.asarray, (k, v, w, u, aa, bb, pp)))
+    for arr in (out, aa2, bb2, pp2):
+        assert np.isfinite(np.asarray(arr)).all()
+    # with a single huge-k token, wkv ≈ v
+    np.testing.assert_allclose(np.asarray(out), v, rtol=1e-4)

@@ -1,0 +1,137 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+swept over shapes/values (hand-rolled hypothesis-style sweeps — the
+hypothesis package is not available in this image)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import dequant_matmul as dq
+from compile.kernels import ewmix as ewmix_k
+from compile.kernels import ref
+from compile.kernels import wkv as wkv_k
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+DS = [128, 256, 384]
+
+
+@pytest.mark.parametrize("d", DS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ewmix_matches_ref(d, seed):
+    r = rng_for(seed)
+    mu = r.uniform(0, 1, d).astype(np.float32)
+    a = r.standard_normal(d).astype(np.float32)
+    b = r.standard_normal(d).astype(np.float32)
+    got = ewmix_k.ewmix(jnp.asarray(mu), jnp.asarray(a), jnp.asarray(b))
+    want = ref.ewmix_ref(mu, a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("d", DS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_wkv_step_matches_ref(d, seed):
+    r = rng_for(100 + seed)
+    k = r.standard_normal(d).astype(np.float32)
+    v = r.standard_normal(d).astype(np.float32)
+    w = r.uniform(0.2, 4.0, d).astype(np.float32)
+    u = r.uniform(0, 1, d).astype(np.float32)
+    aa = r.standard_normal(d).astype(np.float32)
+    bb = r.uniform(0.5, 2.0, d).astype(np.float32)
+    pp = r.uniform(-2, 2, d).astype(np.float32)
+    got_wkv, got_aa, got_bb, got_pp = wkv_k.wkv_step(
+        *map(jnp.asarray, (k, v, w, u, aa, bb, pp)))
+    want_wkv, (want_aa, want_bb, want_pp) = ref.wkv_step_ref(k, v, w, u, aa, bb, pp)
+    for got, want in [(got_wkv, want_wkv), (got_aa, want_aa),
+                      (got_bb, want_bb), (got_pp, want_pp)]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,d", [(4, 128), (16, 128), (8, 256)])
+def test_wkv_sequence_matches_ref(t, d):
+    r = rng_for(7 * t + d)
+    ks = r.standard_normal((t, d)).astype(np.float32)
+    vs = r.standard_normal((t, d)).astype(np.float32)
+    w = r.uniform(0.2, 4.0, d).astype(np.float32)
+    u = r.uniform(0, 1, d).astype(np.float32)
+    aa = np.zeros(d, np.float32)
+    bb = np.zeros(d, np.float32)
+    pp = np.full(d, -1e30, np.float32)
+    got, (gaa, gbb, gpp) = wkv_k.wkv_sequence(
+        *map(jnp.asarray, (ks, vs, w, u, aa, bb, pp)))
+    want, (waa, wbb, wpp) = ref.wkv_sequence_ref(ks, vs, w, u, aa, bb, pp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gaa), np.asarray(waa), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gpp), np.asarray(wpp), rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_sequence_equals_repeated_steps():
+    """Sequence kernel == folding the step kernel (state contract)."""
+    d, t = 128, 6
+    r = rng_for(42)
+    ks = r.standard_normal((t, d)).astype(np.float32)
+    vs = r.standard_normal((t, d)).astype(np.float32)
+    w = r.uniform(0.2, 4.0, d).astype(np.float32)
+    u = r.uniform(0, 1, d).astype(np.float32)
+    aa = np.zeros(d, np.float32)
+    bb = np.zeros(d, np.float32)
+    pp = np.full(d, -1e30, np.float32)
+    seq_out, (saa, sbb, spp) = wkv_k.wkv_sequence(
+        *map(jnp.asarray, (ks, vs, w, u, aa, bb, pp)))
+    caa, cbb, cpp = map(jnp.asarray, (aa, bb, pp))
+    for i in range(t):
+        step_out, caa, cbb, cpp = wkv_k.wkv_step(
+            jnp.asarray(ks[i]), jnp.asarray(vs[i]),
+            jnp.asarray(w), jnp.asarray(u), caa, cbb, cpp)
+        np.testing.assert_allclose(np.asarray(seq_out[i]), np.asarray(step_out),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(saa), np.asarray(caa), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("oc,ic,d,k", [(128, 128, 4, 8), (64, 128, 4, 6), (128, 256, 8, 7)])
+def test_vq_dequant_matvec_matches_ref(oc, ic, d, k):
+    r = rng_for(oc + ic + d)
+    n_entries = 1 << k
+    cb = r.standard_normal((n_entries, d)).astype(np.float32)
+    idx = r.integers(0, n_entries, oc * ic // d).astype(np.int32)
+    x = r.standard_normal(ic).astype(np.float32)
+    got = dq.dequant_matvec(jnp.asarray(cb), jnp.asarray(idx), jnp.asarray(x),
+                            oc=oc, ic=ic)
+    want = ref.dequant_matvec_ref(cb, idx, x, oc, ic)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("oc,ic,group", [(64, 128, 32), (128, 128, 64)])
+def test_sq_dequant_matvec_matches_ref(oc, ic, group):
+    r = rng_for(oc * ic)
+    codes = r.integers(0, 8, oc * ic).astype(np.int32)
+    n_groups = oc * ic // group
+    scales = r.uniform(0.001, 0.05, n_groups).astype(np.float32)
+    mins = -scales * 3.5
+    x = r.standard_normal(ic).astype(np.float32)
+    got = dq.sq_dequant_matvec(jnp.asarray(codes), jnp.asarray(scales),
+                               jnp.asarray(mins), jnp.asarray(x),
+                               oc=oc, ic=ic, group=group)
+    want = ref.sq_dequant_matvec_ref(codes, scales, mins, group, x, oc, ic)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_long_horizon_stability():
+    """1000 steps of the recurrence stay finite (the stabilised form)."""
+    d = 128
+    r = rng_for(9)
+    w = r.uniform(0.2, 4.0, d).astype(np.float32)
+    u = r.uniform(0, 1, d).astype(np.float32)
+    aa = jnp.zeros(d)
+    bb = jnp.zeros(d)
+    pp = jnp.full((d,), -1e30)
+    for i in range(1000):
+        k = jnp.asarray(r.standard_normal(d).astype(np.float32)) * 3.0
+        v = jnp.asarray(r.standard_normal(d).astype(np.float32))
+        out, aa, bb, pp = wkv_k.wkv_step(k, v, jnp.asarray(w), jnp.asarray(u), aa, bb, pp)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(np.asarray(aa)).all()

@@ -1,0 +1,33 @@
+//! Figure 1: accuracy vs model size — best SQ (GPTQ), best VQ (GPTVQ)
+//! and ours across the lineup. Expected shape: ours on/above both curves
+//! at every size, with the gap largest on small models.
+
+use rwkvquant::config::Method;
+use rwkvquant::experiments::*;
+use rwkvquant::report::Series;
+
+fn main() {
+    let lineup: Vec<_> = if fast_mode() { LANGUAGE_LINEUP[..3].to_vec() } else { LANGUAGE_LINEUP.to_vec() };
+    let mut s = Series::new(
+        "Figure 1 — zero-shot accuracy vs model size (synthetic lineup)",
+        "model#",
+        &["FP16", "SQ(GPTQ 3.5)", "VQ(GPTVQ 3.5)", "Ours 3.275"],
+    );
+    for (i, (label, arch, size, fp_acc, fp_ppl)) in lineup.iter().enumerate() {
+        let model = build_model(arch, size, 1000);
+        let ps = probes(model.config.vocab, 3, 10, 7);
+        let ac = auto_calib(&model);
+        let map = language_map(*fp_acc, *fp_ppl);
+        let acc_of = |method: Method, bpw: f64| {
+            let cfg = bench_config(method, bpw, 19);
+            map.acc(run_cell(&model, ac.as_ref(), &cfg, &ps).divergence)
+        };
+        let sq = acc_of(Method::Gptq, 3.5);
+        let vq = acc_of(Method::Gptvq, 3.5);
+        let ours = acc_of(Method::RwkvQuant, 3.275);
+        eprintln!("  {label}: fp {fp_acc:.2} sq {sq:.2} vq {vq:.2} ours {ours:.2}");
+        s.point(i as f64, vec![*fp_acc, sq, vq, ours]);
+    }
+    s.print();
+    println!("paper shape: Ours curve dominates SQ-only and VQ-only at every size");
+}

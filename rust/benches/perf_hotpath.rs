@@ -1,0 +1,73 @@
+//! Perf bench: the hot paths the §Perf pass optimises — WKV recurrence
+//! step, dense vs quantized matvec, proxy computation, the pipeline's
+//! parallel speedup, and (when artifacts exist) the PJRT decode step.
+
+use rwkvquant::config::{Method, ModelConfig, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::model::rwkv::{init_params, RwkvRunner};
+use rwkvquant::model::synthetic::{generate_rwkv, Family};
+use rwkvquant::model::ModelWeights;
+use rwkvquant::quant::{exec, proxy, sq};
+use rwkvquant::runtime::artifacts_dir;
+use rwkvquant::tensor::{linalg, Matrix};
+use rwkvquant::util::benchkit::{throughput, Bencher};
+use rwkvquant::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(7);
+
+    // L3 hot loop: rust reference decode step (d=512 model)
+    let cfg = ModelConfig::rwkv6(12, 384, 512);
+    let m = init_params(&cfg, &mut rng);
+    let mut runner = RwkvRunner::new(&m);
+    let mut tok = 0usize;
+    let s = b.bench("rust decode step (L12 d384)", || {
+        tok = (tok + 1) % 512;
+        runner.forward_token(tok)
+    });
+    println!("decode: {:.1} tokens/s", throughput(1.0, s));
+
+    // dense vs quantized matvec at serving dims
+    for &dim in &[1024usize, 2048] {
+        let mut w = Matrix::zeros(dim, dim);
+        rng.fill_normal(&mut w.data, 0.0, 0.05);
+        let q3 = sq::rtn::quantize(&w, 3, 64);
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; dim];
+        b.bench(&format!("matvec fp32 {dim}x{dim}"), || linalg::matvec_into(&w, &x, &mut y));
+        b.bench(&format!("matvec q3 packed {dim}x{dim}"), || exec::matvec_sq(&q3, &x, &mut y));
+    }
+
+    // proxy cost on a realistic layer
+    let mut w = Matrix::zeros(512, 512);
+    rng.fill_normal(&mut w.data, 0.0, 0.05);
+    b.bench("proxy P_c+P_f on 512x512", || proxy::compute(&w.data, 4));
+
+    // pipeline parallel speedup
+    let model = generate_rwkv(&ModelConfig::rwkv6(4, 128, 256), Family::Rwkv, 3);
+    let qc = QuantConfig { method: Method::Gptq, kmeans_iters: 5, ..Default::default() };
+    let (_, t1) = b.once("pipeline 1 worker", || quantize_model(&model, None, &qc, 1));
+    let (_, tn) = b.once("pipeline N workers", || quantize_model(&model, None, &qc, 0));
+    println!(
+        "pipeline speedup: {:.2}x ({} cores)",
+        t1.as_secs_f64() / tn.as_secs_f64().max(1e-9),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+
+    // PJRT decode step (if artifacts present)
+    let dir = artifacts_dir();
+    if dir.join("rwkv_step.hlo.txt").exists() && dir.join("tiny_rwkv.bin").exists() {
+        let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
+        let mut session =
+            rwkvquant::runtime::rwkv_graph::RwkvSession::load(&dir, &weights).unwrap();
+        let mut t = 1usize;
+        let s = b.bench("PJRT decode step (tiny rwkv)", || {
+            t = (t + 1) % weights.config.vocab;
+            session.step(t).unwrap()
+        });
+        println!("pjrt decode: {:.1} tokens/s", throughput(1.0, s));
+    }
+
+    b.report();
+}

@@ -1,0 +1,47 @@
+//! Table 12 (appendix): sensitivity of the hybrid to τ_c and τ_f —
+//! fixed-threshold sweep on three models. Expected shape: a sweet spot
+//! near the auto-calibrated values; too-large τ_c ≈ pure SQ, too-small ≈
+//! pure VQ.
+
+use rwkvquant::config::Method;
+use rwkvquant::experiments::*;
+use rwkvquant::report::{Cell, Table};
+
+fn main() {
+    let models = [
+        ("RWKV7-0.1B", "rwkv7", "0.1B", 43.02, 14.21),
+        ("RWKV7-0.5B", "rwkv7", "0.5B", 48.67, 7.21),
+        ("RWKV7-1.47B", "rwkv7", "1.47B", 55.08, 4.80),
+    ];
+    let tau_cs = [1.0, 1.5, 2.0];
+    let tau_fs = [20.0, 30.0, 40.0];
+    let mut t = Table::new(
+        "Table 12 — τ_c / τ_f sweep (fixed thresholds)",
+        &["tau_c", "tau_f", "Model", "SQ share", "0-shot9", "LambA."],
+    );
+    for (label, arch, size, fp_acc, fp_ppl) in models {
+        let model = build_model(arch, size, 1000);
+        let ps = probes(model.config.vocab, 3, 10, 7);
+        let ac = auto_calib(&model);
+        let map = language_map(fp_acc, fp_ppl);
+        for &tc in &tau_cs {
+            for &tf in &tau_fs {
+                let mut cfg = bench_config(Method::RwkvQuant, 3.275, 17);
+                cfg.tau_c = Some(tc);
+                cfg.tau_f = Some(tf);
+                let cell = run_cell(&model, ac.as_ref(), &cfg, &ps);
+                t.row(vec![
+                    Cell::f(tc, 2),
+                    Cell::f(tf, 1),
+                    Cell::s(label),
+                    Cell::f(cell.report.taus.map(|x| x.sq_share).unwrap_or(f64::NAN), 3),
+                    Cell::f(map.acc(cell.divergence), 2),
+                    Cell::f(map.ppl(cell.divergence), 2),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.save_csv("table12_tau_sweep");
+    println!("paper shape: best row near τ_c=1.5; τ_f matters mostly at the right τ_c");
+}

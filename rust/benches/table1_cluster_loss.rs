@@ -1,0 +1,56 @@
+//! Table 1: average relative K-Means cluster loss of weights, RWKV vs
+//! LLaMA family, at 8 and 16 clusters. Paper shape: RWKV ≈ 2× the loss
+//! of LLaMA at 8 clusters (uniform weights cluster poorly).
+
+use rwkvquant::model::synthetic::{generate_llama, generate_rwkv, size_config, Family};
+use rwkvquant::model::ParamClass;
+use rwkvquant::quant::vq::codebook::relative_cluster_loss;
+use rwkvquant::report::{Cell, Table};
+use rwkvquant::util::rng::Rng;
+
+fn family_loss(model: &rwkvquant::model::ModelWeights, k: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (desc, w) in &model.layers {
+        if desc.class != ParamClass::MatMul {
+            continue;
+        }
+        total += relative_cluster_loss(&w.data, k, 15, &mut rng);
+        n += 1;
+    }
+    total / n.max(1) as f64
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1 — avg relative cluster loss (KMeans), % of total variance",
+        &["Family", "Model", "8 Clusters", "16 Clusters"],
+    );
+    let rows = [
+        ("RWKV", "rwkv6", "7B"),
+        ("RWKV", "rwkv6", "14B"),
+        ("LLaMA", "llama", "7B"),
+        ("LLaMA", "llama", "14B"),
+    ];
+    for (fam, arch, size) in rows {
+        let cfg = size_config(arch, size);
+        let m = if fam == "RWKV" {
+            generate_rwkv(&cfg, Family::Rwkv, 42)
+        } else {
+            generate_llama(&cfg, 42)
+        };
+        let l8 = family_loss(&m, 8, 8);
+        let l16 = family_loss(&m, 16, 16);
+        t.row(vec![
+            Cell::s(fam),
+            Cell::s(format!("{}-{}", if fam == "RWKV" { "6" } else { "2" }, size)),
+            Cell::f(l8, 2),
+            Cell::f(l16, 2),
+        ]);
+    }
+    t.print();
+    t.save_csv("table1_cluster_loss");
+    println!("paper: RWKV 2.01/0.78 & 1.98/0.78 vs LLaMA 0.96/0.65 & 0.89/0.64 — \
+              expect RWKV clearly above LLaMA at both cluster counts");
+}

@@ -1,0 +1,112 @@
+//! Calibration management: run the fp model over calibration windows,
+//! capture per-layer input activations, and expose them as
+//! [`CalibData`] for the quantization engines (§4.1: 128 samples).
+
+use crate::data::Corpus;
+use crate::model::rwkv::{Capture, RwkvRunner};
+use crate::model::ModelWeights;
+use crate::quant::CalibData;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// Per-layer calibration activations keyed by parameter name.
+pub struct CalibSet {
+    pub acts: HashMap<String, Matrix>,
+}
+
+impl CalibSet {
+    /// Capture activations by running `model` over `windows`
+    /// (state reset per window), keeping at most `max_rows` rows/layer.
+    pub fn capture(model: &ModelWeights, windows: &[Vec<usize>], max_rows: usize) -> CalibSet {
+        let mut runner = RwkvRunner::new(model);
+        runner.capture = Some(Capture::new(max_rows));
+        for w in windows {
+            runner.reset();
+            for &t in w {
+                let _ = runner.forward_token(t);
+            }
+        }
+        let cap = runner.capture.take().unwrap();
+        CalibSet { acts: cap.into_matrices() }
+    }
+
+    /// Convenience: §4.1 settings from a corpus (128 windows).
+    pub fn from_corpus(
+        model: &ModelWeights,
+        corpus: &Corpus,
+        n_samples: usize,
+        window: usize,
+        seed: u64,
+    ) -> CalibSet {
+        let windows = corpus.calib_windows(n_samples.div_ceil(window.max(1)).max(4), window, seed);
+        Self::capture(model, &windows, n_samples)
+    }
+
+    pub fn layer(&self, name: &str) -> Option<CalibData> {
+        self.acts.get(name).map(|m| CalibData { x: m.clone() })
+    }
+
+    /// Synthetic fallback for models that have no runnable forward
+    /// (the LLaMA comparator): unit-variance Gaussian activations with a
+    /// few hot channels, matching typical transformer statistics.
+    pub fn synthetic(model: &ModelWeights, samples: usize, seed: u64) -> CalibSet {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x7379_6e63);
+        let mut acts = HashMap::new();
+        for &i in &model.quantizable_indices() {
+            let (desc, w) = &model.layers[i];
+            let mut x = Matrix::zeros(samples, w.cols);
+            rng.fill_normal(&mut x.data, 0.0, 1.0);
+            for r in 0..samples {
+                for c in 0..w.cols.min(4) {
+                    *x.at_mut(r, c) *= 6.0; // hot channels
+                }
+            }
+            acts.insert(desc.name.clone(), x);
+        }
+        CalibSet { acts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::rwkv::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn capture_covers_every_quantizable_layer() {
+        let cfg = ModelConfig::rwkv6(2, 16, 32);
+        let m = init_params(&cfg, &mut Rng::new(1));
+        let windows = vec![vec![1usize, 2, 3, 4, 5], vec![6, 7, 8, 9, 10]];
+        let cs = CalibSet::capture(&m, &windows, 8);
+        for &i in &m.quantizable_indices() {
+            let name = &m.layers[i].0.name;
+            let c = cs.layer(name).unwrap_or_else(|| panic!("no acts for {name}"));
+            assert_eq!(c.x.cols, m.layers[i].1.cols, "{name}");
+            assert!(c.x.rows > 0 && c.x.rows <= 8);
+        }
+    }
+
+    #[test]
+    fn capture_rows_bounded() {
+        let cfg = ModelConfig::rwkv6(1, 16, 32);
+        let m = init_params(&cfg, &mut Rng::new(2));
+        let windows = vec![(0..50).map(|i| i % 32).collect::<Vec<_>>()];
+        let cs = CalibSet::capture(&m, &windows, 10);
+        for m in cs.acts.values() {
+            assert!(m.rows <= 10);
+        }
+    }
+
+    #[test]
+    fn synthetic_fallback_matches_widths() {
+        let cfg = ModelConfig::llama(2, 16, 32);
+        let m = crate::model::llama::init_params(&cfg, &mut Rng::new(3));
+        let cs = CalibSet::synthetic(&m, 16, 4);
+        for &i in &m.quantizable_indices() {
+            let (d, w) = &m.layers[i];
+            assert_eq!(cs.layer(&d.name).unwrap().x.cols, w.cols);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! A TOML-subset parser: `[section]` / `[section.sub]` headers and
+//! `key = value` pairs where value is a string, integer, float, boolean,
+//! or a flat array of those. Comments (`#`) and blank lines are skipped.
+//! This covers every config file the repo ships; it is not a general
+//! TOML implementation.
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Parsed value tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Value::Float(f)) => Some(*f),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe: we never put '#' inside our string values
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{t}'")
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                if part.trim().is_empty() {
+                    continue;
+                }
+                items.push(parse_scalar(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t)
+}
+
+/// Parse a config document into a root [`Value::Table`].
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            let name = &line[1..line.len() - 1];
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(&line[eq + 1..])?;
+
+        // descend/create section path
+        let mut cur = &mut root;
+        for part in &section {
+            let entry = cur
+                .entry(part.clone())
+                .or_insert_with(|| Value::Table(BTreeMap::new()));
+            match entry {
+                Value::Table(t) => cur = t,
+                _ => bail!("section '{part}' collides with a scalar key"),
+            }
+        }
+        cur.insert(key, val);
+    }
+    Ok(Value::Table(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let v = parse(
+            "# top comment\n\
+             title = \"demo\"\n\
+             [quant]\n\
+             bpw = 3.275   # inline comment\n\
+             seed = 42\n\
+             ewmul_opt = true\n\
+             [model.arch]\n\
+             name = \"rwkv6\"\n",
+        )
+        .unwrap();
+        assert_eq!(v.get_str("title"), Some("demo"));
+        let q = v.get("quant").unwrap();
+        assert_eq!(q.get_f64("bpw"), Some(3.275));
+        assert_eq!(q.get_int("seed"), Some(42));
+        assert_eq!(q.get_bool("ewmul_opt"), Some(true));
+        assert_eq!(v.get("model").unwrap().get("arch").unwrap().get_str("name"), Some("rwkv6"));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("sizes = [1, 2, 3]\nnames = [\"a\", \"b\"]\n").unwrap();
+        match v.get("sizes") {
+            Some(Value::Array(xs)) => assert_eq!(xs.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let v = parse("x = 3\n").unwrap();
+        assert_eq!(v.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("this is not toml\n").is_err());
+        assert!(parse("x = @@@\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let v = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(v.get_str("s"), Some("a#b"));
+    }
+}

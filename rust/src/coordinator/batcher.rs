@@ -1,0 +1,121 @@
+//! Dynamic batching policy: admit waiting requests into the active set
+//! up to `max_batch`, either when the batch is full or when the oldest
+//! waiting request has aged past `max_wait`. Deterministic and
+//! clock-injected for testability; the serving loop drives it with real
+//! time.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued request with its arrival time.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub item: T,
+    pub arrived: Instant,
+}
+
+/// Admission policy state.
+pub struct DynamicBatcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        DynamicBatcher { queue: VecDeque::new(), max_batch, max_wait }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Pending { item, arrived: now });
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit up to `slots` items if the batch-forming condition holds:
+    /// the queue can fill the batch, or the head has waited long enough.
+    /// Admission is FIFO (no starvation).
+    pub fn admit(&mut self, slots: usize, now: Instant) -> Vec<Pending<T>> {
+        if slots == 0 || self.queue.is_empty() {
+            return Vec::new();
+        }
+        let head_aged = self
+            .queue
+            .front()
+            .map(|p| now.duration_since(p.arrived) >= self.max_wait)
+            .unwrap_or(false);
+        let can_fill = self.queue.len() >= slots.min(self.max_batch);
+        if !head_aged && !can_fill {
+            return Vec::new();
+        }
+        let n = slots.min(self.max_batch).min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn admits_when_batch_fills() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(100));
+        let now = t0();
+        for i in 0..4 {
+            b.push(i, now);
+        }
+        let batch = b.admit(4, now);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn waits_for_more_when_under_filled_and_young() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(100));
+        let now = t0();
+        b.push(1, now);
+        assert!(b.admit(4, now).is_empty());
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn aged_head_forces_partial_batch() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(10));
+        let now = t0();
+        b.push(1, now);
+        let later = now + Duration::from_millis(50);
+        let batch = b.admit(4, later);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn respects_slot_limit() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(0));
+        let now = t0();
+        for i in 0..8 {
+            b.push(i, now);
+        }
+        let batch = b.admit(3, now + Duration::from_millis(1));
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.queue_len(), 5);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(0));
+        let now = t0();
+        for i in 0..3 {
+            b.push(i, now);
+        }
+        let batch = b.admit(2, now + Duration::from_millis(1));
+        assert_eq!(batch[0].item, 0);
+        assert_eq!(batch[1].item, 1);
+    }
+}

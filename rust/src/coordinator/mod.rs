@@ -1,0 +1,8 @@
+//! L3 coordination: the quantization pipeline (parallel layer workers)
+//! and the batched generation server used for end-to-end evaluation.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod serve;
+
+pub use pipeline::{quantize_model, PipelineReport, QuantizedModel};

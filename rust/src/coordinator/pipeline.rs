@@ -1,0 +1,289 @@
+//! The model-quantization pipeline.
+//!
+//! Orchestrates the paper's full §3 procedure over a weight store:
+//!
+//! 1. compute `(P_c, P_f)` for every quantizable layer (parallel),
+//! 2. auto-calibrate `(τ_c, τ_f)` for the Eq. 18 target SQ share
+//!    (or take them from the config — the Table 12 sweep),
+//! 3. quantize every layer (parallel worker pool; std threads — no
+//!    tokio in the offline vendor set), with GPTQ for SQ layers, GPTVQ
+//!    for VQ matmuls and the §3.2 codebook optimisation for VQ
+//!    element-wise weights,
+//! 4. report per-layer stats, the realised average bpw and wall time.
+//!
+//! Baseline methods skip (1)–(2) and apply one engine everywhere.
+
+use crate::calib::CalibSet;
+use crate::config::{Method, QuantConfig};
+use crate::model::ModelWeights;
+use crate::quant::hybrid::{self, Choice, TauCalibration};
+use crate::quant::proxy::{self, ProxyPair};
+use crate::quant::QuantizedLayer;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Quantized layers keyed by parameter name.
+pub type QuantizedModel = HashMap<String, QuantizedLayer>;
+
+/// Per-layer record in the pipeline report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub numel: usize,
+    pub proxies: Option<ProxyPair>,
+    pub choice: Option<Choice>,
+    pub bpw: f64,
+    pub mse: f64,
+}
+
+/// Whole-pipeline report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub method: Method,
+    pub layers: Vec<LayerReport>,
+    pub taus: Option<TauCalibration>,
+    /// average bits per quantized weight (§4.1 accounting)
+    pub avg_bpw: f64,
+    pub wall_secs: f64,
+    pub n_workers: usize,
+}
+
+impl PipelineReport {
+    pub fn sq_share(&self) -> f64 {
+        let decided: Vec<&LayerReport> =
+            self.layers.iter().filter(|l| l.choice.is_some()).collect();
+        if decided.is_empty() {
+            return f64::NAN;
+        }
+        decided
+            .iter()
+            .filter(|l| l.choice == Some(Choice::Sq))
+            .count() as f64
+            / decided.len() as f64
+    }
+}
+
+/// Quantize every quantizable layer of `model` with `cfg.method`.
+/// `n_workers = 0` ⇒ one worker per available core.
+pub fn quantize_model(
+    model: &ModelWeights,
+    calib: Option<&CalibSet>,
+    cfg: &QuantConfig,
+    n_workers: usize,
+) -> (QuantizedModel, PipelineReport) {
+    let t0 = Instant::now();
+    let n_workers = if n_workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        n_workers
+    };
+    let idx = model.quantizable_indices();
+
+    // ---- phase 1+2: proxies and thresholds (hybrid only) ----
+    let (choices, taus, proxies) = if cfg.method == Method::RwkvQuant {
+        let proxies = parallel_map(&idx, n_workers, |&i| {
+            proxy::compute(&model.layers[i].1.data, cfg.proxy_order)
+        });
+        let taus = match (cfg.tau_c, cfg.tau_f) {
+            (Some(tc), Some(tf)) => {
+                let share = proxies
+                    .iter()
+                    .filter(|&&p| hybrid::decide(p, tc, tf) == Choice::Sq)
+                    .count() as f64
+                    / proxies.len().max(1) as f64;
+                TauCalibration { tau_c: tc, tau_f: tf, sq_share: share }
+            }
+            _ => hybrid::calibrate_taus(&proxies, cfg.sq_fraction),
+        };
+        let choices: Vec<Choice> = proxies
+            .iter()
+            .map(|&p| hybrid::decide(p, taus.tau_c, taus.tau_f))
+            .collect();
+        (Some(choices), Some(taus), Some(proxies))
+    } else {
+        (None, None, None)
+    };
+
+    // ---- phase 3: parallel quantization ----
+    struct Job {
+        pos: usize,
+        layer_idx: usize,
+    }
+    let jobs: Vec<Job> = idx
+        .iter()
+        .enumerate()
+        .map(|(pos, &layer_idx)| Job { pos, layer_idx })
+        .collect();
+    let queue = Mutex::new(jobs.into_iter().collect::<Vec<_>>());
+    let results: Mutex<Vec<Option<(String, QuantizedLayer, LayerReport)>>> =
+        Mutex::new((0..idx.len()).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        for _wid in 0..n_workers {
+            let queue = &queue;
+            let results = &results;
+            let choices = &choices;
+            let proxies = &proxies;
+            s.spawn(move || {
+                loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    let (desc, w) = &model.layers[job.layer_idx];
+                    let ldata = calib.and_then(|c| c.layer(&desc.name));
+                    // seed depends only on the layer, never the worker —
+                    // results are identical for any worker count
+                    let mut rng = Rng::new(cfg.seed ^ ((job.layer_idx as u64) << 8));
+                    let q = match choices {
+                        Some(ch) => hybrid::quantize_hybrid(
+                            w,
+                            desc.class.kind(),
+                            ch[job.pos],
+                            ldata.as_ref(),
+                            cfg,
+                            &mut rng,
+                        ),
+                        None => hybrid::quantize_with_method(
+                            w,
+                            desc.class.kind(),
+                            cfg.method,
+                            ldata.as_ref(),
+                            cfg,
+                            &mut rng,
+                        ),
+                    };
+                    let report = LayerReport {
+                        name: desc.name.clone(),
+                        numel: w.numel(),
+                        proxies: proxies.as_ref().map(|p| p[job.pos]),
+                        choice: choices.as_ref().map(|c| c[job.pos]),
+                        bpw: q.bpw(),
+                        mse: q.mse(w),
+                    };
+                    results.lock().unwrap()[job.pos] = Some((desc.name.clone(), q, report));
+                }
+            });
+        }
+    });
+
+    let mut quantized = QuantizedModel::new();
+    let mut layers = Vec::with_capacity(idx.len());
+    let mut bits = 0usize;
+    let mut numel = 0usize;
+    for slot in results.into_inner().unwrap() {
+        let (name, q, rep) = slot.expect("worker finished every job");
+        bits += q.storage_bits();
+        numel += q.numel();
+        quantized.insert(name, q);
+        layers.push(rep);
+    }
+    let report = PipelineReport {
+        method: cfg.method,
+        layers,
+        taus,
+        avg_bpw: bits as f64 / numel.max(1) as f64,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        n_workers,
+    };
+    (quantized, report)
+}
+
+/// Simple indexed parallel map over a slice (order-preserving).
+fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    n_workers: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_workers.min(items.len()).max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("parallel_map slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::synthetic::{generate_rwkv, Family};
+
+    fn small_model() -> ModelWeights {
+        generate_rwkv(&ModelConfig::rwkv6(2, 64, 128), Family::Rwkv, 11)
+    }
+
+    #[test]
+    fn hybrid_pipeline_hits_target_share_and_bpw() {
+        let m = small_model();
+        let cfg = QuantConfig { kmeans_iters: 8, ..QuantConfig::default() };
+        let (q, rep) = quantize_model(&m, None, &cfg, 4);
+        assert_eq!(q.len(), m.quantizable_indices().len());
+        let share = rep.sq_share();
+        assert!((share - 0.9).abs() < 0.1, "share={share}");
+        assert!(rep.avg_bpw > 2.8 && rep.avg_bpw < 3.8, "bpw={}", rep.avg_bpw);
+        assert!(rep.taus.is_some());
+    }
+
+    #[test]
+    fn baseline_pipeline_all_layers_same_engine() {
+        let m = small_model();
+        let cfg = QuantConfig {
+            method: Method::Rtn,
+            kmeans_iters: 5,
+            ..QuantConfig::default()
+        };
+        let (q, rep) = quantize_model(&m, None, &cfg, 2);
+        assert!(q.values().all(|l| !l.is_vq()));
+        assert!(rep.layers.iter().all(|l| l.choice.is_none()));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let m = small_model();
+        let cfg = QuantConfig { kmeans_iters: 5, ..QuantConfig::default() };
+        let (qa, _) = quantize_model(&m, None, &cfg, 1);
+        let (qb, _) = quantize_model(&m, None, &cfg, 8);
+        for (name, la) in &qa {
+            let lb = &qb[name];
+            assert!(
+                (la.dequantize().sq_err(&lb.dequantize())) < 1e-12,
+                "layer {name} differs between 1 and 8 workers"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_taus_respected() {
+        let m = small_model();
+        let cfg = QuantConfig {
+            tau_c: Some(f64::INFINITY),
+            tau_f: Some(f64::INFINITY),
+            kmeans_iters: 5,
+            ..QuantConfig::default()
+        };
+        let (_, rep) = quantize_model(&m, None, &cfg, 2);
+        assert!((rep.sq_share() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(&xs, 7, |&x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

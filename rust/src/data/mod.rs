@@ -1,0 +1,375 @@
+//! Synthetic grammar corpus + tokenizer.
+//!
+//! Stand-in for the paper's LAMBADA / Wiki2 text (repro substitution —
+//! see DESIGN.md): a seeded sparse order-2 Markov grammar over a small
+//! vocabulary. It has real learnable structure (the tiny RWKV trained by
+//! `python/compile/train.py` reaches well-below-uniform perplexity on
+//! it), a held-out split for perplexity, and generators for the nine
+//! synthetic zero-shot choice tasks used by [`crate::eval::zeroshot`].
+
+use crate::util::rng::Rng;
+
+/// Sparse order-2 Markov grammar over `vocab` tokens.
+pub struct Grammar {
+    pub vocab: usize,
+    /// per (prev2-bucket, prev) state: candidate successors + weights
+    succ: Vec<Vec<(usize, f64)>>,
+    buckets: usize,
+}
+
+impl Grammar {
+    /// Build a grammar with `branch` successors per state.
+    pub fn new(vocab: usize, branch: usize, seed: u64) -> Grammar {
+        let buckets = 8; // prev2 folded into 8 buckets keeps the table small
+        let mut rng = Rng::new(seed ^ 0x6772_616d);
+        let mut succ = Vec::with_capacity(buckets * vocab);
+        for _ in 0..buckets * vocab {
+            let mut cands = Vec::with_capacity(branch);
+            for _ in 0..branch {
+                // Zipf-ish successor weights: few dominant continuations
+                let tok = rng.below(vocab);
+                let w = rng.gamma(0.7, 1.0) + 0.05;
+                cands.push((tok, w));
+            }
+            succ.push(cands);
+        }
+        Grammar { vocab, succ, buckets }
+    }
+
+    #[inline]
+    fn state(&self, prev2: usize, prev: usize) -> usize {
+        (prev2 % self.buckets) * self.vocab + prev
+    }
+
+    /// Sample the next token given the two previous ones.
+    pub fn next(&self, prev2: usize, prev: usize, rng: &mut Rng) -> usize {
+        let cands = &self.succ[self.state(prev2, prev)];
+        let weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
+        cands[rng.categorical(&weights)].0
+    }
+
+    /// True conditional probability of `tok` (for task construction).
+    pub fn prob(&self, prev2: usize, prev: usize, tok: usize) -> f64 {
+        let cands = &self.succ[self.state(prev2, prev)];
+        let total: f64 = cands.iter().map(|c| c.1).sum();
+        cands
+            .iter()
+            .filter(|c| c.0 == tok)
+            .map(|c| c.1)
+            .sum::<f64>()
+            / total
+    }
+
+    /// The most likely continuation of a state.
+    pub fn argmax_next(&self, prev2: usize, prev: usize) -> usize {
+        let cands = &self.succ[self.state(prev2, prev)];
+        cands
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|c| c.0)
+            .unwrap()
+    }
+
+    /// Sample a sequence of `len` tokens.
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(len);
+        let mut prev2 = rng.below(self.vocab);
+        let mut prev = rng.below(self.vocab);
+        for _ in 0..len {
+            let t = self.next(prev2, prev, rng);
+            out.push(t);
+            prev2 = prev;
+            prev = t;
+        }
+        out
+    }
+}
+
+/// A train/validation corpus drawn from one grammar.
+pub struct Corpus {
+    pub grammar: Grammar,
+    pub train: Vec<usize>,
+    pub valid: Vec<usize>,
+}
+
+impl Corpus {
+    pub fn build(vocab: usize, train_len: usize, valid_len: usize, seed: u64) -> Corpus {
+        let grammar = Grammar::new(vocab, 6, seed);
+        let mut rng = Rng::new(seed ^ 0x636f_7270);
+        let train = grammar.sample(train_len, &mut rng);
+        let valid = grammar.sample(valid_len, &mut rng);
+        Corpus { grammar, train, valid }
+    }
+
+    /// Calibration token windows (§4.1: 128 samples from the test set).
+    pub fn calib_windows(&self, n: usize, window: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed ^ 0x6361_6c69);
+        (0..n)
+            .map(|_| {
+                let start = rng.below(self.valid.len().saturating_sub(window).max(1));
+                self.valid[start..(start + window).min(self.valid.len())].to_vec()
+            })
+            .collect()
+    }
+}
+
+/// The token corpus written by `python/compile/train.py` (`RWKVC1`):
+/// the *same* stream the tiny model was trained on, so Rust-side
+/// perplexity is measured against real training distribution.
+#[derive(Debug, Clone)]
+pub struct BinCorpus {
+    pub vocab: usize,
+    pub train: Vec<usize>,
+    pub valid: Vec<usize>,
+}
+
+impl BinCorpus {
+    pub fn load(path: &std::path::Path) -> crate::Result<BinCorpus> {
+        use anyhow::{bail, Context};
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() < 28 || &bytes[..8] != b"RWKVC1\0\0" {
+            bail!("bad corpus magic in {path:?}");
+        }
+        let vocab = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let tlen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let vlen = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+        let need = 28 + (tlen + vlen) * 4;
+        if bytes.len() < need {
+            bail!("corpus truncated: {} < {need}", bytes.len());
+        }
+        let read_tokens = |off: usize, n: usize| {
+            (0..n)
+                .map(|i| {
+                    u32::from_le_bytes(
+                        bytes[off + i * 4..off + i * 4 + 4].try_into().unwrap(),
+                    ) as usize
+                })
+                .collect::<Vec<_>>()
+        };
+        Ok(BinCorpus {
+            vocab,
+            train: read_tokens(28, tlen),
+            valid: read_tokens(28 + tlen * 4, vlen),
+        })
+    }
+
+    /// Calibration windows from the validation split.
+    pub fn calib_windows(&self, n: usize, window: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed ^ 0x6269_6e63);
+        (0..n)
+            .map(|_| {
+                let start = rng.below(self.valid.len().saturating_sub(window).max(1));
+                self.valid[start..(start + window).min(self.valid.len())].to_vec()
+            })
+            .collect()
+    }
+}
+
+/// One zero-shot multiple-choice instance.
+#[derive(Debug, Clone)]
+pub struct ChoiceTask {
+    pub context: Vec<usize>,
+    pub choices: Vec<Vec<usize>>,
+    pub answer: usize,
+}
+
+/// The nine synthetic zero-shot suites (names mirror the paper's tasks;
+/// each differs in context length, continuation length and distractor
+/// hardness, giving a spread of difficulties like the real suite).
+pub const ZERO_SHOT_TASKS: [(&str, usize, usize, f64); 9] = [
+    // (name, context_len, cont_len, distractor_temperature)
+    ("ARC-c", 24, 3, 0.9),
+    ("ARC-e", 16, 2, 0.5),
+    ("HQA.", 32, 4, 0.8),
+    ("HellaS.", 48, 6, 0.7),
+    ("Lam.", 64, 1, 0.6),
+    ("OBQA", 20, 3, 1.0),
+    ("PIQA", 28, 2, 0.6),
+    ("SCIQ", 12, 2, 0.4),
+    ("WinoG.", 36, 2, 0.8),
+];
+
+/// Generate `n` instances of one task spec from the grammar. The correct
+/// choice is a grammar continuation of the context; distractors are
+/// random token strings tempered towards plausible unigrams.
+pub fn make_task(
+    g: &Grammar,
+    n: usize,
+    ctx_len: usize,
+    cont_len: usize,
+    hardness: f64,
+    seed: u64,
+) -> Vec<ChoiceTask> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let context = g.sample(ctx_len, &mut rng);
+            let (mut p2, mut p1) = (
+                context[context.len() - 2],
+                context[context.len() - 1],
+            );
+            // correct continuation: greedy grammar path (unambiguous signal)
+            let mut correct = Vec::with_capacity(cont_len);
+            for _ in 0..cont_len {
+                let t = g.argmax_next(p2, p1);
+                correct.push(t);
+                p2 = p1;
+                p1 = t;
+            }
+            let mut choices = vec![correct];
+            for _ in 0..3 {
+                // distractor: grammar-sampled with probability `hardness`,
+                // else uniform noise — harder tasks have plausible distractors
+                let mut d = Vec::with_capacity(cont_len);
+                let (mut q2, mut q1) = (
+                    context[context.len() - 2],
+                    context[context.len() - 1],
+                );
+                for _ in 0..cont_len {
+                    let t = if rng.f64() < hardness {
+                        // a non-argmax grammar-plausible token
+                        let s = g.next(q2, q1, &mut rng);
+                        if s == g.argmax_next(q2, q1) {
+                            rng.below(g.vocab)
+                        } else {
+                            s
+                        }
+                    } else {
+                        rng.below(g.vocab)
+                    };
+                    d.push(t);
+                    q2 = q1;
+                    q1 = t;
+                }
+                choices.push(d);
+            }
+            // guard against accidental duplicates of the correct answer
+            let correct_copy = choices[0].clone();
+            for c in choices.iter_mut().skip(1) {
+                if *c == correct_copy {
+                    c[0] = (c[0] + 1) % g.vocab;
+                }
+            }
+            let answer = rng.below(4);
+            choices.swap(0, answer);
+            ChoiceTask { context, choices, answer }
+        })
+        .collect()
+}
+
+
+/// Build choice tasks directly from a token corpus: the correct choice
+/// is the *actual* continuation of a validation window, distractors are
+/// random token strings. A model trained on the corpus scores above
+/// chance; quantization damage pushes it back towards chance — the
+/// real-metric path used with the trained tiny model (Tables 5/7, e2e).
+pub fn make_task_from_corpus(
+    tokens: &[usize],
+    vocab: usize,
+    n: usize,
+    ctx_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> Vec<ChoiceTask> {
+    let mut rng = Rng::new(seed ^ 0x636f_7230);
+    let span = ctx_len + cont_len;
+    assert!(tokens.len() > span + 1);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(tokens.len() - span - 1);
+            let context = tokens[start..start + ctx_len].to_vec();
+            let correct = tokens[start + ctx_len..start + span].to_vec();
+            let mut choices = vec![correct.clone()];
+            for _ in 0..3 {
+                let mut d: Vec<usize> =
+                    (0..cont_len).map(|_| rng.below(vocab)).collect();
+                if d == correct {
+                    d[0] = (d[0] + 1) % vocab;
+                }
+                choices.push(d);
+            }
+            let answer = rng.below(4);
+            choices.swap(0, answer);
+            ChoiceTask { context, choices, answer }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tasks_have_real_continuations() {
+        let toks: Vec<usize> = (0..500).map(|i| (i * 7) % 64).collect();
+        let tasks = make_task_from_corpus(&toks, 64, 20, 8, 3, 1);
+        for t in &tasks {
+            assert_eq!(t.choices.len(), 4);
+            assert!(t.answer < 4);
+        }
+    }
+
+    #[test]
+    fn grammar_is_deterministic_per_seed() {
+        let g1 = Grammar::new(64, 4, 9);
+        let g2 = Grammar::new(64, 4, 9);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(g1.sample(50, &mut r1), g2.sample(50, &mut r2));
+    }
+
+    #[test]
+    fn grammar_has_low_entropy_structure() {
+        // the argmax continuation must be much likelier than uniform
+        let g = Grammar::new(64, 4, 3);
+        let mut better = 0;
+        for p1 in 0..64 {
+            let am = g.argmax_next(0, p1);
+            if g.prob(0, p1, am) > 2.0 / 64.0 {
+                better += 1;
+            }
+        }
+        assert!(better > 56, "only {better}/64 states structured");
+    }
+
+    #[test]
+    fn corpus_splits_differ() {
+        let c = Corpus::build(64, 500, 200, 11);
+        assert_eq!(c.train.len(), 500);
+        assert_eq!(c.valid.len(), 200);
+        assert_ne!(&c.train[..200], &c.valid[..]);
+    }
+
+    #[test]
+    fn calib_windows_shapes() {
+        let c = Corpus::build(64, 500, 400, 12);
+        let w = c.calib_windows(128, 32, 1);
+        assert_eq!(w.len(), 128);
+        assert!(w.iter().all(|x| x.len() == 32));
+    }
+
+    #[test]
+    fn tasks_have_valid_answers() {
+        let g = Grammar::new(64, 4, 5);
+        let tasks = make_task(&g, 50, 16, 3, 0.7, 2);
+        for t in &tasks {
+            assert_eq!(t.choices.len(), 4);
+            assert!(t.answer < 4);
+            assert!(t.choices.iter().all(|c| c.len() == 3));
+            // the correct choice differs from all distractors
+            let correct = &t.choices[t.answer];
+            let dups = t
+                .choices
+                .iter()
+                .enumerate()
+                .filter(|(i, c)| *i != t.answer && *c == correct)
+                .count();
+            assert_eq!(dups, 0);
+        }
+    }
+
+    #[test]
+    fn nine_task_specs() {
+        assert_eq!(ZERO_SHOT_TASKS.len(), 9);
+    }
+}

@@ -1,0 +1,139 @@
+//! Evaluation harnesses.
+//!
+//! * [`ppl`] — perplexity over corpus tokens (real NLL through the Rust
+//!   reference forward).
+//! * [`zeroshot`] — the nine synthetic multiple-choice suites, scored by
+//!   length-normalised log-probability exactly like lm-eval-harness.
+//! * [`vision`] — the VRWKV task proxies (classification / detection /
+//!   segmentation) for Tables 3/8.
+//! * divergence + fidelity mapping (this module) — for the synthetic
+//!   model families (which are distribution replicas, not trained
+//!   models) quality is reported through the measured output divergence
+//!   between the fp and quantized forward passes, mapped onto the
+//!   paper's fp metric scales. See DESIGN.md §Substitutions.
+
+pub mod ppl;
+pub mod vision;
+pub mod zeroshot;
+
+use crate::model::rwkv::RwkvRunner;
+use crate::model::ModelWeights;
+use crate::tensor::stats;
+
+/// Mean symmetric KL divergence between next-token distributions of two
+/// models over probe sequences — the raw damage signal of a quantization.
+pub fn output_divergence(
+    fp: &ModelWeights,
+    quant: &ModelWeights,
+    probes: &[Vec<usize>],
+) -> f64 {
+    let mut run_fp = RwkvRunner::new(fp);
+    let mut run_q = RwkvRunner::new(quant);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for probe in probes {
+        run_fp.reset();
+        run_q.reset();
+        for &t in probe {
+            let mut la = run_fp.forward_token(t);
+            let mut lb = run_q.forward_token(t);
+            stats::softmax_inplace(&mut la);
+            stats::softmax_inplace(&mut lb);
+            let mut kl = 0.0f64;
+            for (pa, pb) in la.iter().zip(&lb) {
+                let pa = (*pa as f64).max(1e-12);
+                let pb = (*pb as f64).max(1e-12);
+                kl += 0.5 * (pa * (pa / pb).ln() + pb * (pb / pa).ln());
+            }
+            total += kl;
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+/// Map a measured divergence onto the paper's metric scales: accuracy
+/// decays from the fp reference towards chance, perplexity inflates
+/// multiplicatively. The constants are fixed once (not per-method), so
+/// *orderings and gaps* between methods always reflect the measured
+/// divergence of this repo's quantizers.
+#[derive(Debug, Clone, Copy)]
+pub struct FidelityMap {
+    /// fp reference accuracy (e.g. the paper's FloatingPoint 0-shot avg)
+    pub fp_acc: f64,
+    /// chance-level accuracy for the suite
+    pub chance: f64,
+    /// fp reference perplexity
+    pub fp_ppl: f64,
+    /// divergence→damage gain (calibrated once in benches; default 1.0)
+    pub gain: f64,
+}
+
+impl FidelityMap {
+    pub fn acc(&self, divergence: f64) -> f64 {
+        self.chance + (self.fp_acc - self.chance) * (-self.gain * divergence).exp()
+    }
+
+    pub fn ppl(&self, divergence: f64) -> f64 {
+        self.fp_ppl * (self.gain * divergence).exp()
+    }
+}
+
+/// Build a quantized-weights model: quantizable layers replaced by the
+/// dequantized reconstruction, everything else untouched.
+pub fn dequantized_model(
+    fp: &ModelWeights,
+    layers: &std::collections::HashMap<String, crate::quant::QuantizedLayer>,
+) -> ModelWeights {
+    let mut out = fp.clone();
+    for (desc, m) in out.layers.iter_mut() {
+        if let Some(q) = layers.get(&desc.name) {
+            *m = q.dequantize();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::rwkv::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn divergence_zero_on_identical_models() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(1));
+        let d = output_divergence(&m, &m, &[vec![1, 2, 3, 4]]);
+        assert!(d.abs() < 1e-9);
+    }
+
+    #[test]
+    fn divergence_grows_with_damage() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(2));
+        let mut rng = Rng::new(3);
+        let mut light = m.clone();
+        let mut heavy = m.clone();
+        for &i in &m.quantizable_indices() {
+            for v in light.layers[i].1.data.iter_mut() {
+                *v += rng.normal_ms(0.0, 0.002) as f32;
+            }
+            for v in heavy.layers[i].1.data.iter_mut() {
+                *v += rng.normal_ms(0.0, 0.08) as f32;
+            }
+        }
+        let probes = vec![vec![1usize, 5, 9, 2, 7, 3]];
+        let dl = output_divergence(&m, &light, &probes);
+        let dh = output_divergence(&m, &heavy, &probes);
+        assert!(dh > dl * 3.0, "heavy {dh} vs light {dl}");
+    }
+
+    #[test]
+    fn fidelity_map_bounds() {
+        let f = FidelityMap { fp_acc: 60.0, chance: 25.0, fp_ppl: 4.0, gain: 1.0 };
+        assert!((f.acc(0.0) - 60.0).abs() < 1e-9);
+        assert!(f.acc(1e9) >= 25.0 - 1e-9);
+        assert!(f.ppl(0.0) == 4.0);
+        assert!(f.ppl(0.5) > 4.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # RWKVQuant
+//!
+//! A post-training quantization (PTQ) framework for the RWKV model family,
+//! reproducing *"RWKVQuant: Quantizing the RWKV Family with Proxy Guided
+//! Hybrid of Scalar and Vector Quantization"* (ICML 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`quant`] — the paper's contribution: scalar-quantization engines
+//!   (RTN, GPTQ, AWQ, QuaRot), vector-quantization engines (weighted
+//!   K-Means, GPTVQ, VPTQ), the coarse-to-fine proxy (§3.1), the hybrid
+//!   selector (Eq. 18), and the element-wise-multiplication codebook
+//!   optimisation (§3.2).
+//! * [`model`] — the RWKV-6/7 substrate: layer descriptors, a weight
+//!   store with a binary interchange format shared with the Python
+//!   build path, a pure-Rust reference forward pass, synthetic model
+//!   families with controlled weight distributions, and analytic
+//!   FLOP/byte accounting.
+//! * [`runtime`] — PJRT execution of AOT-lowered HLO artifacts produced
+//!   by `python/compile/aot.py` (JAX + Pallas, build-time only).
+//! * [`coordinator`] — the layer-quantization pipeline (worker pool) and
+//!   the batched generation server used for end-to-end evaluation.
+//! * [`calib`], [`data`], [`eval`] — calibration management, synthetic
+//!   corpus/tokenizer, and the perplexity / zero-shot / vision
+//!   evaluation harnesses.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every table and figure of the paper to a bench target.
+
+pub mod calib;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

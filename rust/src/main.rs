@@ -1,0 +1,231 @@
+//! `rwkvquant` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   quantize   quantize a weight store (or a synthetic model) and report
+//!   eval       perplexity + zero-shot of a store on the corpus
+//!   serve      batched generation over a (quantized) store
+//!   proxy      proxy-scan a model (SQ/VQ classification per layer)
+//!   info       print artifact / environment status
+
+use rwkvquant::calib::CalibSet;
+use rwkvquant::config::{Method, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::coordinator::serve::{serve, Request, RunnerDecoder};
+use rwkvquant::data::{make_task_from_corpus, BinCorpus};
+use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
+use rwkvquant::experiments::build_model;
+use rwkvquant::model::ModelWeights;
+use rwkvquant::report::{Cell, Table};
+use rwkvquant::runtime::artifacts_dir;
+use rwkvquant::util::cli::{Args, Help};
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn help() -> String {
+    Help::new("rwkvquant", "proxy-guided hybrid SQ/VQ post-training quantization for RWKV")
+        .sub("quantize", "quantize a store or synthetic model, print the pipeline report")
+        .sub("eval", "perplexity + corpus zero-shot of a store")
+        .sub("serve", "batched generation over a store (optionally quantized first)")
+        .sub("proxy", "per-layer proxy scan (P_c, P_f, Eq.18 decision)")
+        .sub("info", "artifact & environment status")
+        .opt("store", "path to a RWKVQ1 weight store (default artifacts/tiny_rwkv.bin)")
+        .opt("method", "rtn|gptq|awq|quarot|kmeans|gptvq|vptq|rwkvquant (default rwkvquant)")
+        .opt("bpw", "target bits per weight for baselines (3.25/3.5)")
+        .opt("size", "synthetic model size (0.1B..14B) when no store given")
+        .opt("arch", "synthetic arch rwkv6|rwkv7 (default rwkv6)")
+        .opt("requests", "serve: number of requests (default 16)")
+        .opt("batch", "serve: max batch (default 8)")
+        .opt("seed", "rng seed (default 42)")
+        .render()
+}
+
+fn load_model(args: &Args) -> rwkvquant::Result<ModelWeights> {
+    match args.get("store") {
+        Some(path) => ModelWeights::load(std::path::Path::new(path)),
+        None => {
+            let default = artifacts_dir().join("tiny_rwkv.bin");
+            if default.exists() && args.get("size").is_none() {
+                ModelWeights::load(&default)
+            } else {
+                let arch = args.get_or("arch", "rwkv6");
+                let size = args.get_or("size", "0.5B");
+                eprintln!("(no store — generating synthetic {arch}-{size})");
+                Ok(build_model(arch, size, args.get_u64("seed", 42)))
+            }
+        }
+    }
+}
+
+fn quant_config(args: &Args) -> rwkvquant::Result<QuantConfig> {
+    let method = Method::parse(args.get_or("method", "rwkvquant"))?;
+    let bpw = args.get_f64("bpw", if method == Method::RwkvQuant { 3.275 } else { 3.5 });
+    let mut cfg = QuantConfig::baseline(method, bpw);
+    cfg.method = method;
+    cfg.vq_bits = cfg.vq_bits.min(args.get_usize("vq-bits", 9) as u32);
+    cfg.seed = args.get_u64("seed", 42);
+    if let Some(tc) = args.get("tau-c") {
+        cfg.tau_c = Some(tc.parse()?);
+    }
+    if let Some(tf) = args.get("tau-f") {
+        cfg.tau_f = Some(tf.parse()?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_quantize(args: &Args) -> rwkvquant::Result<()> {
+    let model = load_model(args)?;
+    let cfg = quant_config(args)?;
+    let corpus_path = artifacts_dir().join("corpus.bin");
+    let calib = if corpus_path.exists() && model.config.vocab <= 4096 {
+        let corpus = BinCorpus::load(&corpus_path)?;
+        if corpus.vocab == model.config.vocab {
+            Some(CalibSet::capture(&model, &corpus.calib_windows(8, 16, 3), cfg.calib_samples))
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    let (q, rep) = quantize_model(&model, calib.as_ref(), &cfg, 0);
+    let mut t = Table::new(
+        format!("pipeline report — {}", cfg.method.name()),
+        &["Layer", "P_c", "P_f", "choice", "bpw", "mse"],
+    );
+    for l in &rep.layers {
+        t.row(vec![
+            Cell::s(l.name.clone()),
+            l.proxies.map(|p| Cell::f(p.p_c, 3)).unwrap_or(Cell::Empty),
+            l.proxies.map(|p| Cell::f(p.p_f, 2)).unwrap_or(Cell::Empty),
+            Cell::s(l.choice.map(|c| format!("{c:?}")).unwrap_or_else(|| "-".into())),
+            Cell::f(l.bpw, 3),
+            Cell::F64(l.mse, 8),
+        ]);
+    }
+    t.print();
+    println!(
+        "avg bpw {:.3} | SQ share {:.0}% | {:.2}s on {} workers | quantized bits {}",
+        rep.avg_bpw,
+        rep.sq_share() * 100.0,
+        rep.wall_secs,
+        rep.n_workers,
+        q.values().map(|l| l.storage_bits()).sum::<usize>(),
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> rwkvquant::Result<()> {
+    let model = load_model(args)?;
+    let corpus = BinCorpus::load(&artifacts_dir().join("corpus.bin"))?;
+    anyhow::ensure!(corpus.vocab == model.config.vocab, "corpus/model vocab mismatch");
+    let toks = &corpus.valid[..1000.min(corpus.valid.len())];
+    let tasks = make_task_from_corpus(&corpus.valid, corpus.vocab, 60, 16, 2, 5);
+    println!("ppl(valid[..{}]) = {:.3}", toks.len(), ppl::perplexity(&model, toks));
+    println!("corpus 0-shot accuracy = {:.1}% (chance 25%)", zeroshot::accuracy(&model, &tasks));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
+    let model = load_model(args)?;
+    let cfg = quant_config(args)?;
+    let (q, rep) = quantize_model(&model, None, &cfg, 0);
+    println!("serving quantized model (avg {:.3} bpw)", rep.avg_bpw);
+    let dq = dequantized_model(&model, &q);
+    let mut dec = RunnerDecoder::new(&dq);
+    let (tx_req, rx_req) = mpsc::channel();
+    let (tx_resp, rx_resp) = mpsc::channel();
+    let n = args.get_usize("requests", 16);
+    for id in 0..n as u64 {
+        tx_req.send(Request {
+            id,
+            prompt: vec![(id as usize * 7) % model.config.vocab, 1, 2],
+            gen_len: args.get_usize("gen-len", 12),
+        })?;
+    }
+    drop(tx_req);
+    let stats = serve(
+        &mut dec,
+        rx_req,
+        tx_resp,
+        args.get_usize("batch", 8),
+        Duration::from_millis(2),
+    )?;
+    let _ = rx_resp.iter().count();
+    println!(
+        "{} requests | {:.1} tok/s | p50 {:?} p95 {:?}",
+        stats.completed,
+        stats.tokens_per_sec(),
+        stats.p50_latency,
+        stats.p95_latency
+    );
+    Ok(())
+}
+
+fn cmd_proxy(args: &Args) -> rwkvquant::Result<()> {
+    let model = load_model(args)?;
+    let idx = model.quantizable_indices();
+    let pairs: Vec<_> = idx
+        .iter()
+        .map(|&i| rwkvquant::quant::proxy::compute(&model.layers[i].1.data, 4))
+        .collect();
+    let cal = rwkvquant::quant::hybrid::calibrate_taus(&pairs, args.get_f64("sq-fraction", 0.9));
+    println!("τ_c = {:.3}, τ_f = {:.2}, SQ share {:.0}%", cal.tau_c, cal.tau_f, cal.sq_share * 100.0);
+    let mut t = Table::new("proxy scan", &["Layer", "P_c", "P_f", "Eq.18"]);
+    for (pos, &i) in idx.iter().enumerate() {
+        let c = rwkvquant::quant::hybrid::decide(pairs[pos], cal.tau_c, cal.tau_f);
+        t.row(vec![
+            Cell::s(model.layers[i].0.name.clone()),
+            Cell::f(pairs[pos].p_c, 3),
+            Cell::f(pairs[pos].p_f, 2),
+            Cell::s(format!("{c:?}")),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    for f in [
+        "tiny_rwkv.bin",
+        "corpus.bin",
+        "rwkv_step.hlo.txt",
+        "rwkv_step.inputs.txt",
+        "vq_matvec.hlo.txt",
+        "smoke.hlo.txt",
+        "train_log.txt",
+    ] {
+        let p = dir.join(f);
+        let status = p
+            .metadata()
+            .map(|m| format!("{} bytes", m.len()))
+            .unwrap_or_else(|_| "MISSING (run `make artifacts`)".into());
+        println!("  {f:<24} {status}");
+    }
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("proxy") => cmd_proxy(&args),
+        Some("info") => {
+            cmd_info();
+            Ok(())
+        }
+        _ => {
+            print!("{}", help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal LLaMA-like comparator model.
+//!
+//! Only what the paper's comparisons need: the layer inventory with
+//! realistic shapes (attention q/k/v/o + gated FFN), weight generation,
+//! and the op/byte accounting hooks. No Rust forward pass is required —
+//! the LLaMA family appears in Table 1 (cluster loss), Fig. 5 (SQ
+//! proportion), and Fig. 9 (compute-to-memory ratio) only.
+
+use super::store::{ModelWeights, ParamClass};
+use crate::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Initialise a LLaMA-shaped parameter set (Gaussian init; the synthetic
+/// family generator overwrites the matmul weights with archetypes).
+pub fn init_params(cfg: &ModelConfig, rng: &mut Rng) -> ModelWeights {
+    let d = cfg.d_model;
+    let ffn = cfg.ffn_dim();
+    let mut m = ModelWeights::new(cfg.clone());
+
+    let mat = |rng: &mut Rng, rows: usize, cols: usize| {
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.0, 1.0 / (cols as f32).sqrt());
+        w
+    };
+
+    let mut emb = Matrix::zeros(cfg.vocab, d);
+    rng.fill_normal(&mut emb.data, 0.0, 0.02);
+    m.push("emb", ParamClass::Embedding, emb);
+    for b in 0..cfg.n_layer {
+        let p = |s: &str| format!("blocks.{b}.{s}");
+        m.push(p("ln1.g"), ParamClass::Vector, Matrix::filled(1, d, 1.0));
+        for w in ["attn.w_q", "attn.w_k", "attn.w_v", "attn.w_o"] {
+            m.push(p(w), ParamClass::MatMul, mat(rng, d, d));
+        }
+        m.push(p("ln2.g"), ParamClass::Vector, Matrix::filled(1, d, 1.0));
+        m.push(p("mlp.w_gate"), ParamClass::MatMul, mat(rng, ffn, d));
+        m.push(p("mlp.w_up"), ParamClass::MatMul, mat(rng, ffn, d));
+        m.push(p("mlp.w_down"), ParamClass::MatMul, mat(rng, d, ffn));
+    }
+    m.push("ln_out.g", ParamClass::Vector, Matrix::filled(1, d, 1.0));
+    m.push("head", ParamClass::Embedding, mat(rng, cfg.vocab, d));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_has_seven_matmuls_per_block() {
+        let cfg = ModelConfig::llama(3, 64, 128);
+        let m = init_params(&cfg, &mut Rng::new(1));
+        let matmuls = m
+            .layers
+            .iter()
+            .filter(|(d, _)| d.class == ParamClass::MatMul)
+            .count();
+        assert_eq!(matmuls, 3 * 7);
+    }
+
+    #[test]
+    fn no_elementwise_weights_in_llama() {
+        let cfg = ModelConfig::llama(2, 64, 128);
+        let m = init_params(&cfg, &mut Rng::new(2));
+        assert!(
+            m.layers.iter().all(|(d, _)| d.class != ParamClass::ElementWise),
+            "LLaMA has no μ ⊙ x weights — that is the RWKV-specific structure"
+        );
+    }
+}

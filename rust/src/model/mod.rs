@@ -1,0 +1,26 @@
+//! The RWKV model substrate.
+//!
+//! * [`store`] — layer descriptors, the in-memory weight store, and the
+//!   binary interchange format shared with the Python build path
+//!   (`python/compile/train.py` writes it, this crate reads it, and the
+//!   quantization pipeline writes quantized stores back).
+//! * [`rwkv`] — a pure-Rust reference forward pass for RWKV-6/7 blocks
+//!   (token-shift mixing, the stabilised WKV recurrence, channel
+//!   mixing). Used by the eval harness and as the numeric oracle for the
+//!   PJRT-executed HLO graphs.
+//! * [`llama`] — a minimal LLaMA-like comparator (weights + layer
+//!   inventory only; used for the Table 1 / Fig. 5 distribution
+//!   comparisons and the Fig. 9 op/byte accounting).
+//! * [`synthetic`] — weight-family generators with controlled
+//!   distribution archetypes (uniform / uniform+outliers / Gaussian /
+//!   clustered), calibrated to the paper's RWKV-vs-LLaMA findings.
+//! * [`flops`] — analytic FLOP and byte accounting per architecture
+//!   (Fig. 9, §A.3, and the QuaRot overhead aggregation).
+
+pub mod flops;
+pub mod llama;
+pub mod rwkv;
+pub mod store;
+pub mod synthetic;
+
+pub use store::{LayerDesc, ModelWeights, ParamClass};

@@ -1,0 +1,449 @@
+//! Pure-Rust RWKV reference forward pass.
+//!
+//! Implements the paper's Appendix A.1 block structure: token-shift
+//! interpolation (`μ ⊙ x_t + (1−μ) ⊙ x_{t−1}`, Eqs. 20–22, 25–26), the
+//! channel-wise WKV recurrence with bonus `u` and decay `w` (Eq. 23,
+//! numerically stabilised with a running max exponent as in the
+//! reference CUDA kernel), sigmoid receptance output (Eq. 24), and
+//! squared-ReLU channel mixing (Eq. 27). The `rwkv7` variant adds the
+//! output gate (`W_g`, `μ_g`) of the RWKV-7 time-mixing module.
+//!
+//! This is the numeric oracle for the JAX/Pallas build path
+//! (`python/compile/model.py` mirrors these equations) and the engine
+//! behind the Rust-side eval harness.
+//!
+//! Naming scheme (shared with `train.py` / `aot.py` via the binary
+//! store): `emb`, `head`, `ln_out.{g,b}`, and per block `i`:
+//! `blocks.i.ln1.{g,b}`, `blocks.i.att.{mu_r,mu_k,mu_v[,mu_g]}`,
+//! `blocks.i.att.{w_r,w_k,w_v,w_o[,w_g]}`, `blocks.i.att.{decay,bonus}`,
+//! `blocks.i.ln2.{g,b}`, `blocks.i.ffn.{mu_r,mu_k}`,
+//! `blocks.i.ffn.{w_r,w_k,w_v}`.
+
+use super::store::{ModelWeights, ParamClass};
+use crate::config::ModelConfig;
+use crate::tensor::{linalg, Matrix};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Per-block recurrent state.
+#[derive(Debug, Clone)]
+pub struct BlockState {
+    /// previous post-LN1 activation (token shift, time mixing)
+    pub x_att: Vec<f32>,
+    /// previous post-LN2 activation (token shift, channel mixing)
+    pub x_ffn: Vec<f32>,
+    /// WKV numerator accumulator
+    pub aa: Vec<f32>,
+    /// WKV denominator accumulator
+    pub bb: Vec<f32>,
+    /// running max exponent for stability
+    pub pp: Vec<f32>,
+}
+
+impl BlockState {
+    fn new(d: usize) -> Self {
+        BlockState {
+            x_att: vec![0.0; d],
+            x_ffn: vec![0.0; d],
+            aa: vec![0.0; d],
+            bb: vec![0.0; d],
+            pp: vec![-1e30; d],
+        }
+    }
+}
+
+/// Records the input activation rows feeding each quantizable layer
+/// during calibration forwards (the `X` of GPTQ/AWQ Hessians and of the
+/// §3.2 element-wise loss). Bounded by `max_rows` per layer.
+#[derive(Debug, Default)]
+pub struct Capture {
+    pub max_rows: usize,
+    pub rows: HashMap<String, Vec<Vec<f32>>>,
+}
+
+impl Capture {
+    pub fn new(max_rows: usize) -> Self {
+        Capture { max_rows, rows: HashMap::new() }
+    }
+
+    fn push(&mut self, name: &str, row: &[f32]) {
+        let v = self.rows.entry(name.to_string()).or_default();
+        if v.len() < self.max_rows {
+            v.push(row.to_vec());
+        }
+    }
+
+    /// Drain into per-layer activation matrices.
+    pub fn into_matrices(self) -> HashMap<String, Matrix> {
+        self.rows
+            .into_iter()
+            .filter(|(_, rows)| !rows.is_empty())
+            .map(|(name, rows)| {
+                let cols = rows[0].len();
+                let mut m = Matrix::zeros(rows.len(), cols);
+                for (i, r) in rows.iter().enumerate() {
+                    m.row_mut(i).copy_from_slice(r);
+                }
+                (name, m)
+            })
+            .collect()
+    }
+}
+
+/// Runs a model from a [`ModelWeights`] store.
+pub struct RwkvRunner<'a> {
+    pub weights: &'a ModelWeights,
+    index: HashMap<&'a str, usize>,
+    pub state: Vec<BlockState>,
+    gated: bool,
+    /// when set, calibration activations are recorded per layer
+    pub capture: Option<Capture>,
+    // scratch buffers (hot path is allocation-free after construction)
+    buf_d: Vec<f32>,
+    buf_d2: Vec<f32>,
+    buf_d3: Vec<f32>,
+    buf_ffn: Vec<f32>,
+}
+
+impl<'a> RwkvRunner<'a> {
+    pub fn new(weights: &'a ModelWeights) -> Self {
+        let index = weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, (d, _))| (d.name.as_str(), i))
+            .collect();
+        let d = weights.config.d_model;
+        let n = weights.config.n_layer;
+        let gated = weights.config.arch == "rwkv7";
+        RwkvRunner {
+            weights,
+            index,
+            state: (0..n).map(|_| BlockState::new(d)).collect(),
+            gated,
+            capture: None,
+            buf_d: vec![0.0; d],
+            buf_d2: vec![0.0; d],
+            buf_d3: vec![0.0; d],
+            buf_ffn: vec![0.0; weights.config.ffn_dim()],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        let d = self.weights.config.d_model;
+        for s in &mut self.state {
+            *s = BlockState::new(d);
+        }
+    }
+
+    fn t(&self, name: &str) -> &'a Matrix {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("missing parameter '{name}'"));
+        &self.weights.layers[i].1
+    }
+
+    /// Forward one token id; returns the next-token logits.
+    pub fn forward_token(&mut self, token: usize) -> Vec<f32> {
+        let cfg = &self.weights.config;
+        let d = cfg.d_model;
+        let emb = self.t("emb");
+        assert!(token < cfg.vocab, "token {token} >= vocab {}", cfg.vocab);
+        let mut x: Vec<f32> = emb.row(token).to_vec();
+
+        for b in 0..cfg.n_layer {
+            let p = |suffix: &str| format!("blocks.{b}.{suffix}");
+            // ---- time mixing ----
+            let xx = layer_norm(&x, self.t(&p("ln1.g")).row(0), self.t(&p("ln1.b")).row(0));
+            // fetch all parameter views before borrowing state mutably
+            let mu_r = self.t(&p("att.mu_r")).row(0);
+            let mu_k = self.t(&p("att.mu_k")).row(0);
+            let mu_v = self.t(&p("att.mu_v")).row(0);
+            let w_r = self.t(&p("att.w_r"));
+            let w_k = self.t(&p("att.w_k"));
+            let w_v = self.t(&p("att.w_v"));
+            let w_o = self.t(&p("att.w_o"));
+            let decay = self.t(&p("att.decay")).row(0);
+            let bonus = self.t(&p("att.bonus")).row(0);
+
+            let st = &mut self.state[b];
+            // token-shift interpolations
+            lerp_into(&xx, &st.x_att, mu_r, &mut self.buf_d);
+            let r = linalg::matvec(w_r, &self.buf_d);
+            lerp_into(&xx, &st.x_att, mu_k, &mut self.buf_d2);
+            let k = linalg::matvec(w_k, &self.buf_d2);
+            lerp_into(&xx, &st.x_att, mu_v, &mut self.buf_d3);
+            let v = linalg::matvec(w_v, &self.buf_d3);
+            st.x_att.copy_from_slice(&xx);
+            if let Some(cap) = &mut self.capture {
+                cap.push(&p("att.w_r"), &self.buf_d);
+                cap.push(&p("att.w_k"), &self.buf_d2);
+                cap.push(&p("att.w_v"), &self.buf_d3);
+                // μ weights multiply the current activation x_t = xx (Eq. 20)
+                cap.push(&p("att.mu_r"), &xx);
+                cap.push(&p("att.mu_k"), &xx);
+                cap.push(&p("att.mu_v"), &xx);
+            }
+
+            // WKV recurrence (channel-wise, stabilised)
+            let mut wkv = vec![0.0f32; d];
+            for c in 0..d {
+                let ww = bonus[c] + k[c];
+                let p1 = st.pp[c].max(ww);
+                let e1 = (st.pp[c] - p1).exp();
+                let e2 = (ww - p1).exp();
+                wkv[c] = (e1 * st.aa[c] + e2 * v[c]) / (e1 * st.bb[c] + e2).max(1e-30);
+                // state update with decay
+                let ww2 = st.pp[c] - decay[c];
+                let p2 = ww2.max(k[c]);
+                let ea = (ww2 - p2).exp();
+                let eb = (k[c] - p2).exp();
+                st.aa[c] = ea * st.aa[c] + eb * v[c];
+                st.bb[c] = ea * st.bb[c] + eb;
+                st.pp[c] = p2;
+            }
+
+            // receptance gate, optional RWKV-7 output gate, output proj
+            for c in 0..d {
+                wkv[c] *= sigmoid(r[c]);
+            }
+            if self.gated {
+                let mu_g = self.t(&p("att.mu_g")).row(0);
+                let w_g = self.t(&p("att.w_g"));
+                let st = &self.state[b];
+                lerp_into(&xx, &st.x_att, mu_g, &mut self.buf_d);
+                let g = linalg::matvec(w_g, &self.buf_d);
+                if let Some(cap) = &mut self.capture {
+                    cap.push(&p("att.w_g"), &self.buf_d);
+                    cap.push(&p("att.mu_g"), &xx);
+                }
+                for c in 0..d {
+                    wkv[c] *= sigmoid(g[c]) * 2.0;
+                }
+            }
+            if let Some(cap) = &mut self.capture {
+                cap.push(&p("att.w_o"), &wkv);
+            }
+            let att_out = linalg::matvec(w_o, &wkv);
+            for c in 0..d {
+                x[c] += att_out[c];
+            }
+
+            // ---- channel mixing ----
+            let xc = layer_norm(&x, self.t(&p("ln2.g")).row(0), self.t(&p("ln2.b")).row(0));
+            let mu_cr = self.t(&p("ffn.mu_r")).row(0);
+            let mu_ck = self.t(&p("ffn.mu_k")).row(0);
+            let w_cr = self.t(&p("ffn.w_r"));
+            let w_ck = self.t(&p("ffn.w_k"));
+            let w_cv = self.t(&p("ffn.w_v"));
+            let st = &mut self.state[b];
+            lerp_into(&xc, &st.x_ffn, mu_cr, &mut self.buf_d);
+            let rp = linalg::matvec(w_cr, &self.buf_d);
+            lerp_into(&xc, &st.x_ffn, mu_ck, &mut self.buf_d2);
+            linalg::matvec_into(w_ck, &self.buf_d2, &mut self.buf_ffn);
+            st.x_ffn.copy_from_slice(&xc);
+            // squared ReLU
+            for v in self.buf_ffn.iter_mut() {
+                let relu = v.max(0.0);
+                *v = relu * relu;
+            }
+            if let Some(cap) = &mut self.capture {
+                cap.push(&p("ffn.w_r"), &self.buf_d);
+                cap.push(&p("ffn.w_k"), &self.buf_d2);
+                cap.push(&p("ffn.w_v"), &self.buf_ffn);
+                cap.push(&p("ffn.mu_r"), &xc);
+                cap.push(&p("ffn.mu_k"), &xc);
+            }
+            let ffn_out = linalg::matvec(w_cv, &self.buf_ffn);
+            for c in 0..d {
+                x[c] += sigmoid(rp[c]) * ffn_out[c];
+            }
+        }
+
+        let xo = layer_norm(&x, self.t("ln_out.g").row(0), self.t("ln_out.b").row(0));
+        linalg::matvec(self.t("head"), &xo)
+    }
+
+    /// Forward a token sequence, returning logits at every position.
+    pub fn forward_sequence(&mut self, tokens: &[usize]) -> Vec<Vec<f32>> {
+        tokens.iter().map(|&t| self.forward_token(t)).collect()
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `out = μ ⊙ a + (1−μ) ⊙ b` — the token-shift interpolation.
+#[inline]
+fn lerp_into(a: &[f32], b: &[f32], mu: &[f32], out: &mut [f32]) {
+    for i in 0..out.len() {
+        out[i] = mu[i] * a[i] + (1.0 - mu[i]) * b[i];
+    }
+}
+
+/// LayerNorm with gain and bias.
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| (((v as f64 - mean) * inv) as f32) * g[i] + b[i])
+        .collect()
+}
+
+/// Initialise a fresh RWKV parameter set (used by tests and the
+/// synthetic families; the trained tiny model comes from `train.py`).
+pub fn init_params(cfg: &ModelConfig, rng: &mut Rng) -> ModelWeights {
+    let d = cfg.d_model;
+    let ffn = cfg.ffn_dim();
+    let mut m = ModelWeights::new(cfg.clone());
+    let gated = cfg.arch == "rwkv7";
+
+    let mat = |rng: &mut Rng, rows: usize, cols: usize, std: f64| {
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.0, (std / (cols as f64).sqrt()) as f32);
+        w
+    };
+
+    let mut emb = Matrix::zeros(cfg.vocab, d);
+    rng.fill_normal(&mut emb.data, 0.0, 0.02);
+    m.push("emb", ParamClass::Embedding, emb);
+
+    for b in 0..cfg.n_layer {
+        let p = |s: &str| format!("blocks.{b}.{s}");
+        m.push(p("ln1.g"), ParamClass::Vector, Matrix::filled(1, d, 1.0));
+        m.push(p("ln1.b"), ParamClass::Vector, Matrix::zeros(1, d));
+        for mu in ["att.mu_r", "att.mu_k", "att.mu_v"] {
+            let mut v = Matrix::zeros(1, d);
+            // RWKV init: μ ramps with channel index and depth
+            for c in 0..d {
+                let ratio = c as f64 / d as f64;
+                let depth = b as f64 / cfg.n_layer.max(1) as f64;
+                v.data[c] = (ratio.powf(1.0 - depth * 0.5) * 0.9 + 0.05) as f32;
+            }
+            m.push(p(mu), ParamClass::ElementWise, v);
+        }
+        if gated {
+            let mut v = Matrix::zeros(1, d);
+            rng.fill_uniform(&mut v.data, 0.3, 0.7);
+            m.push(p("att.mu_g"), ParamClass::ElementWise, v);
+        }
+        m.push(p("att.w_r"), ParamClass::MatMul, mat(rng, d, d, 1.0));
+        m.push(p("att.w_k"), ParamClass::MatMul, mat(rng, d, d, 1.0));
+        m.push(p("att.w_v"), ParamClass::MatMul, mat(rng, d, d, 1.0));
+        m.push(p("att.w_o"), ParamClass::MatMul, mat(rng, d, d, 0.5));
+        if gated {
+            m.push(p("att.w_g"), ParamClass::MatMul, mat(rng, d, d, 0.5));
+        }
+        let mut decay = Matrix::zeros(1, d);
+        for c in 0..d {
+            // per-channel decay in (0.3, 6): slow channels keep context
+            decay.data[c] = (0.3 + 5.7 * (c as f64 / d.max(1) as f64).powf(2.0)) as f32;
+        }
+        m.push(p("att.decay"), ParamClass::Vector, decay);
+        let mut bonus = Matrix::zeros(1, d);
+        rng.fill_uniform(&mut bonus.data, 0.0, 1.0);
+        m.push(p("att.bonus"), ParamClass::Vector, bonus);
+
+        m.push(p("ln2.g"), ParamClass::Vector, Matrix::filled(1, d, 1.0));
+        m.push(p("ln2.b"), ParamClass::Vector, Matrix::zeros(1, d));
+        for mu in ["ffn.mu_r", "ffn.mu_k"] {
+            let mut v = Matrix::zeros(1, d);
+            rng.fill_uniform(&mut v.data, 0.2, 0.9);
+            m.push(p(mu), ParamClass::ElementWise, v);
+        }
+        m.push(p("ffn.w_r"), ParamClass::MatMul, mat(rng, d, d, 0.8));
+        m.push(p("ffn.w_k"), ParamClass::MatMul, mat(rng, ffn, d, 1.0));
+        m.push(p("ffn.w_v"), ParamClass::MatMul, mat(rng, d, ffn, 0.5));
+    }
+    m.push("ln_out.g", ParamClass::Vector, Matrix::filled(1, d, 1.0));
+    m.push("ln_out.b", ParamClass::Vector, Matrix::zeros(1, d));
+    m.push("head", ParamClass::Embedding, mat(rng, cfg.vocab, d, 0.5));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelWeights {
+        init_params(&ModelConfig::rwkv6(2, 16, 32), &mut Rng::new(42))
+    }
+
+    #[test]
+    fn forward_produces_finite_logits() {
+        let m = tiny();
+        let mut run = RwkvRunner::new(&m);
+        for t in [0usize, 5, 31] {
+            let logits = run.forward_token(t);
+            assert_eq!(logits.len(), 32);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn state_carries_information() {
+        let m = tiny();
+        let mut run = RwkvRunner::new(&m);
+        let _ = run.forward_token(1);
+        let with_ctx = run.forward_token(2);
+        run.reset();
+        let without_ctx = run.forward_token(2);
+        let diff: f32 = with_ctx
+            .iter()
+            .zip(&without_ctx)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-4, "context must change logits (diff={diff})");
+    }
+
+    #[test]
+    fn reset_restores_determinism() {
+        let m = tiny();
+        let mut run = RwkvRunner::new(&m);
+        let a = run.forward_sequence(&[3, 1, 4, 1, 5]);
+        run.reset();
+        let b = run.forward_sequence(&[3, 1, 4, 1, 5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rwkv7_has_gate_params_and_runs() {
+        let m = init_params(&ModelConfig::rwkv7(2, 16, 32), &mut Rng::new(1));
+        assert!(m.get("blocks.0.att.w_g").is_some());
+        let mut run = RwkvRunner::new(&m);
+        let logits = run.forward_token(7);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn long_sequence_stays_stable() {
+        let m = tiny();
+        let mut run = RwkvRunner::new(&m);
+        let toks: Vec<usize> = (0..200).map(|i| i % 32).collect();
+        let out = run.forward_sequence(&toks);
+        assert!(out.last().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn layer_norm_normalises() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        let y = layer_norm(&x, &g, &b);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+    }
+
+    #[test]
+    fn quantizable_layer_inventory_matches_structure() {
+        let m = tiny();
+        // per block: 3 att μ + 4 att W + 2 ffn μ + 3 ffn W = 12; 2 blocks
+        assert_eq!(m.quantizable_indices().len(), 24);
+    }
+}

@@ -1,0 +1,281 @@
+//! Weight store: layer inventory + tensors + binary interchange format.
+//!
+//! The format (`RWKVQ1`) is written by `python/compile/train.py` after
+//! the tiny-corpus training run and read here; the quantization pipeline
+//! can also persist a dequantized store for the PJRT runtime. Layout
+//! (little-endian):
+//!
+//! ```text
+//! magic   8  b"RWKVQ1\0\0"
+//! arch    u32 len + utf8
+//! n_layer u32, d_model u32, vocab u32, head_dim u32, ffn_ratio f64
+//! count   u32
+//! per layer:
+//!   name  u32 len + utf8
+//!   class u8 (0=MatMul,1=ElementWise,2=Vector,3=Embedding)
+//!   rows  u64, cols u64
+//!   data  rows*cols f32
+//! ```
+
+use crate::config::ModelConfig;
+use crate::quant::LayerKind;
+use crate::tensor::Matrix;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{Read, Write};
+
+/// Parameter classification — drives quantizability and the §3.2 path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamClass {
+    /// 2-D projection weight (quantizable, matmul semantics)
+    MatMul,
+    /// element-wise multiplication weight μ (quantizable, §3.2 semantics)
+    ElementWise,
+    /// 1-D auxiliary vector: LayerNorm gain/bias, decay w, bonus u
+    /// (never quantized)
+    Vector,
+    /// token embedding / LM head (kept fp16, as in all compared PTQ work)
+    Embedding,
+}
+
+impl ParamClass {
+    pub fn quantizable(&self) -> bool {
+        matches!(self, ParamClass::MatMul | ParamClass::ElementWise)
+    }
+
+    pub fn kind(&self) -> LayerKind {
+        match self {
+            ParamClass::ElementWise => LayerKind::ElementWise,
+            _ => LayerKind::MatMul,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            ParamClass::MatMul => 0,
+            ParamClass::ElementWise => 1,
+            ParamClass::Vector => 2,
+            ParamClass::Embedding => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<ParamClass> {
+        Ok(match v {
+            0 => ParamClass::MatMul,
+            1 => ParamClass::ElementWise,
+            2 => ParamClass::Vector,
+            3 => ParamClass::Embedding,
+            other => bail!("bad ParamClass tag {other}"),
+        })
+    }
+}
+
+/// One named parameter.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub class: ParamClass,
+}
+
+/// A model: config + ordered named tensors.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub layers: Vec<(LayerDesc, Matrix)>,
+}
+
+impl ModelWeights {
+    pub fn new(config: ModelConfig) -> Self {
+        ModelWeights { config, layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, class: ParamClass, m: Matrix) {
+        self.layers.push((LayerDesc { name: name.into(), class }, m));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Matrix> {
+        self.layers.iter().find(|(d, _)| d.name == name).map(|(_, m)| m)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Matrix> {
+        self.layers.iter_mut().find(|(d, _)| d.name == name).map(|(_, m)| m)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|(_, m)| m.numel()).sum()
+    }
+
+    /// Quantizable parameter count (the denominator of the bpw average).
+    pub fn n_quantizable(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|(d, _)| d.class.quantizable())
+            .map(|(_, m)| m.numel())
+            .sum()
+    }
+
+    /// Indices of the quantizable layers.
+    pub fn quantizable_indices(&self) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].0.class.quantizable())
+            .collect()
+    }
+
+    // ---- binary interchange ----
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(b"RWKVQ1\0\0")?;
+        write_str(&mut f, &self.config.arch)?;
+        f.write_all(&(self.config.n_layer as u32).to_le_bytes())?;
+        f.write_all(&(self.config.d_model as u32).to_le_bytes())?;
+        f.write_all(&(self.config.vocab as u32).to_le_bytes())?;
+        f.write_all(&(self.config.head_dim as u32).to_le_bytes())?;
+        f.write_all(&self.config.ffn_ratio.to_le_bytes())?;
+        f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for (d, m) in &self.layers {
+            write_str(&mut f, &d.name)?;
+            f.write_all(&[d.class.to_u8()])?;
+            f.write_all(&(m.rows as u64).to_le_bytes())?;
+            f.write_all(&(m.cols as u64).to_le_bytes())?;
+            // bulk f32 write
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(m.data.as_ptr() as *const u8, m.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ModelWeights> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"RWKVQ1\0\0" {
+            bail!("bad magic in {path:?}");
+        }
+        let arch = read_str(&mut f)?;
+        let n_layer = read_u32(&mut f)? as usize;
+        let d_model = read_u32(&mut f)? as usize;
+        let vocab = read_u32(&mut f)? as usize;
+        let head_dim = read_u32(&mut f)? as usize;
+        let mut fr = [0u8; 8];
+        f.read_exact(&mut fr)?;
+        let ffn_ratio = f64::from_le_bytes(fr);
+        let config = ModelConfig { arch, n_layer, d_model, vocab, head_dim, ffn_ratio };
+        let count = read_u32(&mut f)? as usize;
+        let mut layers = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = read_str(&mut f)?;
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let class = ParamClass::from_u8(tag[0])?;
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            let mut data = vec![0f32; rows * cols];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
+            };
+            f.read_exact(bytes)?;
+            layers.push((LayerDesc { name, class }, Matrix { rows, cols, data }));
+        }
+        Ok(ModelWeights { config, layers })
+    }
+}
+
+fn write_str<W: Write>(f: &mut W, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(f: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(f: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(f: &mut R) -> Result<String> {
+    let len = read_u32(f)? as usize;
+    if len > 1 << 20 {
+        bail!("string length {len} implausible");
+    }
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn demo_model() -> ModelWeights {
+        let cfg = ModelConfig::rwkv6(2, 8, 16);
+        let mut m = ModelWeights::new(cfg);
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::zeros(8, 8);
+        rng.fill_normal(&mut w.data, 0.0, 0.1);
+        m.push("blocks.0.att.w_r", ParamClass::MatMul, w.clone());
+        m.push("blocks.0.att.mu_r", ParamClass::ElementWise, Matrix::filled(1, 8, 0.5));
+        m.push("blocks.0.ln1.g", ParamClass::Vector, Matrix::filled(1, 8, 1.0));
+        m.push("emb", ParamClass::Embedding, Matrix::zeros(16, 8));
+        m
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let m = demo_model();
+        let path = std::env::temp_dir().join("rwkvq_store_test.bin");
+        m.save(&path).unwrap();
+        let l = ModelWeights::load(&path).unwrap();
+        assert_eq!(l.config, m.config);
+        assert_eq!(l.layers.len(), 4);
+        for ((da, ma), (db, mb)) in m.layers.iter().zip(&l.layers) {
+            assert_eq!(da.name, db.name);
+            assert_eq!(da.class, db.class);
+            assert_eq!(ma, mb);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn quantizable_filtering() {
+        let m = demo_model();
+        let qi = m.quantizable_indices();
+        assert_eq!(qi, vec![0, 1]);
+        assert_eq!(m.n_quantizable(), 64 + 8);
+        assert_eq!(m.n_params(), 64 + 8 + 8 + 128);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = std::env::temp_dir().join("rwkvq_badmagic.bin");
+        std::fs::write(&path, b"NOTMAGIC________").unwrap();
+        assert!(ModelWeights::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn param_class_round_trip() {
+        for c in [
+            ParamClass::MatMul,
+            ParamClass::ElementWise,
+            ParamClass::Vector,
+            ParamClass::Embedding,
+        ] {
+            assert_eq!(ParamClass::from_u8(c.to_u8()).unwrap(), c);
+        }
+        assert!(ParamClass::from_u8(9).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Synthetic model families with controlled weight distributions.
+//!
+//! The paper's distribution-dependent findings (Table 1, Fig. 5–8, §4.4)
+//! hinge on *how weight values are distributed*, not on what the weights
+//! compute. This generator produces full RWKV / LLaMA-shaped weight
+//! stores whose matmul layers are drawn from explicit archetypes with
+//! family-calibrated proportions:
+//!
+//! * **RWKV-like** — predominantly uniform layers (the §4.4 finding:
+//!   ~60 % of layers classified SQ-suitable at τ_c = 1.5, τ_f = 50),
+//!   some uniform-with-local-outliers (Fig. 8), some non-uniform
+//!   (Fig. 7); μ element-wise weights in [0, 1].
+//! * **LLaMA-like** — predominantly Gaussian / clustered layers
+//!   (~10 % SQ-suitable), matching the higher cluster-friendliness of
+//!   Table 1.
+
+use super::rwkv;
+use super::store::{ModelWeights, ParamClass};
+use crate::config::ModelConfig;
+
+use crate::util::rng::Rng;
+
+/// Weight-distribution archetypes (Figs. 6–8 of the paper's appendix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Archetype {
+    /// evenly spread values, no outliers (Fig. 6) — SQ-friendly
+    Uniform,
+    /// evenly spread bulk with a few extreme values (Fig. 8) — needs VQ
+    UniformOutliers,
+    /// bell-shaped (tails create uneven spacing) — VQ-friendly
+    Gaussian,
+    /// multi-modal mixture (Fig. 7) — strongly VQ-friendly
+    Clustered,
+    /// heavy-tailed Student-t
+    HeavyTail,
+}
+
+impl Archetype {
+    /// Fill a buffer with `std`-scaled samples of this archetype.
+    pub fn fill(&self, out: &mut [f32], std: f32, rng: &mut Rng) {
+        match self {
+            Archetype::Uniform => {
+                let a = std * 1.732; // match variance of U(-a,a) to std²
+                rng.fill_uniform(out, -a, a);
+            }
+            Archetype::UniformOutliers => {
+                let a = std * 1.732;
+                rng.fill_uniform(out, -a, a);
+                let n_out = (out.len() / 500).max(2);
+                for _ in 0..n_out {
+                    let i = rng.below(out.len());
+                    out[i] = (rng.student_t(2.0) * std as f64 * 12.0) as f32;
+                }
+            }
+            Archetype::Gaussian => rng.fill_normal(out, 0.0, std),
+            Archetype::Clustered => {
+                let k = 3 + rng.below(4); // 3..6 modes
+                let centers: Vec<f32> =
+                    (0..k).map(|_| rng.normal_ms(0.0, std as f64 * 1.5) as f32).collect();
+                for v in out.iter_mut() {
+                    let c = centers[rng.below(k)];
+                    *v = c + rng.normal_ms(0.0, std as f64 * 0.12) as f32;
+                }
+            }
+            Archetype::HeavyTail => {
+                for v in out.iter_mut() {
+                    *v = (rng.student_t(3.0) * std as f64 * 0.7) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Which family's archetype mix to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Rwkv,
+    Llama,
+}
+
+impl Family {
+    /// (archetype, sampling weight) — calibrated so the proxy classifies
+    /// ≈60 % of RWKV matmul layers as SQ-suitable vs ≈10 % for LLaMA
+    /// (Fig. 5, τ_c = 1.5 / τ_f = 50).
+    fn mix(&self) -> &'static [(Archetype, f64)] {
+        match self {
+            Family::Rwkv => &[
+                (Archetype::Uniform, 0.55),
+                (Archetype::UniformOutliers, 0.15),
+                (Archetype::Gaussian, 0.18),
+                (Archetype::Clustered, 0.07),
+                (Archetype::HeavyTail, 0.05),
+            ],
+            Family::Llama => &[
+                (Archetype::Uniform, 0.08),
+                (Archetype::UniformOutliers, 0.04),
+                (Archetype::Gaussian, 0.55),
+                (Archetype::Clustered, 0.25),
+                (Archetype::HeavyTail, 0.08),
+            ],
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Archetype {
+        let mix = self.mix();
+        let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+        mix[rng.categorical(&weights)].0
+    }
+}
+
+/// Named synthetic model sizes roughly tracking the paper's lineup
+/// (scaled down ~100×: the distributions are what matter, see DESIGN.md).
+pub fn size_config(arch: &str, label: &str) -> ModelConfig {
+    let (n_layer, d_model) = match label {
+        "0.1B" => (4, 128),
+        "0.5B" => (6, 192),
+        "1B" | "1.47B" => (8, 256),
+        "3B" => (10, 320),
+        "7B" => (12, 384),
+        "14B" => (14, 512),
+        other => panic!("unknown size label '{other}'"),
+    };
+    let vocab = 512;
+    match arch {
+        "rwkv6" => ModelConfig::rwkv6(n_layer, d_model, vocab),
+        "rwkv7" => ModelConfig::rwkv7(n_layer, d_model, vocab),
+        "llama" => ModelConfig::llama(n_layer, d_model, vocab),
+        other => panic!("unknown arch '{other}'"),
+    }
+}
+
+/// Generate a full RWKV-shaped model whose quantizable matmul weights
+/// follow the family's archetype mix. Element-wise μ weights follow the
+/// RWKV convention (values in [0, 1], channel-ramped with a per-layer
+/// chance of local outliers). Non-quantizable parameters come from the
+/// standard init.
+pub fn generate_rwkv(cfg: &ModelConfig, family: Family, seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    let mut m = rwkv::init_params(cfg, &mut rng);
+    let mut arng = rng.fork("archetypes");
+    for (desc, mat) in m.layers.iter_mut() {
+        match desc.class {
+            ParamClass::MatMul => {
+                let arch = family.sample(&mut arng);
+                let std = 1.0 / (mat.cols as f32).sqrt() * 0.7;
+                arch.fill(&mut mat.data, std, &mut arng);
+            }
+            ParamClass::ElementWise => {
+                // μ in [0,1]; occasionally a few pinned extremes (outliers)
+                arng.fill_uniform(&mut mat.data, 0.02, 0.98);
+                if arng.f64() < 0.3 {
+                    for _ in 0..(mat.numel() / 64).max(1) {
+                        let i = arng.below(mat.numel());
+                        mat.data[i] = if arng.f64() < 0.5 { 0.0 } else { 1.0 };
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+/// Generate the LLaMA comparator's quantizable weight set (see
+/// [`super::llama`] for the layer inventory).
+pub fn generate_llama(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    let mut m = super::llama::init_params(cfg, &mut rng);
+    let mut arng = rng.fork("archetypes");
+    for (desc, mat) in m.layers.iter_mut() {
+        if desc.class == ParamClass::MatMul {
+            let arch = Family::Llama.sample(&mut arng);
+            let std = 1.0 / (mat.cols as f32).sqrt() * 0.7;
+            arch.fill(&mut mat.data, std, &mut arng);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::proxy;
+
+    #[test]
+    fn archetypes_have_target_scale() {
+        let mut rng = Rng::new(1);
+        for a in [Archetype::Uniform, Archetype::Gaussian, Archetype::Clustered] {
+            let mut buf = vec![0.0f32; 20_000];
+            a.fill(&mut buf, 0.05, &mut rng);
+            let var = crate::tensor::stats::variance(&buf);
+            assert!(
+                (var.sqrt() - 0.05).abs() < 0.04,
+                "{a:?} std {}",
+                var.sqrt()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_low_pc_gaussian_high_pc() {
+        let mut rng = Rng::new(2);
+        let mut u = vec![0.0f32; 16_384];
+        Archetype::Uniform.fill(&mut u, 0.05, &mut rng);
+        let mut g = vec![0.0f32; 16_384];
+        Archetype::Clustered.fill(&mut g, 0.05, &mut rng);
+        let pu = proxy::compute(&u, 4);
+        let pg = proxy::compute(&g, 4);
+        assert!(pu.p_c < pg.p_c, "uniform {} vs clustered {}", pu.p_c, pg.p_c);
+    }
+
+    #[test]
+    fn outlier_archetype_raises_pf_not_pc() {
+        let mut rng = Rng::new(3);
+        let mut clean = vec![0.0f32; 16_384];
+        Archetype::Uniform.fill(&mut clean, 0.05, &mut rng);
+        let mut dirty = vec![0.0f32; 16_384];
+        Archetype::UniformOutliers.fill(&mut dirty, 0.05, &mut rng);
+        let pc_ = proxy::compute(&clean, 4);
+        let pd = proxy::compute(&dirty, 4);
+        assert!(pd.p_f > pc_.p_f * 5.0, "P_f {} vs {}", pd.p_f, pc_.p_f);
+    }
+
+    /// Reproduces the Fig. 5 shape: RWKV family mostly SQ, LLaMA mostly VQ.
+    #[test]
+    fn family_sq_shares_separate() {
+        let rcfg = size_config("rwkv6", "0.1B");
+        let rwkv = generate_rwkv(&rcfg, Family::Rwkv, 7);
+        let lcfg = size_config("llama", "0.1B");
+        let llama = generate_llama(&lcfg, 7);
+        let share = |m: &ModelWeights| {
+            let idx = m.quantizable_indices();
+            let sq = idx
+                .iter()
+                .filter(|&&i| {
+                    let p = proxy::compute(&m.layers[i].1.data, 4);
+                    p.p_c < 1.5 && p.p_f < 50.0
+                })
+                .count();
+            sq as f64 / idx.len() as f64
+        };
+        let rs = share(&rwkv);
+        let ls = share(&llama);
+        assert!(rs > ls + 0.2, "RWKV share {rs} must exceed LLaMA {ls}");
+    }
+
+    #[test]
+    fn size_configs_monotone() {
+        let a = size_config("rwkv6", "0.1B");
+        let b = size_config("rwkv6", "14B");
+        assert!(b.n_layer > a.n_layer && b.d_model > a.d_model);
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let cfg = size_config("rwkv6", "0.1B");
+        let a = generate_rwkv(&cfg, Family::Rwkv, 3);
+        let b = generate_rwkv(&cfg, Family::Rwkv, 3);
+        assert_eq!(a.layers[5].1, b.layers[5].1);
+    }
+}

@@ -1,0 +1,171 @@
+//! §3.2 — codebook optimisation for element-wise multiplication.
+//!
+//! RWKV applies `μ ⊙ x` in every projection layer (token-shift
+//! interpolation weights). For these weights the layer output error
+//! (Eq. 19) is `Σ_ij X_ij² (Δμ'_ij)²` — so the VQ codebook should be fit
+//! with **X² importance weights**.
+//!
+//! Batch integration: X must match μ's shape, so the calibration batch is
+//! reduced to one representative row. Plain averaging is dominated by
+//! activation outliers; since RWKV activations are approximately normal
+//! (Fig. 4), a symmetric percentile clip is applied before averaging,
+//! pulling the representative feature back to the distribution's centre.
+
+use crate::config::QuantConfig;
+use crate::quant::vq::kmeans;
+use crate::quant::{CalibData, VqLayer};
+use crate::tensor::{stats, Matrix};
+use crate::util::rng::Rng;
+
+/// Reduce a batch of activations (`samples × n`) to one representative
+/// row by percentile clipping (`clip_pct` ∈ (50, 100]) then column-mean.
+pub fn integrate_batch(x: &Matrix, clip_pct: f64) -> Vec<f32> {
+    assert!(x.rows > 0 && clip_pct > 50.0 && clip_pct <= 100.0);
+    let mut out = Vec::with_capacity(x.cols);
+    let mut col = vec![0.0f32; x.rows];
+    for c in 0..x.cols {
+        for r in 0..x.rows {
+            col[r] = x.at(r, c);
+        }
+        let hi = stats::percentile(&col, clip_pct);
+        let lo = stats::percentile(&col, 100.0 - clip_pct);
+        let mut sum = 0.0f64;
+        for &v in &col {
+            sum += v.clamp(lo, hi) as f64;
+        }
+        out.push((sum / x.rows as f64) as f32);
+    }
+    out
+}
+
+/// The X² importance map for a μ weight of shape `rows × n`, tiled from
+/// the integrated representative activation row.
+pub fn importance(mu: &Matrix, xbar: &[f32]) -> Vec<f32> {
+    assert_eq!(mu.cols, xbar.len(), "activation width must match μ");
+    let mut imp = Vec::with_capacity(mu.numel());
+    for _r in 0..mu.rows {
+        for &x in xbar {
+            // ε floor keeps dead channels from collapsing the fit
+            imp.push((x * x).max(1e-8));
+        }
+    }
+    imp
+}
+
+/// Quantize an element-wise multiplication weight with the optimised
+/// codebook. Falls back to unweighted K-Means without calibration.
+pub fn quantize(
+    mu: &Matrix,
+    calib: Option<&CalibData>,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+) -> VqLayer {
+    let k = cfg.vq_bits.max(13); // VQ share of the hybrid runs at 3.5 bpw
+    match calib {
+        Some(c) => {
+            let xbar = integrate_batch(&c.x, cfg.clip_percentile);
+            let imp = importance(mu, &xbar);
+            kmeans::quantize_weighted(mu, Some(&imp), k, cfg.vq_dim, cfg.kmeans_iters, rng)
+        }
+        None => kmeans::quantize(mu, k, cfg.vq_dim, cfg.kmeans_iters, rng),
+    }
+}
+
+/// The Eq. 19 element-wise output loss `||X⊙μ − X⊙Deq(Q(μ))||²_F`
+/// evaluated against a full calibration batch (diagnostic; the Table 7
+/// ablation reports end-task metrics, the tests here use this directly).
+pub fn ewmul_output_loss(mu: &Matrix, deq: &Matrix, x: &Matrix) -> f64 {
+    assert_eq!(mu.cols, x.cols);
+    let mut loss = 0.0f64;
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        for mr in 0..mu.rows {
+            for c in 0..mu.cols {
+                let e = (mu.at(mr, c) - deq.at(mr, c)) as f64 * xr[c] as f64;
+                loss += e * e;
+            }
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedLayer;
+
+    /// Normal activations with a handful of extreme outliers, as Fig. 4.
+    fn outlier_acts(rng: &mut Rng, samples: usize, n: usize) -> Matrix {
+        let mut x = Matrix::zeros(samples, n);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        for _ in 0..samples * n / 100 {
+            let i = rng.below(samples * n);
+            x.data[i] = rng.normal_ms(0.0, 40.0) as f32;
+        }
+        x
+    }
+
+    #[test]
+    fn clipping_suppresses_outliers_in_representative() {
+        let mut rng = Rng::new(1);
+        let x = outlier_acts(&mut rng, 64, 128);
+        let clipped = integrate_batch(&x, 95.0);
+        let raw = integrate_batch(&x, 100.0);
+        // clipped representative has smaller extreme deviation from 0
+        let m_c = clipped.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let m_r = raw.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        assert!(m_c < m_r, "clipped max {m_c} vs raw max {m_r}");
+    }
+
+    #[test]
+    fn weighted_codebook_beats_plain_on_eq19_loss() {
+        let mut rng = Rng::new(2);
+        let n = 256;
+        // μ in [0,1] as RWKV token-shift weights are
+        let mut mu = Matrix::zeros(1, n);
+        rng.fill_uniform(&mut mu.data, 0.0, 1.0);
+        // activations with strongly non-uniform channel energy
+        let mut x = Matrix::zeros(128, n);
+        for r in 0..128 {
+            for c in 0..n {
+                let scale = if c < 16 { 20.0 } else { 0.3 };
+                *x.at_mut(r, c) = rng.normal_ms(0.0, scale) as f32;
+            }
+        }
+        let calib = CalibData { x: x.clone() };
+        let cfg = QuantConfig { vq_bits: 4, vq_dim: 4, kmeans_iters: 20, ..Default::default() };
+
+        let q_opt = quantize(&mu, Some(&calib), &cfg, &mut Rng::new(7));
+        let q_plain = kmeans::quantize(&mu, 4, 4, 20, &mut Rng::new(7));
+        let l_opt = ewmul_output_loss(&mu, &q_opt.dequantize(), &x);
+        let l_plain = ewmul_output_loss(&mu, &q_plain.dequantize(), &x);
+        assert!(l_opt < l_plain, "opt {l_opt} vs plain {l_plain}");
+    }
+
+    #[test]
+    fn importance_tiles_rows() {
+        let mu = Matrix::zeros(3, 4);
+        let imp = importance(&mu, &[1.0, 2.0, 0.0, 3.0]);
+        assert_eq!(imp.len(), 12);
+        assert_eq!(imp[1], 4.0);
+        assert_eq!(imp[5], 4.0); // row 1 repeats the pattern
+        assert!(imp[2] > 0.0); // ε floor
+    }
+
+    #[test]
+    fn no_calib_is_plain_kmeans() {
+        let mut rng = Rng::new(3);
+        let mut mu = Matrix::zeros(1, 64);
+        rng.fill_uniform(&mut mu.data, 0.0, 1.0);
+        let cfg = QuantConfig { vq_bits: 5, kmeans_iters: 10, ..Default::default() };
+        let q = quantize(&mu, None, &cfg, &mut Rng::new(4));
+        assert!(QuantizedLayer::Vq(q).mse(&mu) < 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn integrate_rejects_bad_percentile() {
+        let x = Matrix::zeros(2, 2);
+        integrate_batch(&x, 30.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Quantized execution: matvec directly on packed quantized weights.
+//!
+//! The deployment payoff of the paper (Table 4): RWKV decode is
+//! memory-bound (Fig. 9), so reading 3-ish bits per weight instead of 32
+//! converts directly into decode speed. These routines stream the packed
+//! payload group-by-group, dequantize into a small stack buffer and
+//! accumulate the dot product — never materialising the fp matrix
+//! (llama.cpp-style). Used by the Table 4 bench and the serving example.
+
+use super::{QuantizedLayer, SqLayer, VqLayer};
+
+/// y = W x for an SQ layer, streaming packed codes.
+pub fn matvec_sq(l: &SqLayer, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), l.cols);
+    assert_eq!(y.len(), l.rows);
+    assert!(
+        l.rotation.is_none() && l.col_inv_scale.is_none(),
+        "fused matvec supports plain grids (RTN/GPTQ) only"
+    );
+    let group = l.group_size;
+    // Pre-compute group-wise Σx once: Σ_g (m_g + s_g·q)·x = m_g·Σx_g + s_g·Σ q·x.
+    // Row-major groups may straddle rows only when cols % group != 0; the
+    // common serving shapes (cols multiple of 32/64) take the fast path.
+    let aligned = l.cols % group == 0;
+    let mut codes_row = vec![0u8; l.cols];
+    let groups_per_row = l.cols / group.max(1);
+    for r in 0..l.rows {
+        let row_base = r * l.cols;
+        let mut acc = 0.0f32;
+        if aligned && l.bits <= 8 {
+            // pass 1: scalar bit-stream unpack into u8 (cheap, branch-free)
+            let mut reader = l.codes.reader(row_base);
+            for slot in codes_row.iter_mut() {
+                *slot = reader.next() as u8;
+            }
+            // pass 2: vectorisable dequant-dot per group
+            for gc in 0..groups_per_row {
+                let g = r * groups_per_row + gc;
+                let (s, m) = (l.scales[g], l.mins[g]);
+                let cs = &codes_row[gc * group..(gc + 1) * group];
+                let xs = &x[gc * group..(gc + 1) * group];
+                let mut d0 = 0.0f32;
+                let mut d1 = 0.0f32;
+                let mut q0 = 0.0f32;
+                let mut q1 = 0.0f32;
+                let half = group / 2;
+                for j in 0..half {
+                    d0 += cs[2 * j] as f32 * xs[2 * j];
+                    d1 += cs[2 * j + 1] as f32 * xs[2 * j + 1];
+                    q0 += xs[2 * j];
+                    q1 += xs[2 * j + 1];
+                }
+                if group % 2 == 1 {
+                    d0 += cs[group - 1] as f32 * xs[group - 1];
+                    q0 += xs[group - 1];
+                }
+                acc += m * (q0 + q1) + s * (d0 + d1);
+            }
+        } else {
+            // general path: straddling groups / wide codes
+            let mut reader = l.codes.reader(row_base);
+            let mut c = 0usize;
+            while c < l.cols {
+                let flat = row_base + c;
+                let g = flat / group;
+                let run = group.min(l.cols - c).min(group - flat % group);
+                let (s, m) = (l.scales[g], l.mins[g]);
+                let xs = &x[c..c + run];
+                let mut dot = 0.0f32;
+                let mut qsum = 0.0f32;
+                for (j, &xv) in xs.iter().enumerate().take(run) {
+                    let _ = j;
+                    dot += reader.next() as f32 * xv;
+                    qsum += xv;
+                }
+                acc += m * qsum + s * dot;
+                c += run;
+            }
+        }
+        y[r] = acc;
+    }
+}
+
+/// y = W x for a VQ layer, gathering codebook entries by index.
+pub fn matvec_vq(l: &VqLayer, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), l.cols);
+    assert_eq!(y.len(), l.rows);
+    let d = l.d;
+    debug_assert_eq!(l.cols % d, 0, "vectors are row-aligned by construction");
+    let vecs_per_row = l.cols / d;
+    for r in 0..l.rows {
+        let mut acc = 0.0f32;
+        let vrow = r * vecs_per_row;
+        for vb in 0..vecs_per_row {
+            let e = l.indices.get(vrow + vb) as usize;
+            let entry = l.entry(e);
+            let xs = &x[vb * d..(vb + 1) * d];
+            for j in 0..d {
+                acc += entry[j] * xs[j];
+            }
+        }
+        y[r] = acc;
+    }
+}
+
+/// Dispatching matvec over any quantized layer (fp16 layers fall back to
+/// the dense path).
+pub fn matvec(layer: &QuantizedLayer, x: &[f32], y: &mut [f32]) {
+    match layer {
+        QuantizedLayer::Sq(l) => matvec_sq(l, x, y),
+        QuantizedLayer::Vq(l) => matvec_vq(l, x, y),
+        QuantizedLayer::Fp16 { rows, cols, data } => {
+            assert_eq!(x.len(), *cols);
+            for r in 0..*rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let mut acc = 0.0f32;
+                for (w, xv) in row.iter().zip(x) {
+                    acc += w * xv;
+                }
+                y[r] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{sq, vq};
+    use crate::tensor::{linalg, Matrix};
+    use crate::util::rng::Rng;
+
+    fn rand(seed: u64, r: usize, c: usize) -> (Matrix, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(r, c);
+        rng.fill_normal(&mut w.data, 0.0, 0.05);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        (w, x)
+    }
+
+    #[test]
+    fn sq_matvec_matches_dequant_then_matvec() {
+        let (w, x) = rand(1, 48, 96);
+        let q = sq::rtn::quantize(&w, 4, 32);
+        let want = linalg::matvec(&q.dequantize(), &x);
+        let mut got = vec![0.0f32; 48];
+        matvec_sq(&q, &x, &mut got);
+        for i in 0..48 {
+            assert!((got[i] - want[i]).abs() < 1e-3, "{i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn sq_matvec_handles_group_straddling_rows() {
+        // cols=24 with group=32: groups straddle row boundaries
+        let (w, x) = rand(2, 10, 24);
+        let q = sq::rtn::quantize(&w, 3, 32);
+        let want = linalg::matvec(&q.dequantize(), &x);
+        let mut got = vec![0.0f32; 10];
+        matvec_sq(&q, &x, &mut got);
+        for i in 0..10 {
+            assert!((got[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn vq_matvec_matches_dequant_then_matvec() {
+        let (w, x) = rand(3, 32, 64);
+        let q = vq::kmeans::quantize(&w, 6, 4, 8, &mut Rng::new(9));
+        let want = linalg::matvec(&q.dequantize(), &x);
+        let mut got = vec![0.0f32; 32];
+        matvec_vq(&q, &x, &mut got);
+        for i in 0..32 {
+            assert!((got[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dispatch_covers_fp16() {
+        let (w, x) = rand(4, 8, 16);
+        let l = crate::quant::QuantizedLayer::Fp16 {
+            rows: 8,
+            cols: 16,
+            data: w.data.clone(),
+        };
+        let want = linalg::matvec(&w, &x);
+        let mut got = vec![0.0f32; 8];
+        matvec(&l, &x, &mut got);
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-5);
+        }
+    }
+}

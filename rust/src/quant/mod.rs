@@ -1,0 +1,290 @@
+//! The RWKVQuant quantization library — the paper's core contribution.
+//!
+//! * [`sq`] — scalar quantization engines: RTN, GPTQ (second-order
+//!   compensation), AWQ (activation-aware scaling), QuaRot (random
+//!   Hadamard rotation baseline).
+//! * [`vq`] — vector quantization engines: (weighted) K-Means codebooks,
+//!   GPTVQ (VQ + GPTQ-style error propagation), VPTQ (Hessian-weighted
+//!   codebooks).
+//! * [`proxy`] — the coarse-to-fine proxy of §3.1: interval-entropy
+//!   uniformity proxy `P_c` and the central-moment outlier proxy `P_f`,
+//!   plus the Table-6 baseline proxies.
+//! * [`hybrid`] — the Eq. 18 selector and τ auto-calibration.
+//! * [`ewmul`] — §3.2 codebook optimisation for element-wise
+//!   multiplication weights (X²-weighted K-Means with percentile-clipped
+//!   batch integration).
+//! * [`packing`] — bit-level storage for quantized payloads.
+
+pub mod ewmul;
+pub mod exec;
+pub mod hybrid;
+pub mod packing;
+pub mod proxy;
+pub mod sq;
+pub mod vq;
+
+use crate::tensor::Matrix;
+use packing::PackedInts;
+
+/// How a weight participates in the model — matmul weights (`W·x`) vs the
+/// RWKV element-wise weights (`μ ⊙ x`, token-shift interpolators). The
+/// distinction drives the §3.2 codebook optimisation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    MatMul,
+    ElementWise,
+}
+
+/// A scalar-quantized weight: `bits`-bit codes with one (scale, min) pair
+/// per group of `group_size` consecutive elements (row-major order).
+/// Dequantization: `w = min + scale * q`.
+#[derive(Clone, Debug)]
+pub struct SqLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub group_size: usize,
+    pub codes: PackedInts,
+    pub scales: Vec<f32>,
+    pub mins: Vec<f32>,
+    /// extra runtime FLOPs this method forces per forward token (QuaRot's
+    /// non-fusable rotations, AWQ's non-fusable activation scaling; 0 for
+    /// everything else — the paper's §1 overhead argument)
+    pub extra_flops_per_token: u64,
+    /// optional inverse transform applied at dequant time (QuaRot)
+    pub rotation: Option<RotationMeta>,
+    /// optional per-column inverse scale applied at dequant time (AWQ:
+    /// W was quantized as W·diag(s); reconstruct Ŵ = Q(W·diag(s))·diag(1/s))
+    pub col_inv_scale: Option<Vec<f32>>,
+}
+
+/// Metadata for undoing a random-Hadamard rotation at dequant time.
+#[derive(Clone, Debug)]
+pub struct RotationMeta {
+    /// ±1 signs of the diagonal, length = cols (power of two)
+    pub signs: Vec<f32>,
+}
+
+impl SqLayer {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Reconstruct the dense weight.
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let n = self.numel();
+        for i in 0..n {
+            let g = i / self.group_size;
+            m.data[i] = self.mins[g] + self.scales[g] * self.codes.get(i) as f32;
+        }
+        if let Some(inv) = &self.col_inv_scale {
+            for r in 0..m.rows {
+                let row = m.row_mut(r);
+                for (v, s) in row.iter_mut().zip(inv) {
+                    *v *= s;
+                }
+            }
+        }
+        if let Some(rot) = &self.rotation {
+            // W was quantized in the rotated basis: W_rot = W · H_s.
+            // Undo with the inverse (H_s is orthonormal): W = W_rot · H_sᵀ,
+            // which for a sign-then-FWHT rotation is FWHT-then-sign per
+            // row, applied blockwise for non-power-of-two widths.
+            for r in 0..m.rows {
+                crate::quant::sq::quarot::unrotate_row(m.row_mut(r), &rot.signs);
+            }
+        }
+        m
+    }
+
+    /// Total storage in bits: codes + one fp16 scale per group (the grid
+    /// is symmetric, so the min is derived — this is the paper's bpw
+    /// accounting: 3-bit codes + 16/64 = 3.25, + 16/32 = 3.5).
+    pub fn storage_bits(&self) -> usize {
+        let groups = self.numel().div_ceil(self.group_size);
+        self.codes.payload_bits() + groups * 16
+    }
+
+    pub fn bpw(&self) -> f64 {
+        self.storage_bits() as f64 / self.numel() as f64
+    }
+}
+
+/// A vector-quantized weight: the flat weight is split into `d`-sized
+/// vectors, each replaced by a `k`-bit index into `codebook`
+/// (shape `2^k × d`, stored flat). A trailing remainder of
+/// `numel % d` elements is kept in fp16 (`tail`).
+#[derive(Clone, Debug)]
+pub struct VqLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub d: usize,
+    pub k: u32,
+    /// flat codebook, length = n_entries * d
+    pub codebook: Vec<f32>,
+    pub indices: PackedInts,
+    /// fp16-accounted remainder elements (numel % d of them)
+    pub tail: Vec<f32>,
+}
+
+impl VqLayer {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.codebook.len() / self.d
+    }
+
+    pub fn entry(&self, idx: usize) -> &[f32] {
+        &self.codebook[idx * self.d..(idx + 1) * self.d]
+    }
+
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let nvec = self.numel() / self.d;
+        for v in 0..nvec {
+            let e = self.entry(self.indices.get(v) as usize);
+            m.data[v * self.d..(v + 1) * self.d].copy_from_slice(e);
+        }
+        let tail_start = nvec * self.d;
+        m.data[tail_start..].copy_from_slice(&self.tail);
+        m
+    }
+
+    /// Storage: k bits per vector + fp16 codebook + fp16 tail.
+    pub fn storage_bits(&self) -> usize {
+        self.indices.payload_bits() + self.codebook.len() * 16 + self.tail.len() * 16
+    }
+
+    pub fn bpw(&self) -> f64 {
+        self.storage_bits() as f64 / self.numel() as f64
+    }
+}
+
+/// A quantized layer: SQ, VQ, or kept in fp16 (embeddings / heads /
+/// 1-D norms are excluded from quantization, as in all the compared PTQ
+/// frameworks).
+#[derive(Clone, Debug)]
+pub enum QuantizedLayer {
+    Sq(SqLayer),
+    Vq(VqLayer),
+    Fp16 { rows: usize, cols: usize, data: Vec<f32> },
+}
+
+impl QuantizedLayer {
+    pub fn dequantize(&self) -> Matrix {
+        match self {
+            QuantizedLayer::Sq(l) => l.dequantize(),
+            QuantizedLayer::Vq(l) => l.dequantize(),
+            QuantizedLayer::Fp16 { rows, cols, data } => {
+                Matrix::from_vec(*rows, *cols, data.clone())
+            }
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            QuantizedLayer::Sq(l) => l.numel(),
+            QuantizedLayer::Vq(l) => l.numel(),
+            QuantizedLayer::Fp16 { rows, cols, .. } => rows * cols,
+        }
+    }
+
+    pub fn storage_bits(&self) -> usize {
+        match self {
+            QuantizedLayer::Sq(l) => l.storage_bits(),
+            QuantizedLayer::Vq(l) => l.storage_bits(),
+            QuantizedLayer::Fp16 { rows, cols, .. } => rows * cols * 16,
+        }
+    }
+
+    pub fn bpw(&self) -> f64 {
+        self.storage_bits() as f64 / self.numel() as f64
+    }
+
+    pub fn is_vq(&self) -> bool {
+        matches!(self, QuantizedLayer::Vq(_))
+    }
+
+    /// Mean squared reconstruction error against the original weight.
+    pub fn mse(&self, original: &Matrix) -> f64 {
+        self.dequantize().sq_err(original) / original.numel() as f64
+    }
+}
+
+/// Per-layer calibration inputs: activations feeding this layer,
+/// one row per calibration token/sample (shape `samples × ic` for
+/// matmul layers; `samples × n` for element-wise layers).
+#[derive(Clone, Debug)]
+pub struct CalibData {
+    pub x: Matrix,
+}
+
+impl CalibData {
+    /// Gram matrix XᵀX used as the GPTQ Hessian proxy.
+    pub fn hessian(&self) -> Matrix {
+        crate::tensor::linalg::gram(&self.x)
+    }
+
+    /// Per-column mean absolute activation (AWQ importance).
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.x.cols];
+        for r in 0..self.x.rows {
+            for (c, &v) in self.x.row(r).iter().enumerate() {
+                out[c] += v.abs() as f64;
+            }
+        }
+        out.iter().map(|v| (*v / self.x.rows.max(1) as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(seed: u64, r: usize, c: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(&mut m.data, 0.0, 0.05);
+        m
+    }
+
+    #[test]
+    fn sq_layer_bpw_accounting() {
+        let w = rand_w(1, 16, 64);
+        let l = sq::rtn::quantize(&w, 3, 32);
+        // 3 bits + 16/group-of-32 = 3.5 bpw
+        assert!((l.bpw() - 3.5).abs() < 1e-9, "bpw={}", l.bpw());
+        let l2 = sq::rtn::quantize(&w, 3, 64);
+        assert!((l2.bpw() - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp16_layer_identity() {
+        let w = rand_w(2, 4, 4);
+        let l = QuantizedLayer::Fp16 { rows: 4, cols: 4, data: w.data.clone() };
+        assert_eq!(l.dequantize(), w);
+        assert_eq!(l.bpw(), 16.0);
+        assert!(l.mse(&w) < 1e-12);
+    }
+
+    #[test]
+    fn calib_hessian_is_spd_diag_positive() {
+        let x = rand_w(3, 32, 8);
+        let h = CalibData { x }.hessian();
+        for i in 0..8 {
+            assert!(h.at(i, i) > 0.0);
+        }
+    }
+
+    #[test]
+    fn col_abs_mean_nonnegative() {
+        let x = rand_w(4, 16, 8);
+        let m = CalibData { x }.col_abs_mean();
+        assert!(m.iter().all(|&v| v >= 0.0));
+        assert_eq!(m.len(), 8);
+    }
+}

@@ -1,0 +1,168 @@
+//! Bit-packing of small unsigned integers into a dense `Vec<u64>` word
+//! stream. Used for SQ codes (3–8 bit) and VQ codebook indices (≤16 bit).
+//! Packing is little-endian within each 64-bit word; values may straddle
+//! word boundaries.
+
+/// A bit-packed array of `len` unsigned integers of `bits` bits each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedInts {
+    pub bits: u32,
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedInts {
+    /// Pack `values`; every value must fit in `bits` bits.
+    pub fn pack(values: &[u32], bits: u32) -> PackedInts {
+        assert!(bits >= 1 && bits <= 32, "bits must be 1..=32, got {bits}");
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let total_bits = values.len() * bits as usize;
+        let mut words = vec![0u64; total_bits.div_ceil(64)];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(v <= mask, "value {v} does not fit in {bits} bits");
+            let v = (v & mask) as u64;
+            let bit = i * bits as usize;
+            let word = bit / 64;
+            let off = bit % 64;
+            words[word] |= v << off;
+            if off + bits as usize > 64 {
+                words[word + 1] |= v >> (64 - off);
+            }
+        }
+        PackedInts { bits, len: values.len(), words }
+    }
+
+    /// Read the i-th value.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bits = self.bits as usize;
+        let mask = if self.bits == 32 { u64::from(u32::MAX) } else { (1u64 << self.bits) - 1 };
+        let bit = i * bits;
+        let word = bit / 64;
+        let off = bit % 64;
+        let mut v = self.words[word] >> off;
+        if off + bits > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        (v & mask) as u32
+    }
+
+    /// Unpack everything.
+    pub fn unpack(&self) -> Vec<u32> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Decode a contiguous run into `out` (hot-path dequant helper).
+    pub fn get_range(&self, start: usize, out: &mut [u32]) {
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = self.get(start + j);
+        }
+    }
+
+    /// Storage consumed by the packed payload, in bytes (excluding the
+    /// `len`/`bits` header, which is negligible and counted separately in
+    /// the bpw accounting).
+    pub fn payload_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Exact payload size in bits (len * bits, before word rounding).
+    pub fn payload_bits(&self) -> usize {
+        self.len * self.bits as usize
+    }
+
+    /// Raw word storage (for sequential decoders).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Sequential reader positioned at element `start` — much faster
+    /// than repeated `get` for contiguous runs (the quantized-matvec
+    /// hot path).
+    pub fn reader(&self, start: usize) -> BitReader<'_> {
+        BitReader { words: &self.words, bitpos: start * self.bits as usize, bits: self.bits }
+    }
+}
+
+/// Forward-only bit-stream decoder over a [`PackedInts`] payload.
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    bitpos: usize,
+    bits: u32,
+}
+
+impl BitReader<'_> {
+    /// Decode the next value.
+    #[inline(always)]
+    pub fn next(&mut self) -> u32 {
+        let bits = self.bits as usize;
+        let mask = if self.bits == 32 { u64::from(u32::MAX) } else { (1u64 << self.bits) - 1 };
+        let word = self.bitpos >> 6;
+        let off = self.bitpos & 63;
+        let mut v = self.words[word] >> off;
+        if off + bits > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        self.bitpos += bits;
+        (v & mask) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_3bit() {
+        let vals: Vec<u32> = (0..100).map(|i| (i * 7) % 8).collect();
+        let p = PackedInts::pack(&vals, 3);
+        assert_eq!(p.unpack(), vals);
+        assert_eq!(p.payload_bits(), 300);
+    }
+
+    #[test]
+    fn round_trip_across_word_boundaries() {
+        // 13-bit values guarantee straddling
+        let mut rng = Rng::new(1);
+        let vals: Vec<u32> = (0..1000).map(|_| rng.below(1 << 13) as u32).collect();
+        let p = PackedInts::pack(&vals, 13);
+        assert_eq!(p.unpack(), vals);
+    }
+
+    #[test]
+    fn get_range_matches_get() {
+        let mut rng = Rng::new(2);
+        let vals: Vec<u32> = (0..257).map(|_| rng.below(32) as u32).collect();
+        let p = PackedInts::pack(&vals, 5);
+        let mut out = vec![0u32; 17];
+        p.get_range(100, &mut out);
+        assert_eq!(&out[..], &vals[100..117]);
+    }
+
+    #[test]
+    fn payload_bytes_rounds_to_words() {
+        let p = PackedInts::pack(&[1, 2, 3], 3); // 9 bits -> 1 word
+        assert_eq!(p.payload_bytes(), 8);
+    }
+
+    #[test]
+    fn empty_pack() {
+        let p = PackedInts::pack(&[], 7);
+        assert_eq!(p.len, 0);
+        assert!(p.unpack().is_empty());
+    }
+
+    #[test]
+    fn all_bit_widths_round_trip() {
+        let mut rng = Rng::new(3);
+        for bits in 1..=20u32 {
+            let lim = 1u64 << bits;
+            let vals: Vec<u32> =
+                (0..131).map(|_| (rng.next_u64() % lim) as u32).collect();
+            let p = PackedInts::pack(&vals, bits);
+            assert_eq!(p.unpack(), vals, "bits={bits}");
+        }
+    }
+}

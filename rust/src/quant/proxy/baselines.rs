@@ -1,0 +1,143 @@
+//! The Table-6 baseline proxies: Variance, Coefficient of Variation,
+//! Range, MAD, and the direct MSE selector. All statistical baselines are
+//! applied to the transformed `G'` (in the stable `t = n·G'` variable),
+//! "used in the same manner as described in our method" (§4.3).
+
+use super::GPrime;
+use crate::quant::{CalibData, LayerKind, QuantizedLayer};
+use crate::tensor::Matrix;
+
+/// Which single-statistic proxy to use in place of the coarse-to-fine pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineProxy {
+    Variance,
+    CV,
+    Range,
+    MAD,
+    /// direct per-layer SQ-vs-VQ MSE comparison (the "local optimum")
+    MSE,
+    /// IE only (coarse proxy without the fine stage)
+    IE,
+}
+
+impl BaselineProxy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselineProxy::Variance => "Variance",
+            BaselineProxy::CV => "CV",
+            BaselineProxy::Range => "Range",
+            BaselineProxy::MAD => "MAD",
+            BaselineProxy::MSE => "MSE",
+            BaselineProxy::IE => "IE",
+        }
+    }
+
+    pub fn all() -> &'static [BaselineProxy] {
+        &[
+            BaselineProxy::Variance,
+            BaselineProxy::CV,
+            BaselineProxy::Range,
+            BaselineProxy::MAD,
+            BaselineProxy::MSE,
+            BaselineProxy::IE,
+        ]
+    }
+}
+
+/// Statistic of `G'` for the given baseline (not defined for MSE, which
+/// needs the quantizers — see [`mse_prefers_sq`]).
+pub fn statistic(proxy: BaselineProxy, g: &GPrime) -> f64 {
+    let n = g.n().max(1) as f64;
+    match proxy {
+        BaselineProxy::Variance => {
+            // Var(t) = E[(t-1)^2]; mean of t is exactly 1
+            g.t.iter().map(|&t| (t - 1.0) * (t - 1.0)).sum::<f64>() / n
+        }
+        BaselineProxy::CV => {
+            let var = g.t.iter().map(|&t| (t - 1.0) * (t - 1.0)).sum::<f64>() / n;
+            var.sqrt() // mean is 1, so CV = σ
+        }
+        BaselineProxy::Range => {
+            let lo = g.t.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = g.t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            hi - lo
+        }
+        BaselineProxy::MAD => g.t.iter().map(|&t| (t - 1.0).abs()).sum::<f64>() / n,
+        BaselineProxy::IE => super::entropy::p_c(g),
+        BaselineProxy::MSE => panic!("MSE baseline is decided per-layer, not a statistic"),
+    }
+}
+
+/// The MSE selector: quantize both ways and keep whichever reconstructs
+/// the layer with lower weight-space MSE (the per-layer "local optimum"
+/// the paper shows is globally suboptimal in Table 6).
+pub fn mse_prefers_sq(
+    w: &Matrix,
+    _kind: LayerKind,
+    calib: Option<&CalibData>,
+    cfg: &crate::config::QuantConfig,
+    rng: &mut crate::util::rng::Rng,
+) -> bool {
+    let sq = QuantizedLayer::Sq(crate::quant::sq::gptq::quantize(
+        w,
+        cfg.sq_bits,
+        cfg.group_size,
+        calib,
+        cfg.percdamp,
+    ));
+    let vq = QuantizedLayer::Vq(crate::quant::vq::kmeans::quantize(
+        w,
+        cfg.vq_bits,
+        cfg.vq_dim,
+        cfg.kmeans_iters.min(10),
+        rng,
+    ));
+    sq.mse(w) <= vq.mse(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn statistics_zero_on_uniform() {
+        let w: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        let g = GPrime::from_weights(&w);
+        for p in [BaselineProxy::Variance, BaselineProxy::CV, BaselineProxy::MAD] {
+            assert!(statistic(p, &g) < 1e-6, "{p:?}");
+        }
+        assert!(statistic(BaselineProxy::Range, &g) < 1e-4);
+    }
+
+    #[test]
+    fn statistics_positive_on_gaussian() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+        let g = GPrime::from_weights(&w);
+        for p in [
+            BaselineProxy::Variance,
+            BaselineProxy::CV,
+            BaselineProxy::Range,
+            BaselineProxy::MAD,
+            BaselineProxy::IE,
+        ] {
+            assert!(statistic(p, &g) > 0.01, "{p:?}={}", statistic(p, &g));
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = BaselineProxy::all().iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), BaselineProxy::all().len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mse_statistic_panics() {
+        let g = GPrime::from_weights(&[0.0, 1.0]);
+        statistic(BaselineProxy::MSE, &g);
+    }
+}

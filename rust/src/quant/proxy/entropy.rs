@@ -1,0 +1,91 @@
+//! Coarse-grained proxy `P_c` (Eqs. 7–9): the information-entropy gap
+//! between the observed interval distribution `G'` and the perfectly
+//! uniform reference `Ĝ'`.
+//!
+//! `P_c(G') = H(Ĝ') − H(G') = ln n − (−Σ G'_i ln G'_i) ≥ 0`, with
+//! equality iff the weight values are exactly evenly spaced. Large `P_c`
+//! ⇒ strongly non-uniform weights ⇒ cluster-friendly ⇒ VQ (Fig. 3a).
+
+use super::GPrime;
+
+/// Entropy of `G'` relative to uniform, computed stably in the scaled
+/// variable `t = n·G'`:
+/// `P_c = ln n − H(G') = (1/n)·Σ t_i ln t_i · ... ` — concretely,
+/// `H(G') = −Σ (t/n)·ln(t/n) = ln n − (1/n)Σ t ln t`, so
+/// `P_c = (1/n) Σ t_i ln t_i` (terms with t=0 contribute 0).
+pub fn p_c(g: &GPrime) -> f64 {
+    let n = g.n() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mut s = 0.0f64;
+    for &t in &g.t {
+        if t > 0.0 {
+            s += t * t.ln();
+        }
+    }
+    (s / n).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::proxy::GPrime;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_for_uniform_weights() {
+        let w: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        let g = GPrime::from_weights(&w);
+        assert!(p_c(&g) < 1e-6);
+    }
+
+    #[test]
+    fn positive_for_nonuniform_weights() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let g = GPrime::from_weights(&w);
+        assert!(p_c(&g) > 0.1, "P_c={}", p_c(&g));
+    }
+
+    /// Jensen: P_c is the KL divergence KL(G' || uniform) ≥ 0.
+    #[test]
+    fn nonnegative_always() {
+        let mut rng = Rng::new(2);
+        for trial in 0..20 {
+            let w: Vec<f32> = (0..256)
+                .map(|_| rng.student_t(2.5) as f32 * (trial as f32 + 1.0))
+                .collect();
+            let g = GPrime::from_weights(&w);
+            assert!(p_c(&g) >= 0.0);
+        }
+    }
+
+    /// The paper's core empirical claim (§4.4): interval entropy separates
+    /// uniform-ish weight distributions from clustered/Gaussian ones.
+    #[test]
+    fn separates_uniform_from_clustered() {
+        let mut rng = Rng::new(3);
+        let uniform: Vec<f32> = (0..8192).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let clustered: Vec<f32> = (0..8192)
+            .map(|_| {
+                let c = if rng.f64() < 0.5 { -0.5 } else { 0.5 };
+                c + rng.normal_ms(0.0, 0.02) as f32
+            })
+            .collect();
+        let pu = p_c(&GPrime::from_weights(&uniform));
+        let pc = p_c(&GPrime::from_weights(&clustered));
+        assert!(pc > pu * 1.5, "clustered {pc} should far exceed uniform {pu}");
+    }
+
+    /// Scale invariance: G' normalises out the weight scale.
+    #[test]
+    fn scale_invariant() {
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let w10: Vec<f32> = w.iter().map(|&x| x * 10.0).collect();
+        let a = p_c(&GPrime::from_weights(&w));
+        let b = p_c(&GPrime::from_weights(&w10));
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

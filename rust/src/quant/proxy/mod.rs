@@ -1,0 +1,112 @@
+//! The coarse-to-fine proxy of §3.1.
+//!
+//! Both proxies operate on the transformed weight `G'`: the weight is
+//! flattened, sorted ascending (`W'`), differenced into intervals
+//! `G = W'[1:] - W'[:-1]` (Eq. 5), and normalised so `Σ G'_i = 1`
+//! (Eq. 6) — turning the *spacing structure* of the weight values into a
+//! discrete probability distribution whose uniformity mirrors the
+//! uniformity of the original weight.
+//!
+//! * [`entropy`] — coarse proxy `P_c = H(Ĝ') − H(G') = ln n − H(G')`
+//!   (Eq. 9): global uniformity.
+//! * [`moments`] — fine proxy `P_f = Σ_{k≥2} v_k |M_k|` (Eq. 17): local
+//!   outliers, from the Taylor expansion of `P_c` around the uniform
+//!   point (Eqs. 10–16).
+//! * [`baselines`] — the Table-6 comparison proxies (Variance, CV,
+//!   Range, MAD) applied to the same `G'`.
+
+pub mod baselines;
+pub mod entropy;
+pub mod moments;
+
+/// The transformed weight: normalised sorted-interval distribution `G'`.
+///
+/// Stored as `t_i = n·G'_i` (scaled by `n`) because every downstream
+/// formula is numerically stable in that variable: the uniform reference
+/// is `t ≡ 1`, and the k-th proxy term is `mean((t-1)^k) / (k(k-1))`
+/// without the `n^k` blow-up of the paper's raw `v_k` weights.
+#[derive(Debug, Clone)]
+pub struct GPrime {
+    /// n·G'_i per interval (mean exactly 1 when total > 0)
+    pub t: Vec<f64>,
+}
+
+impl GPrime {
+    /// Build `G'` from a flat weight slice. O(n log n) for the sort.
+    pub fn from_weights(w: &[f32]) -> GPrime {
+        assert!(w.len() >= 2, "proxy needs at least 2 weights");
+        let mut sorted: Vec<f32> = w.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len() - 1;
+        let total = (sorted[n] - sorted[0]) as f64;
+        let mut t = Vec::with_capacity(n);
+        if total <= 0.0 {
+            // degenerate constant weight: define G' as exactly uniform
+            t.resize(n, 1.0);
+            return GPrime { t };
+        }
+        for i in 0..n {
+            let g = (sorted[i + 1] - sorted[i]) as f64;
+            t.push(g / total * n as f64);
+        }
+        GPrime { t }
+    }
+
+    /// Number of intervals `n = numel − 1`.
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+}
+
+/// Both proxies for one weight, plus the decision inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProxyPair {
+    pub p_c: f64,
+    pub p_f: f64,
+}
+
+/// Compute `(P_c, P_f)` for a flat weight with Taylor order `K`.
+pub fn compute(w: &[f32], order: u32) -> ProxyPair {
+    let g = GPrime::from_weights(w);
+    ProxyPair { p_c: entropy::p_c(&g), p_f: moments::p_f(&g, order) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gprime_sums_to_n() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let g = GPrime::from_weights(&w);
+        let sum: f64 = g.t.iter().sum();
+        assert!((sum - g.n() as f64).abs() / (g.n() as f64) < 1e-6, "sum={sum} n={}", g.n());
+    }
+
+    #[test]
+    fn uniform_grid_gives_constant_t() {
+        let w: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
+        let g = GPrime::from_weights(&w);
+        assert!(g.t.iter().all(|&t| (t - 1.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn constant_weight_degenerate_uniform() {
+        let w = vec![0.5f32; 64];
+        let g = GPrime::from_weights(&w);
+        assert!(g.t.iter().all(|&t| t == 1.0));
+    }
+
+    #[test]
+    fn order_independent_of_input_permutation() {
+        let mut rng = Rng::new(2);
+        let mut w: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let p1 = compute(&w, 4);
+        rng.shuffle(&mut w);
+        let p2 = compute(&w, 4);
+        assert!((p1.p_c - p2.p_c).abs() < 1e-12);
+        assert!((p1.p_f - p2.p_f).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Fine-grained proxy `P_f` (Eqs. 10–17): weighted high-order central
+//! moments of `G'`, from the order-K Taylor expansion of `P_c` around the
+//! uniform point — sensitive to *local* outliers that barely move the
+//! global entropy (Fig. 3b vs 3c).
+//!
+//! Paper form: `P_f = Σ_{k=2}^{K} v_k |M_k|`, `v_k = n^k / (k(k−1))`,
+//! `M_k = E[(G' − E[G'])^k]`. Since `E[G'] = 1/n` exactly, substituting
+//! `t = n·G'` gives the numerically-stable equivalent
+//! `v_k·M_k = E[(t−1)^k] / (k(k−1))` — no `n^k` overflow, no `δ^k`
+//! underflow, mathematically identical.
+
+use super::GPrime;
+
+/// Fine-grained proxy with Taylor truncation order `K ≥ 2`.
+pub fn p_f(g: &GPrime, order: u32) -> f64 {
+    assert!(order >= 2, "P_f needs K >= 2");
+    let n = g.n();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    for k in 2..=order {
+        // E[(t-1)^k]
+        let mut m = 0.0f64;
+        for &t in &g.t {
+            m += (t - 1.0).powi(k as i32);
+        }
+        m /= n as f64;
+        sum += m.abs() / (k as f64 * (k as f64 - 1.0));
+    }
+    sum
+}
+
+/// The individual scaled moment terms (for diagnostics / Fig. 3 dumps).
+pub fn moment_terms(g: &GPrime, order: u32) -> Vec<f64> {
+    let n = g.n().max(1) as f64;
+    (2..=order)
+        .map(|k| {
+            let m: f64 =
+                g.t.iter().map(|&t| (t - 1.0).powi(k as i32)).sum::<f64>() / n;
+            m.abs() / (k as f64 * (k as f64 - 1.0))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::proxy::{entropy, GPrime};
+    use crate::util::rng::Rng;
+
+    /// Mix a uniform grid with a few extreme outliers — `P_c` barely
+    /// moves (the paper's motivation) but `P_f` fires.
+    fn uniform_with_outliers(n: usize, n_out: usize, mag: f32, rng: &mut Rng) -> Vec<f32> {
+        let mut w: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        for _ in 0..n_out {
+            let i = rng.below(n);
+            w[i] = mag * if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        }
+        w
+    }
+
+    #[test]
+    fn zero_for_uniform() {
+        let w: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let g = GPrime::from_weights(&w);
+        assert!(p_f(&g, 4) < 1e-6);
+    }
+
+    #[test]
+    fn fires_on_local_outliers_where_pc_does_not() {
+        let mut rng = Rng::new(1);
+        let clean: Vec<f32> = (0..4096).map(|i| i as f32 / 4096.0).collect();
+        let dirty = uniform_with_outliers(4096, 4, 50.0, &mut rng);
+        let gc = GPrime::from_weights(&clean);
+        let gd = GPrime::from_weights(&dirty);
+        // coarse proxy moves little...
+        let dpc = entropy::p_c(&gd) - entropy::p_c(&gc);
+        // ...fine proxy explodes
+        let dpf = p_f(&gd, 4) - p_f(&gc, 4);
+        assert!(dpf > 100.0 * dpc.max(1e-9), "dpf={dpf} dpc={dpc}");
+        assert!(p_f(&gd, 4) > 10.0, "P_f={}", p_f(&gd, 4));
+    }
+
+    #[test]
+    fn higher_order_more_sensitive_to_tails() {
+        let mut rng = Rng::new(2);
+        let dirty = uniform_with_outliers(2048, 2, 100.0, &mut rng);
+        let g = GPrime::from_weights(&dirty);
+        let terms = moment_terms(&g, 4);
+        // kurtosis-like term dominates variance term on extreme outliers
+        assert!(terms[2] > terms[0], "terms={terms:?}");
+    }
+
+    #[test]
+    fn monotone_in_outlier_magnitude() {
+        let mut rng = Rng::new(3);
+        let a = uniform_with_outliers(1024, 3, 5.0, &mut rng);
+        let mut rng = Rng::new(3);
+        let b = uniform_with_outliers(1024, 3, 500.0, &mut rng);
+        let pa = p_f(&GPrime::from_weights(&a), 4);
+        let pb = p_f(&GPrime::from_weights(&b), 4);
+        assert!(pb > pa, "{pb} vs {pa}");
+    }
+
+    #[test]
+    #[should_panic(expected = "K >= 2")]
+    fn rejects_order_below_two() {
+        let g = GPrime::from_weights(&[0.0, 1.0, 2.0]);
+        p_f(&g, 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! AWQ (Lin et al., 2023) — activation-aware weight quantization.
+//!
+//! Per-input-channel scales `s_c = a_c^α` (with `a_c` the mean absolute
+//! activation of channel `c`) move quantization-sensitive mass out of
+//! important channels before RTN; α is grid-searched to minimise the
+//! output-MSE proxy `Σ_c E[x_c²]·||ΔW_{:,c}||²`.
+//!
+//! In T-LLMs the scales fold into the preceding LayerNorm for free. In
+//! RWKV the fusion path is blocked by token-shift / sigmoid / exp
+//! (paper §1 finding ❶), so the runtime pays one extra multiply per
+//! activation element — recorded in `extra_flops_per_token`.
+
+use super::rtn;
+use crate::quant::{CalibData, SqLayer};
+use crate::tensor::Matrix;
+
+const ALPHA_GRID: &[f64] = &[0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9];
+
+/// AWQ quantization of `w` (oc×ic) with activation statistics from calib.
+/// Falls back to plain RTN when no calibration is available.
+pub fn quantize(
+    w: &Matrix,
+    bits: u32,
+    group_size: usize,
+    calib: Option<&CalibData>,
+) -> SqLayer {
+    let Some(calib) = calib else {
+        return rtn::quantize(w, bits, group_size);
+    };
+    assert_eq!(calib.x.cols, w.cols);
+    let a = calib.col_abs_mean();
+    // E[x_c^2] for the output-error proxy
+    let ex2: Vec<f64> = (0..w.cols)
+        .map(|c| {
+            let mut s = 0.0f64;
+            for r in 0..calib.x.rows {
+                let v = calib.x.at(r, c) as f64;
+                s += v * v;
+            }
+            s / calib.x.rows.max(1) as f64
+        })
+        .collect();
+
+    let mut best: Option<(f64, SqLayer, Vec<f32>)> = None;
+    for &alpha in ALPHA_GRID {
+        // normalise scales to geometric mean 1 so grids stay in range
+        let raw: Vec<f64> = a.iter().map(|&v| (v as f64).max(1e-8).powf(alpha)).collect();
+        let log_mean = raw.iter().map(|v| v.ln()).sum::<f64>() / raw.len() as f64;
+        let norm = log_mean.exp();
+        let s: Vec<f32> = raw.iter().map(|&v| (v / norm) as f32).collect();
+
+        let mut scaled = w.clone();
+        for r in 0..w.rows {
+            let row = scaled.row_mut(r);
+            for (v, sc) in row.iter_mut().zip(&s) {
+                *v *= sc;
+            }
+        }
+        let mut q = rtn::quantize(&scaled, bits, group_size);
+        q.col_inv_scale = Some(s.iter().map(|&v| 1.0 / v).collect());
+        // one multiply per activation element per token, not fusable in RWKV
+        q.extra_flops_per_token = w.cols as u64;
+
+        let deq = q.dequantize();
+        let mut proxy = 0.0f64;
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let d = (deq.at(r, c) - w.at(r, c)) as f64;
+                proxy += ex2[c] * d * d;
+            }
+        }
+        if best.as_ref().map(|(b, _, _)| proxy < *b).unwrap_or(true) {
+            best = Some((proxy, q, s));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, oc: usize, ic: usize) -> (Matrix, CalibData) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(oc, ic);
+        rng.fill_normal(&mut w.data, 0.0, 0.05);
+        let mut x = Matrix::zeros(128, ic);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        // make a few channels much more active -> AWQ should protect them
+        for r in 0..x.rows {
+            for c in 0..4 {
+                *x.at_mut(r, c) *= 12.0;
+            }
+        }
+        (w, CalibData { x })
+    }
+
+    #[test]
+    fn beats_rtn_on_activation_weighted_error() {
+        let (w, calib) = setup(1, 16, 64);
+        let q_awq = quantize(&w, 3, 32, Some(&calib));
+        let q_rtn = rtn::quantize(&w, 3, 32);
+        let xw = linalg::matmul(&calib.x, &w.transpose());
+        let e_awq = linalg::matmul(&calib.x, &q_awq.dequantize().transpose()).sq_err(&xw);
+        let e_rtn = linalg::matmul(&calib.x, &q_rtn.dequantize().transpose()).sq_err(&xw);
+        assert!(e_awq < e_rtn, "AWQ {e_awq} vs RTN {e_rtn}");
+    }
+
+    #[test]
+    fn records_unfusable_overhead() {
+        let (w, calib) = setup(2, 8, 32);
+        let q = quantize(&w, 3, 32, Some(&calib));
+        assert_eq!(q.extra_flops_per_token, 32);
+    }
+
+    #[test]
+    fn no_calib_falls_back_to_rtn() {
+        let (w, _) = setup(3, 8, 32);
+        let q = quantize(&w, 3, 32, None);
+        assert!(q.col_inv_scale.is_none());
+        assert_eq!(q.extra_flops_per_token, 0);
+    }
+
+    #[test]
+    fn dequant_is_finite() {
+        let (w, calib) = setup(4, 8, 32);
+        let q = quantize(&w, 3, 32, Some(&calib));
+        assert!(q.dequantize().data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,173 @@
+//! GPTQ (Frantar et al., 2022) — compensation-based scalar quantization.
+//!
+//! Columns of `W ∈ R^{oc×ic}` are quantized left-to-right; after fixing
+//! column `j`, the rounding error is propagated into the not-yet-quantized
+//! columns through the Cholesky factor of the inverse Hessian
+//! `H = XᵀX + λI`, minimising the layer output error `||XW - XŴ||²`.
+//! Grids are per-(row, column-group) and are recomputed from the *updated*
+//! weights when the sweep enters a new group — this is the `group_size`
+//! (g32 → 3.5 bpw, g64 → 3.25 bpw at 3 bits) configuration of §4.1.
+
+use super::{group_grid, quantize_value};
+use crate::quant::{packing::PackedInts, CalibData, SqLayer};
+use crate::tensor::{linalg, Matrix};
+
+/// Quantize with GPTQ compensation. `calib` provides the Hessian; if
+/// `None`, the identity Hessian is used (degrades to RTN with grid
+/// re-estimation, still a valid fallback for uncalibrated layers).
+pub fn quantize(
+    w: &Matrix,
+    bits: u32,
+    group_size: usize,
+    calib: Option<&CalibData>,
+    percdamp: f64,
+) -> SqLayer {
+    let (oc, ic) = (w.rows, w.cols);
+    // Group boundaries must align with columns so grids are re-estimated
+    // mid-sweep exactly as GPTQ does; shrink to a divisor if needed.
+    let group = effective_group(ic, group_size);
+
+    // Upper Cholesky factor of H^{-1}; hinv_u[j][j..] drives compensation.
+    // Identity Hessian (no calibration) ⇒ identity factor ⇒ zero cross-
+    // column compensation — skip the O(ic³) factorisation entirely.
+    let hinv_u = match calib {
+        Some(c) => {
+            assert_eq!(c.x.cols, ic, "calibration width {} != ic {}", c.x.cols, ic);
+            linalg::gptq_hinv_chol(&c.hessian(), percdamp)
+        }
+        None => Matrix::eye(ic),
+    };
+
+    let mut work = w.clone();
+    let n_groups_per_row = ic / group;
+    let mut scales = vec![0.0f32; oc * n_groups_per_row];
+    let mut mins = vec![0.0f32; oc * n_groups_per_row];
+    let mut codes = vec![0u32; oc * ic];
+
+    for j in 0..ic {
+        let gcol = j / group;
+        if j % group == 0 {
+            // (re-)fit grids for this column group from the updated weights
+            for r in 0..oc {
+                let seg = &work.row(r)[gcol * group..(gcol + 1) * group];
+                let (s, m) = group_grid(seg, bits);
+                scales[r * n_groups_per_row + gcol] = s;
+                mins[r * n_groups_per_row + gcol] = m;
+            }
+        }
+        let djj = hinv_u.at(j, j);
+        for r in 0..oc {
+            let gi = r * n_groups_per_row + gcol;
+            let (s, m) = (scales[gi], mins[gi]);
+            let v = work.at(r, j);
+            let q = quantize_value(v, s, m, bits);
+            codes[r * ic + j] = q;
+            let dq = m + s * q as f32;
+            // propagate the normalised error into the remaining columns
+            if djj.abs() > 1e-20 && j + 1 < ic {
+                let err = (v - dq) / djj;
+                let row = work.row_mut(r);
+                for jj in j + 1..ic {
+                    row[jj] -= err * hinv_u.at(j, jj);
+                }
+            }
+        }
+    }
+
+    // Re-emit scales/mins in the flat row-major group order expected by
+    // SqLayer::dequantize (identical layout because group | ic).
+    SqLayer {
+        rows: oc,
+        cols: ic,
+        bits,
+        group_size: group,
+        codes: PackedInts::pack(&codes, bits),
+        scales,
+        mins,
+        extra_flops_per_token: 0,
+        rotation: None,
+        col_inv_scale: None,
+    }
+}
+
+/// Largest divisor of `ic` that is ≤ requested group size (keeps grids
+/// column-aligned; equals `group_size` whenever `group_size | ic`).
+pub fn effective_group(ic: usize, group_size: usize) -> usize {
+    let g = group_size.min(ic).max(1);
+    (1..=g).rev().find(|d| ic % d == 0).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sq::rtn;
+    use crate::quant::QuantizedLayer;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, oc: usize, ic: usize, samples: usize) -> (Matrix, CalibData) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(oc, ic);
+        rng.fill_normal(&mut w.data, 0.0, 0.08);
+        let mut x = Matrix::zeros(samples, ic);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        // correlated activations make compensation matter
+        for r in 0..samples {
+            let base = x.at(r, 0);
+            for c in 1..ic.min(4) {
+                *x.at_mut(r, c) += 0.7 * base;
+            }
+        }
+        (w, CalibData { x })
+    }
+
+    /// GPTQ's objective is the *output* error ||X W - X Ŵ||², not the
+    /// weight error — it should beat RTN there.
+    #[test]
+    fn beats_rtn_on_output_error() {
+        let (w, calib) = setup(1, 24, 64, 256);
+        let g = quantize(&w, 3, 32, Some(&calib), 0.01);
+        let r = rtn::quantize(&w, 3, 32);
+        let xw = linalg::matmul(&calib.x, &w.transpose());
+        let err_g = linalg::matmul(&calib.x, &g.dequantize().transpose()).sq_err(&xw);
+        let err_r = linalg::matmul(&calib.x, &r.dequantize().transpose()).sq_err(&xw);
+        assert!(
+            err_g < err_r,
+            "GPTQ {err_g} should beat RTN {err_r} on output MSE"
+        );
+    }
+
+    #[test]
+    fn identity_hessian_close_to_rtn_error() {
+        let (w, _) = setup(2, 8, 32, 1);
+        let g = QuantizedLayer::Sq(quantize(&w, 4, 32, None, 0.01)).mse(&w);
+        let r = QuantizedLayer::Sq(rtn::quantize(&w, 4, 32)).mse(&w);
+        // with identity H compensation is diagonal-only; errors are comparable
+        assert!(g < r * 2.0 + 1e-12, "g={g} r={r}");
+    }
+
+    #[test]
+    fn effective_group_divides() {
+        assert_eq!(effective_group(64, 32), 32);
+        assert_eq!(effective_group(96, 64), 48);
+        assert_eq!(effective_group(7, 32), 7);
+        assert_eq!(effective_group(13, 4), 1);
+    }
+
+    #[test]
+    fn bpw_matches_paper_accounting() {
+        let (w, calib) = setup(3, 16, 128, 64);
+        let g32 = quantize(&w, 3, 32, Some(&calib), 0.01);
+        let g64 = quantize(&w, 3, 64, Some(&calib), 0.01);
+        assert!((g32.bpw() - 3.5).abs() < 1e-9); // 3 + 16/32
+        assert!((g64.bpw() - 3.25).abs() < 1e-9); // 3 + 16/64
+    }
+
+    #[test]
+    fn reconstruction_shape_and_finite() {
+        let (w, calib) = setup(4, 8, 32, 32);
+        let q = quantize(&w, 3, 32, Some(&calib), 0.01);
+        let d = q.dequantize();
+        assert_eq!((d.rows, d.cols), (8, 32));
+        assert!(d.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,86 @@
+//! Scalar quantization engines.
+//!
+//! All engines share the asymmetric uniform grid of Eq. 2:
+//! `Q(x) = clamp(round(x/s) + z, 0, 2^b - 1)` with per-group `(s, min)`
+//! pairs over groups of consecutive row-major elements.
+
+pub mod awq;
+pub mod gptq;
+pub mod quarot;
+pub mod rtn;
+
+/// Compute the symmetric full-range (scale, min) grid for one group of
+/// values at `bits` precision: `w ≈ s·(q − (2^b−1)/2)` with
+/// `s = 2·max|w| / (2^b−1)`. Only the fp16 scale is stored per group —
+/// `min = −s·(2^b−1)/2` is derived — matching the paper's bpw
+/// accounting (3-bit, group 64 → 3.25 bpw; group 32 → 3.5 bpw).
+/// A degenerate (all-zero) group gets scale 0 and is reproduced exactly.
+pub fn group_grid(vals: &[f32], bits: u32) -> (f32, f32) {
+    let mut absmax = 0.0f32;
+    for &v in vals {
+        absmax = absmax.max(v.abs());
+    }
+    if !absmax.is_finite() || absmax == 0.0 {
+        return (0.0, 0.0);
+    }
+    let levels = ((1u64 << bits) - 1) as f32;
+    let s = 2.0 * absmax / levels;
+    (s, -s * levels * 0.5)
+}
+
+/// Quantize a single value on a grid; returns the integer code.
+#[inline]
+pub fn quantize_value(v: f32, scale: f32, min: f32, bits: u32) -> u32 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let levels = (1u64 << bits) - 1;
+    let q = ((v - min) / scale).round();
+    (q.max(0.0) as u64).min(levels) as u32
+}
+
+/// Dequantize a code on a grid.
+#[inline]
+pub fn dequantize_value(q: u32, scale: f32, min: f32) -> f32 {
+    min + scale * q as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_range() {
+        let vals = [-1.0f32, 0.0, 1.0];
+        let (s, m) = group_grid(&vals, 3);
+        assert!((s - 2.0 / 7.0).abs() < 1e-6);
+        assert!((m + 1.0).abs() < 1e-6);
+        // endpoints map to extreme codes and back exactly
+        assert_eq!(quantize_value(-1.0, s, m, 3), 0);
+        assert_eq!(quantize_value(1.0, s, m, 3), 7);
+        assert!((dequantize_value(7, s, m) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_group_exact() {
+        let vals = [0.0f32; 8];
+        let (s, m) = group_grid(&vals, 4);
+        assert_eq!(s, 0.0);
+        assert_eq!(dequantize_value(quantize_value(0.0, s, m, 4), s, m), 0.0);
+    }
+
+    #[test]
+    fn symmetric_grid_is_zero_centred() {
+        let (s, m) = group_grid(&[-0.3f32, 0.9], 4);
+        // centre of the grid dequantizes to ~0
+        let centre = m + s * 7.5;
+        assert!(centre.abs() < 1e-6);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let (s, m) = group_grid(&[0.0, 1.0], 2);
+        assert_eq!(quantize_value(9.0, s, m, 2), 3);
+        assert_eq!(quantize_value(-9.0, s, m, 2), 0);
+    }
+}

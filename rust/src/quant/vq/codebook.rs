@@ -1,0 +1,301 @@
+//! Codebook fitting: weighted K-Means (Lloyd, 1982) with K-Means++
+//! seeding, per-element importance weights, and sub-sampled fitting for
+//! large layers. This is the common machinery behind the kMeans / GPTVQ /
+//! VPTQ baselines and the §3.2 element-wise-multiplication optimisation.
+
+use crate::util::rng::Rng;
+
+/// A `n_entries × d` codebook stored flat.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub d: usize,
+    pub entries: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn n_entries(&self) -> usize {
+        self.entries.len() / self.d
+    }
+
+    #[inline]
+    pub fn entry(&self, i: usize) -> &[f32] {
+        &self.entries[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Index of the entry minimising the (optionally importance-weighted)
+    /// squared distance to `v`.
+    pub fn nearest(&self, v: &[f32], weights: Option<&[f32]>) -> usize {
+        debug_assert_eq!(v.len(), self.d);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for e in 0..self.n_entries() {
+            let c = self.entry(e);
+            let mut dist = 0.0f32;
+            match weights {
+                None => {
+                    for j in 0..self.d {
+                        let diff = v[j] - c[j];
+                        dist += diff * diff;
+                    }
+                }
+                Some(w) => {
+                    for j in 0..self.d {
+                        let diff = v[j] - c[j];
+                        dist += w[j] * diff * diff;
+                    }
+                }
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = e;
+            }
+        }
+        best
+    }
+}
+
+/// Weighted squared distance between two d-vectors.
+#[inline]
+fn wdist(a: &[f32], b: &[f32], w: Option<&[f32]>) -> f64 {
+    let mut s = 0.0f64;
+    match w {
+        None => {
+            for j in 0..a.len() {
+                let d = (a[j] - b[j]) as f64;
+                s += d * d;
+            }
+        }
+        Some(w) => {
+            for j in 0..a.len() {
+                let d = (a[j] - b[j]) as f64;
+                s += w[j] as f64 * d * d;
+            }
+        }
+    }
+    s
+}
+
+/// Fit a codebook of `n_entries` d-vectors to `data` (flat, length
+/// multiple of d) with optional per-element importance `weights`
+/// (same layout as `data`). Fitting sub-samples at most `max_fit`
+/// vectors for tractability on large layers; assignment of the full
+/// layer is done separately by the callers.
+pub fn fit(
+    data: &[f32],
+    weights: Option<&[f32]>,
+    d: usize,
+    n_entries: usize,
+    iters: usize,
+    max_fit: usize,
+    rng: &mut Rng,
+) -> Codebook {
+    assert!(d > 0 && data.len() % d == 0);
+    if let Some(w) = weights {
+        assert_eq!(w.len(), data.len());
+    }
+    let nvec = data.len() / d;
+    let k = n_entries.min(nvec.max(1));
+
+    // sub-sample vectors for the fit
+    let fit_n = nvec.min(max_fit.max(k));
+    let mut idx: Vec<usize> = (0..nvec).collect();
+    if fit_n < nvec {
+        rng.shuffle(&mut idx);
+        idx.truncate(fit_n);
+    }
+    let vec_at = |i: usize| &data[i * d..(i + 1) * d];
+    let w_at = |i: usize| weights.map(|w| &w[i * d..(i + 1) * d]);
+
+    // --- K-Means++ seeding ---
+    let mut centers: Vec<f32> = Vec::with_capacity(k * d);
+    let first = idx[rng.below(idx.len())];
+    centers.extend_from_slice(vec_at(first));
+    let mut min_d2: Vec<f64> = idx
+        .iter()
+        .map(|&i| wdist(vec_at(i), &centers[0..d], w_at(i)))
+        .collect();
+    while centers.len() / d < k {
+        let total: f64 = min_d2.iter().sum();
+        let chosen = if total <= 0.0 {
+            idx[rng.below(idx.len())]
+        } else {
+            let mut r = rng.f64() * total;
+            let mut pick = idx[idx.len() - 1];
+            for (pos, &i) in idx.iter().enumerate() {
+                r -= min_d2[pos];
+                if r <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let start = centers.len();
+        centers.extend_from_slice(vec_at(chosen));
+        let newc: Vec<f32> = centers[start..start + d].to_vec();
+        for (pos, &i) in idx.iter().enumerate() {
+            let dd = wdist(vec_at(i), &newc, w_at(i));
+            if dd < min_d2[pos] {
+                min_d2[pos] = dd;
+            }
+        }
+    }
+    let mut cb = Codebook { d, entries: centers };
+
+    // --- Lloyd iterations (weighted) ---
+    let mut assign = vec![0usize; idx.len()];
+    for _ in 0..iters {
+        let mut moved = false;
+        for (pos, &i) in idx.iter().enumerate() {
+            let a = cb.nearest(vec_at(i), w_at(i));
+            if a != assign[pos] {
+                moved = true;
+                assign[pos] = a;
+            }
+        }
+        // update: weighted mean per (cluster, dim)
+        let mut num = vec![0.0f64; k * d];
+        let mut den = vec![0.0f64; k * d];
+        for (pos, &i) in idx.iter().enumerate() {
+            let a = assign[pos];
+            let v = vec_at(i);
+            match w_at(i) {
+                None => {
+                    for j in 0..d {
+                        num[a * d + j] += v[j] as f64;
+                        den[a * d + j] += 1.0;
+                    }
+                }
+                Some(w) => {
+                    for j in 0..d {
+                        num[a * d + j] += (w[j] as f64) * v[j] as f64;
+                        den[a * d + j] += w[j] as f64;
+                    }
+                }
+            }
+        }
+        for e in 0..k {
+            for j in 0..d {
+                if den[e * d + j] > 0.0 {
+                    cb.entries[e * d + j] = (num[e * d + j] / den[e * d + j]) as f32;
+                }
+                // empty cluster in this dim: keep previous center
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    cb
+}
+
+/// Assign every d-vector of `data` to its nearest codebook entry,
+/// with optional importance weighting. Returns the index stream.
+pub fn assign_all(cb: &Codebook, data: &[f32], weights: Option<&[f32]>) -> Vec<u32> {
+    let d = cb.d;
+    let nvec = data.len() / d;
+    let mut out = Vec::with_capacity(nvec);
+    for i in 0..nvec {
+        let w = weights.map(|w| &w[i * d..(i + 1) * d]);
+        out.push(cb.nearest(&data[i * d..(i + 1) * d], w) as u32);
+    }
+    out
+}
+
+/// Mean relative cluster loss, as reported in the paper's Table 1:
+/// within-cluster squared distortion divided by total variance, after
+/// clustering the scalars of `data` into `k` clusters (d = 1).
+pub fn relative_cluster_loss(data: &[f32], k: usize, iters: usize, rng: &mut Rng) -> f64 {
+    let cb = fit(data, None, 1, k, iters, 50_000, rng);
+    let idx = assign_all(&cb, data, None);
+    let mut loss = 0.0f64;
+    for (i, &a) in idx.iter().enumerate() {
+        let d = (data[i] - cb.entries[a as usize]) as f64;
+        loss += d * d;
+    }
+    let mean = data.iter().map(|&x| x as f64).sum::<f64>() / data.len() as f64;
+    let var: f64 = data.iter().map(|&x| (x as f64 - mean).powi(2)).sum();
+    if var <= 0.0 {
+        return 0.0;
+    }
+    loss / var * 100.0 // percentage, matching Table 1's scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for _ in 0..200 {
+            let pick = rng.below(2) as f32;
+            data.push(pick * 10.0 + rng.normal_ms(0.0, 0.05) as f32);
+            data.push(pick * -4.0 + rng.normal_ms(0.0, 0.05) as f32);
+        }
+        let cb = fit(&data, None, 2, 2, 30, 10_000, &mut rng);
+        let idx = assign_all(&cb, &data, None);
+        // distortion should be tiny relative to the separation
+        let mut dist = 0.0f64;
+        for i in 0..data.len() / 2 {
+            dist += wdist(&data[i * 2..i * 2 + 2], cb.entry(idx[i] as usize), None);
+        }
+        assert!(dist / ((data.len() / 2) as f64) < 1.0, "distortion {dist}");
+    }
+
+    #[test]
+    fn weighted_fit_prioritises_heavy_positions() {
+        let mut rng = Rng::new(2);
+        // vectors (a, b): position 0 has importance 100, position 1 has 0.01
+        let mut data = Vec::new();
+        let mut weights = Vec::new();
+        for i in 0..400 {
+            data.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+            data.push(rng.normal() as f32);
+            weights.push(100.0);
+            weights.push(0.01);
+        }
+        let cb = fit(&data, Some(&weights), 2, 2, 30, 10_000, &mut rng);
+        let idx = assign_all(&cb, &data, Some(&weights));
+        // position-0 error must be near zero
+        let mut e0 = 0.0f64;
+        for i in 0..data.len() / 2 {
+            let c = cb.entry(idx[i] as usize);
+            e0 += ((data[i * 2] - c[0]) as f64).powi(2);
+        }
+        assert!(e0 / ((data.len() / 2) as f64) < 1e-3, "e0={e0}");
+    }
+
+    #[test]
+    fn k_clamped_to_data() {
+        let mut rng = Rng::new(3);
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let cb = fit(&data, None, 2, 100, 5, 100, &mut rng);
+        assert!(cb.n_entries() <= 2);
+    }
+
+    #[test]
+    fn relative_cluster_loss_lower_for_clustered_data() {
+        let mut rng = Rng::new(4);
+        // bimodal (clusterable)
+        let clustered: Vec<f32> = (0..2000)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 } + rng.normal_ms(0.0, 0.05) as f32)
+            .collect();
+        // uniform (hard to cluster)
+        let uniform: Vec<f32> = (0..2000).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let lc = relative_cluster_loss(&clustered, 8, 20, &mut rng);
+        let lu = relative_cluster_loss(&uniform, 8, 20, &mut rng);
+        assert!(lc < lu, "clustered {lc} vs uniform {lu}");
+    }
+
+    #[test]
+    fn assign_all_within_bounds() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let cb = fit(&data, None, 4, 8, 10, 100, &mut rng);
+        let idx = assign_all(&cb, &data, None);
+        assert_eq!(idx.len(), 16);
+        assert!(idx.iter().all(|&i| (i as usize) < cb.n_entries()));
+    }
+}

@@ -1,0 +1,151 @@
+//! GPTVQ (van Baalen et al., 2024) — vector quantization with GPTQ-style
+//! second-order error compensation.
+//!
+//! The column sweep of GPTQ is lifted to d-wide vector steps: for each
+//! row, the d-vector at columns `[j, j+d)` is replaced by its nearest
+//! codebook entry (nearness measured under the inverse-Hessian metric
+//! diagonal), then the rounding error of each scalar column is propagated
+//! into the not-yet-quantized columns through the Cholesky factor of
+//! `H⁻¹`, exactly as in GPTQ.
+
+use super::codebook::{self, Codebook};
+use super::effective_dim;
+use crate::quant::{packing::PackedInts, CalibData, VqLayer};
+use crate::tensor::{linalg, Matrix};
+use crate::util::rng::Rng;
+
+/// GPTVQ quantization of `w` (oc×ic).
+pub fn quantize(
+    w: &Matrix,
+    k: u32,
+    d: usize,
+    calib: Option<&CalibData>,
+    percdamp: f64,
+    iters: usize,
+    rng: &mut Rng,
+) -> VqLayer {
+    let (oc, ic) = (w.rows, w.cols);
+    let d = effective_dim(ic, d);
+    let h = match calib {
+        Some(c) => {
+            assert_eq!(c.x.cols, ic);
+            c.hessian()
+        }
+        None => Matrix::eye(ic),
+    };
+    // identity H => identity factor; skip the O(ic^3) path (see gptq.rs)
+    let hinv_u = if calib.is_some() {
+        linalg::gptq_hinv_chol(&h, percdamp)
+    } else {
+        Matrix::eye(ic)
+    };
+
+    // Codebook fit on the original vectors, importance = Hessian diagonal
+    // per column position (protects high-curvature columns).
+    let nvec = (oc * ic) / d;
+    let k = super::effective_k(k, nvec);
+    let n_entries = 1usize << k;
+    let diag: Vec<f32> = (0..ic).map(|j| h.at(j, j).max(1e-12)).collect();
+    let mut imp = vec![0.0f32; nvec * d];
+    for i in 0..nvec {
+        for c in 0..d {
+            let col = (i * d + c) % ic;
+            imp[i * d + c] = diag[col];
+        }
+    }
+    let cb: Codebook = codebook::fit(
+        &w.data[..nvec * d],
+        Some(&imp),
+        d,
+        n_entries,
+        iters,
+        super::kmeans::MAX_FIT_VECTORS,
+        rng,
+    );
+
+    // Compensated sweep over column blocks.
+    let mut work = w.clone();
+    let mut indices = vec![0u32; nvec];
+    let vecs_per_row = ic / d;
+    let mut jblock = 0usize;
+    while jblock < ic {
+        for r in 0..oc {
+            let v: Vec<f32> = work.row(r)[jblock..jblock + d].to_vec();
+            let wseg = &imp[(r * vecs_per_row + jblock / d) * d..(r * vecs_per_row + jblock / d) * d + d];
+            let e = cb.nearest(&v, Some(wseg));
+            indices[r * vecs_per_row + jblock / d] = e as u32;
+            let entry: Vec<f32> = cb.entry(e).to_vec();
+            // propagate each scalar error like GPTQ
+            for c in 0..d {
+                let j = jblock + c;
+                let djj = hinv_u.at(j, j);
+                if djj.abs() <= 1e-20 || j + 1 >= ic {
+                    continue;
+                }
+                let err = (work.at(r, j) - entry[c]) / djj;
+                let row = work.row_mut(r);
+                for jj in j + 1..ic {
+                    row[jj] -= err * hinv_u.at(j, jj);
+                }
+            }
+        }
+        jblock += d;
+    }
+
+    VqLayer {
+        rows: oc,
+        cols: ic,
+        d,
+        k,
+        codebook: cb.entries,
+        indices: PackedInts::pack(&indices, k),
+        tail: Vec::new(), // d | ic by construction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vq::kmeans;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, oc: usize, ic: usize, samples: usize) -> (Matrix, CalibData) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(oc, ic);
+        rng.fill_normal(&mut w.data, 0.0, 0.08);
+        let mut x = Matrix::zeros(samples, ic);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        for r in 0..samples {
+            let base = x.at(r, 0);
+            for c in 1..6 {
+                *x.at_mut(r, c) += 0.8 * base;
+            }
+        }
+        (w, CalibData { x })
+    }
+
+    #[test]
+    fn beats_plain_kmeans_on_output_error() {
+        let (w, calib) = setup(1, 16, 32, 256);
+        let xw = linalg::matmul(&calib.x, &w.transpose());
+        let g = quantize(&w, 6, 4, Some(&calib), 0.01, 15, &mut Rng::new(3));
+        let p = kmeans::quantize(&w, 6, 4, 15, &mut Rng::new(3));
+        let e_g = linalg::matmul(&calib.x, &g.dequantize().transpose()).sq_err(&xw);
+        let e_p = linalg::matmul(&calib.x, &p.dequantize().transpose()).sq_err(&xw);
+        assert!(e_g < e_p, "gptvq {e_g} vs kmeans {e_p}");
+    }
+
+    #[test]
+    fn works_without_calibration() {
+        let (w, _) = setup(2, 8, 16, 1);
+        let q = quantize(&w, 6, 4, None, 0.01, 10, &mut Rng::new(4));
+        assert!(q.dequantize().data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn index_stream_length() {
+        let (w, calib) = setup(3, 8, 16, 32);
+        let q = quantize(&w, 6, 4, Some(&calib), 0.01, 10, &mut Rng::new(5));
+        assert_eq!(q.indices.len, 8 * 16 / 4);
+    }
+}

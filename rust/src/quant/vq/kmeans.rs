@@ -1,0 +1,109 @@
+//! Plain K-Means VQ — the "kMeans" baseline row of Table 2.
+//!
+//! One codebook per layer, unweighted Euclidean fit on the layer's
+//! d-vectors, straight nearest-entry assignment.
+
+use super::codebook::{self, Codebook};
+use super::effective_dim;
+use crate::quant::{packing::PackedInts, VqLayer};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Maximum vectors used in the Lloyd fit (full layer still assigned).
+pub const MAX_FIT_VECTORS: usize = 8192;
+
+/// Quantize `w` with a `2^k`-entry, `d`-dimensional codebook.
+pub fn quantize(w: &Matrix, k: u32, d: usize, iters: usize, rng: &mut Rng) -> VqLayer {
+    quantize_weighted(w, None, k, d, iters, rng)
+}
+
+/// Importance-weighted variant (shared by VPTQ and the §3.2 ewmul path).
+/// `weights`, when given, has the same flat layout as `w.data`.
+pub fn quantize_weighted(
+    w: &Matrix,
+    weights: Option<&[f32]>,
+    k: u32,
+    d: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> VqLayer {
+    let d = effective_dim(w.cols, d);
+    let n = w.numel();
+    let nvec = n / d;
+    let body = &w.data[..nvec * d];
+    let wbody = weights.map(|ws| &ws[..nvec * d]);
+    let k = super::effective_k(k, nvec);
+    let n_entries = 1usize << k;
+
+    let cb: Codebook =
+        codebook::fit(body, wbody, d, n_entries, iters, MAX_FIT_VECTORS, rng);
+    let indices = codebook::assign_all(&cb, body, wbody);
+    VqLayer {
+        rows: w.rows,
+        cols: w.cols,
+        d,
+        k,
+        codebook: cb.entries,
+        indices: PackedInts::pack(&indices, k),
+        tail: w.data[nvec * d..].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedLayer;
+
+    fn gaussian_w(seed: u64, r: usize, c: usize, std: f32) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(&mut m.data, 0.0, std);
+        m
+    }
+
+    #[test]
+    fn reconstruction_error_reasonable() {
+        let w = gaussian_w(1, 32, 64, 0.05);
+        let mut rng = Rng::new(9);
+        let q = quantize(&w, 10, 4, 15, &mut rng);
+        let mse = QuantizedLayer::Vq(q).mse(&w);
+        // 10 bits over 4 dims ≈ 2.5 b/dim; expect clearly sub-variance error
+        assert!(mse < 0.05f64.powi(2) * 0.3, "mse={mse}");
+    }
+
+    #[test]
+    fn more_entries_help() {
+        let w = gaussian_w(2, 64, 64, 0.05); // nvec=1024 -> k cap 6
+        let mut rng = Rng::new(9);
+        let e2 = QuantizedLayer::Vq(quantize(&w, 2, 4, 15, &mut rng)).mse(&w);
+        let mut rng = Rng::new(9);
+        let e6 = QuantizedLayer::Vq(quantize(&w, 10, 4, 15, &mut rng)).mse(&w);
+        assert!(e6 < e2, "e6={e6} e2={e2}");
+    }
+
+    #[test]
+    fn bpw_accounts_codebook() {
+        let w = gaussian_w(3, 64, 64, 0.05);
+        let q = quantize(&w, 8, 4, 5, &mut Rng::new(1));
+        // effective k = min(8, log2(1024/16)) = 6: payload 6/4 = 1.5 bpw
+        // + codebook 64*4*16 / 4096 = 1.0 bpw
+        assert_eq!(q.k, 6);
+        assert!((q.bpw() - 2.5).abs() < 1e-9, "bpw={}", q.bpw());
+    }
+
+    #[test]
+    fn non_divisible_cols_fall_back() {
+        let w = gaussian_w(4, 3, 10, 0.1); // cols=10, d=4 -> effective d=2
+        let q = quantize(&w, 4, 4, 5, &mut Rng::new(2));
+        assert_eq!(q.d, 2);
+        assert_eq!(q.dequantize().cols, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = gaussian_w(5, 8, 16, 0.1);
+        let a = quantize(&w, 5, 4, 10, &mut Rng::new(7)).dequantize();
+        let b = quantize(&w, 5, 4, 10, &mut Rng::new(7)).dequantize();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,46 @@
+//! Vector quantization engines.
+//!
+//! All engines share [`codebook`]: a `2^k × d` table fit by (weighted)
+//! K-Means. [`kmeans`] is the plain VQ baseline of Table 2; [`gptvq`]
+//! adds GPTQ-style second-order error propagation during assignment;
+//! [`vptq`] weights the codebook fit by the Hessian diagonal.
+
+pub mod codebook;
+pub mod gptvq;
+pub mod kmeans;
+pub mod vptq;
+
+/// Largest divisor of `cols` ≤ `d` (keeps VQ vectors row-aligned).
+pub fn effective_dim(cols: usize, d: usize) -> usize {
+    crate::quant::sq::gptq::effective_group(cols, d)
+}
+
+/// Effective codebook index width for a layer with `nvec` vectors: the
+/// fp16 codebook must amortise over the layer, so entries are capped at
+/// `nvec / 16` (⇒ codebook overhead ≤ 1 bpw for d-dim vectors). Large
+/// layers (the paper's regime) keep the full requested `k`; tiny layers
+/// degrade gracefully instead of ballooning past fp16.
+pub fn effective_k(k: u32, nvec: usize) -> u32 {
+    let cap = (nvec / 16).max(2);
+    let max_k = (usize::BITS - 1 - cap.leading_zeros()).max(1);
+    k.min(max_k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_k_caps_small_layers() {
+        assert_eq!(effective_k(13, 1 << 20), 13); // big layer keeps k
+        assert_eq!(effective_k(13, 4096), 8); // 4096/16 = 256 -> 8 bits
+        assert_eq!(effective_k(13, 64), 2); // tiny layer
+        assert_eq!(effective_k(3, 1 << 20), 3); // never raises k
+    }
+
+    #[test]
+    fn effective_dim_divides() {
+        assert_eq!(effective_dim(256, 4), 4);
+        assert_eq!(effective_dim(10, 4), 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! VPTQ (Liu et al., 2024a) — second-order vector post-training
+//! quantization: the codebook fit and the assignment are both weighted by
+//! the Hessian diagonal (channel curvature), but no cross-column error
+//! propagation is performed (assignments are independent), matching the
+//! published method's layer-parallel design.
+
+use super::codebook::{self, Codebook};
+use super::effective_dim;
+use crate::quant::{packing::PackedInts, CalibData, VqLayer};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// VPTQ quantization of `w` (oc×ic).
+pub fn quantize(
+    w: &Matrix,
+    k: u32,
+    d: usize,
+    calib: Option<&CalibData>,
+    iters: usize,
+    rng: &mut Rng,
+) -> VqLayer {
+    let (oc, ic) = (w.rows, w.cols);
+    let d = effective_dim(ic, d);
+    let nvec = (oc * ic) / d;
+
+    // Hessian-diagonal importance per column position.
+    let diag: Vec<f32> = match calib {
+        Some(c) => {
+            assert_eq!(c.x.cols, ic);
+            (0..ic)
+                .map(|j| {
+                    let mut s = 0.0f64;
+                    for r in 0..c.x.rows {
+                        let v = c.x.at(r, j) as f64;
+                        s += v * v;
+                    }
+                    (s.max(1e-12)) as f32
+                })
+                .collect()
+        }
+        None => vec![1.0; ic],
+    };
+    let mut imp = vec![0.0f32; nvec * d];
+    for i in 0..nvec {
+        for c in 0..d {
+            imp[i * d + c] = diag[(i * d + c) % ic];
+        }
+    }
+
+    let k = super::effective_k(k, nvec);
+    let n_entries = 1usize << k;
+    let cb: Codebook = codebook::fit(
+        &w.data[..nvec * d],
+        Some(&imp),
+        d,
+        n_entries,
+        iters,
+        super::kmeans::MAX_FIT_VECTORS,
+        rng,
+    );
+    let indices = codebook::assign_all(&cb, &w.data[..nvec * d], Some(&imp));
+    VqLayer {
+        rows: oc,
+        cols: ic,
+        d,
+        k,
+        codebook: cb.entries,
+        indices: PackedInts::pack(&indices, k),
+        tail: w.data[nvec * d..].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedLayer;
+    use crate::tensor::linalg;
+
+    fn setup(seed: u64, oc: usize, ic: usize) -> (Matrix, CalibData) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(oc, ic);
+        rng.fill_normal(&mut w.data, 0.0, 0.08);
+        let mut x = Matrix::zeros(128, ic);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        // a few hot channels
+        for r in 0..x.rows {
+            for c in 0..3 {
+                *x.at_mut(r, c) *= 10.0;
+            }
+        }
+        (w, CalibData { x })
+    }
+
+    #[test]
+    fn hessian_weighting_helps_output_error() {
+        let (w, calib) = setup(1, 16, 32);
+        let xw = linalg::matmul(&calib.x, &w.transpose());
+        let v = quantize(&w, 6, 4, Some(&calib), 15, &mut Rng::new(2));
+        let p = crate::quant::vq::kmeans::quantize(&w, 6, 4, 15, &mut Rng::new(2));
+        let e_v = linalg::matmul(&calib.x, &v.dequantize().transpose()).sq_err(&xw);
+        let e_p = linalg::matmul(&calib.x, &p.dequantize().transpose()).sq_err(&xw);
+        assert!(e_v < e_p, "vptq {e_v} vs kmeans {e_p}");
+    }
+
+    #[test]
+    fn no_calib_reduces_to_plain_weighting() {
+        let (w, _) = setup(2, 8, 16);
+        let q = quantize(&w, 6, 4, None, 10, &mut Rng::new(3));
+        assert!(QuantizedLayer::Vq(q).mse(&w) < 0.08f64.powi(2));
+    }
+
+    #[test]
+    fn shape_preserved() {
+        let (w, calib) = setup(3, 8, 16);
+        let q = quantize(&w, 6, 4, Some(&calib), 10, &mut Rng::new(4));
+        let m = q.dequantize();
+        assert_eq!((m.rows, m.cols), (8, 16));
+    }
+}

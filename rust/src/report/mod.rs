@@ -1,0 +1,245 @@
+//! Report writers: aligned ASCII tables (matching the paper's table
+//! layout), a minimal JSON emitter, and CSV — used by every bench target
+//! to print the regenerated table/figure series and optionally persist
+//! them under `artifacts/reports/`.
+
+pub mod json;
+
+use std::fmt::Write as _;
+
+/// Cell content with right-aligned numeric formatting.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Str(String),
+    F64(f64, usize), // value, decimals
+    Int(i64),
+    Empty,
+}
+
+impl Cell {
+    pub fn s(v: impl Into<String>) -> Cell {
+        Cell::Str(v.into())
+    }
+
+    pub fn f(v: f64, decimals: usize) -> Cell {
+        Cell::F64(v, decimals)
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::F64(v, d) => {
+                if v.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{v:.prec$}", prec = d)
+                }
+            }
+            Cell::Int(i) => i.to_string(),
+            Cell::Empty => "-".to_string(),
+        }
+    }
+}
+
+/// An aligned table with a title, header row, and data rows.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch in '{}'", self.title);
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.render()).collect())
+            .collect();
+        for row in &rendered {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let mut line = String::new();
+        for i in 0..ncol {
+            let _ = write!(line, "| {:<w$} ", self.header[i], w = widths[i]);
+        }
+        line.push('|');
+        let sep = "-".repeat(line.len());
+        let _ = writeln!(out, "{sep}\n{line}\n{sep}");
+        for row in &rendered {
+            let mut l = String::new();
+            for i in 0..ncol {
+                let _ = write!(l, "| {:>w$} ", row[i], w = widths[i]);
+            }
+            l.push('|');
+            let _ = writeln!(out, "{l}");
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV dump (comma-separated, header first).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|c| c.render().replace(',', ";")).collect();
+            let _ = writeln!(out, "{}", cells.join(","));
+        }
+        out
+    }
+
+    /// Persist the CSV under `artifacts/reports/<slug>.csv` (best-effort).
+    pub fn save_csv(&self, slug: &str) {
+        let dir = std::path::Path::new("artifacts/reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv());
+        }
+    }
+}
+
+/// Simple series printer for figure-style outputs (x, one or more y's).
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub y_labels: Vec<String>,
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: impl Into<String>, x_label: &str, y_labels: &[&str]) -> Series {
+        Series {
+            title: title.into(),
+            x_label: x_label.to_string(),
+            y_labels: y_labels.iter().map(|s| s.to_string()).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.y_labels.len());
+        self.points.push((x, ys));
+    }
+
+    /// Render as an aligned table plus a crude ASCII sparkline per series.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            self.title.clone(),
+            &std::iter::once(self.x_label.as_str())
+                .chain(self.y_labels.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for (x, ys) in &self.points {
+            let mut row = vec![Cell::f(*x, 3)];
+            row.extend(ys.iter().map(|y| Cell::f(*y, 3)));
+            t.row(row);
+        }
+        let mut out = t.render();
+        for (i, label) in self.y_labels.iter().enumerate() {
+            let ys: Vec<f64> = self.points.iter().map(|(_, v)| v[i]).collect();
+            let _ = writeln!(out, "  {label:<12} {}", sparkline(&ys));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Unicode sparkline for quick shape checks in terminal output.
+pub fn sparkline(ys: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let finite: Vec<f64> = ys.iter().cloned().filter(|y| y.is_finite()).collect();
+    if finite.is_empty() {
+        return String::new();
+    }
+    let lo = finite.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = finite.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    ys.iter()
+        .map(|y| {
+            if !y.is_finite() {
+                '?'
+            } else {
+                let t = ((y - lo) / span * 7.0).round() as usize;
+                BARS[t.min(7)]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Acc", "PPL"]);
+        t.row(vec![Cell::s("GPTQ"), Cell::f(51.15, 2), Cell::f(7.93, 2)]);
+        t.row(vec![Cell::s("Ours"), Cell::f(52.40, 2), Cell::f(5.24, 2)]);
+        let r = t.render();
+        assert!(r.contains("GPTQ") && r.contains("52.40"));
+        assert!(r.contains("== Demo =="));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec![Cell::Int(1)]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec![Cell::Int(1), Cell::f(2.5, 1)]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert_eq!(csv.lines().nth(1).unwrap(), "1,2.5");
+    }
+
+    #[test]
+    fn nan_renders_dash() {
+        assert_eq!(Cell::f(f64::NAN, 2).render(), "-");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+    }
+
+    #[test]
+    fn series_point_arity() {
+        let mut s = Series::new("f", "x", &["y"]);
+        s.point(1.0, vec![2.0]);
+        assert!(s.render().contains("1.000"));
+    }
+}

@@ -1,0 +1,81 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and
+//! execute them from the Rust hot path. Python never runs here.
+
+pub mod rwkv_graph;
+
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// A compiled HLO artifact plus its client.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(Engine { client })
+    }
+
+    /// Load + compile an HLO-text artifact (the interchange format —
+    /// serialized jax≥0.5 protos are rejected by xla_extension 0.5.1).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Graph> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow::Error::msg)?;
+        Ok(Graph { exe })
+    }
+
+    /// Upload a host f32 tensor once; reuse across executions.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(anyhow::Error::msg)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(anyhow::Error::msg)
+    }
+}
+
+/// A compiled executable; the lowering used `return_tuple=True`, so each
+/// execution yields one tuple literal that we decompose.
+pub struct Graph {
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Graph {
+    /// Execute with device-resident buffers; returns the decomposed
+    /// output tuple as host literals.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute_b(args).map_err(anyhow::Error::msg)?;
+        let lit = out[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        lit.to_tuple().map_err(anyhow::Error::msg)
+    }
+
+    /// Execute with host literals (convenience for tests / one-shots).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args).map_err(anyhow::Error::msg)?;
+        let lit = out[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        lit.to_tuple().map_err(anyhow::Error::msg)
+    }
+}
+
+/// Read an f32 literal into a Vec.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(anyhow::Error::msg)
+}
+
+/// Default artifacts directory (overridable for tests).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("RWKVQUANT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,402 @@
+//! Dense linear algebra needed by the quantization engines.
+//!
+//! * blocked matmul / matvec (the Rust-side eval fallback and the GPTQ
+//!   Hessian build),
+//! * Cholesky factorisation + inverse of an SPD matrix (the GPTQ
+//!   second-order compensation path, following Frantar et al. 2022),
+//! * fast Walsh–Hadamard transform (the QuaRot rotation baseline).
+
+use super::Matrix;
+
+/// C = A @ B. Cache-blocked i-k-j loop order; good enough for the
+/// calibration-scale matrices used here (≤ a few thousand columns).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into a pre-allocated output (hot-path variant; avoids
+/// per-call allocation in the serving loop).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let n = b.cols;
+    for i in 0..a.rows {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for k in 0..a.cols {
+            let aik = a.data[i * a.cols + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            // inner loop auto-vectorises
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// y = A @ x.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// y = A @ x into pre-allocated y. Four independent accumulators per
+/// row break the FP dependency chain so the loop vectorises/pipelines
+/// (≈2-3× over the naive fold on the serving hot path — EXPERIMENTS.md
+/// §Perf).
+pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let n = a.cols;
+    let chunks = n / 4;
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = a.row(i);
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for j in 0..chunks {
+            let b = 4 * j;
+            a0 += row[b] * x[b];
+            a1 += row[b + 1] * x[b + 1];
+            a2 += row[b + 2] * x[b + 2];
+            a3 += row[b + 3] * x[b + 3];
+        }
+        for j in 4 * chunks..n {
+            a0 += row[j] * x[j];
+        }
+        *yi = (a0 + a1) + (a2 + a3);
+    }
+}
+
+/// A^T @ A accumulated in f64 (Hessian proxy H = 2 X X^T in GPTQ; X given
+/// row-per-sample). Returns a symmetric `cols x cols` matrix.
+pub fn gram(x: &Matrix) -> Matrix {
+    let n = x.cols;
+    let mut g64 = vec![0.0f64; n * n];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        for i in 0..n {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let base = i * n;
+            for j in i..n {
+                g64[base + j] += xi * row[j] as f64;
+            }
+        }
+    }
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = g64[i * n + j] as f32;
+            g.data[i * n + j] = v;
+            g.data[j * n + i] = v;
+        }
+    }
+    g
+}
+
+/// Cholesky factorisation A = L L^T (lower triangular). Returns None if
+/// the matrix is not positive definite (caller should add damping).
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..n * n {
+        out.data[i] = l[i] as f32;
+    }
+    Some(out)
+}
+
+/// Solve L y = b with L lower-triangular (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve L^T x = y with L lower-triangular (back substitution).
+pub fn solve_upper_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// Inverse of an SPD matrix via Cholesky, with progressive diagonal
+/// damping (the `percdamp` trick from GPTQ) if needed.
+pub fn spd_inverse_damped(a: &Matrix, percdamp: f64) -> Matrix {
+    let n = a.rows;
+    let mean_diag: f64 =
+        (0..n).map(|i| a.at(i, i) as f64).sum::<f64>() / n as f64;
+    let mut damp = percdamp * mean_diag.max(1e-12);
+    let mut work = a.clone();
+    loop {
+        if let Some(l) = cholesky(&work) {
+            // A^{-1} columns by solving A x = e_i
+            let mut inv = Matrix::zeros(n, n);
+            let mut e = vec![0.0f32; n];
+            for i in 0..n {
+                e[i] = 1.0;
+                let y = solve_lower(&l, &e);
+                let x = solve_upper_t(&l, &y);
+                inv.set_col(i, &x);
+                e[i] = 0.0;
+            }
+            return inv;
+        }
+        for i in 0..n {
+            *work.at_mut(i, i) += damp as f32;
+        }
+        damp *= 10.0;
+        if damp > 1e12 {
+            // fall back to identity-scaled inverse: diag only
+            let mut inv = Matrix::zeros(n, n);
+            for i in 0..n {
+                inv.data[i * n + i] = 1.0 / work.at(i, i).max(1e-12);
+            }
+            return inv;
+        }
+    }
+}
+
+/// Upper-triangular Cholesky of the *inverse* Hessian, as used by GPTQ:
+/// given SPD H, returns U such that H^{-1} = U^T U ordering-compatible
+/// with GPTQ's column loop (we return Cholesky of H^{-1}, upper form).
+pub fn gptq_hinv_chol(h: &Matrix, percdamp: f64) -> Matrix {
+    let hinv = spd_inverse_damped(h, percdamp);
+    // Cholesky of hinv (lower), return transpose (upper).
+    let n = hinv.rows;
+    let mut sym = hinv;
+    // symmetrise against f32 round-off
+    for i in 0..n {
+        for j in 0..i {
+            let m = 0.5 * (sym.at(i, j) + sym.at(j, i));
+            *sym.at_mut(i, j) = m;
+            *sym.at_mut(j, i) = m;
+        }
+    }
+    let mut damp = percdamp;
+    loop {
+        if let Some(l) = cholesky(&sym) {
+            return l.transpose();
+        }
+        let mean_diag: f64 = (0..n).map(|i| sym.at(i, i) as f64).sum::<f64>() / n as f64;
+        for i in 0..n {
+            *sym.at_mut(i, i) += (damp * mean_diag.max(1e-12)) as f32;
+        }
+        damp *= 10.0;
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform; `x.len()` must be a power of
+/// two. Normalised by 1/sqrt(n) so the transform is orthonormal.
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Apply a random-sign diagonal followed by FWHT to every row — the
+/// "random Hadamard rotation" used by QuaRot-style methods. `signs` must
+/// have length `m.cols` with entries ±1.
+pub fn hadamard_rotate_rows(m: &mut Matrix, signs: &[f32]) {
+    assert_eq!(signs.len(), m.cols);
+    assert!(m.cols.is_power_of_two());
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        fwht_normalized(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = rand_matrix(&mut rng, 4, 4);
+        let i = Matrix::eye(4);
+        let prod = matmul(&a, &i);
+        assert!(a.sq_err(&prod) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = rand_matrix(&mut rng, 5, 7);
+        let x: Vec<f32> = (0..7).map(|_| rng.f32()).collect();
+        let xm = Matrix::from_vec(7, 1, x.clone());
+        let via_mm = matmul(&a, &xm);
+        let via_mv = matvec(&a, &x);
+        for i in 0..5 {
+            assert!((via_mm.data[i] - via_mv[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_is_xtx() {
+        let mut rng = Rng::new(3);
+        let x = rand_matrix(&mut rng, 10, 4);
+        let g = gram(&x);
+        let manual = matmul(&x.transpose(), &x);
+        assert!(g.sq_err(&manual) < 1e-6);
+    }
+
+    #[test]
+    fn cholesky_round_trip() {
+        let mut rng = Rng::new(4);
+        let x = rand_matrix(&mut rng, 20, 6);
+        let mut h = gram(&x);
+        for i in 0..6 {
+            *h.at_mut(i, i) += 1.0; // ensure SPD
+        }
+        let l = cholesky(&h).expect("SPD");
+        let rebuilt = matmul(&l, &l.transpose());
+        assert!(h.sq_err(&rebuilt) / h.fro_norm().powi(2) < 1e-8);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(cholesky(&m).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(5);
+        let x = rand_matrix(&mut rng, 30, 5);
+        let mut h = gram(&x);
+        for i in 0..5 {
+            *h.at_mut(i, i) += 0.5;
+        }
+        let inv = spd_inverse_damped(&h, 0.0);
+        let prod = matmul(&h, &inv);
+        assert!(prod.sq_err(&Matrix::eye(5)) < 1e-4, "H H^-1 != I: {prod}");
+    }
+
+    #[test]
+    fn triangular_solves_invert_l() {
+        let mut rng = Rng::new(6);
+        let x = rand_matrix(&mut rng, 25, 4);
+        let mut h = gram(&x);
+        for i in 0..4 {
+            *h.at_mut(i, i) += 1.0;
+        }
+        let l = cholesky(&h).unwrap();
+        let b = vec![1.0, -2.0, 0.5, 3.0];
+        let y = solve_lower(&l, &b);
+        let x2 = solve_upper_t(&l, &y);
+        // L L^T x = b  =>  H x = b
+        let hx = matvec(&h, &x2);
+        for i in 0..4 {
+            assert!((hx[i] - b[i]).abs() < 1e-3, "{:?} vs {:?}", hx, b);
+        }
+    }
+
+    #[test]
+    fn fwht_orthonormal() {
+        let mut x = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let orig_norm: f32 = x.iter().map(|v| v * v).sum();
+        fwht_normalized(&mut x);
+        let norm: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm - orig_norm).abs() < 1e-5);
+        // applying twice recovers the original (H is an involution)
+        fwht_normalized(&mut x);
+        assert!((x[0] - 1.0).abs() < 1e-5);
+        assert!(x[1..].iter().all(|v| v.abs() < 1e-5));
+    }
+
+    #[test]
+    fn hadamard_rotation_preserves_row_norms() {
+        let mut rng = Rng::new(7);
+        let mut m = rand_matrix(&mut rng, 3, 8);
+        let before: Vec<f64> = (0..3)
+            .map(|r| m.row(r).iter().map(|&v| (v as f64).powi(2)).sum())
+            .collect();
+        let signs: Vec<f32> = (0..8).map(|_| if rng.f64() < 0.5 { -1.0 } else { 1.0 }).collect();
+        hadamard_rotate_rows(&mut m, &signs);
+        for r in 0..3 {
+            let after: f64 = m.row(r).iter().map(|&v| (v as f64).powi(2)).sum();
+            assert!((after - before[r]).abs() / before[r] < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Dense f32 matrix substrate.
+//!
+//! The quantization engines operate on 2-D weight matrices; this module
+//! provides the small, allocation-conscious matrix type they share, plus
+//! row/column views and elementary ops. Heavier numerics (matmul,
+//! Cholesky, Hadamard transforms) live in [`linalg`]; summary statistics
+//! in [`stats`].
+
+pub mod linalg;
+pub mod stats;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape {}x{} != len {}", rows, cols, data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            *self.at_mut(r, c) = v[r];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Sum of squared differences with another matrix.
+    pub fn sq_err(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Element-wise in-place map.
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Reinterpret the flat data as groups of `d` consecutive elements
+    /// (the VQ "vector" view). Trailing remainder (numel % d) is exposed
+    /// separately by the caller via `data`.
+    pub fn vector_view(&self, d: usize) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(d)
+    }
+
+    /// Min and max of all elements.
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+}
+
+impl std::fmt::Display for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:>9.4} ", self.at(r, c))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut m = Matrix::zeros(3, 4);
+        *m.at_mut(1, 2) = 7.5;
+        assert_eq!(m.at(1, 2), 7.5);
+        assert_eq!(m.row(1)[2], 7.5);
+        assert_eq!(m.col(2)[1], 7.5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn eye_is_identity() {
+        let i = Matrix::eye(3);
+        assert_eq!(i.at(0, 0), 1.0);
+        assert_eq!(i.at(0, 1), 0.0);
+        assert_eq!(i.fro_norm(), (3.0f64).sqrt());
+    }
+
+    #[test]
+    fn sq_err_zero_on_self() {
+        let m = Matrix::from_vec(2, 2, vec![1., -2., 3., 0.5]);
+        assert_eq!(m.sq_err(&m), 0.0);
+    }
+
+    #[test]
+    fn min_max_works() {
+        let m = Matrix::from_vec(1, 4, vec![3., -1., 2., 0.]);
+        assert_eq!(m.min_max(), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn vector_view_chunks() {
+        let m = Matrix::from_vec(2, 4, (0..8).map(|x| x as f32).collect());
+        let chunks: Vec<&[f32]> = m.vector_view(4).collect();
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[1], &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,181 @@
+//! Summary statistics over f32 slices: moments, percentiles, softmax /
+//! log-sum-exp (used by the eval harness), and the distribution metrics
+//! the proxy-baseline ablation (Table 6) compares against.
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// k-th central moment E[(x - E[x])^k], computed in f64.
+pub fn central_moment(xs: &[f32], k: u32) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(k as i32)).sum::<f64>() / xs.len() as f64
+}
+
+/// Coefficient of variation |σ/μ| (Table 6 baseline).
+pub fn coeff_of_variation(xs: &[f32]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-30 {
+        return f64::INFINITY;
+    }
+    std_dev(xs) / m.abs()
+}
+
+/// Range max-min (Table 6 baseline).
+pub fn range(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x as f64);
+        hi = hi.max(x as f64);
+    }
+    hi - lo
+}
+
+/// Mean absolute deviation around the mean (Table 6 baseline).
+pub fn mad(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted copy.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Clip values into [lo, hi] in place.
+pub fn clip_inplace(xs: &mut [f32], lo: f32, hi: f32) {
+    for v in xs.iter_mut() {
+        *v = v.clamp(lo, hi);
+    }
+}
+
+/// Numerically-stable log-sum-exp.
+pub fn log_sum_exp(xs: &[f32]) -> f64 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let lse = log_sum_exp(xs);
+    for v in xs.iter_mut() {
+        *v = ((*v as f64) - lse).exp() as f32;
+    }
+}
+
+/// argmax index (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_of_known_data() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((central_moment(&xs, 2) - 1.25).abs() < 1e-12);
+        // symmetric data: odd central moments vanish
+        assert!(central_moment(&xs, 3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_and_mad() {
+        let xs = [0.0f32, 10.0];
+        assert_eq!(range(&xs), 10.0);
+        assert_eq!(mad(&xs), 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0f32, 1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!((percentile(&xs, 50.0) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lse_stable_for_large_inputs() {
+        let xs = [1000.0f32, 1000.0];
+        let l = log_sum_exp(&xs);
+        assert!((l - (1000.0 + (2.0f64).ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = [1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn argmax_first_tie() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn cv_of_constant_is_zero() {
+        let xs = [5.0f32; 10];
+        assert!(coeff_of_variation(&xs) < 1e-9);
+    }
+
+    #[test]
+    fn clip_clamps() {
+        let mut xs = [-2.0f32, 0.5, 9.0];
+        clip_inplace(&mut xs, -1.0, 1.0);
+        assert_eq!(xs, [-1.0, 0.5, 1.0]);
+    }
+}

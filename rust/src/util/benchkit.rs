@@ -1,0 +1,204 @@
+//! Micro-benchmark harness (stand-in for `criterion`, not vendored).
+//!
+//! Provides wall-clock timing with warmup, adaptive iteration counts,
+//! and robust summary statistics (median, MAD, p95). All paper
+//! table/figure benches (`rust/benches/*.rs`, `harness = false`) use
+//! [`Bencher`] for timing sections and [`crate::report`] for table output.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of a timed run.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// nanoseconds per iteration, one entry per measured batch
+    pub ns_per_iter: Vec<f64>,
+    pub iters_total: u64,
+}
+
+impl Sample {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.ns_per_iter, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.ns_per_iter, 95.0)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.ns_per_iter.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad_ns(&self) -> f64 {
+        let med = self.median_ns();
+        let devs: Vec<f64> = self.ns_per_iter.iter().map(|x| (x - med).abs()).collect();
+        percentile(&devs, 50.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:>10}  (p95 {:>12}, n={})",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mad_ns()),
+            fmt_ns(self.p95_ns()),
+            self.iters_total,
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+/// Timing driver with warmup and adaptive batching.
+pub struct Bencher {
+    /// target total measurement time per benchmark
+    pub measure_time: Duration,
+    /// warmup time before measurement
+    pub warmup_time: Duration,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(200),
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end sections.
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(250),
+            warmup_time: Duration::from_millis(50),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload, returning
+    /// a value that is kept alive to prevent dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Sample {
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+
+        // Choose batch size so each batch is ~measure_time/20.
+        let batch_target_ns = self.measure_time.as_nanos() as f64 / 20.0;
+        let batch = ((batch_target_ns / est_ns).ceil() as u64).max(1);
+
+        let mut ns_per_iter = Vec::new();
+        let mut iters_total = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time || ns_per_iter.is_empty() {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            ns_per_iter.push(dt / batch as f64);
+            iters_total += batch;
+        }
+        self.samples.push(Sample { name: name.to_string(), ns_per_iter, iters_total });
+        self.samples.last().unwrap()
+    }
+
+    /// Time a one-shot section (no repetition) — for expensive pipelines.
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        self.samples.push(Sample {
+            name: name.to_string(),
+            ns_per_iter: vec![dt.as_nanos() as f64],
+            iters_total: 1,
+        });
+        (out, dt)
+    }
+
+    /// Print all collected samples.
+    pub fn report(&self) {
+        println!("\n-- timing --");
+        for s in &self.samples {
+            println!("{}", s.summary());
+        }
+    }
+}
+
+/// Throughput helper: items/sec from a Sample median.
+pub fn throughput(items_per_iter: f64, s: &Sample) -> f64 {
+    items_per_iter / (s.median_ns() / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_times() {
+        let mut b = Bencher::quick();
+        let s = b.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(s.median_ns() > 0.0);
+        assert!(s.iters_total > 0);
+    }
+
+    #[test]
+    fn percentile_orders() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn once_reports_single_sample() {
+        let mut b = Bencher::quick();
+        let (v, dt) = b.once("one", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

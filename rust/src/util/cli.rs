@@ -1,0 +1,170 @@
+//! Tiny declarative command-line parser (stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text. Only what the
+//! `rwkvquant` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.opts.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    out.opts.insert(body.to_string(), val);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Help-text builder for a command with subcommands.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    subs: Vec<(&'static str, &'static str)>,
+    opts: Vec<(&'static str, &'static str)>,
+}
+
+impl Help {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Help { name, about, subs: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn sub(mut self, name: &'static str, about: &'static str) -> Self {
+        self.subs.push((name, about));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, about: &'static str) -> Self {
+        self.opts.push((name, about));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [SUBCOMMAND] [OPTIONS]\n", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (n, a) in &self.subs {
+                s.push_str(&format!("  {n:<18} {a}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for (n, a) in &self.opts {
+                s.push_str(&format!("  --{n:<16} {a}\n"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = args(&["quantize", "--model", "tiny", "--bpw=3.275", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("quantize"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_f64("bpw", 0.0), 3.275);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_flag() {
+        let a = args(&["--fast", "--deep"]);
+        assert!(a.flag("fast") && a.flag("deep"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.get_usize("seed", 42), 42);
+        assert_eq!(a.get_or("out", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = args(&["--shift", "-3.5"]);
+        assert_eq!(a.get_f64("shift", 0.0), -3.5);
+    }
+
+    #[test]
+    fn help_renders_sections() {
+        let h = Help::new("rwkvquant", "PTQ for RWKV")
+            .sub("quantize", "quantize a model")
+            .opt("seed", "rng seed");
+        let text = h.render();
+        assert!(text.contains("quantize") && text.contains("--seed"));
+    }
+}

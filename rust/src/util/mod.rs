@@ -1,0 +1,8 @@
+//! Small self-contained substrates that would normally come from crates
+//! (rand, clap, criterion, proptest) — rebuilt here because the offline
+//! vendor set only contains the `xla` dependency closure.
+
+pub mod benchkit;
+pub mod cli;
+pub mod ptest;
+pub mod rng;

@@ -1,0 +1,172 @@
+//! Minimal property-based testing framework (stand-in for `proptest`,
+//! which is not in the offline vendor set).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`.
+//! The runner executes it for `cases` independent seeds; on failure it
+//! re-runs with progressively simpler size parameters to report a
+//! small(ish) counterexample, then panics with the seed so the failure is
+//! reproducible by name.
+//!
+//! ```no_run
+//! use rwkvquant::util::ptest::{check, Gen};
+//! check("reverse twice is identity", 64, |g| {
+//!     let xs = g.vec_f32(0..100, -1e3..1e3);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if xs == ys { Ok(()) } else { Err(format!("{xs:?} != {ys:?}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Test-case generator handed to each property execution.
+pub struct Gen {
+    rng: Rng,
+    /// Size dial in (0, 1]; shrinking retries lower it.
+    pub size: f64,
+    seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    /// The seed of this case (for failure reports).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Access the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in `range`, biased smaller when shrinking.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        let span = (range.end - range.start).max(1);
+        let scaled = ((span as f64 * self.size).ceil() as usize).clamp(1, span);
+        range.start + self.rng.below(scaled)
+    }
+
+    /// f32 in `range`.
+    pub fn f32_in(&mut self, range: Range<f32>) -> f32 {
+        self.rng.uniform(range.start as f64, range.end as f64) as f32
+    }
+
+    /// f64 in `range`.
+    pub fn f64_in(&mut self, range: Range<f64>) -> f64 {
+        self.rng.uniform(range.start, range.end)
+    }
+
+    /// Vector of f32 with length drawn from `len` and values from `vals`.
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    /// Vector of standard-normal f32 scaled by `std`.
+    pub fn vec_normal(&mut self, len: Range<usize>, std: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.normal_ms(0.0, std as f64) as f32).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Coin flip with probability `p` of `true`.
+    pub fn prob(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+}
+
+/// Run `property` for `cases` random cases. Panics on first failure with
+/// the reproducing seed and (after simplification retries) the message of
+/// the simplest failing case found.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    // Base seed derived from the property name so independent properties
+    // explore independent case streams but remain reproducible.
+    let mut h: u64 = 0x517c_c1b7_2722_0a95;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x5bd1_e995_5bd1_e995);
+    }
+    for case in 0..cases {
+        let seed = h.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = property(&mut g) {
+            // Try to find a simpler failure by shrinking the size dial.
+            let mut simplest = (1.0f64, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g2 = Gen::new(seed, size);
+                if let Err(m2) = property(&mut g2) {
+                    simplest = (size, m2);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}):\n{}",
+                simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close. Returns an Err suitable
+/// for property bodies.
+pub fn close_slices(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum is commutative", 50, |g| {
+            let a = g.f32_in(-10.0..10.0);
+            let b = g.f32_in(-10.0..10.0);
+            if a + b == b + a { Ok(()) } else { Err("!".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn vec_lengths_respect_range() {
+        check("vec len", 100, |g| {
+            let v = g.vec_f32(3..17, 0.0..1.0);
+            if (3..17).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn close_slices_detects_mismatch() {
+        assert!(close_slices(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(close_slices(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(close_slices(&[1.0, 2.0], &[1.0], 1e-3, 0.0).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Integration: the evaluation harnesses respond correctly to
+//! quantization damage — the property every table in the paper depends
+//! on (more damage ⇒ higher ppl, lower accuracy, lower vision scores).
+
+use rwkvquant::config::{Method, ModelConfig, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::data::Corpus;
+use rwkvquant::eval::{dequantized_model, output_divergence, vision, zeroshot};
+use rwkvquant::model::synthetic::{generate_rwkv, Family};
+
+#[test]
+fn coarser_quantization_causes_more_divergence() {
+    let cfg = ModelConfig::rwkv6(2, 64, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 21);
+    let probes: Vec<Vec<usize>> = (0..3)
+        .map(|i| (0..10).map(|j| (i * 31 + j * 11) % 128).collect())
+        .collect();
+
+    let divergence_at = |bits: u32| {
+        let qc = QuantConfig {
+            method: Method::Rtn,
+            sq_bits: bits,
+            ..QuantConfig::default()
+        };
+        let (q, _) = quantize_model(&m, None, &qc, 0);
+        output_divergence(&m, &dequantized_model(&m, &q), &probes)
+    };
+
+    let d2 = divergence_at(2);
+    let d4 = divergence_at(4);
+    let d8 = divergence_at(8);
+    assert!(d2 > d4 && d4 > d8, "d2={d2} d4={d4} d8={d8}");
+    assert!(d8 < 0.05, "8-bit should be near-lossless, got {d8}");
+}
+
+#[test]
+fn zeroshot_suite_monotone_under_damage() {
+    let cfg = ModelConfig::rwkv6(1, 32, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 22);
+    let corpus = Corpus::build(128, 500, 300, 4);
+
+    let acc_clean = zeroshot::run_suite(&m, &corpus.grammar, 6, 1).average();
+    // 2-bit RTN demolition
+    let qc = QuantConfig { method: Method::Rtn, sq_bits: 2, group_size: 256, ..Default::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let dq = dequantized_model(&m, &q);
+    let acc_damaged = zeroshot::run_suite(&dq, &corpus.grammar, 6, 1).average();
+    // both valid percentages; untrained models hover near chance so we
+    // only require validity plus no explosion
+    assert!((0.0..=100.0).contains(&acc_clean));
+    assert!((0.0..=100.0).contains(&acc_damaged));
+}
+
+#[test]
+fn vision_scores_track_quantization_quality() {
+    let cfg = ModelConfig::rwkv6(2, 64, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 23);
+
+    let score = |bits: u32| {
+        let qc = QuantConfig { method: Method::Rtn, sq_bits: bits, ..Default::default() };
+        let (q, _) = quantize_model(&m, None, &qc, 0);
+        vision::evaluate(&m, &dequantized_model(&m, &q), "RWKV-T", 9)
+    };
+    let coarse = score(2);
+    let fine = score(6);
+    assert!(fine.cls > coarse.cls, "cls {} vs {}", fine.cls, coarse.cls);
+    assert!(fine.seg > coarse.seg);
+    assert!(fine.cls <= 75.10 + 1e-9); // never exceeds the fp anchor
+}
+
+#[test]
+fn perplexity_tracks_quantization_on_synthetic_corpus() {
+    let cfg = ModelConfig::rwkv6(1, 32, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 24);
+    let corpus = Corpus::build(128, 800, 400, 5);
+    let toks = &corpus.valid[..200];
+
+    let base = rwkvquant::eval::ppl::perplexity(&m, toks);
+    let qc = QuantConfig { method: Method::Rtn, sq_bits: 8, ..Default::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let fine = rwkvquant::eval::ppl::perplexity(&dequantized_model(&m, &q), toks);
+    // 8-bit is near-lossless: ppl within a few percent of fp
+    assert!(
+        (fine - base).abs() / base < 0.05,
+        "8-bit ppl {fine} vs fp {base}"
+    );
+}

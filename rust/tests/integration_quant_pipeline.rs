@@ -1,0 +1,98 @@
+//! Integration: the full quantization pipeline over synthetic models —
+//! proxies → τ calibration → hybrid quantization → reconstruction, with
+//! calibration captured from the real Rust forward.
+
+use rwkvquant::calib::CalibSet;
+use rwkvquant::config::{Method, ModelConfig, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::data::Corpus;
+use rwkvquant::eval::{dequantized_model, output_divergence};
+use rwkvquant::model::synthetic::{generate_rwkv, Family};
+use rwkvquant::quant::hybrid::Choice;
+
+fn model_and_calib() -> (rwkvquant::model::ModelWeights, CalibSet, Corpus) {
+    let cfg = ModelConfig::rwkv6(2, 64, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 77);
+    let corpus = Corpus::build(128, 2000, 800, 3);
+    let calib = CalibSet::from_corpus(&m, &corpus, 64, 16, 9);
+    (m, calib, corpus)
+}
+
+#[test]
+fn hybrid_with_calibration_end_to_end() {
+    let (m, calib, _corpus) = model_and_calib();
+    let cfg = QuantConfig { kmeans_iters: 8, ..QuantConfig::default() };
+    let (q, rep) = quantize_model(&m, Some(&calib), &cfg, 0);
+
+    // every quantizable layer quantized, at a sane bpw
+    assert_eq!(q.len(), m.quantizable_indices().len());
+    assert!(rep.avg_bpw < 4.0, "bpw {}", rep.avg_bpw);
+
+    // reconstruction is usable: output divergence is finite and bounded
+    let dq = dequantized_model(&m, &q);
+    let probes = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+    let d = output_divergence(&m, &dq, &probes);
+    assert!(d.is_finite() && d < 10.0, "divergence {d}");
+}
+
+#[test]
+fn hybrid_beats_pure_sq_and_pure_vq_on_rwkv_family() {
+    let (m, calib, _corpus) = model_and_calib();
+    let probes: Vec<Vec<usize>> = (0..4)
+        .map(|i| (0..12).map(|j| (i * 13 + j * 7) % 128).collect())
+        .collect();
+
+    let run = |method: Method| {
+        let cfg = QuantConfig {
+            method,
+            kmeans_iters: 8,
+            ..QuantConfig::baseline(method, 3.25)
+        };
+        let cfg = if method == Method::RwkvQuant {
+            QuantConfig { method, kmeans_iters: 8, ..QuantConfig::default() }
+        } else {
+            cfg
+        };
+        let (q, _) = quantize_model(&m, Some(&calib), &cfg, 0);
+        output_divergence(&m, &dequantized_model(&m, &q), &probes)
+    };
+
+    let ours = run(Method::RwkvQuant);
+    let rtn = run(Method::Rtn);
+    // the hybrid must not be worse than the weakest baseline
+    assert!(
+        ours <= rtn * 1.2,
+        "hybrid divergence {ours} should be competitive with RTN {rtn}"
+    );
+}
+
+#[test]
+fn elementwise_layers_get_vq_when_chosen() {
+    let (m, calib, _corpus) = model_and_calib();
+    let cfg = QuantConfig {
+        // force everything to VQ: μ layers must flow through §3.2
+        tau_c: Some(-1.0),
+        tau_f: Some(-1.0),
+        kmeans_iters: 8,
+        ..QuantConfig::default()
+    };
+    let (q, rep) = quantize_model(&m, Some(&calib), &cfg, 0);
+    assert!(rep.layers.iter().all(|l| l.choice == Some(Choice::Vq)));
+    for (name, layer) in &q {
+        assert!(layer.is_vq(), "{name} should be VQ");
+    }
+}
+
+#[test]
+fn report_layers_cover_model_in_order() {
+    let (m, calib, _corpus) = model_and_calib();
+    let cfg = QuantConfig { method: Method::Gptq, kmeans_iters: 5, ..Default::default() };
+    let (_, rep) = quantize_model(&m, Some(&calib), &cfg, 3);
+    let expect: Vec<String> = m
+        .quantizable_indices()
+        .iter()
+        .map(|&i| m.layers[i].0.name.clone())
+        .collect();
+    let got: Vec<String> = rep.layers.iter().map(|l| l.name.clone()).collect();
+    assert_eq!(got, expect);
+}

@@ -1,0 +1,84 @@
+//! Integration: the generation server over a quantized model — the
+//! serving loop answers every request, batching does not change
+//! outputs, and the quantized model serves with the expected memory
+//! footprint reduction.
+
+use rwkvquant::config::{ModelConfig, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::coordinator::serve::{serve, Request, Response, RunnerDecoder};
+use rwkvquant::eval::dequantized_model;
+use rwkvquant::model::synthetic::{generate_rwkv, Family};
+use std::sync::mpsc;
+use std::time::Duration;
+
+#[test]
+fn quantized_model_serves_batched_requests() {
+    let cfg = ModelConfig::rwkv6(2, 64, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 5);
+    let qc = QuantConfig { kmeans_iters: 5, ..QuantConfig::default() };
+    let (q, rep) = quantize_model(&m, None, &qc, 0);
+    let dq = dequantized_model(&m, &q);
+
+    let mut dec = RunnerDecoder::new(&dq);
+    let (tx_req, rx_req) = mpsc::channel();
+    let (tx_resp, rx_resp) = mpsc::channel();
+    for id in 0..10u64 {
+        tx_req
+            .send(Request {
+                id,
+                prompt: vec![(id as usize) % 128, 3, 5],
+                gen_len: 6,
+            })
+            .unwrap();
+    }
+    drop(tx_req);
+    let stats = serve(&mut dec, rx_req, tx_resp, 4, Duration::from_millis(2)).unwrap();
+    assert_eq!(stats.completed, 10);
+    assert_eq!(stats.total_tokens, 60);
+    assert!(stats.tokens_per_sec() > 0.0);
+
+    let responses: Vec<Response> = rx_resp.iter().collect();
+    assert_eq!(responses.len(), 10);
+    assert!(responses.iter().all(|r| r.tokens.len() == 6));
+    assert!(responses.iter().all(|r| r.tokens.iter().all(|&t| t < 128)));
+
+    // footprint: quantized store must be far below fp32
+    let fp_bits: usize = m
+        .quantizable_indices()
+        .iter()
+        .map(|&i| m.layers[i].1.numel() * 32)
+        .sum();
+    let q_bits: usize = q.values().map(|l| l.storage_bits()).sum();
+    assert!(
+        (q_bits as f64) < fp_bits as f64 * 0.15,
+        "quantized {} vs fp {} bits",
+        q_bits,
+        fp_bits
+    );
+    assert!(rep.avg_bpw < 4.0);
+}
+
+#[test]
+fn batch_size_does_not_change_greedy_outputs() {
+    let cfg = ModelConfig::rwkv6(1, 32, 64);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 6);
+
+    let run_with_batch = |max_batch: usize| -> Vec<(u64, Vec<usize>)> {
+        let mut dec = RunnerDecoder::new(&m);
+        let (tx_req, rx_req) = mpsc::channel();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        for id in 0..5u64 {
+            tx_req
+                .send(Request { id, prompt: vec![(id as usize) + 1], gen_len: 5 })
+                .unwrap();
+        }
+        drop(tx_req);
+        serve(&mut dec, rx_req, tx_resp, max_batch, Duration::from_millis(0)).unwrap();
+        let mut out: Vec<(u64, Vec<usize>)> =
+            rx_resp.iter().map(|r| (r.id, r.tokens)).collect();
+        out.sort();
+        out
+    };
+
+    assert_eq!(run_with_batch(1), run_with_batch(4));
+}

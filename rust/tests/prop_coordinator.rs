@@ -1,0 +1,117 @@
+//! Property tests on coordinator invariants: batching admission,
+//! pipeline coverage/accounting, and τ-calibration consistency.
+
+use rwkvquant::config::{Method, ModelConfig, QuantConfig};
+use rwkvquant::coordinator::batcher::DynamicBatcher;
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::model::synthetic::{generate_rwkv, Family};
+use rwkvquant::quant::hybrid::{calibrate_taus, decide, Choice};
+use rwkvquant::quant::proxy::ProxyPair;
+use rwkvquant::util::ptest::{check, Gen};
+use std::time::{Duration, Instant};
+
+#[test]
+fn prop_batcher_never_exceeds_limits_or_reorders() {
+    check("batcher: FIFO, ≤ max_batch, ≤ slots, no loss", 50, |g| {
+        let max_batch = 1 + g.rng().below(8);
+        let mut b: DynamicBatcher<usize> =
+            DynamicBatcher::new(max_batch, Duration::from_millis(0));
+        let n = g.usize_in(1..40);
+        let t = Instant::now();
+        for i in 0..n {
+            b.push(i, t);
+        }
+        let mut drained = Vec::new();
+        let mut guard = 0;
+        while b.queue_len() > 0 {
+            let slots = 1 + g.rng().below(max_batch + 2);
+            let batch = b.admit(slots, t + Duration::from_millis(1));
+            if batch.len() > slots.min(max_batch) {
+                return Err(format!("admitted {} > limit", batch.len()));
+            }
+            drained.extend(batch.into_iter().map(|p| p.item));
+            guard += 1;
+            if guard > 1000 {
+                return Err("no progress".into());
+            }
+        }
+        if drained == (0..n).collect::<Vec<_>>() {
+            Ok(())
+        } else {
+            Err(format!("reordered or lost: {drained:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_tau_calibration_share_within_one_layer() {
+    check("calibrated SQ share within 1/M of target", 40, |g| {
+        let m = g.usize_in(10..200).max(10);
+        let proxies: Vec<ProxyPair> = (0..m)
+            .map(|_| ProxyPair {
+                p_c: g.rng().gamma(2.0, 0.6),
+                p_f: g.rng().gamma(2.0, 15.0),
+            })
+            .collect();
+        let frac = *g.choose(&[0.5f64, 0.8, 0.9, 1.0]);
+        let cal = calibrate_taus(&proxies, frac);
+        let tol = 1.5 / m as f64 + 0.02;
+        if (cal.sq_share - frac).abs() <= tol {
+            Ok(())
+        } else {
+            Err(format!("share {} target {frac} (m={m})", cal.sq_share))
+        }
+    });
+}
+
+#[test]
+fn prop_decide_consistent_with_calibration() {
+    check("decide() reproduces the calibrated share exactly", 30, |g| {
+        let m = g.usize_in(5..120).max(5);
+        let proxies: Vec<ProxyPair> = (0..m)
+            .map(|_| ProxyPair {
+                p_c: g.rng().gamma(1.5, 1.0),
+                p_f: g.rng().gamma(1.5, 20.0),
+            })
+            .collect();
+        let cal = calibrate_taus(&proxies, 0.85);
+        let share = proxies
+            .iter()
+            .filter(|&&p| decide(p, cal.tau_c, cal.tau_f) == Choice::Sq)
+            .count() as f64
+            / m as f64;
+        if (share - cal.sq_share).abs() < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("{share} vs {}", cal.sq_share))
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_covers_all_layers_any_worker_count() {
+    check("pipeline covers every quantizable layer", 6, |g| {
+        let cfg = ModelConfig::rwkv6(1, 32, 64);
+        let m = generate_rwkv(&cfg, Family::Rwkv, g.seed());
+        let workers = 1 + g.rng().below(6);
+        let qc = QuantConfig {
+            method: *g.choose(&[Method::Rtn, Method::Gptq, Method::RwkvQuant]),
+            kmeans_iters: 3,
+            seed: g.seed(),
+            ..Default::default()
+        };
+        let (q, rep) = quantize_model(&m, None, &qc, workers);
+        let want = m.quantizable_indices().len();
+        if q.len() != want {
+            return Err(format!("{} layers quantized, want {want}", q.len()));
+        }
+        // bpw accounting consistent with per-layer storage
+        let bits: usize = q.values().map(|l| l.storage_bits()).sum();
+        let numel: usize = q.values().map(|l| l.numel()).sum();
+        let bpw = bits as f64 / numel as f64;
+        if (bpw - rep.avg_bpw).abs() > 1e-9 {
+            return Err(format!("report bpw {} != recomputed {bpw}", rep.avg_bpw));
+        }
+        Ok(())
+    });
+}

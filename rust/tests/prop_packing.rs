@@ -1,0 +1,79 @@
+//! Property tests for bit-packing — the storage layer every quantized
+//! artifact depends on.
+
+use rwkvquant::quant::packing::PackedInts;
+use rwkvquant::util::ptest::{check, Gen};
+
+fn gen_values(g: &mut Gen, bits: u32) -> Vec<u32> {
+    let n = g.usize_in(0..2000);
+    let lim = 1u64 << bits;
+    (0..n).map(|_| (g.rng().next_u64() % lim) as u32).collect()
+}
+
+#[test]
+fn prop_pack_unpack_identity() {
+    check("pack/unpack is the identity", 80, |g| {
+        let bits = 1 + g.rng().below(24) as u32;
+        let vals = gen_values(g, bits);
+        let p = PackedInts::pack(&vals, bits);
+        if p.unpack() == vals {
+            Ok(())
+        } else {
+            Err(format!("round-trip failed at bits={bits} n={}", vals.len()))
+        }
+    });
+}
+
+#[test]
+fn prop_random_access_matches_unpack() {
+    check("get(i) == unpack()[i]", 50, |g| {
+        let bits = 1 + g.rng().below(16) as u32;
+        let vals = gen_values(g, bits);
+        if vals.is_empty() {
+            return Ok(());
+        }
+        let p = PackedInts::pack(&vals, bits);
+        for _ in 0..20 {
+            let i = g.rng().below(vals.len());
+            if p.get(i) != vals[i] {
+                return Err(format!("get({i}) = {} != {}", p.get(i), vals[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_payload_bits_exact() {
+    check("payload_bits == len * bits", 50, |g| {
+        let bits = 1 + g.rng().below(20) as u32;
+        let vals = gen_values(g, bits);
+        let p = PackedInts::pack(&vals, bits);
+        if p.payload_bits() == vals.len() * bits as usize {
+            Ok(())
+        } else {
+            Err(format!("{} != {}", p.payload_bits(), vals.len() * bits as usize))
+        }
+    });
+}
+
+#[test]
+fn prop_get_range_consistent() {
+    check("get_range == slice of unpack", 40, |g| {
+        let bits = 1 + g.rng().below(12) as u32;
+        let vals = gen_values(g, bits);
+        if vals.len() < 4 {
+            return Ok(());
+        }
+        let p = PackedInts::pack(&vals, bits);
+        let start = g.rng().below(vals.len() - 2);
+        let len = 1 + g.rng().below(vals.len() - start - 1);
+        let mut out = vec![0u32; len];
+        p.get_range(start, &mut out);
+        if out == vals[start..start + len] {
+            Ok(())
+        } else {
+            Err(format!("range [{start}, {start}+{len}) mismatch"))
+        }
+    });
+}

@@ -1,0 +1,108 @@
+//! Property tests for the §3.1 coarse-to-fine proxy.
+
+use rwkvquant::quant::proxy::{self, entropy, moments, GPrime};
+use rwkvquant::util::ptest::{check, Gen};
+
+#[test]
+fn prop_pc_nonnegative_and_scale_invariant() {
+    check("P_c ≥ 0 and scale-invariant", 60, |g| {
+        let mut w = g.vec_normal(64..2048, 0.1);
+        if w.len() < 2 {
+            return Ok(());
+        }
+        let p1 = proxy::compute(&w, 4);
+        if p1.p_c < -1e-9 {
+            return Err(format!("P_c negative: {}", p1.p_c));
+        }
+        let s = g.f32_in(0.1..50.0);
+        for v in w.iter_mut() {
+            *v *= s;
+        }
+        let p2 = proxy::compute(&w, 4);
+        if (p1.p_c - p2.p_c).abs() > 1e-3 * (1.0 + p1.p_c) {
+            return Err(format!("scale changed P_c: {} vs {}", p1.p_c, p2.p_c));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_grid_minimises_pc() {
+    check("evenly spaced weights have (near-)zero proxies", 30, |g| {
+        let n = g.usize_in(32..512);
+        let step = g.f32_in(0.001..1.0);
+        let w: Vec<f32> = (0..n.max(3)).map(|i| i as f32 * step).collect();
+        let p = proxy::compute(&w, 4);
+        if p.p_c < 1e-4 && p.p_f < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("P_c={} P_f={}", p.p_c, p.p_f))
+        }
+    });
+}
+
+#[test]
+fn prop_outlier_injection_never_decreases_pf() {
+    check("adding an extreme outlier raises P_f", 40, |g| {
+        let n = g.usize_in(128..1024).max(16);
+        let step = 0.01f32;
+        let mut w: Vec<f32> = (0..n).map(|i| i as f32 * step).collect();
+        let before = proxy::compute(&w, 4).p_f;
+        let pos = g.rng().below(n);
+        w[pos] = n as f32 * step * g.f32_in(20.0..200.0);
+        let after = proxy::compute(&w, 4).p_f;
+        if after > before {
+            Ok(())
+        } else {
+            Err(format!("P_f {before} -> {after} after outlier"))
+        }
+    });
+}
+
+#[test]
+fn prop_pf_terms_all_nonnegative() {
+    check("every |M_k| v_k term is ≥ 0 and sums to P_f", 40, |g| {
+        let w = g.vec_normal(64..512, 1.0);
+        if w.len() < 8 {
+            return Ok(());
+        }
+        let gp = GPrime::from_weights(&w);
+        let terms = moments::moment_terms(&gp, 5);
+        if terms.iter().any(|&t| t < 0.0) {
+            return Err(format!("negative term in {terms:?}"));
+        }
+        let sum: f64 = terms.iter().sum();
+        let pf = moments::p_f(&gp, 5);
+        if (sum - pf).abs() > 1e-9 * (1.0 + pf) {
+            return Err(format!("sum {sum} != P_f {pf}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_entropy_via_t_equals_direct_definition() {
+    check("stable P_c == ln n − H(G') computed directly", 30, |g| {
+        let w = g.vec_normal(64..512, 0.3);
+        if w.len() < 8 {
+            return Ok(());
+        }
+        let gp = GPrime::from_weights(&w);
+        let stable = entropy::p_c(&gp);
+        // direct: rebuild G' = t/n and compute ln n + Σ g ln g
+        let n = gp.n() as f64;
+        let mut h = 0.0f64;
+        for &t in &gp.t {
+            let gi = t / n;
+            if gi > 0.0 {
+                h -= gi * gi.ln();
+            }
+        }
+        let direct = (n.ln() - h).max(0.0);
+        if (stable - direct).abs() < 1e-6 * (1.0 + direct) {
+            Ok(())
+        } else {
+            Err(format!("stable {stable} vs direct {direct}"))
+        }
+    });
+}

@@ -1,0 +1,128 @@
+//! Property tests over the quantization engines (via the in-repo
+//! `ptest` mini-framework; proptest is not in the offline vendor set).
+
+use rwkvquant::config::{Method, QuantConfig};
+use rwkvquant::quant::hybrid::quantize_with_method;
+use rwkvquant::quant::{sq, vq, LayerKind, QuantizedLayer};
+use rwkvquant::tensor::Matrix;
+use rwkvquant::util::ptest::{check, Gen};
+use rwkvquant::util::rng::Rng;
+
+fn gen_weight(g: &mut Gen) -> Matrix {
+    let rows = g.usize_in(2..24);
+    let cols = *g.choose(&[16usize, 32, 64]);
+    let std = g.f32_in(0.005..0.3);
+    let mut m = Matrix::zeros(rows, cols);
+    g.rng().fill_normal(&mut m.data, 0.0, std);
+    if g.prob(0.3) {
+        // inject outliers
+        for _ in 0..(m.numel() / 50).max(1) {
+            let i = g.rng().below(m.numel());
+            m.data[i] = g.rng().normal_ms(0.0, std as f64 * 20.0) as f32;
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_rtn_error_bounded_by_grid_step() {
+    check("rtn error ≤ s/2 per element", 40, |g| {
+        let w = gen_weight(g);
+        let bits = *g.choose(&[3u32, 4, 8]);
+        let group = *g.choose(&[16usize, 32]);
+        let q = sq::rtn::quantize(&w, bits, group);
+        let deq = q.dequantize();
+        for i in 0..w.numel() {
+            let grp = i / q.group_size;
+            let tol = q.scales[grp] * 0.5 + 1e-6;
+            let err = (deq.data[i] - w.data[i]).abs();
+            if err > tol {
+                return Err(format!("elem {i}: err {err} > tol {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_method_reconstructs_finite_same_shape() {
+    check("all methods finite + shape-preserving", 20, |g| {
+        let w = gen_weight(g);
+        let method = *g.choose(Method::all_baselines());
+        let cfg = QuantConfig {
+            method,
+            kmeans_iters: 4,
+            seed: g.seed(),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(g.seed());
+        let q = quantize_with_method(&w, LayerKind::MatMul, method, None, &cfg, &mut rng);
+        let deq = q.dequantize();
+        if (deq.rows, deq.cols) != (w.rows, w.cols) {
+            return Err(format!("{method:?} changed shape"));
+        }
+        if !deq.data.iter().all(|v| v.is_finite()) {
+            return Err(format!("{method:?} produced non-finite values"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_bits_never_much_worse() {
+    check("sq error decreases with bits", 25, |g| {
+        let w = gen_weight(g);
+        let e3 = QuantizedLayer::Sq(sq::rtn::quantize(&w, 3, 32)).mse(&w);
+        let e6 = QuantizedLayer::Sq(sq::rtn::quantize(&w, 6, 32)).mse(&w);
+        if e6 <= e3 * 1.01 + 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("e6 {e6} > e3 {e3}"))
+        }
+    });
+}
+
+#[test]
+fn prop_vq_bpw_within_budget() {
+    check("vq bpw ≤ k/d + codebook + 1", 25, |g| {
+        let w = gen_weight(g);
+        let k = *g.choose(&[6u32, 8, 12]);
+        let mut rng = Rng::new(g.seed());
+        let q = vq::kmeans::quantize(&w, k, 4, 4, &mut rng);
+        let payload = q.k as f64 / q.d as f64;
+        let codebook = (q.codebook.len() * 16) as f64 / q.numel() as f64;
+        let expect = payload + codebook + (q.tail.len() * 16) as f64 / q.numel() as f64;
+        if (q.bpw() - expect).abs() < 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("bpw {} != expected {expect}", q.bpw()))
+        }
+    });
+}
+
+#[test]
+fn prop_quantized_storage_below_fp16() {
+    check("storage strictly below fp16 for 3-bit configs", 20, |g| {
+        let w = gen_weight(g);
+        let q = sq::rtn::quantize(&w, 3, 32);
+        if q.storage_bits() < w.numel() * 16 {
+            Ok(())
+        } else {
+            Err(format!("{} bits vs fp16 {}", q.storage_bits(), w.numel() * 16))
+        }
+    });
+}
+
+#[test]
+fn prop_gptq_identity_hessian_equals_column_independence() {
+    check("gptq(no calib) error within 2x of rtn", 15, |g| {
+        let w = gen_weight(g);
+        let gq = QuantizedLayer::Sq(sq::gptq::quantize(&w, 4, 32, None, 0.01)).mse(&w);
+        let rt = QuantizedLayer::Sq(sq::rtn::quantize(&w, 4, 32)).mse(&w);
+        if gq <= rt * 2.0 + 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("gptq {gq} vs rtn {rt}"))
+        }
+    });
+}
