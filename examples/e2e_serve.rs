@@ -5,10 +5,15 @@
 //!   2. quantizes it with the full RWKVQuant pipeline (proxy-guided
 //!      hybrid + §3.2 ew-mult codebooks, calibrated on captured
 //!      activations),
-//!   3. re-evaluates the quantized model,
-//!   4. verifies the AOT PJRT decode graph agrees with the Rust forward,
-//!   5. serves batched generation requests through the continuous
-//!      batcher and reports tokens/s + latency percentiles,
+//!   3. re-evaluates the quantized model **on the packed path** — the
+//!      eval harness consumes the `QuantizedModel` weight provider, so
+//!      no dense fp32 matrix is materialised for quantized matmuls,
+//!   4. verifies the AOT PJRT decode graph agrees with the Rust forward
+//!      (requires the `pjrt` cargo feature),
+//!   5. serves the same batched request set twice through the
+//!      continuous batcher — dense fp32 vs packed quantized — checks the
+//!      greedy outputs against the dequantized reference and reports the
+//!      decode tokens/sec speedup,
 //!   6. reports the fp→quant memory saving.
 //!
 //! ```sh
@@ -18,15 +23,31 @@
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::QuantConfig;
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve, Request, RunnerDecoder};
+use rwkvquant::coordinator::serve::{
+    serve_collect, Decoder, Request, Response, RunnerDecoder, ServeStats,
+};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
-use rwkvquant::model::ModelWeights;
+use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::runtime::artifacts_dir;
-use rwkvquant::runtime::rwkv_graph::RwkvSession;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+use std::time::Instant;
+
+/// Serve a fixed request set drawn from the corpus through `decoder`.
+fn serve_requests<D: Decoder>(
+    decoder: &mut D,
+    corpus: &BinCorpus,
+    n_req: u64,
+) -> rwkvquant::Result<(ServeStats, Vec<Response>)> {
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let start = (id as usize * 37) % (corpus.valid.len() - 20);
+            Request { id, prompt: corpus.valid[start..start + 8].to_vec(), gen_len: 16 }
+        })
+        .collect();
+    serve_collect(decoder, requests, 8, Duration::from_millis(2))
+}
 
 fn main() -> rwkvquant::Result<()> {
     let dir = artifacts_dir();
@@ -67,10 +88,16 @@ fn main() -> rwkvquant::Result<()> {
         rep.taus.map(|t| t.tau_f).unwrap_or(f64::NAN),
     );
 
-    // ---- 3. quantized eval ----
-    let dq = dequantized_model(&model, &quant);
-    let q_ppl = ppl::perplexity(&dq, toks);
-    let q_acc = zeroshot::accuracy(&dq, &tasks);
+    // ---- 3. quantized eval on the packed path ----
+    let qm = QuantizedModel::from_parts(&model, &quant);
+    println!(
+        "assembled QuantizedModel: {} packed matmul layers at {:.3} bpw, {:.2} MB served",
+        qm.n_packed(),
+        qm.packed_bpw(),
+        qm.served_storage_bits() as f64 / 8e6
+    );
+    let q_ppl = ppl::perplexity(&qm, toks);
+    let q_acc = zeroshot::accuracy(&qm, &tasks);
 
     let mut t = Table::new(
         "e2e — trained tiny RWKV, fp vs RWKVQuant 3.275-bpw",
@@ -87,8 +114,10 @@ fn main() -> rwkvquant::Result<()> {
     t.print();
     println!("memory saving (quantizable weights): {:.2}x", fp_bits as f64 / q_bits as f64);
 
-    // ---- 4. PJRT graph agreement ----
+    // ---- 4. PJRT graph agreement (needs the `pjrt` feature) ----
+    #[cfg(feature = "pjrt")]
     if dir.join("rwkv_step.hlo.txt").exists() {
+        use rwkvquant::runtime::rwkv_graph::RwkvSession;
         let mut session = RwkvSession::load(&dir, &model)?;
         let mut reference = rwkvquant::model::rwkv::RwkvRunner::new(&model);
         let mut worst = 0.0f32;
@@ -101,34 +130,49 @@ fn main() -> rwkvquant::Result<()> {
         }
         println!("PJRT decode graph vs Rust reference: max |Δlogit| = {worst:.5} over 16 steps ✓");
     }
-
-    // ---- 5. batched serving (quantized weights) ----
-    let mut dec = RunnerDecoder::new(&dq);
-    let (tx_req, rx_req) = mpsc::channel();
-    let (tx_resp, rx_resp) = mpsc::channel();
-    let n_req = 24u64;
-    for id in 0..n_req {
-        let start = (id as usize * 37) % (corpus.valid.len() - 20);
-        tx_req.send(Request {
-            id,
-            prompt: corpus.valid[start..start + 8].to_vec(),
-            gen_len: 16,
-        })?;
-    }
-    drop(tx_req);
-    let stats = serve(&mut dec, rx_req, tx_resp, 8, Duration::from_millis(2))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let responses: Vec<_> = rx_resp.iter().collect();
+    #[cfg(not(feature = "pjrt"))]
     println!(
-        "served {} requests / {} generated tokens in {:.2}s — {:.1} tok/s, p50 {:?}, p95 {:?}",
-        stats.completed,
-        stats.total_tokens,
-        stats.wall.as_secs_f64(),
-        stats.tokens_per_sec(),
-        stats.p50_latency,
-        stats.p95_latency
+        "(PJRT graph check skipped — needs the `pjrt` feature plus the `xla` \
+         crate from the full offline vendor set; see Cargo.toml)"
     );
-    assert_eq!(responses.len() as u64, n_req);
+
+    // ---- 5. batched serving: dense fp32 vs packed quantized ----
+    let n_req = 24u64;
+    let mut fp_dec = RunnerDecoder::new(&model);
+    let (fp_stats, _fp_resp) = serve_requests(&mut fp_dec, &corpus, n_req)?;
+    let mut q_dec = RunnerDecoder::new(&qm);
+    let (q_stats, q_resp) = serve_requests(&mut q_dec, &corpus, n_req)?;
+    // greedy outputs from the packed path must match the dequantized twin
+    let dq = dequantized_model(&model, &quant);
+    let mut dq_dec = RunnerDecoder::new(&dq);
+    let (_, dq_resp) = serve_requests(&mut dq_dec, &corpus, n_req)?;
+    let mismatches = q_resp
+        .iter()
+        .zip(&dq_resp)
+        .filter(|(a, b)| a.tokens != b.tokens)
+        .count();
+    assert_eq!(
+        mismatches, 0,
+        "packed serving diverged from the dequantized reference on {mismatches}/{n_req} requests"
+    );
+    println!("packed greedy outputs match the dequantized reference on all {n_req} requests ✓");
+    for (label, stats) in [("fp32 dense", &fp_stats), ("packed quant", &q_stats)] {
+        println!(
+            "  {label:<12} {} req / {} tok in {:.2}s — {:.1} tok/s, p50 {:?} p95 {:?} p99 {:?}",
+            stats.completed,
+            stats.total_tokens,
+            stats.wall.as_secs_f64(),
+            stats.tokens_per_sec(),
+            stats.p50_latency,
+            stats.p95_latency,
+            stats.p99_latency
+        );
+    }
+    let speedup = q_stats.tokens_per_sec() / fp_stats.tokens_per_sec().max(1e-9);
+    println!(
+        "decode speedup (packed vs fp32): {speedup:.2}x at {:.3} vs 32 bits/weight",
+        qm.packed_bpw()
+    );
     println!("e2e OK");
     Ok(())
 }

@@ -6,9 +6,7 @@ use rwkvquant::config::{Method, ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::model::rwkv::{init_params, RwkvRunner};
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
-use rwkvquant::model::ModelWeights;
 use rwkvquant::quant::{exec, proxy, sq};
-use rwkvquant::runtime::artifacts_dir;
 use rwkvquant::tensor::{linalg, Matrix};
 use rwkvquant::util::benchkit::{throughput, Bencher};
 use rwkvquant::util::rng::Rng;
@@ -55,18 +53,23 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
     );
 
-    // PJRT decode step (if artifacts present)
-    let dir = artifacts_dir();
-    if dir.join("rwkv_step.hlo.txt").exists() && dir.join("tiny_rwkv.bin").exists() {
-        let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
-        let mut session =
-            rwkvquant::runtime::rwkv_graph::RwkvSession::load(&dir, &weights).unwrap();
-        let mut t = 1usize;
-        let s = b.bench("PJRT decode step (tiny rwkv)", || {
-            t = (t + 1) % weights.config.vocab;
-            session.step(t).unwrap()
-        });
-        println!("pjrt decode: {:.1} tokens/s", throughput(1.0, s));
+    // PJRT decode step (if artifacts present and the pjrt feature is on)
+    #[cfg(feature = "pjrt")]
+    {
+        use rwkvquant::model::ModelWeights;
+        use rwkvquant::runtime::artifacts_dir;
+        let dir = artifacts_dir();
+        if dir.join("rwkv_step.hlo.txt").exists() && dir.join("tiny_rwkv.bin").exists() {
+            let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
+            let mut session =
+                rwkvquant::runtime::rwkv_graph::RwkvSession::load(&dir, &weights).unwrap();
+            let mut t = 1usize;
+            let s = b.bench("PJRT decode step (tiny rwkv)", || {
+                t = (t + 1) % weights.config.vocab;
+                session.step(t).unwrap()
+            });
+            println!("pjrt decode: {:.1} tokens/s", throughput(1.0, s));
+        }
     }
 
     b.report();

@@ -1,22 +1,51 @@
 //! Table 4: generation speed and memory before/after 3.275-bpw
-//! quantization. Reproduced three ways on this CPU testbed:
+//! quantization. Reproduced four ways on this CPU testbed:
 //!   (a) measured weight-storage bytes fp32/fp16 vs packed quantized,
 //!   (b) measured decode-matvec throughput, dense fp32 vs packed
 //!       quantized streaming (`quant::exec`), at the lineup's layer
 //!       sizes — the memory-bound regime where the paper's speedup
 //!       comes from,
 //!   (c) the analytic memory-traffic model (model::flops) at each
-//!       model scale.
+//!       model scale,
+//!   (d) the **served** speedup: the same request set pushed through
+//!       `coordinator::serve` with a dense fp32 decoder and a packed
+//!       `QuantizedModel` decoder — the number a deployment actually
+//!       sees, recorded to `BENCH_serve.json` as the perf baseline for
+//!       future PRs.
 
 use rwkvquant::config::Method;
-use rwkvquant::experiments::{bench_config, build_model};
+use rwkvquant::coordinator::serve::{serve_collect, Request, RunnerDecoder, ServeStats};
+use rwkvquant::experiments::{bench_config, build_model, fast_mode};
 use rwkvquant::model::flops::{rwkv_step, CostModel};
 use rwkvquant::model::synthetic::size_config;
+use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
 use rwkvquant::quant::{exec, sq};
+use rwkvquant::report::json::Json;
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::tensor::{linalg, Matrix};
 use rwkvquant::util::benchkit::Bencher;
 use rwkvquant::util::rng::Rng;
+use std::time::Duration;
+
+/// Push a fixed request set through `serve` over the given provider.
+fn serve_tokens_per_sec<W: WeightProvider>(
+    weights: &W,
+    n_req: u64,
+    gen_len: usize,
+) -> ServeStats {
+    let vocab = weights.config().vocab;
+    let mut dec = RunnerDecoder::new(weights);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| Request {
+            id,
+            prompt: vec![(id as usize * 13) % vocab, 1, 2, 3],
+            gen_len,
+        })
+        .collect();
+    let (stats, _) =
+        serve_collect(&mut dec, requests, 8, Duration::from_millis(1)).unwrap();
+    stats
+}
 
 fn main() {
     // ---- (b) hot-loop decode matvec: dense fp32 vs packed 3-bit ----
@@ -80,6 +109,62 @@ fn main() {
     }
     t.print();
     t.save_csv("table4_speed_memory");
+
+    // ---- (d) served speedup through coordinator::serve ----
+    let (size, n_req, gen_len) = if fast_mode() { ("3B", 8u64, 8usize) } else { ("7B", 16, 16) };
+    let m: ModelWeights = build_model("rwkv6", size, 99);
+    let cfg = bench_config(Method::RwkvQuant, 3.275, 9);
+    let (q, rep) = rwkvquant::coordinator::quantize_model(&m, None, &cfg, 0);
+    let qm = QuantizedModel::from_parts(&m, &q);
+    let fp_stats = serve_tokens_per_sec(&m, n_req, gen_len);
+    let q_stats = serve_tokens_per_sec(&qm, n_req, gen_len);
+    let speedup = q_stats.tokens_per_sec() / fp_stats.tokens_per_sec().max(1e-9);
+    let mut t3 = Table::new(
+        "Table 4d — served decode throughput (coordinator::serve)",
+        &["path", "tok/s", "bits/weight", "p50", "p99"],
+    );
+    t3.row(vec![
+        Cell::s("fp32 dense"),
+        Cell::f(fp_stats.tokens_per_sec(), 1),
+        Cell::f(32.0, 1),
+        Cell::s(format!("{:?}", fp_stats.p50_latency)),
+        Cell::s(format!("{:?}", fp_stats.p99_latency)),
+    ]);
+    t3.row(vec![
+        Cell::s("packed quant"),
+        Cell::f(q_stats.tokens_per_sec(), 1),
+        Cell::f(qm.packed_bpw(), 3),
+        Cell::s(format!("{:?}", q_stats.p50_latency)),
+        Cell::s(format!("{:?}", q_stats.p99_latency)),
+    ]);
+    t3.print();
+    println!("served speedup (packed vs fp32): {speedup:.2}x");
+
+    // perf-trajectory baseline for future PRs
+    let bench = Json::obj()
+        .set("bench", "table4d_served")
+        .set("model", format!("rwkv6-{size}-synthetic"))
+        .set("requests", n_req as usize)
+        .set("gen_len", gen_len)
+        .set("avg_bpw", rep.avg_bpw)
+        .set(
+            "fp32",
+            Json::obj()
+                .set("tokens_per_sec", fp_stats.tokens_per_sec())
+                .set("bits_per_weight", 32.0),
+        )
+        .set(
+            "quant",
+            Json::obj()
+                .set("tokens_per_sec", q_stats.tokens_per_sec())
+                .set("bits_per_weight", qm.packed_bpw()),
+        )
+        .set("speedup", speedup);
+    match std::fs::write("BENCH_serve.json", bench.render()) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+
     b.report();
     println!("paper: 1.55x/2.03x/2.14x speed-up, 3.56x/3.27x/2.83x memory saving");
 }

@@ -5,4 +5,4 @@ pub mod batcher;
 pub mod pipeline;
 pub mod serve;
 
-pub use pipeline::{quantize_model, PipelineReport, QuantizedModel};
+pub use pipeline::{quantize_model, PipelineReport, QuantizedLayers};

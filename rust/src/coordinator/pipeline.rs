@@ -24,8 +24,10 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Quantized layers keyed by parameter name.
-pub type QuantizedModel = HashMap<String, QuantizedLayer>;
+/// Quantized layers keyed by parameter name — the raw pipeline output.
+/// Assemble into a servable [`crate::model::QuantizedModel`] with
+/// `QuantizedModel::from_parts` to serve it from the packed payloads.
+pub type QuantizedLayers = HashMap<String, QuantizedLayer>;
 
 /// Per-layer record in the pipeline report.
 #[derive(Debug, Clone)]
@@ -72,7 +74,7 @@ pub fn quantize_model(
     calib: Option<&CalibSet>,
     cfg: &QuantConfig,
     n_workers: usize,
-) -> (QuantizedModel, PipelineReport) {
+) -> (QuantizedLayers, PipelineReport) {
     let t0 = Instant::now();
     let n_workers = if n_workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -167,7 +169,7 @@ pub fn quantize_model(
         }
     });
 
-    let mut quantized = QuantizedModel::new();
+    let mut quantized = QuantizedLayers::new();
     let mut layers = Vec::with_capacity(idx.len());
     let mut bits = 0usize;
     let mut numel = 0usize;

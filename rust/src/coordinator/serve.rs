@@ -6,9 +6,17 @@
 //! the whole active set one token per tick (round-robin continuous
 //! batching — per-token fairness like vLLM's scheduler, at the
 //! granularity this single-stream CPU decoder supports). Completion,
-//! latency and throughput are reported per request.
+//! latency and throughput are reported per request. An idle server
+//! blocks on the request channel with a bounded timeout instead of
+//! spinning a core.
+//!
+//! The [`RunnerDecoder`] is generic over [`WeightProvider`], so the same
+//! server loop decodes from the dense fp32 store or straight from a
+//! packed [`crate::model::QuantizedModel`] — quantized serving is the
+//! default path, no dense materialisation involved.
 
 use super::batcher::DynamicBatcher;
+use crate::model::WeightProvider;
 use crate::tensor::stats;
 use crate::Result;
 use std::sync::mpsc;
@@ -51,12 +59,25 @@ pub struct ServeStats {
     pub wall: Duration,
     pub p50_latency: Duration,
     pub p95_latency: Duration,
+    pub p99_latency: Duration,
 }
 
 impl ServeStats {
     pub fn tokens_per_sec(&self) -> f64 {
         self.total_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+}
+
+/// Ceil-rank percentile over an ascending-sorted sample: the smallest
+/// element whose cumulative rank covers fraction `p` (0 < p ≤ 1) of the
+/// population. Empty samples yield zero.
+pub(crate) fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let n = sorted.len();
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 struct Active {
@@ -85,6 +106,9 @@ pub fn serve<D: Decoder>(
     let mut completed = 0usize;
     let t_start = Instant::now();
     let mut channel_open = true;
+    // bounded idle wait: long enough not to spin, short enough to honour
+    // the batcher's max_wait admission deadline
+    let idle_wait = max_wait.max(Duration::from_millis(1));
 
     while channel_open || batcher.queue_len() > 0 || !active.is_empty() {
         // drain newly-arrived requests into the admission queue
@@ -120,7 +144,18 @@ pub fn serve<D: Decoder>(
             if !channel_open && batcher.queue_len() == 0 {
                 break;
             }
-            std::thread::yield_now();
+            if channel_open {
+                // idle: block on the channel (bounded) instead of spinning
+                match rx.recv_timeout(idle_wait) {
+                    Ok(req) => batcher.push(req, Instant::now()),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => channel_open = false,
+                }
+            } else {
+                // closed channel, queued items waiting out the batching
+                // window — sleep a tick rather than busy-poll admit()
+                std::thread::sleep(Duration::from_micros(200));
+            }
             continue;
         }
 
@@ -159,34 +194,52 @@ pub fn serve<D: Decoder>(
     }
 
     latencies.sort();
-    let pick = |p: f64| {
-        if latencies.is_empty() {
-            Duration::ZERO
-        } else {
-            latencies[((latencies.len() - 1) as f64 * p) as usize]
-        }
-    };
     Ok(ServeStats {
         completed,
         total_tokens,
         wall: t_start.elapsed(),
-        p50_latency: pick(0.5),
-        p95_latency: pick(0.95),
+        p50_latency: percentile(&latencies, 0.50),
+        p95_latency: percentile(&latencies, 0.95),
+        p99_latency: percentile(&latencies, 0.99),
     })
 }
 
-/// [`Decoder`] over the pure-Rust reference runner.
-pub struct RunnerDecoder<'a> {
-    pub runner: crate::model::rwkv::RwkvRunner<'a>,
+/// Convenience driver: push a fixed request set through [`serve`] and
+/// collect every response, sorted by request id. Shared by the CLI, the
+/// e2e example, the serve benches and the tests.
+pub fn serve_collect<D: Decoder>(
+    decoder: &mut D,
+    requests: Vec<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<(ServeStats, Vec<Response>)> {
+    let (tx_req, rx_req) = mpsc::channel();
+    let (tx_resp, rx_resp) = mpsc::channel();
+    for r in requests {
+        tx_req
+            .send(r)
+            .map_err(|e| anyhow::anyhow!("request channel closed: {e}"))?;
+    }
+    drop(tx_req);
+    let stats = serve(decoder, rx_req, tx_resp, max_batch, max_wait)?;
+    let mut responses: Vec<Response> = rx_resp.iter().collect();
+    responses.sort_by_key(|r| r.id);
+    Ok((stats, responses))
 }
 
-impl<'a> RunnerDecoder<'a> {
-    pub fn new(weights: &'a crate::model::ModelWeights) -> Self {
+/// [`Decoder`] over the pure-Rust reference runner, generic over the
+/// weight provider: dense fp32 or packed quantized.
+pub struct RunnerDecoder<'a, W: WeightProvider = crate::model::ModelWeights> {
+    pub runner: crate::model::rwkv::RwkvRunner<'a, W>,
+}
+
+impl<'a, W: WeightProvider> RunnerDecoder<'a, W> {
+    pub fn new(weights: &'a W) -> Self {
         RunnerDecoder { runner: crate::model::rwkv::RwkvRunner::new(weights) }
     }
 }
 
-impl Decoder for RunnerDecoder<'_> {
+impl<W: WeightProvider> Decoder for RunnerDecoder<'_, W> {
     fn reset(&mut self) {
         self.runner.reset();
     }
@@ -196,7 +249,7 @@ impl Decoder for RunnerDecoder<'_> {
     }
 
     fn vocab(&self) -> usize {
-        self.runner.weights.config.vocab
+        self.runner.weights.config().vocab
     }
 
     fn save_state(&self) -> Vec<Vec<f32>> {
@@ -250,6 +303,7 @@ mod tests {
             serve(&mut dec, rx_req, tx_resp, 4, Duration::from_millis(1)).unwrap();
         assert_eq!(stats.completed, 6);
         assert_eq!(stats.total_tokens, 24);
+        assert!(stats.p99_latency >= stats.p50_latency);
         let mut got: Vec<Response> = rx_resp.iter().collect();
         got.sort_by_key(|r| r.id);
         assert_eq!(got.len(), 6);
@@ -296,5 +350,24 @@ mod tests {
         dec.load_state(&snap);
         let b = dec.step(3);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn percentile_uses_ceil_rank() {
+        let ms = |v: u64| Duration::from_millis(v);
+        let sample: Vec<Duration> = (1u64..=4).map(ms).collect();
+        // ceil-rank: p50 of 4 samples is the 2nd, p95/p99 the 4th
+        assert_eq!(percentile(&sample, 0.50), ms(2));
+        assert_eq!(percentile(&sample, 0.95), ms(4));
+        assert_eq!(percentile(&sample, 0.99), ms(4));
+        assert_eq!(percentile(&sample, 1.0), ms(4));
+        // single observation is every percentile
+        assert_eq!(percentile(&[ms(7)], 0.99), ms(7));
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+        // 100 samples: p99 is the 99th, not the 98th (the old floor-rank
+        // indexing returned index 98 ≈ p98 for p99)
+        let hundred: Vec<Duration> = (1u64..=100).map(ms).collect();
+        assert_eq!(percentile(&hundred, 0.99), ms(99));
+        assert_eq!(percentile(&hundred, 0.50), ms(50));
     }
 }

@@ -17,14 +17,15 @@ pub mod vision;
 pub mod zeroshot;
 
 use crate::model::rwkv::RwkvRunner;
-use crate::model::ModelWeights;
+use crate::model::{ModelWeights, WeightProvider};
 use crate::tensor::stats;
 
 /// Mean symmetric KL divergence between next-token distributions of two
 /// models over probe sequences — the raw damage signal of a quantization.
-pub fn output_divergence(
-    fp: &ModelWeights,
-    quant: &ModelWeights,
+/// Either side may be a dense store or a packed [`crate::model::QuantizedModel`].
+pub fn output_divergence<A: WeightProvider, B: WeightProvider>(
+    fp: &A,
+    quant: &B,
     probes: &[Vec<usize>],
 ) -> f64 {
     let mut run_fp = RwkvRunner::new(fp);
@@ -81,6 +82,11 @@ impl FidelityMap {
 
 /// Build a quantized-weights model: quantizable layers replaced by the
 /// dequantized reconstruction, everything else untouched.
+///
+/// This materialises dense fp32 weights and exists for reference
+/// comparisons (the packed serving path is
+/// [`crate::model::QuantizedModel`], which the eval harnesses consume
+/// directly through [`WeightProvider`]).
 pub fn dequantized_model(
     fp: &ModelWeights,
     layers: &std::collections::HashMap<String, crate::quant::QuantizedLayer>,

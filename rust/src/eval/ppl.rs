@@ -1,13 +1,15 @@
 //! Perplexity evaluation: `exp(mean NLL)` of next-token predictions over
-//! a token stream, computed through the Rust reference forward.
+//! a token stream, computed through the Rust reference forward. Generic
+//! over [`WeightProvider`], so quantized models are scored on the packed
+//! path without materialising dense weights.
 
 use crate::model::rwkv::RwkvRunner;
-use crate::model::ModelWeights;
+use crate::model::WeightProvider;
 use crate::tensor::stats;
 
 /// Perplexity of `model` on `tokens` (teacher-forced next-token NLL).
 /// The first prediction is conditioned on the first token only.
-pub fn perplexity(model: &ModelWeights, tokens: &[usize]) -> f64 {
+pub fn perplexity<W: WeightProvider>(model: &W, tokens: &[usize]) -> f64 {
     assert!(tokens.len() >= 2, "need at least two tokens");
     let mut run = RwkvRunner::new(model);
     let mut nll = 0.0f64;
@@ -23,7 +25,7 @@ pub fn perplexity(model: &ModelWeights, tokens: &[usize]) -> f64 {
 }
 
 /// Perplexity over multiple independent windows (state reset per window).
-pub fn perplexity_windows(model: &ModelWeights, windows: &[Vec<usize>]) -> f64 {
+pub fn perplexity_windows<W: WeightProvider>(model: &W, windows: &[Vec<usize>]) -> f64 {
     let mut run = RwkvRunner::new(model);
     let mut nll = 0.0f64;
     let mut count = 0usize;

@@ -5,11 +5,15 @@
 
 use crate::data::{make_task, ChoiceTask, Grammar, ZERO_SHOT_TASKS};
 use crate::model::rwkv::RwkvRunner;
-use crate::model::ModelWeights;
+use crate::model::WeightProvider;
 use crate::tensor::stats;
 
 /// Length-normalised log-probability of `continuation` after `context`.
-pub fn choice_logprob(run: &mut RwkvRunner, context: &[usize], continuation: &[usize]) -> f64 {
+pub fn choice_logprob<W: WeightProvider>(
+    run: &mut RwkvRunner<'_, W>,
+    context: &[usize],
+    continuation: &[usize],
+) -> f64 {
     run.reset();
     let mut logits = vec![0.0f32; 1];
     for &t in context {
@@ -24,8 +28,8 @@ pub fn choice_logprob(run: &mut RwkvRunner, context: &[usize], continuation: &[u
     lp / continuation.len().max(1) as f64
 }
 
-/// Accuracy (%) of `model` on a set of choice tasks.
-pub fn accuracy(model: &ModelWeights, tasks: &[ChoiceTask]) -> f64 {
+/// Accuracy (%) of `model` on a set of choice tasks (dense or packed).
+pub fn accuracy<W: WeightProvider>(model: &W, tasks: &[ChoiceTask]) -> f64 {
     let mut run = RwkvRunner::new(model);
     let mut correct = 0usize;
     for t in tasks {
@@ -61,8 +65,8 @@ impl ZeroShotReport {
 }
 
 /// Run all nine synthetic suites (`n_per_task` instances each).
-pub fn run_suite(
-    model: &ModelWeights,
+pub fn run_suite<W: WeightProvider>(
+    model: &W,
     grammar: &Grammar,
     n_per_task: usize,
     seed: u64,

@@ -5,7 +5,7 @@
 
 use crate::calib::CalibSet;
 use crate::config::{Method, QuantConfig};
-use crate::coordinator::{quantize_model, PipelineReport, QuantizedModel};
+use crate::coordinator::{quantize_model, PipelineReport, QuantizedLayers};
 use crate::eval::{dequantized_model, output_divergence, FidelityMap};
 use crate::model::synthetic::{self, Family};
 use crate::model::ModelWeights;
@@ -74,7 +74,7 @@ pub struct CellResult {
     pub divergence: f64,
     pub avg_bpw: f64,
     pub report: PipelineReport,
-    pub quantized: QuantizedModel,
+    pub quantized: QuantizedLayers,
 }
 
 pub fn run_cell(
@@ -115,11 +115,11 @@ pub fn quantize_with_choices(
     calib: Option<&CalibSet>,
     cfg: &QuantConfig,
     choices: &[crate::quant::hybrid::Choice],
-) -> QuantizedModel {
+) -> QuantizedLayers {
     use crate::quant::hybrid::quantize_hybrid;
     let idx = model.quantizable_indices();
     assert_eq!(choices.len(), idx.len());
-    let mut out = QuantizedModel::new();
+    let mut out = QuantizedLayers::new();
     for (pos, &i) in idx.iter().enumerate() {
         let (desc, w) = &model.layers[i];
         let ldata = calib.and_then(|c| c.layer(&desc.name));

@@ -14,9 +14,11 @@
 //!   optimisation (§3.2).
 //! * [`model`] — the RWKV-6/7 substrate: layer descriptors, a weight
 //!   store with a binary interchange format shared with the Python
-//!   build path, a pure-Rust reference forward pass, synthetic model
-//!   families with controlled weight distributions, and analytic
-//!   FLOP/byte accounting.
+//!   build path, the `WeightProvider`/`QuantizedModel` serving
+//!   abstraction (packed weights served through `quant::exec::LinearOp`),
+//!   a pure-Rust reference forward pass generic over the provider,
+//!   synthetic model families with controlled weight distributions, and
+//!   analytic FLOP/byte accounting.
 //! * [`runtime`] — PJRT execution of AOT-lowered HLO artifacts produced
 //!   by `python/compile/aot.py` (JAX + Pallas, build-time only).
 //! * [`coordinator`] — the layer-quantization pipeline (worker pool) and

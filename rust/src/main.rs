@@ -10,15 +10,14 @@
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve, Request, RunnerDecoder};
+use rwkvquant::coordinator::serve::{serve_collect, Request, RunnerDecoder};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
-use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
+use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
-use rwkvquant::model::ModelWeights;
+use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::runtime::artifacts_dir;
 use rwkvquant::util::cli::{Args, Help};
-use std::sync::mpsc;
 use std::time::Duration;
 
 fn help() -> String {
@@ -128,34 +127,36 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
     let model = load_model(args)?;
     let cfg = quant_config(args)?;
     let (q, rep) = quantize_model(&model, None, &cfg, 0);
-    println!("serving quantized model (avg {:.3} bpw)", rep.avg_bpw);
-    let dq = dequantized_model(&model, &q);
-    let mut dec = RunnerDecoder::new(&dq);
-    let (tx_req, rx_req) = mpsc::channel();
-    let (tx_resp, rx_resp) = mpsc::channel();
+    // serve straight from the packed payloads — no dense materialisation
+    let qm = QuantizedModel::from_parts(&model, &q);
+    println!(
+        "serving quantized model (avg {:.3} bpw, {} packed layers, {:.1} MB served)",
+        rep.avg_bpw,
+        qm.n_packed(),
+        qm.served_storage_bits() as f64 / 8e6
+    );
+    let mut dec = RunnerDecoder::new(&qm);
     let n = args.get_usize("requests", 16);
-    for id in 0..n as u64 {
-        tx_req.send(Request {
+    let requests: Vec<Request> = (0..n as u64)
+        .map(|id| Request {
             id,
             prompt: vec![(id as usize * 7) % model.config.vocab, 1, 2],
             gen_len: args.get_usize("gen-len", 12),
-        })?;
-    }
-    drop(tx_req);
-    let stats = serve(
+        })
+        .collect();
+    let (stats, _) = serve_collect(
         &mut dec,
-        rx_req,
-        tx_resp,
+        requests,
         args.get_usize("batch", 8),
         Duration::from_millis(2),
     )?;
-    let _ = rx_resp.iter().count();
     println!(
-        "{} requests | {:.1} tok/s | p50 {:?} p95 {:?}",
+        "{} requests | {:.1} tok/s | p50 {:?} p95 {:?} p99 {:?}",
         stats.completed,
         stats.tokens_per_sec(),
         stats.p50_latency,
-        stats.p95_latency
+        stats.p95_latency,
+        stats.p99_latency
     );
     Ok(())
 }

@@ -4,10 +4,17 @@
 //!   binary interchange format shared with the Python build path
 //!   (`python/compile/train.py` writes it, this crate reads it, and the
 //!   quantization pipeline writes quantized stores back).
+//! * [`qmodel`] — the serving-side weight providers: the
+//!   [`WeightProvider`] abstraction the runner consumes, and
+//!   [`QuantizedModel`], which keeps matmul weights **packed** and
+//!   serves them through the [`crate::quant::exec::LinearOp`] kernels
+//!   (see the `LinearOp` contract in `quant/exec.rs`). fp32, SQ, VQ and
+//!   hybrid checkpoints all run the identical forward-pass code.
 //! * [`rwkv`] — a pure-Rust reference forward pass for RWKV-6/7 blocks
 //!   (token-shift mixing, the stabilised WKV recurrence, channel
-//!   mixing). Used by the eval harness and as the numeric oracle for the
-//!   PJRT-executed HLO graphs.
+//!   mixing), generic over `WeightProvider`. Used by the eval harness,
+//!   the serving stack, and as the numeric oracle for the PJRT-executed
+//!   HLO graphs.
 //! * [`llama`] — a minimal LLaMA-like comparator (weights + layer
 //!   inventory only; used for the Table 1 / Fig. 5 distribution
 //!   comparisons and the Fig. 9 op/byte accounting).
@@ -19,8 +26,10 @@
 
 pub mod flops;
 pub mod llama;
+pub mod qmodel;
 pub mod rwkv;
 pub mod store;
 pub mod synthetic;
 
+pub use qmodel::{QuantizedModel, ServedParam, WeightProvider};
 pub use store::{LayerDesc, ModelWeights, ParamClass};

@@ -1,0 +1,299 @@
+//! Serving-side weight providers.
+//!
+//! [`WeightProvider`] is the abstraction the reference runner (and the
+//! PJRT session loader) consume instead of a concrete dense store: a
+//! model is an ordered list of named entries, each usable either as a
+//! polymorphic [`LinearOp`] (matmul weights) or as a dense row view
+//! (embeddings, 1-D params). Two providers exist:
+//!
+//! * [`ModelWeights`] — the dense fp32 store (reference path).
+//! * [`QuantizedModel`] — matmul weights kept in their **packed**
+//!   quantized form and served through the streaming kernels of
+//!   [`crate::quant::exec`]; element-wise/vector params are dequantized
+//!   once at build time (they are `O(d)` and read per token anyway).
+//!
+//! This is what removes the old "dequantize the whole model to fp32
+//! before running" pattern: the forward pass is written once against
+//! `WeightProvider`, so fp32, SQ, VQ and hybrid checkpoints all serve
+//! through the identical code while the quantized path streams 3-ish
+//! bits per weight (the Table 4 memory-bound speedup).
+
+use super::store::{LayerDesc, ModelWeights, ParamClass};
+use crate::config::ModelConfig;
+use crate::quant::exec::LinearOp;
+use crate::quant::QuantizedLayer;
+use crate::tensor::Matrix;
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+/// A named-weight source the forward pass can run over.
+pub trait WeightProvider {
+    fn config(&self) -> &ModelConfig;
+    /// Number of named entries.
+    fn n_entries(&self) -> usize;
+    /// Name of the i-th entry (construction order).
+    fn entry_name(&self, i: usize) -> &str;
+    /// The i-th entry as a matmul operator.
+    fn linear_at(&self, i: usize) -> &dyn LinearOp;
+    /// Dense row view of the i-th entry (`r = token` for embeddings,
+    /// `r = 0` for 1-D params). Panics if the entry is packed.
+    fn row_at(&self, i: usize, r: usize) -> &[f32];
+    /// Dense fp32 view of the i-th entry, materialised transiently if
+    /// the entry is packed (PJRT upload path — one layer at a time,
+    /// never the whole model).
+    fn materialize_at(&self, i: usize) -> Cow<'_, Matrix>;
+    /// Total weight-storage bits as served (the memory side of Table 4).
+    fn served_storage_bits(&self) -> usize;
+}
+
+impl WeightProvider for ModelWeights {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn n_entries(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn entry_name(&self, i: usize) -> &str {
+        &self.layers[i].0.name
+    }
+
+    fn linear_at(&self, i: usize) -> &dyn LinearOp {
+        &self.layers[i].1
+    }
+
+    fn row_at(&self, i: usize, r: usize) -> &[f32] {
+        self.layers[i].1.row(r)
+    }
+
+    fn materialize_at(&self, i: usize) -> Cow<'_, Matrix> {
+        Cow::Borrowed(&self.layers[i].1)
+    }
+
+    fn served_storage_bits(&self) -> usize {
+        self.n_params() * 32
+    }
+}
+
+/// How one entry of a [`QuantizedModel`] is stored and served.
+#[derive(Clone, Debug)]
+pub enum ServedParam {
+    /// Packed quantized payload, served through the streaming kernels.
+    Packed(QuantizedLayer),
+    /// Dense fp32 (embeddings/heads/norms, dequantized-once element-wise
+    /// weights, and QuaRot layers whose rotation cannot be fused).
+    Dense(Matrix),
+}
+
+impl ServedParam {
+    pub fn is_packed(&self) -> bool {
+        matches!(self, ServedParam::Packed(_))
+    }
+
+    pub fn storage_bits(&self) -> usize {
+        match self {
+            ServedParam::Packed(q) => q.storage_bits(),
+            ServedParam::Dense(m) => m.numel() * 32,
+        }
+    }
+
+    fn as_linear(&self) -> &dyn LinearOp {
+        match self {
+            ServedParam::Packed(q) => q,
+            ServedParam::Dense(m) => m,
+        }
+    }
+}
+
+/// Can this quantized layer run through the fused matvec kernels?
+/// Excludes QuaRot (the rotation mixes columns and is explicitly
+/// non-fusable — the paper's §1 overhead argument) and VQ layers whose
+/// vector dimension does not tile the rows (`matvec_vq` gathers
+/// per-row; a flat tail would be silently dropped in release builds).
+fn servable_packed(q: &QuantizedLayer) -> bool {
+    match q {
+        QuantizedLayer::Sq(l) => l.rotation.is_none(),
+        QuantizedLayer::Vq(l) => l.d > 0 && l.cols % l.d == 0 && l.tail.is_empty(),
+        QuantizedLayer::Fp16 { .. } => true,
+    }
+}
+
+/// A model whose matmul weights stay packed: the serving-side twin of a
+/// [`ModelWeights`] store after the quantization pipeline ran.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub config: ModelConfig,
+    pub entries: Vec<(LayerDesc, ServedParam)>,
+    index: HashMap<String, usize>,
+}
+
+impl QuantizedModel {
+    /// Assemble a servable model from the fp store and the pipeline's
+    /// per-layer output ([`crate::coordinator::QuantizedLayers`]):
+    ///
+    /// * quantized **matmul** layers keep their packed payload,
+    /// * quantized **element-wise** layers are dequantized once (1×d
+    ///   vectors read per token — packing them buys nothing),
+    /// * QuaRot layers fall back to a dequantized dense copy,
+    /// * everything else (norms, embeddings, head) is copied dense.
+    pub fn from_parts(
+        fp: &ModelWeights,
+        quantized: &HashMap<String, QuantizedLayer>,
+    ) -> QuantizedModel {
+        let mut entries = Vec::with_capacity(fp.layers.len());
+        for (desc, m) in &fp.layers {
+            let served = match quantized.get(&desc.name) {
+                Some(q) if desc.class == ParamClass::MatMul && servable_packed(q) => {
+                    ServedParam::Packed(q.clone())
+                }
+                Some(q) => ServedParam::Dense(q.dequantize()),
+                None => ServedParam::Dense(m.clone()),
+            };
+            entries.push((desc.clone(), served));
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, (d, _))| (d.name.clone(), i))
+            .collect();
+        QuantizedModel { config: fp.config.clone(), entries, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ServedParam> {
+        self.index.get(name).map(|&i| &self.entries[i].1)
+    }
+
+    /// Number of entries served from packed payloads.
+    pub fn n_packed(&self) -> usize {
+        self.entries.iter().filter(|(_, p)| p.is_packed()).count()
+    }
+
+    /// Average bits per weight over the packed entries.
+    pub fn packed_bpw(&self) -> f64 {
+        let (bits, numel) = self.entries.iter().fold((0usize, 0usize), |(b, n), (_, p)| {
+            if let ServedParam::Packed(q) = p {
+                (b + q.storage_bits(), n + q.numel())
+            } else {
+                (b, n)
+            }
+        });
+        bits as f64 / numel.max(1) as f64
+    }
+}
+
+impl WeightProvider for QuantizedModel {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn entry_name(&self, i: usize) -> &str {
+        &self.entries[i].0.name
+    }
+
+    fn linear_at(&self, i: usize) -> &dyn LinearOp {
+        self.entries[i].1.as_linear()
+    }
+
+    fn row_at(&self, i: usize, r: usize) -> &[f32] {
+        match &self.entries[i].1 {
+            ServedParam::Dense(m) => m.row(r),
+            ServedParam::Packed(_) => panic!(
+                "'{}' is packed — row views exist only for dense entries",
+                self.entries[i].0.name
+            ),
+        }
+    }
+
+    fn materialize_at(&self, i: usize) -> Cow<'_, Matrix> {
+        match &self.entries[i].1 {
+            ServedParam::Dense(m) => Cow::Borrowed(m),
+            ServedParam::Packed(q) => Cow::Owned(q.dequantize()),
+        }
+    }
+
+    fn served_storage_bits(&self) -> usize {
+        self.entries.iter().map(|(_, p)| p.storage_bits()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, ModelConfig, QuantConfig};
+    use crate::coordinator::quantize_model;
+    use crate::model::rwkv::init_params;
+    use crate::util::rng::Rng;
+
+    fn small() -> ModelWeights {
+        init_params(&ModelConfig::rwkv6(1, 32, 64), &mut Rng::new(5))
+    }
+
+    #[test]
+    fn from_parts_packs_matmuls_and_densifies_the_rest() {
+        let m = small();
+        let cfg = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &cfg, 2);
+        let qm = QuantizedModel::from_parts(&m, &q);
+        assert_eq!(qm.entries.len(), m.layers.len());
+        for (desc, p) in &qm.entries {
+            match desc.class {
+                ParamClass::MatMul => assert!(p.is_packed(), "{} not packed", desc.name),
+                _ => assert!(!p.is_packed(), "{} must be dense", desc.name),
+            }
+        }
+        assert!(qm.n_packed() > 0);
+        assert!(qm.packed_bpw() < 8.0);
+        // packed serving must be far below the fp32 footprint
+        assert!(qm.served_storage_bits() < m.served_storage_bits());
+    }
+
+    #[test]
+    fn quarot_layers_fall_back_to_dense() {
+        let m = small();
+        let cfg = QuantConfig {
+            method: Method::QuaRot,
+            kmeans_iters: 4,
+            ..QuantConfig::default()
+        };
+        let (q, _) = quantize_model(&m, None, &cfg, 2);
+        let qm = QuantizedModel::from_parts(&m, &q);
+        for (desc, p) in &qm.entries {
+            assert!(!p.is_packed(), "{} should have fallen back to dense", desc.name);
+        }
+    }
+
+    #[test]
+    fn provider_views_agree_between_dense_and_quantized() {
+        let m = small();
+        let cfg = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &cfg, 2);
+        let qm = QuantizedModel::from_parts(&m, &q);
+        assert_eq!(qm.n_entries(), m.n_entries());
+        for i in 0..m.n_entries() {
+            assert_eq!(m.entry_name(i), qm.entry_name(i));
+            assert_eq!(m.linear_at(i).rows(), qm.linear_at(i).rows());
+            assert_eq!(m.linear_at(i).cols(), qm.linear_at(i).cols());
+            let a = m.materialize_at(i);
+            let b = qm.materialize_at(i);
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "is packed")]
+    fn row_view_of_packed_entry_panics() {
+        let m = small();
+        let cfg = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &cfg, 2);
+        let qm = QuantizedModel::from_parts(&m, &q);
+        let i = (0..qm.n_entries())
+            .find(|&i| qm.entries[i].1.is_packed())
+            .expect("at least one packed entry");
+        let _ = qm.row_at(i, 0);
+    }
+}

@@ -8,9 +8,15 @@
 //! squared-ReLU channel mixing (Eq. 27). The `rwkv7` variant adds the
 //! output gate (`W_g`, `μ_g`) of the RWKV-7 time-mixing module.
 //!
+//! The runner is generic over [`WeightProvider`]: every projection goes
+//! through the polymorphic [`LinearOp`] matvec, so the same forward-pass
+//! code serves the dense fp32 store ([`ModelWeights`]) and the packed
+//! quantized store ([`crate::model::QuantizedModel`]) — the latter never
+//! materialises a dense weight matrix for its quantized matmul layers.
+//!
 //! This is the numeric oracle for the JAX/Pallas build path
 //! (`python/compile/model.py` mirrors these equations) and the engine
-//! behind the Rust-side eval harness.
+//! behind the Rust-side eval harness and the generation server.
 //!
 //! Naming scheme (shared with `train.py` / `aot.py` via the binary
 //! store): `emb`, `head`, `ln_out.{g,b}`, and per block `i`:
@@ -19,9 +25,11 @@
 //! `blocks.i.ln2.{g,b}`, `blocks.i.ffn.{mu_r,mu_k}`,
 //! `blocks.i.ffn.{w_r,w_k,w_v}`.
 
+use super::qmodel::WeightProvider;
 use super::store::{ModelWeights, ParamClass};
 use crate::config::ModelConfig;
-use crate::tensor::{linalg, Matrix};
+use crate::quant::exec::LinearOp;
+use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -90,9 +98,10 @@ impl Capture {
     }
 }
 
-/// Runs a model from a [`ModelWeights`] store.
-pub struct RwkvRunner<'a> {
-    pub weights: &'a ModelWeights,
+/// Runs a model from any [`WeightProvider`] (dense fp32 store or packed
+/// quantized model).
+pub struct RwkvRunner<'a, W: WeightProvider = ModelWeights> {
+    pub weights: &'a W,
     index: HashMap<&'a str, usize>,
     pub state: Vec<BlockState>,
     gated: bool,
@@ -102,20 +111,24 @@ pub struct RwkvRunner<'a> {
     buf_d: Vec<f32>,
     buf_d2: Vec<f32>,
     buf_d3: Vec<f32>,
+    buf_r: Vec<f32>,
+    buf_k: Vec<f32>,
+    buf_v: Vec<f32>,
+    buf_g_in: Vec<f32>,
+    buf_g: Vec<f32>,
     buf_ffn: Vec<f32>,
 }
 
-impl<'a> RwkvRunner<'a> {
-    pub fn new(weights: &'a ModelWeights) -> Self {
-        let index = weights
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, (d, _))| (d.name.as_str(), i))
+impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
+    pub fn new(weights: &'a W) -> Self {
+        let index = (0..weights.n_entries())
+            .map(|i| (weights.entry_name(i), i))
             .collect();
-        let d = weights.config.d_model;
-        let n = weights.config.n_layer;
-        let gated = weights.config.arch == "rwkv7";
+        let cfg = weights.config();
+        let d = cfg.d_model;
+        let n = cfg.n_layer;
+        let ffn = cfg.ffn_dim();
+        let gated = cfg.arch == "rwkv7";
         RwkvRunner {
             weights,
             index,
@@ -125,57 +138,81 @@ impl<'a> RwkvRunner<'a> {
             buf_d: vec![0.0; d],
             buf_d2: vec![0.0; d],
             buf_d3: vec![0.0; d],
-            buf_ffn: vec![0.0; weights.config.ffn_dim()],
+            buf_r: vec![0.0; d],
+            buf_k: vec![0.0; d],
+            buf_v: vec![0.0; d],
+            buf_g_in: vec![0.0; if gated { d } else { 0 }],
+            buf_g: vec![0.0; if gated { d } else { 0 }],
+            buf_ffn: vec![0.0; ffn],
         }
     }
 
     pub fn reset(&mut self) {
-        let d = self.weights.config.d_model;
+        let d = self.weights.config().d_model;
         for s in &mut self.state {
             *s = BlockState::new(d);
         }
     }
 
-    fn t(&self, name: &str) -> &'a Matrix {
-        let i = *self
+    fn pos(&self, name: &str) -> usize {
+        *self
             .index
             .get(name)
-            .unwrap_or_else(|| panic!("missing parameter '{name}'"));
-        &self.weights.layers[i].1
+            .unwrap_or_else(|| panic!("missing parameter '{name}'"))
+    }
+
+    /// Matmul view of a parameter (lifetime tied to the provider, not to
+    /// `&self`, so ops can be held across state mutation).
+    fn op(&self, name: &str) -> &'a dyn LinearOp {
+        self.weights.linear_at(self.pos(name))
+    }
+
+    /// Dense row view of a 1-D parameter.
+    fn vrow(&self, name: &str) -> &'a [f32] {
+        self.weights.row_at(self.pos(name), 0)
     }
 
     /// Forward one token id; returns the next-token logits.
     pub fn forward_token(&mut self, token: usize) -> Vec<f32> {
-        let cfg = &self.weights.config;
-        let d = cfg.d_model;
-        let emb = self.t("emb");
-        assert!(token < cfg.vocab, "token {token} >= vocab {}", cfg.vocab);
-        let mut x: Vec<f32> = emb.row(token).to_vec();
+        let cfg = self.weights.config();
+        let (d, vocab, n_layer) = (cfg.d_model, cfg.vocab, cfg.n_layer);
+        assert!(token < vocab, "token {token} >= vocab {vocab}");
+        let emb_pos = self.pos("emb");
+        let mut x: Vec<f32> = self.weights.row_at(emb_pos, token).to_vec();
 
-        for b in 0..cfg.n_layer {
+        for b in 0..n_layer {
             let p = |suffix: &str| format!("blocks.{b}.{suffix}");
             // ---- time mixing ----
-            let xx = layer_norm(&x, self.t(&p("ln1.g")).row(0), self.t(&p("ln1.b")).row(0));
+            let xx = layer_norm(&x, self.vrow(&p("ln1.g")), self.vrow(&p("ln1.b")));
             // fetch all parameter views before borrowing state mutably
-            let mu_r = self.t(&p("att.mu_r")).row(0);
-            let mu_k = self.t(&p("att.mu_k")).row(0);
-            let mu_v = self.t(&p("att.mu_v")).row(0);
-            let w_r = self.t(&p("att.w_r"));
-            let w_k = self.t(&p("att.w_k"));
-            let w_v = self.t(&p("att.w_v"));
-            let w_o = self.t(&p("att.w_o"));
-            let decay = self.t(&p("att.decay")).row(0);
-            let bonus = self.t(&p("att.bonus")).row(0);
+            let mu_r = self.vrow(&p("att.mu_r"));
+            let mu_k = self.vrow(&p("att.mu_k"));
+            let mu_v = self.vrow(&p("att.mu_v"));
+            let w_r = self.op(&p("att.w_r"));
+            let w_k = self.op(&p("att.w_k"));
+            let w_v = self.op(&p("att.w_v"));
+            let w_o = self.op(&p("att.w_o"));
+            let decay = self.vrow(&p("att.decay"));
+            let bonus = self.vrow(&p("att.bonus"));
 
-            let st = &mut self.state[b];
-            // token-shift interpolations
-            lerp_into(&xx, &st.x_att, mu_r, &mut self.buf_d);
-            let r = linalg::matvec(w_r, &self.buf_d);
-            lerp_into(&xx, &st.x_att, mu_k, &mut self.buf_d2);
-            let k = linalg::matvec(w_k, &self.buf_d2);
-            lerp_into(&xx, &st.x_att, mu_v, &mut self.buf_d3);
-            let v = linalg::matvec(w_v, &self.buf_d3);
-            st.x_att.copy_from_slice(&xx);
+            // token-shift interpolations + projections (packed or dense)
+            lerp_into(&xx, &self.state[b].x_att, mu_r, &mut self.buf_d);
+            w_r.matvec(&self.buf_d, &mut self.buf_r);
+            lerp_into(&xx, &self.state[b].x_att, mu_k, &mut self.buf_d2);
+            w_k.matvec(&self.buf_d2, &mut self.buf_k);
+            lerp_into(&xx, &self.state[b].x_att, mu_v, &mut self.buf_d3);
+            w_v.matvec(&self.buf_d3, &mut self.buf_v);
+            if self.gated {
+                // RWKV-7 output gate: token-shifted against the *previous*
+                // x_att, like r/k/v (matches model.py's `mix(mu_g, xx, xa)`
+                // — the state must not be overwritten first)
+                let mu_g = self.vrow(&p("att.mu_g"));
+                let w_g = self.op(&p("att.w_g"));
+                lerp_into(&xx, &self.state[b].x_att, mu_g, &mut self.buf_g_in);
+                w_g.matvec(&self.buf_g_in, &mut self.buf_g);
+            }
+            self.state[b].x_att.copy_from_slice(&xx);
+            let gated = self.gated;
             if let Some(cap) = &mut self.capture {
                 cap.push(&p("att.w_r"), &self.buf_d);
                 cap.push(&p("att.w_k"), &self.buf_d2);
@@ -184,65 +221,64 @@ impl<'a> RwkvRunner<'a> {
                 cap.push(&p("att.mu_r"), &xx);
                 cap.push(&p("att.mu_k"), &xx);
                 cap.push(&p("att.mu_v"), &xx);
+                if gated {
+                    cap.push(&p("att.w_g"), &self.buf_g_in);
+                    cap.push(&p("att.mu_g"), &xx);
+                }
             }
 
             // WKV recurrence (channel-wise, stabilised)
             let mut wkv = vec![0.0f32; d];
-            for c in 0..d {
-                let ww = bonus[c] + k[c];
-                let p1 = st.pp[c].max(ww);
-                let e1 = (st.pp[c] - p1).exp();
-                let e2 = (ww - p1).exp();
-                wkv[c] = (e1 * st.aa[c] + e2 * v[c]) / (e1 * st.bb[c] + e2).max(1e-30);
-                // state update with decay
-                let ww2 = st.pp[c] - decay[c];
-                let p2 = ww2.max(k[c]);
-                let ea = (ww2 - p2).exp();
-                let eb = (k[c] - p2).exp();
-                st.aa[c] = ea * st.aa[c] + eb * v[c];
-                st.bb[c] = ea * st.bb[c] + eb;
-                st.pp[c] = p2;
+            {
+                let st = &mut self.state[b];
+                for c in 0..d {
+                    let kc = self.buf_k[c];
+                    let vc = self.buf_v[c];
+                    let ww = bonus[c] + kc;
+                    let p1 = st.pp[c].max(ww);
+                    let e1 = (st.pp[c] - p1).exp();
+                    let e2 = (ww - p1).exp();
+                    wkv[c] = (e1 * st.aa[c] + e2 * vc) / (e1 * st.bb[c] + e2).max(1e-30);
+                    // state update with decay
+                    let ww2 = st.pp[c] - decay[c];
+                    let p2 = ww2.max(kc);
+                    let ea = (ww2 - p2).exp();
+                    let eb = (kc - p2).exp();
+                    st.aa[c] = ea * st.aa[c] + eb * vc;
+                    st.bb[c] = ea * st.bb[c] + eb;
+                    st.pp[c] = p2;
+                }
             }
 
             // receptance gate, optional RWKV-7 output gate, output proj
             for c in 0..d {
-                wkv[c] *= sigmoid(r[c]);
+                wkv[c] *= sigmoid(self.buf_r[c]);
             }
             if self.gated {
-                let mu_g = self.t(&p("att.mu_g")).row(0);
-                let w_g = self.t(&p("att.w_g"));
-                let st = &self.state[b];
-                lerp_into(&xx, &st.x_att, mu_g, &mut self.buf_d);
-                let g = linalg::matvec(w_g, &self.buf_d);
-                if let Some(cap) = &mut self.capture {
-                    cap.push(&p("att.w_g"), &self.buf_d);
-                    cap.push(&p("att.mu_g"), &xx);
-                }
                 for c in 0..d {
-                    wkv[c] *= sigmoid(g[c]) * 2.0;
+                    wkv[c] *= sigmoid(self.buf_g[c]) * 2.0;
                 }
             }
             if let Some(cap) = &mut self.capture {
                 cap.push(&p("att.w_o"), &wkv);
             }
-            let att_out = linalg::matvec(w_o, &wkv);
+            w_o.matvec(&wkv, &mut self.buf_d);
             for c in 0..d {
-                x[c] += att_out[c];
+                x[c] += self.buf_d[c];
             }
 
             // ---- channel mixing ----
-            let xc = layer_norm(&x, self.t(&p("ln2.g")).row(0), self.t(&p("ln2.b")).row(0));
-            let mu_cr = self.t(&p("ffn.mu_r")).row(0);
-            let mu_ck = self.t(&p("ffn.mu_k")).row(0);
-            let w_cr = self.t(&p("ffn.w_r"));
-            let w_ck = self.t(&p("ffn.w_k"));
-            let w_cv = self.t(&p("ffn.w_v"));
-            let st = &mut self.state[b];
-            lerp_into(&xc, &st.x_ffn, mu_cr, &mut self.buf_d);
-            let rp = linalg::matvec(w_cr, &self.buf_d);
-            lerp_into(&xc, &st.x_ffn, mu_ck, &mut self.buf_d2);
-            linalg::matvec_into(w_ck, &self.buf_d2, &mut self.buf_ffn);
-            st.x_ffn.copy_from_slice(&xc);
+            let xc = layer_norm(&x, self.vrow(&p("ln2.g")), self.vrow(&p("ln2.b")));
+            let mu_cr = self.vrow(&p("ffn.mu_r"));
+            let mu_ck = self.vrow(&p("ffn.mu_k"));
+            let w_cr = self.op(&p("ffn.w_r"));
+            let w_ck = self.op(&p("ffn.w_k"));
+            let w_cv = self.op(&p("ffn.w_v"));
+            lerp_into(&xc, &self.state[b].x_ffn, mu_cr, &mut self.buf_d);
+            w_cr.matvec(&self.buf_d, &mut self.buf_r);
+            lerp_into(&xc, &self.state[b].x_ffn, mu_ck, &mut self.buf_d2);
+            w_ck.matvec(&self.buf_d2, &mut self.buf_ffn);
+            self.state[b].x_ffn.copy_from_slice(&xc);
             // squared ReLU
             for v in self.buf_ffn.iter_mut() {
                 let relu = v.max(0.0);
@@ -255,14 +291,16 @@ impl<'a> RwkvRunner<'a> {
                 cap.push(&p("ffn.mu_r"), &xc);
                 cap.push(&p("ffn.mu_k"), &xc);
             }
-            let ffn_out = linalg::matvec(w_cv, &self.buf_ffn);
+            w_cv.matvec(&self.buf_ffn, &mut self.buf_v);
             for c in 0..d {
-                x[c] += sigmoid(rp[c]) * ffn_out[c];
+                x[c] += sigmoid(self.buf_r[c]) * self.buf_v[c];
             }
         }
 
-        let xo = layer_norm(&x, self.t("ln_out.g").row(0), self.t("ln_out.b").row(0));
-        linalg::matvec(self.t("head"), &xo)
+        let xo = layer_norm(&x, self.vrow("ln_out.g"), self.vrow("ln_out.b"));
+        let mut logits = vec![0.0f32; vocab];
+        self.op("head").matvec(&xo, &mut logits);
+        logits
     }
 
     /// Forward a token sequence, returning logits at every position.
@@ -422,6 +460,26 @@ mod tests {
     }
 
     #[test]
+    fn rwkv7_gate_mixes_with_previous_token() {
+        // μ_g token-shifts against the previous x_att (model.py:
+        // `mix(mu_g, xx, xa)`); perturbing μ_g must change the logits of
+        // the second token (it was silently ignored when the gate read
+        // the already-overwritten state)
+        let m = init_params(&ModelConfig::rwkv7(2, 16, 32), &mut Rng::new(4));
+        let mut other = m.clone();
+        for v in other.get_mut("blocks.0.att.mu_g").unwrap().data.iter_mut() {
+            *v = (*v * 0.2).clamp(0.0, 1.0);
+        }
+        let mut run_a = RwkvRunner::new(&m);
+        let mut run_b = RwkvRunner::new(&other);
+        let _ = (run_a.forward_token(3), run_b.forward_token(3));
+        let a = run_a.forward_token(9);
+        let b = run_b.forward_token(9);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-6, "μ_g must influence the gate (diff={diff})");
+    }
+
+    #[test]
     fn long_sequence_stays_stable() {
         let m = tiny();
         let mut run = RwkvRunner::new(&m);
@@ -445,5 +503,20 @@ mod tests {
         let m = tiny();
         // per block: 3 att μ + 4 att W + 2 ffn μ + 3 ffn W = 12; 2 blocks
         assert_eq!(m.quantizable_indices().len(), 24);
+    }
+
+    #[test]
+    fn runner_over_quantized_provider_matches_dense_on_fp16_layers() {
+        use crate::model::QuantizedModel;
+        use std::collections::HashMap;
+        // a QuantizedModel with no quantized layers must reproduce the
+        // dense forward exactly (all entries fall back to Dense copies)
+        let m = tiny();
+        let qm = QuantizedModel::from_parts(&m, &HashMap::new());
+        let mut dense = RwkvRunner::new(&m);
+        let mut served = RwkvRunner::new(&qm);
+        for t in [1usize, 9, 30, 2] {
+            assert_eq!(dense.forward_token(t), served.forward_token(t));
+        }
     }
 }

@@ -1,28 +1,204 @@
-//! Quantized execution: matvec directly on packed quantized weights.
+//! Quantized execution: the [`LinearOp`] abstraction and matvec kernels
+//! that run directly on packed quantized weights.
 //!
 //! The deployment payoff of the paper (Table 4): RWKV decode is
 //! memory-bound (Fig. 9), so reading 3-ish bits per weight instead of 32
 //! converts directly into decode speed. These routines stream the packed
 //! payload group-by-group, dequantize into a small stack buffer and
 //! accumulate the dot product — never materialising the fp matrix
-//! (llama.cpp-style). Used by the Table 4 bench and the serving example.
+//! (llama.cpp-style).
+//!
+//! # The `LinearOp` contract
+//!
+//! Every weight that participates in the forward pass as a matmul is
+//! served through [`LinearOp`] (mistralrs-quant's `QuantMethod` shape):
+//!
+//! * `matvec(x, y)` computes `y = W x` for `x.len() == cols()` and
+//!   `y.len() == rows()`, without materialising a dense `W`.
+//! * `storage_bits()` is the weight's storage footprint *as served* —
+//!   the quantity the memory-bound decode model trades for speed.
+//! * `flops_per_token()` is `2·rows·cols` plus any non-fusable
+//!   per-activation overhead the method forces (AWQ's `1/s` multiply,
+//!   QuaRot's rotations — the paper's §1 overhead argument).
+//!
+//! Implementations: dense [`Matrix`] (fp32 reference), [`SqLayer`]
+//! (scalar grids, including AWQ's folded column scales), [`VqLayer`]
+//! (codebook gather), and the [`QuantizedLayer`] dispatcher. The serving
+//! stack ([`crate::model::qmodel::QuantizedModel`] → `RwkvRunner` →
+//! `coordinator::serve`) consumes only this trait, so fp32, SQ, VQ and
+//! hybrid checkpoints all run the identical forward-pass code.
 
 use super::{QuantizedLayer, SqLayer, VqLayer};
+use crate::tensor::{linalg, Matrix};
+
+/// A weight served as a linear operator `y = W x`. See the module docs
+/// for the contract.
+pub trait LinearOp: Send + Sync {
+    /// `y = W x`; `x.len()` must equal [`LinearOp::cols`], `y.len()`
+    /// must equal [`LinearOp::rows`].
+    fn matvec(&self, x: &[f32], y: &mut [f32]);
+    /// Output dimension.
+    fn rows(&self) -> usize;
+    /// Input dimension.
+    fn cols(&self) -> usize;
+    /// Storage footprint in bits as served (packed codes + metadata for
+    /// quantized layers, 32 bits/weight for dense fp32).
+    fn storage_bits(&self) -> usize;
+    /// FLOPs one decoded token pays through this op.
+    fn flops_per_token(&self) -> u64;
+}
+
+impl LinearOp for Matrix {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        linalg::matvec_into(self, x, y);
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.numel() * 32
+    }
+
+    fn flops_per_token(&self) -> u64 {
+        2 * self.numel() as u64
+    }
+}
+
+impl LinearOp for SqLayer {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        matvec_sq(self, x, y);
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn storage_bits(&self) -> usize {
+        SqLayer::storage_bits(self)
+    }
+
+    fn flops_per_token(&self) -> u64 {
+        2 * self.numel() as u64 + self.extra_flops_per_token
+    }
+}
+
+impl LinearOp for VqLayer {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        matvec_vq(self, x, y);
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn storage_bits(&self) -> usize {
+        VqLayer::storage_bits(self)
+    }
+
+    fn flops_per_token(&self) -> u64 {
+        2 * self.numel() as u64
+    }
+}
+
+impl LinearOp for QuantizedLayer {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        matvec(self, x, y);
+    }
+
+    fn rows(&self) -> usize {
+        match self {
+            QuantizedLayer::Sq(l) => l.rows,
+            QuantizedLayer::Vq(l) => l.rows,
+            QuantizedLayer::Fp16 { rows, .. } => *rows,
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            QuantizedLayer::Sq(l) => l.cols,
+            QuantizedLayer::Vq(l) => l.cols,
+            QuantizedLayer::Fp16 { cols, .. } => *cols,
+        }
+    }
+
+    fn storage_bits(&self) -> usize {
+        QuantizedLayer::storage_bits(self)
+    }
+
+    fn flops_per_token(&self) -> u64 {
+        match self {
+            QuantizedLayer::Sq(l) => LinearOp::flops_per_token(l),
+            QuantizedLayer::Vq(l) => LinearOp::flops_per_token(l),
+            QuantizedLayer::Fp16 { rows, cols, .. } => 2 * (rows * cols) as u64,
+        }
+    }
+}
+
+thread_local! {
+    /// Scratch for the AWQ folded-scale input (hot path: one serve loop
+    /// per thread, so a thread-local avoids a per-call allocation).
+    static SCALED_X: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    /// Scratch for the unpacked per-row codes of the aligned fast path.
+    static CODES_ROW: std::cell::RefCell<Vec<u8>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
 
 /// y = W x for an SQ layer, streaming packed codes.
+///
+/// AWQ layers (`col_inv_scale = Some`) are handled by folding the
+/// per-column inverse scale into `x` once per call:
+/// `Ŵ = Q(W·diag(s))·diag(1/s)` ⇒ `Ŵx = Q(W·diag(s)) · (x ⊙ 1/s)`.
+/// QuaRot rotations cannot be fused this way (they mix columns) and
+/// must go through `dequantize()`.
 pub fn matvec_sq(l: &SqLayer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     assert!(
-        l.rotation.is_none() && l.col_inv_scale.is_none(),
-        "fused matvec supports plain grids (RTN/GPTQ) only"
+        l.rotation.is_none(),
+        "fused matvec cannot undo a QuaRot rotation — dequantize instead"
     );
+    match &l.col_inv_scale {
+        Some(inv) => SCALED_X.with(|scratch| {
+            let mut scaled = scratch.borrow_mut();
+            scaled.clear();
+            scaled.extend(x.iter().zip(inv).map(|(&xv, &s)| xv * s));
+            matvec_sq_plain(l, &scaled, y);
+        }),
+        None => matvec_sq_plain(l, x, y),
+    }
+}
+
+/// The plain-grid kernel body (`x` already in the quantized basis).
+fn matvec_sq_plain(l: &SqLayer, x: &[f32], y: &mut [f32]) {
+    CODES_ROW.with(|scratch| {
+        let mut codes_row = scratch.borrow_mut();
+        codes_row.clear();
+        codes_row.resize(l.cols, 0);
+        matvec_sq_body(l, x, y, &mut codes_row);
+    });
+}
+
+fn matvec_sq_body(l: &SqLayer, x: &[f32], y: &mut [f32], codes_row: &mut [u8]) {
     let group = l.group_size;
     // Pre-compute group-wise Σx once: Σ_g (m_g + s_g·q)·x = m_g·Σx_g + s_g·Σ q·x.
     // Row-major groups may straddle rows only when cols % group != 0; the
     // common serving shapes (cols multiple of 32/64) take the fast path.
     let aligned = l.cols % group == 0;
-    let mut codes_row = vec![0u8; l.cols];
     let groups_per_row = l.cols / group.max(1);
     for r in 0..l.rows {
         let row_base = r * l.cols;
@@ -126,8 +302,7 @@ pub fn matvec(layer: &QuantizedLayer, x: &[f32], y: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{sq, vq};
-    use crate::tensor::{linalg, Matrix};
+    use crate::quant::{sq, vq, CalibData};
     use crate::util::rng::Rng;
 
     fn rand(seed: u64, r: usize, c: usize) -> (Matrix, Vec<f32>) {
@@ -164,6 +339,32 @@ mod tests {
     }
 
     #[test]
+    fn sq_matvec_folds_awq_col_inv_scale() {
+        let (w, x) = rand(7, 24, 64);
+        let mut calib_x = Matrix::zeros(64, 64);
+        let mut rng = Rng::new(8);
+        rng.fill_normal(&mut calib_x.data, 0.0, 1.0);
+        for r in 0..calib_x.rows {
+            for c in 0..4 {
+                *calib_x.at_mut(r, c) *= 10.0; // hot channels force real scales
+            }
+        }
+        let q = sq::awq::quantize(&w, 3, 32, Some(&CalibData { x: calib_x }));
+        assert!(q.col_inv_scale.is_some(), "AWQ must produce column scales");
+        let want = linalg::matvec(&q.dequantize(), &x);
+        let mut got = vec![0.0f32; 24];
+        matvec_sq(&q, &x, &mut got);
+        for i in 0..24 {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-3 + want[i].abs() * 1e-4,
+                "{i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
     fn vq_matvec_matches_dequant_then_matvec() {
         let (w, x) = rand(3, 32, 64);
         let q = vq::kmeans::quantize(&w, 6, 4, 8, &mut Rng::new(9));
@@ -189,5 +390,30 @@ mod tests {
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn linear_op_trait_is_consistent_across_impls() {
+        let (w, x) = rand(5, 16, 64);
+        let sq = sq::rtn::quantize(&w, 3, 32);
+        let vq = vq::kmeans::quantize(&w, 5, 4, 6, &mut Rng::new(11));
+        let cases: Vec<(&dyn LinearOp, Matrix)> =
+            vec![(&w, w.clone()), (&sq, sq.dequantize()), (&vq, vq.dequantize())];
+        for (op, reference) in cases {
+            assert_eq!(op.rows(), 16);
+            assert_eq!(op.cols(), 64);
+            assert!(op.storage_bits() > 0);
+            assert!(op.flops_per_token() >= 2 * 16 * 64);
+            let mut y = vec![0.0f32; 16];
+            op.matvec(&x, &mut y);
+            // every impl must agree with its own dequantized reference
+            let want = linalg::matvec(&reference, &x);
+            for i in 0..16 {
+                assert!((y[i] - want[i]).abs() < 1e-3, "{i}: {} vs {}", y[i], want[i]);
+            }
+        }
+        // dense storage is 32 bits/weight; packed is far smaller
+        assert_eq!(LinearOp::storage_bits(&w), 16 * 64 * 32);
+        assert!(LinearOp::storage_bits(&sq) < 16 * 64 * 8);
     }
 }

@@ -14,6 +14,9 @@
 //!   multiplication weights (X²-weighted K-Means with percentile-clipped
 //!   batch integration).
 //! * [`packing`] — bit-level storage for quantized payloads.
+//! * [`exec`] — the [`exec::LinearOp`] serving contract plus streaming
+//!   matvec kernels that run directly on the packed payloads (what the
+//!   `QuantizedModel` provider and the whole serving stack consume).
 
 pub mod ewmul;
 pub mod exec;

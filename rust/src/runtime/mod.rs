@@ -1,18 +1,28 @@
 //! PJRT runtime: load AOT-lowered HLO-text artifacts produced by
 //! `python/compile/aot.py`, compile them on the CPU PJRT client, and
 //! execute them from the Rust hot path. Python never runs here.
+//!
+//! The PJRT engine needs the `xla` crate from the full offline vendor
+//! set, so everything touching it is gated behind the `pjrt` cargo
+//! feature; the manifest parsing, artifact paths and the pure-Rust
+//! serving stack build and run without it.
 
 pub mod rwkv_graph;
 
+#[cfg(feature = "pjrt")]
 use crate::Result;
+#[cfg(feature = "pjrt")]
 use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// A compiled HLO artifact plus its client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
@@ -47,10 +57,12 @@ impl Engine {
 
 /// A compiled executable; the lowering used `return_tuple=True`, so each
 /// execution yields one tuple literal that we decompose.
+#[cfg(feature = "pjrt")]
 pub struct Graph {
     pub exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Graph {
     /// Execute with device-resident buffers; returns the decomposed
     /// output tuple as host literals.
@@ -69,6 +81,7 @@ impl Graph {
 }
 
 /// Read an f32 literal into a Vec.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(anyhow::Error::msg)
 }

@@ -1,13 +1,16 @@
 //! The RWKV decode-step graph: binds `artifacts/rwkv_step.hlo.txt` to a
-//! weight store, uploads all weights once as device buffers, and serves
-//! `step(token) → logits` with recurrent state threaded through device
-//! memory. This is the request-path engine — Python is long gone.
+//! weight provider, uploads all weights once as device buffers, and
+//! serves `step(token) → logits` with recurrent state threaded through
+//! device memory. This is the request-path engine — Python is long gone.
+//!
+//! [`RwkvSession::load`] accepts any [`crate::model::WeightProvider`]:
+//! dense stores upload as-is, packed [`crate::model::QuantizedModel`]s
+//! are materialised **one layer at a time** at upload (the device graph
+//! wants fp32 buffers), never as a whole dense model. The session itself
+//! requires the `pjrt` cargo feature; manifest parsing does not.
 
-use super::{literal_f32, Engine, Graph};
-use crate::model::ModelWeights;
 use crate::Result;
-use anyhow::{bail, Context};
-use std::path::Path;
+use anyhow::bail;
 
 /// Which flattened graph input a manifest line denotes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -41,126 +44,147 @@ pub fn parse_manifest(text: &str) -> Result<Vec<InputSlot>> {
     Ok(slots)
 }
 
-/// Device-resident RWKV decode session.
-pub struct RwkvSession {
-    graph: Graph,
-    slots: Vec<InputSlot>,
-    /// parameter buffers uploaded once, keyed like the manifest
-    param_bufs: std::collections::HashMap<String, xla::PjRtBuffer>,
-    /// current recurrent state (device buffers, replaced every step)
-    state_bufs: std::collections::HashMap<String, xla::PjRtBuffer>,
-    engine: Engine,
-    n_layer: usize,
-    d_model: usize,
-    pub vocab: usize,
-}
-
 /// State tensor keys in the output-tuple order after logits.
 pub const STATE_KEYS: [&str; 5] = ["aa", "bb", "pp", "x_att", "x_ffn"];
 
-impl RwkvSession {
-    /// Load graph + manifest from `dir` and bind `weights` (every
-    /// parameter uploaded once — quantized serving passes the
-    /// dequantized store here, its packed form lives in [`crate::quant`]).
-    pub fn load(dir: &Path, weights: &ModelWeights) -> Result<RwkvSession> {
-        let engine = Engine::cpu()?;
-        let graph = engine.load_hlo_text(&dir.join("rwkv_step.hlo.txt"))?;
-        let manifest = std::fs::read_to_string(dir.join("rwkv_step.inputs.txt"))
-            .context("reading input manifest")?;
-        let slots = parse_manifest(&manifest)?;
+#[cfg(feature = "pjrt")]
+pub use session::RwkvSession;
 
-        let mut param_bufs = std::collections::HashMap::new();
-        for slot in &slots {
-            if let InputSlot::Param(name) = slot {
-                let m = weights
-                    .get(name)
-                    .with_context(|| format!("weights store missing '{name}'"))?;
-                // python stores (1,d) vectors; graph may expect (1,d) too —
-                // shapes were lowered from the same store, so pass as-is
-                let buf = engine.upload_f32(&m.data, &[m.rows, m.cols])?;
-                param_bufs.insert(name.clone(), buf);
-            }
-        }
+#[cfg(feature = "pjrt")]
+mod session {
+    use super::{parse_manifest, InputSlot, STATE_KEYS};
+    use crate::model::WeightProvider;
+    use crate::runtime::{literal_f32, Engine, Graph};
+    use crate::Result;
+    use anyhow::{bail, Context};
+    use std::path::Path;
 
-        let (n_layer, d_model, vocab) =
-            (weights.config.n_layer, weights.config.d_model, weights.config.vocab);
-        let mut session = RwkvSession {
-            graph,
-            slots,
-            param_bufs,
-            state_bufs: std::collections::HashMap::new(),
-            engine,
-            n_layer,
-            d_model,
-            vocab,
-        };
-        session.reset()?;
-        Ok(session)
+    /// Device-resident RWKV decode session.
+    pub struct RwkvSession {
+        graph: Graph,
+        slots: Vec<InputSlot>,
+        /// parameter buffers uploaded once, keyed like the manifest
+        param_bufs: std::collections::HashMap<String, xla::PjRtBuffer>,
+        /// current recurrent state (device buffers, replaced every step)
+        state_bufs: std::collections::HashMap<String, xla::PjRtBuffer>,
+        engine: Engine,
+        n_layer: usize,
+        d_model: usize,
+        pub vocab: usize,
     }
 
-    /// Reset the recurrent state to the fresh-sequence values.
-    pub fn reset(&mut self) -> Result<()> {
-        let z = vec![0.0f32; self.n_layer * self.d_model];
-        let neg = vec![-1e30f32; self.n_layer * self.d_model];
-        let dims = [self.n_layer, self.d_model];
-        self.state_bufs.clear();
-        for key in STATE_KEYS {
-            let data: &[f32] = if key == "pp" { &neg } else { &z };
-            self.state_bufs
-                .insert(key.to_string(), self.engine.upload_f32(data, &dims)?);
-        }
-        Ok(())
-    }
+    impl RwkvSession {
+        /// Load graph + manifest from `dir` and bind `weights` (every
+        /// parameter uploaded once — packed entries of a quantized
+        /// provider are dequantized transiently, per layer, at upload).
+        pub fn load<W: WeightProvider>(dir: &Path, weights: &W) -> Result<RwkvSession> {
+            let engine = Engine::cpu()?;
+            let graph = engine.load_hlo_text(&dir.join("rwkv_step.hlo.txt"))?;
+            let manifest = std::fs::read_to_string(dir.join("rwkv_step.inputs.txt"))
+                .context("reading input manifest")?;
+            let slots = parse_manifest(&manifest)?;
 
-    /// One decode step: feeds `token`, returns logits, updates state.
-    pub fn step(&mut self, token: usize) -> Result<Vec<f32>> {
-        let tok_lit = xla::Literal::scalar(token as i32);
-        let tok_buf = self
-            .engine
-            .client
-            .buffer_from_host_literal(None, &tok_lit)
-            .map_err(anyhow::Error::msg)?;
-
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.slots.len());
-        for slot in &self.slots {
-            match slot {
-                InputSlot::Token => args.push(&tok_buf),
-                InputSlot::State(k) => {
-                    args.push(self.state_bufs.get(k).context("missing state buffer")?)
-                }
-                InputSlot::Param(n) => {
-                    args.push(self.param_bufs.get(n).context("missing param buffer")?)
+            let index: std::collections::HashMap<&str, usize> = (0..weights.n_entries())
+                .map(|i| (weights.entry_name(i), i))
+                .collect();
+            let mut param_bufs = std::collections::HashMap::new();
+            for slot in &slots {
+                if let InputSlot::Param(name) = slot {
+                    let &i = index
+                        .get(name.as_str())
+                        .with_context(|| format!("weights store missing '{name}'"))?;
+                    // python stores (1,d) vectors; graph may expect (1,d)
+                    // too — shapes were lowered from the same store
+                    let m = weights.materialize_at(i);
+                    let buf = engine.upload_f32(&m.data, &[m.rows, m.cols])?;
+                    param_bufs.insert(name.clone(), buf);
                 }
             }
-        }
-        let outs = self.graph.run_buffers(&args)?;
-        if outs.len() != 1 + STATE_KEYS.len() {
-            bail!("expected {} outputs, got {}", 1 + STATE_KEYS.len(), outs.len());
-        }
-        let logits = literal_f32(&outs[0])?;
-        let dims = [self.n_layer, self.d_model];
-        for (i, key) in STATE_KEYS.iter().enumerate() {
-            let host = literal_f32(&outs[1 + i])?;
-            self.state_bufs
-                .insert(key.to_string(), self.engine.upload_f32(&host, &dims)?);
-        }
-        Ok(logits)
-    }
 
-    /// Greedy-decode `n` tokens after feeding `prompt`.
-    pub fn generate_greedy(&mut self, prompt: &[usize], n: usize) -> Result<Vec<usize>> {
-        self.reset()?;
-        let mut logits = vec![0.0f32; self.vocab];
-        for &t in prompt {
-            logits = self.step(t)?;
+            let cfg = weights.config();
+            let (n_layer, d_model, vocab) = (cfg.n_layer, cfg.d_model, cfg.vocab);
+            let mut session = RwkvSession {
+                graph,
+                slots,
+                param_bufs,
+                state_bufs: std::collections::HashMap::new(),
+                engine,
+                n_layer,
+                d_model,
+                vocab,
+            };
+            session.reset()?;
+            Ok(session)
         }
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let next = crate::tensor::stats::argmax(&logits);
-            out.push(next);
-            logits = self.step(next)?;
+
+        /// Reset the recurrent state to the fresh-sequence values.
+        pub fn reset(&mut self) -> Result<()> {
+            let z = vec![0.0f32; self.n_layer * self.d_model];
+            let neg = vec![-1e30f32; self.n_layer * self.d_model];
+            let dims = [self.n_layer, self.d_model];
+            self.state_bufs.clear();
+            for key in STATE_KEYS {
+                let data: &[f32] = if key == "pp" { &neg } else { &z };
+                self.state_bufs
+                    .insert(key.to_string(), self.engine.upload_f32(data, &dims)?);
+            }
+            Ok(())
         }
-        Ok(out)
+
+        /// One decode step: feeds `token`, returns logits, updates state.
+        pub fn step(&mut self, token: usize) -> Result<Vec<f32>> {
+            let tok_lit = xla::Literal::scalar(token as i32);
+            let tok_buf = self
+                .engine
+                .client
+                .buffer_from_host_literal(None, &tok_lit)
+                .map_err(anyhow::Error::msg)?;
+
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.slots.len());
+            for slot in &self.slots {
+                match slot {
+                    InputSlot::Token => args.push(&tok_buf),
+                    InputSlot::State(k) => {
+                        args.push(self.state_bufs.get(k).context("missing state buffer")?)
+                    }
+                    InputSlot::Param(n) => {
+                        args.push(self.param_bufs.get(n).context("missing param buffer")?)
+                    }
+                }
+            }
+            let outs = self.graph.run_buffers(&args)?;
+            if outs.len() != 1 + STATE_KEYS.len() {
+                bail!("expected {} outputs, got {}", 1 + STATE_KEYS.len(), outs.len());
+            }
+            let logits = literal_f32(&outs[0])?;
+            let dims = [self.n_layer, self.d_model];
+            for (i, key) in STATE_KEYS.iter().enumerate() {
+                let host = literal_f32(&outs[1 + i])?;
+                self.state_bufs
+                    .insert(key.to_string(), self.engine.upload_f32(&host, &dims)?);
+            }
+            Ok(logits)
+        }
+
+        /// Greedy-decode `n` tokens after feeding `prompt`.
+        pub fn generate_greedy(
+            &mut self,
+            prompt: &[usize],
+            n: usize,
+        ) -> Result<Vec<usize>> {
+            self.reset()?;
+            let mut logits = vec![0.0f32; self.vocab];
+            for &t in prompt {
+                logits = self.step(t)?;
+            }
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let next = crate::tensor::stats::argmax(&logits);
+                out.push(next);
+                logits = self.step(next)?;
+            }
+            Ok(out)
+        }
     }
 }
 

@@ -1,12 +1,13 @@
 //! Integration: AOT artifacts (JAX+Pallas → HLO text) executed through
 //! the PJRT runtime, validated against the pure-Rust reference forward.
 //! Requires `make artifacts` (skips politely when absent, so unit CI
-//! without the python toolchain still passes).
+//! without the python toolchain still passes). The PJRT-executing tests
+//! additionally require the `pjrt` cargo feature (the `xla` crate from
+//! the full offline vendor set); without it only the pure-Rust checks
+//! run.
 
-use rwkvquant::model::rwkv::RwkvRunner;
 use rwkvquant::model::ModelWeights;
-use rwkvquant::runtime::rwkv_graph::RwkvSession;
-use rwkvquant::runtime::{artifacts_dir, literal_f32, Engine};
+use rwkvquant::runtime::artifacts_dir;
 
 fn artifacts_ready() -> Option<std::path::PathBuf> {
     let dir = artifacts_dir();
@@ -16,102 +17,6 @@ fn artifacts_ready() -> Option<std::path::PathBuf> {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
         None
     }
-}
-
-#[test]
-fn smoke_graph_loads_and_runs() {
-    let dir = artifacts_dir();
-    if !dir.join("smoke.hlo.txt").exists() {
-        eprintln!("skipping: smoke.hlo.txt missing");
-        return;
-    }
-    let engine = Engine::cpu().unwrap();
-    let g = engine.load_hlo_text(&dir.join("smoke.hlo.txt")).unwrap();
-    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
-    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
-    let outs = g.run_literals(&[x, y]).unwrap();
-    let vals = literal_f32(&outs[0]).unwrap();
-    assert_eq!(vals, vec![5., 5., 9., 9.]);
-}
-
-#[test]
-fn vq_matvec_graph_matches_host_dequant() {
-    let dir = artifacts_dir();
-    if !dir.join("vq_matvec.hlo.txt").exists() {
-        eprintln!("skipping: vq_matvec.hlo.txt missing");
-        return;
-    }
-    let engine = Engine::cpu().unwrap();
-    let g = engine.load_hlo_text(&dir.join("vq_matvec.hlo.txt")).unwrap();
-    // matches vq_matvec.meta.json defaults: 256 entries, d=4, oc=ic=128
-    let (n_entries, d, oc, ic) = (256usize, 4usize, 128usize, 128usize);
-    let mut rng = rwkvquant::util::rng::Rng::new(5);
-    let cb: Vec<f32> = (0..n_entries * d).map(|_| rng.normal() as f32).collect();
-    let idx: Vec<i32> = (0..oc * ic / d).map(|_| rng.below(n_entries) as i32).collect();
-    let x: Vec<f32> = (0..ic).map(|_| rng.normal() as f32).collect();
-
-    let cb_lit = xla::Literal::vec1(&cb).reshape(&[n_entries as i64, d as i64]).unwrap();
-    let idx_lit = xla::Literal::vec1(&idx);
-    let x_lit = xla::Literal::vec1(&x);
-    let outs = g.run_literals(&[cb_lit, idx_lit, x_lit]).unwrap();
-    let got = literal_f32(&outs[0]).unwrap();
-
-    // host-side dequant + matvec oracle
-    let mut want = vec![0.0f32; oc];
-    for r in 0..oc {
-        let mut acc = 0.0f32;
-        for c in 0..ic {
-            let flat = r * ic + c;
-            let e = idx[flat / d] as usize;
-            let w = cb[e * d + flat % d];
-            acc += w * x[c];
-        }
-        want[r] = acc;
-    }
-    for i in 0..oc {
-        assert!(
-            (got[i] - want[i]).abs() < 1e-3 + want[i].abs() * 1e-4,
-            "row {i}: {} vs {}",
-            got[i],
-            want[i]
-        );
-    }
-}
-
-#[test]
-fn rwkv_step_graph_matches_rust_reference() {
-    let Some(dir) = artifacts_ready() else { return };
-    let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
-    let mut session = RwkvSession::load(&dir, &weights).unwrap();
-    let mut reference = RwkvRunner::new(&weights);
-
-    let tokens = [3usize, 17, 99, 5, 200, 42, 7];
-    for (i, &t) in tokens.iter().enumerate() {
-        let got = session.step(t).unwrap();
-        let want = reference.forward_token(t);
-        assert_eq!(got.len(), want.len());
-        let max_abs: f32 = want.iter().fold(0.0, |m, v| m.max(v.abs()));
-        for c in 0..got.len() {
-            assert!(
-                (got[c] - want[c]).abs() < 1e-2 + max_abs * 1e-3,
-                "step {i} logit {c}: pjrt {} vs rust {}",
-                got[c],
-                want[c]
-            );
-        }
-    }
-}
-
-#[test]
-fn rwkv_session_greedy_generation_is_deterministic() {
-    let Some(dir) = artifacts_ready() else { return };
-    let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
-    let mut session = RwkvSession::load(&dir, &weights).unwrap();
-    let a = session.generate_greedy(&[1, 2, 3], 8).unwrap();
-    let b = session.generate_greedy(&[1, 2, 3], 8).unwrap();
-    assert_eq!(a, b);
-    assert_eq!(a.len(), 8);
-    assert!(a.iter().all(|&t| t < weights.config.vocab));
 }
 
 #[test]
@@ -126,4 +31,126 @@ fn trained_model_beats_uniform_ppl_in_rust() {
         ppl < uniform / 3.0,
         "trained ppl {ppl} must beat uniform {uniform} clearly"
     );
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::{artifacts_ready, ModelWeights};
+    use rwkvquant::model::rwkv::RwkvRunner;
+    use rwkvquant::runtime::rwkv_graph::RwkvSession;
+    use rwkvquant::runtime::{artifacts_dir, literal_f32, Engine};
+
+    #[test]
+    fn smoke_graph_loads_and_runs() {
+        let dir = artifacts_dir();
+        if !dir.join("smoke.hlo.txt").exists() {
+            eprintln!("skipping: smoke.hlo.txt missing");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let g = engine.load_hlo_text(&dir.join("smoke.hlo.txt")).unwrap();
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+        let outs = g.run_literals(&[x, y]).unwrap();
+        let vals = literal_f32(&outs[0]).unwrap();
+        assert_eq!(vals, vec![5., 5., 9., 9.]);
+    }
+
+    #[test]
+    fn vq_matvec_graph_matches_host_dequant() {
+        let dir = artifacts_dir();
+        if !dir.join("vq_matvec.hlo.txt").exists() {
+            eprintln!("skipping: vq_matvec.hlo.txt missing");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let g = engine.load_hlo_text(&dir.join("vq_matvec.hlo.txt")).unwrap();
+        // matches vq_matvec.meta.json defaults: 256 entries, d=4, oc=ic=128
+        let (n_entries, d, oc, ic) = (256usize, 4usize, 128usize, 128usize);
+        let mut rng = rwkvquant::util::rng::Rng::new(5);
+        let cb: Vec<f32> = (0..n_entries * d).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<i32> = (0..oc * ic / d).map(|_| rng.below(n_entries) as i32).collect();
+        let x: Vec<f32> = (0..ic).map(|_| rng.normal() as f32).collect();
+
+        let cb_lit = xla::Literal::vec1(&cb).reshape(&[n_entries as i64, d as i64]).unwrap();
+        let idx_lit = xla::Literal::vec1(&idx);
+        let x_lit = xla::Literal::vec1(&x);
+        let outs = g.run_literals(&[cb_lit, idx_lit, x_lit]).unwrap();
+        let got = literal_f32(&outs[0]).unwrap();
+
+        // host-side dequant + matvec oracle
+        let mut want = vec![0.0f32; oc];
+        for r in 0..oc {
+            let mut acc = 0.0f32;
+            for c in 0..ic {
+                let flat = r * ic + c;
+                let e = idx[flat / d] as usize;
+                let w = cb[e * d + flat % d];
+                acc += w * x[c];
+            }
+            want[r] = acc;
+        }
+        for i in 0..oc {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-3 + want[i].abs() * 1e-4,
+                "row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rwkv_step_graph_matches_rust_reference() {
+        let Some(dir) = artifacts_ready() else { return };
+        let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
+        let mut session = RwkvSession::load(&dir, &weights).unwrap();
+        let mut reference = RwkvRunner::new(&weights);
+
+        let tokens = [3usize, 17, 99, 5, 200, 42, 7];
+        for (i, &t) in tokens.iter().enumerate() {
+            let got = session.step(t).unwrap();
+            let want = reference.forward_token(t);
+            assert_eq!(got.len(), want.len());
+            let max_abs: f32 = want.iter().fold(0.0, |m, v| m.max(v.abs()));
+            for c in 0..got.len() {
+                assert!(
+                    (got[c] - want[c]).abs() < 1e-2 + max_abs * 1e-3,
+                    "step {i} logit {c}: pjrt {} vs rust {}",
+                    got[c],
+                    want[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rwkv_session_greedy_generation_is_deterministic() {
+        let Some(dir) = artifacts_ready() else { return };
+        let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
+        let mut session = RwkvSession::load(&dir, &weights).unwrap();
+        let a = session.generate_greedy(&[1, 2, 3], 8).unwrap();
+        let b = session.generate_greedy(&[1, 2, 3], 8).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| t < weights.config.vocab));
+    }
+
+    #[test]
+    fn rwkv_session_loads_from_quantized_provider() {
+        // quantized serving through the PJRT path: packed layers are
+        // materialised per-layer at upload, never as a whole dense model
+        let Some(dir) = artifacts_ready() else { return };
+        let weights = ModelWeights::load(&dir.join("tiny_rwkv.bin")).unwrap();
+        let cfg = rwkvquant::config::QuantConfig {
+            kmeans_iters: 4,
+            vq_bits: 6,
+            ..rwkvquant::config::QuantConfig::default()
+        };
+        let (q, _) = rwkvquant::coordinator::quantize_model(&weights, None, &cfg, 0);
+        let qm = rwkvquant::model::QuantizedModel::from_parts(&weights, &q);
+        let mut session = RwkvSession::load(&dir, &qm).unwrap();
+        let logits = session.step(3).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
 }

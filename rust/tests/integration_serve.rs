@@ -5,9 +5,10 @@
 
 use rwkvquant::config::{ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve, Request, Response, RunnerDecoder};
+use rwkvquant::coordinator::serve::{serve, serve_collect, Decoder, Request, Response, RunnerDecoder};
 use rwkvquant::eval::dequantized_model;
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
+use rwkvquant::model::QuantizedModel;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -17,9 +18,10 @@ fn quantized_model_serves_batched_requests() {
     let m = generate_rwkv(&cfg, Family::Rwkv, 5);
     let qc = QuantConfig { kmeans_iters: 5, ..QuantConfig::default() };
     let (q, rep) = quantize_model(&m, None, &qc, 0);
-    let dq = dequantized_model(&m, &q);
+    // serve straight from the packed payloads
+    let qm = QuantizedModel::from_parts(&m, &q);
 
-    let mut dec = RunnerDecoder::new(&dq);
+    let mut dec = RunnerDecoder::new(&qm);
     let (tx_req, rx_req) = mpsc::channel();
     let (tx_resp, rx_resp) = mpsc::channel();
     for id in 0..10u64 {
@@ -81,4 +83,37 @@ fn batch_size_does_not_change_greedy_outputs() {
     };
 
     assert_eq!(run_with_batch(1), run_with_batch(4));
+}
+
+#[test]
+fn packed_decoder_completes_with_same_tokens_as_dequantized_twin() {
+    let cfg = ModelConfig::rwkv6(2, 64, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 11);
+    let qc = QuantConfig { kmeans_iters: 5, vq_bits: 7, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let qm = QuantizedModel::from_parts(&m, &q);
+    let dq = dequantized_model(&m, &q);
+
+    fn run<D: Decoder>(dec: &mut D) -> Vec<(u64, Vec<usize>)> {
+        let requests: Vec<Request> = (0..6u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id as usize * 17 + 1) % 128, 9, 4],
+                gen_len: 5,
+            })
+            .collect();
+        let (_, responses) =
+            serve_collect(dec, requests, 3, Duration::from_millis(1)).unwrap();
+        responses.into_iter().map(|r| (r.id, r.tokens)).collect()
+    }
+
+    let mut packed_dec = RunnerDecoder::new(&qm);
+    let mut dense_dec = RunnerDecoder::new(&dq);
+    let packed_out = run(&mut packed_dec);
+    let dense_out = run(&mut dense_dec);
+    assert_eq!(
+        packed_out, dense_out,
+        "packed serving must produce the dequantized twin's greedy tokens"
+    );
+    assert!(qm.n_packed() > 0, "the packed decoder must actually serve packed layers");
 }
