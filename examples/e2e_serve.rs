@@ -18,25 +18,30 @@
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_serve
+//! # fan each batch tick over 4 worker threads (token-identical output):
+//! cargo run --release --example e2e_serve -- --tick-threads 4
 //! ```
 
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::QuantConfig;
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    serve_collect, Decoder, Request, Response, RunnerDecoder, ServeStats,
+    serve_collect_pool, Decoder, Request, Response, RunnerDecoder, ServeStats,
 };
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
 use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
+use rwkvquant::quant::exec;
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::runtime::artifacts_dir;
+use rwkvquant::util::cli::Args;
 use std::time::Duration;
 use std::time::Instant;
 
-/// Serve a fixed request set drawn from the corpus through `decoder`.
-fn serve_requests<D: Decoder>(
-    decoder: &mut D,
+/// Serve a fixed request set drawn from the corpus through a decoder
+/// pool (one decoder per tick worker; `&mut [d]` of one is sequential).
+fn serve_requests<D: Decoder + Send>(
+    decoders: &mut [D],
     corpus: &BinCorpus,
     n_req: u64,
 ) -> rwkvquant::Result<(ServeStats, Vec<Response>)> {
@@ -46,10 +51,12 @@ fn serve_requests<D: Decoder>(
             Request { id, prompt: corpus.valid[start..start + 8].to_vec(), gen_len: 16 }
         })
         .collect();
-    serve_collect(decoder, requests, 8, Duration::from_millis(2))
+    serve_collect_pool(decoders, requests, 8, Duration::from_millis(2))
 }
 
 fn main() -> rwkvquant::Result<()> {
+    let args = Args::from_env();
+    let tick_threads = args.get_usize("tick-threads", 1).max(1);
     let dir = artifacts_dir();
     if !dir.join("tiny_rwkv.bin").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");
@@ -137,15 +144,21 @@ fn main() -> rwkvquant::Result<()> {
     );
 
     // ---- 5. batched serving: dense fp32 vs packed quantized ----
+    println!(
+        "serving with the {} matvec kernel, {} tick thread{}",
+        exec::active_kernel().name(),
+        tick_threads,
+        if tick_threads == 1 { "" } else { "s" },
+    );
     let n_req = 24u64;
-    let mut fp_dec = RunnerDecoder::new(&model);
-    let (fp_stats, _fp_resp) = serve_requests(&mut fp_dec, &corpus, n_req)?;
-    let mut q_dec = RunnerDecoder::new(&qm);
-    let (q_stats, q_resp) = serve_requests(&mut q_dec, &corpus, n_req)?;
+    let mut fp_decs: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&model)).collect();
+    let (fp_stats, _fp_resp) = serve_requests(&mut fp_decs, &corpus, n_req)?;
+    let mut q_decs: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
+    let (q_stats, q_resp) = serve_requests(&mut q_decs, &corpus, n_req)?;
     // greedy outputs from the packed path must match the dequantized twin
     let dq = dequantized_model(&model, &quant);
-    let mut dq_dec = RunnerDecoder::new(&dq);
-    let (_, dq_resp) = serve_requests(&mut dq_dec, &corpus, n_req)?;
+    let mut dq_decs = vec![RunnerDecoder::new(&dq)];
+    let (_, dq_resp) = serve_requests(&mut dq_decs, &corpus, n_req)?;
     let mismatches = q_resp
         .iter()
         .zip(&dq_resp)

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""CI perf-trajectory gate over BENCH_serve.json.
+
+Compares the packed served throughput of a fresh bench run against the
+committed baseline and exits non-zero when it regresses by more than the
+threshold. BENCH_serve.json is written by
+
+    RWKVQUANT_BENCH_FAST=1 cargo bench --bench table4_speed_memory
+
+Baselines carrying ``"provisional": true`` (committed before any
+measured CI run exists) report the current numbers but never fail — the
+gate arms itself the first time a measured BENCH_serve.json is
+committed.
+
+Usage:
+    python3 python/check_bench_regression.py BASELINE CURRENT [--threshold 0.10]
+"""
+
+import argparse
+import json
+import sys
+
+
+def lookup(obj, dotted_key):
+    """Walk a dotted key ("quant.tokens_per_sec") through nested dicts."""
+    node = obj
+    for part in dotted_key.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(f"key '{dotted_key}' missing at '{part}'")
+        node = node[part]
+    return float(node)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("baseline", help="committed BENCH_serve.json")
+    parser.add_argument("current", help="BENCH_serve.json from this run")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="max tolerated fractional regression (default 0.10 = 10%%)",
+    )
+    parser.add_argument(
+        "--key",
+        default="quant.tokens_per_sec",
+        help="dotted metric key to gate on (default: packed served throughput)",
+    )
+    args = parser.parse_args()
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.current) as fh:
+        cur = json.load(fh)
+
+    new = lookup(cur, args.key)
+    print(f"current  {args.key} = {new:.2f}")
+
+    if base.get("provisional"):
+        print("baseline is provisional (no measured CI run committed yet) — gate skipped")
+        print("commit this run's BENCH_serve.json artifact to arm the regression gate")
+        return 0
+
+    old = lookup(base, args.key)
+    floor = old * (1.0 - args.threshold)
+    print(f"baseline {args.key} = {old:.2f} (floor at -{args.threshold:.0%}: {floor:.2f})")
+    if new < floor:
+        print(
+            f"FAIL: {args.key} regressed {1.0 - new / old:.1%} "
+            f"(> {args.threshold:.0%} allowed)"
+        )
+        return 1
+    delta = new / old - 1.0
+    print(f"OK: {args.key} changed {delta:+.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,8 @@ use rwkvquant::config::{Method, ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::model::rwkv::{init_params, RwkvRunner};
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
-use rwkvquant::quant::{exec, proxy, sq};
+use rwkvquant::quant::exec::{self, Kernel};
+use rwkvquant::quant::{proxy, sq, vq};
 use rwkvquant::tensor::{linalg, Matrix};
 use rwkvquant::util::benchkit::{throughput, Bencher};
 use rwkvquant::util::rng::Rng;
@@ -14,6 +15,7 @@ use rwkvquant::util::rng::Rng;
 fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::new(7);
+    println!("detected matvec kernel: {}", exec::active_kernel().name());
 
     // L3 hot loop: rust reference decode step (d=512 model)
     let cfg = ModelConfig::rwkv6(12, 384, 512);
@@ -26,15 +28,24 @@ fn main() {
     });
     println!("decode: {:.1} tokens/s", throughput(1.0, s));
 
-    // dense vs quantized matvec at serving dims
+    // dense vs quantized matvec at serving dims, scalar vs detected SIMD
     for &dim in &[1024usize, 2048] {
         let mut w = Matrix::zeros(dim, dim);
         rng.fill_normal(&mut w.data, 0.0, 0.05);
         let q3 = sq::rtn::quantize(&w, 3, 64);
+        // few k-means iters: the bench measures the matvec, not the fit
+        let qv = vq::kmeans::quantize(&w, 6, 4, 2, &mut Rng::new(dim as u64));
         let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
         let mut y = vec![0.0f32; dim];
         b.bench(&format!("matvec fp32 {dim}x{dim}"), || linalg::matvec_into(&w, &x, &mut y));
-        b.bench(&format!("matvec q3 packed {dim}x{dim}"), || exec::matvec_sq(&q3, &x, &mut y));
+        for k in Kernel::available() {
+            b.bench(&format!("matvec q3 {} {dim}x{dim}", k.name()), || {
+                exec::matvec_sq_with(k, &q3, &x, &mut y)
+            });
+            b.bench(&format!("matvec vq {} {dim}x{dim}", k.name()), || {
+                exec::matvec_vq_with(k, &qv, &x, &mut y)
+            });
+        }
     }
 
     // proxy cost on a realistic layer

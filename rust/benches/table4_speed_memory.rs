@@ -14,12 +14,13 @@
 //!       future PRs.
 
 use rwkvquant::config::Method;
-use rwkvquant::coordinator::serve::{serve_collect, Request, RunnerDecoder, ServeStats};
+use rwkvquant::coordinator::serve::{serve_collect_pool, Request, RunnerDecoder, ServeStats};
 use rwkvquant::experiments::{bench_config, build_model, fast_mode};
 use rwkvquant::model::flops::{rwkv_step, CostModel};
 use rwkvquant::model::synthetic::size_config;
 use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
-use rwkvquant::quant::{exec, sq};
+use rwkvquant::quant::exec::{self, Kernel};
+use rwkvquant::quant::sq;
 use rwkvquant::report::json::Json;
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::tensor::{linalg, Matrix};
@@ -27,14 +28,17 @@ use rwkvquant::util::benchkit::Bencher;
 use rwkvquant::util::rng::Rng;
 use std::time::Duration;
 
-/// Push a fixed request set through `serve` over the given provider.
+/// Push a fixed request set through `serve` over the given provider,
+/// with `tick_threads` decode workers per batch tick.
 fn serve_tokens_per_sec<W: WeightProvider>(
     weights: &W,
     n_req: u64,
     gen_len: usize,
+    tick_threads: usize,
 ) -> ServeStats {
     let vocab = weights.config().vocab;
-    let mut dec = RunnerDecoder::new(weights);
+    let mut decoders: Vec<_> =
+        (0..tick_threads.max(1)).map(|_| RunnerDecoder::new(weights)).collect();
     let requests: Vec<Request> = (0..n_req)
         .map(|id| Request {
             id,
@@ -43,17 +47,20 @@ fn serve_tokens_per_sec<W: WeightProvider>(
         })
         .collect();
     let (stats, _) =
-        serve_collect(&mut dec, requests, 8, Duration::from_millis(1)).unwrap();
+        serve_collect_pool(&mut decoders, requests, 8, Duration::from_millis(1)).unwrap();
     stats
 }
 
 fn main() {
-    // ---- (b) hot-loop decode matvec: dense fp32 vs packed 3-bit ----
+    let simd = exec::active_kernel();
+    // ---- (b) hot-loop decode matvec: dense fp32 vs packed 3-bit,
+    //          scalar vs the detected SIMD kernel ----
     let mut t2 = Table::new(
-        "Table 4b — decode matvec, dense fp32 vs packed 3-bit stream",
-        &["dim", "fp32 µs", "quant µs", "speedup", "bytes fp32", "bytes quant"],
+        format!("Table 4b — decode matvec, fp32 vs packed 3-bit (simd = {})", simd.name()),
+        &["dim", "fp32 µs", "scalar µs", "simd µs", "simd/scalar", "fp32/simd", "bytes quant"],
     );
     let mut b = Bencher::new();
+    let mut matvec_rows: Vec<Json> = Vec::new();
     for &dim in &[512usize, 1024, 2048] {
         let mut rng = Rng::new(dim as u64);
         let mut w = Matrix::zeros(dim, dim);
@@ -65,18 +72,31 @@ fn main() {
             linalg::matvec_into(&w, &x, &mut y)
         });
         let fp_ns = fp.median_ns();
-        let qn = b.bench(&format!("quant matvec {dim}"), || {
-            exec::matvec_sq(&q, &x, &mut y)
+        let sc = b.bench(&format!("quant matvec scalar {dim}"), || {
+            exec::matvec_sq_with(Kernel::Scalar, &q, &x, &mut y)
         });
-        let q_ns = qn.median_ns();
+        let sc_ns = sc.median_ns();
+        let sd = b.bench(&format!("quant matvec {} {dim}", simd.name()), || {
+            exec::matvec_sq_with(simd, &q, &x, &mut y)
+        });
+        let sd_ns = sd.median_ns();
         t2.row(vec![
             Cell::Int(dim as i64),
             Cell::f(fp_ns / 1e3, 1),
-            Cell::f(q_ns / 1e3, 1),
-            Cell::f(fp_ns / q_ns, 2),
-            Cell::Int((dim * dim * 4) as i64),
+            Cell::f(sc_ns / 1e3, 1),
+            Cell::f(sd_ns / 1e3, 1),
+            Cell::f(sc_ns / sd_ns, 2),
+            Cell::f(fp_ns / sd_ns, 2),
             Cell::Int((q.storage_bits() / 8) as i64),
         ]);
+        matvec_rows.push(
+            Json::obj()
+                .set("dim", dim)
+                .set("fp32_us", fp_ns / 1e3)
+                .set("scalar_us", sc_ns / 1e3)
+                .set("simd_us", sd_ns / 1e3)
+                .set("simd_speedup", sc_ns / sd_ns),
+        );
     }
     t2.print();
     t2.save_csv("table4_matvec");
@@ -116,11 +136,14 @@ fn main() {
     let cfg = bench_config(Method::RwkvQuant, 3.275, 9);
     let (q, rep) = rwkvquant::coordinator::quantize_model(&m, None, &cfg, 0);
     let qm = QuantizedModel::from_parts(&m, &q);
-    let fp_stats = serve_tokens_per_sec(&m, n_req, gen_len);
-    let q_stats = serve_tokens_per_sec(&qm, n_req, gen_len);
+    let fp_stats = serve_tokens_per_sec(&m, n_req, gen_len, 1);
+    let q_stats = serve_tokens_per_sec(&qm, n_req, gen_len, 1);
+    let tick_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+    let q_mt_stats = serve_tokens_per_sec(&qm, n_req, gen_len, tick_threads);
     let speedup = q_stats.tokens_per_sec() / fp_stats.tokens_per_sec().max(1e-9);
+    let mt_speedup = q_mt_stats.tokens_per_sec() / q_stats.tokens_per_sec().max(1e-9);
     let mut t3 = Table::new(
-        "Table 4d — served decode throughput (coordinator::serve)",
+        format!("Table 4d — served decode throughput ({} kernel)", simd.name()),
         &["path", "tok/s", "bits/weight", "p50", "p99"],
     );
     t3.row(vec![
@@ -137,16 +160,28 @@ fn main() {
         Cell::s(format!("{:?}", q_stats.p50_latency)),
         Cell::s(format!("{:?}", q_stats.p99_latency)),
     ]);
+    t3.row(vec![
+        Cell::s(format!("packed quant ×{tick_threads} ticks")),
+        Cell::f(q_mt_stats.tokens_per_sec(), 1),
+        Cell::f(qm.packed_bpw(), 3),
+        Cell::s(format!("{:?}", q_mt_stats.p50_latency)),
+        Cell::s(format!("{:?}", q_mt_stats.p99_latency)),
+    ]);
     t3.print();
     println!("served speedup (packed vs fp32): {speedup:.2}x");
+    println!("threaded-tick speedup (×{tick_threads} vs sequential): {mt_speedup:.2}x");
 
-    // perf-trajectory baseline for future PRs
+    // perf-trajectory baseline for future PRs (the CI bench-baseline job
+    // gates on `speedup`, with an absolute quant.tokens_per_sec backstop
+    // — see python/check_bench_regression.py)
     let bench = Json::obj()
         .set("bench", "table4d_served")
         .set("model", format!("rwkv6-{size}-synthetic"))
         .set("requests", n_req as usize)
         .set("gen_len", gen_len)
         .set("avg_bpw", rep.avg_bpw)
+        .set("kernel", simd.name())
+        .set("matvec_simd", Json::Arr(matvec_rows))
         .set(
             "fp32",
             Json::obj()
@@ -158,6 +193,12 @@ fn main() {
             Json::obj()
                 .set("tokens_per_sec", q_stats.tokens_per_sec())
                 .set("bits_per_weight", qm.packed_bpw()),
+        )
+        .set(
+            "quant_threaded",
+            Json::obj()
+                .set("tokens_per_sec", q_mt_stats.tokens_per_sec())
+                .set("tick_threads", tick_threads),
         )
         .set("speedup", speedup);
     match std::fs::write("BENCH_serve.json", bench.render()) {

@@ -35,6 +35,17 @@ impl<T> DynamicBatcher<T> {
         self.queue.len()
     }
 
+    /// Time until the head-of-queue request ages past `max_wait` — the
+    /// instant [`DynamicBatcher::admit`] is next guaranteed to fire even
+    /// without new arrivals. `None` when nothing is queued. The serving
+    /// loop uses this to bound its idle wait instead of polling at a
+    /// fixed cadence.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue
+            .front()
+            .map(|p| (p.arrived + self.max_wait).saturating_duration_since(now))
+    }
+
     /// Admit up to `slots` items if the batch-forming condition holds:
     /// the queue can fill the batch, or the head has waited long enough.
     /// Admission is FIFO (no starvation).
@@ -105,6 +116,27 @@ mod tests {
         let batch = b.admit(3, now + Duration::from_millis(1));
         assert_eq!(batch.len(), 3);
         assert_eq!(b.queue_len(), 5);
+    }
+
+    #[test]
+    fn next_deadline_tracks_head_age() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(100));
+        let now = t0();
+        assert_eq!(b.next_deadline(now), None);
+        b.push(1, now);
+        b.push(2, now + Duration::from_millis(50));
+        // head governs: full window remaining at arrival…
+        assert_eq!(b.next_deadline(now), Some(Duration::from_millis(100)));
+        // …half the window 50ms in…
+        assert_eq!(
+            b.next_deadline(now + Duration::from_millis(50)),
+            Some(Duration::from_millis(50))
+        );
+        // …and saturates at zero once aged (admit would fire now)
+        assert_eq!(
+            b.next_deadline(now + Duration::from_millis(250)),
+            Some(Duration::ZERO)
+        );
     }
 
     #[test]

@@ -90,10 +90,97 @@ struct Active {
     prompt_pos: usize,
 }
 
-/// Run the serving loop until every request from `rx` is answered
-/// (the channel must be closed by the submitters).
-pub fn serve<D: Decoder>(
-    decoder: &mut D,
+/// Advance one sequence by one token: swap its state in, feed the next
+/// prompt token or the greedy continuation, swap the state back out.
+/// Returns whether a generated (non-prompt) token was produced.
+fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active) -> bool {
+    decoder.load_state(&a.state);
+    let (tok, generated) = if a.prompt_pos < a.req.prompt.len() {
+        let t = a.req.prompt[a.prompt_pos];
+        a.prompt_pos += 1;
+        (t, false)
+    } else {
+        let next = stats::argmax(&a.logits);
+        a.generated.push(next);
+        (next, true)
+    };
+    a.logits = decoder.step(tok);
+    a.state = decoder.save_state();
+    generated
+}
+
+/// How one continuous-batching tick executes: sequentially on a single
+/// decoder, or fanned out over a decoder pool. The serving loop is
+/// written once against this.
+trait TickEngine {
+    fn vocab(&self) -> usize;
+    /// Fresh recurrent state for a newly-admitted sequence.
+    fn init_state(&mut self) -> Vec<Vec<f32>>;
+    /// Advance every active sequence one token; returns the number of
+    /// generated (non-prompt) tokens.
+    fn tick(&mut self, active: &mut [Active]) -> usize;
+}
+
+struct Sequential<'d, D: Decoder>(&'d mut D);
+
+impl<D: Decoder> TickEngine for Sequential<'_, D> {
+    fn vocab(&self) -> usize {
+        self.0.vocab()
+    }
+
+    fn init_state(&mut self) -> Vec<Vec<f32>> {
+        self.0.reset();
+        self.0.save_state()
+    }
+
+    fn tick(&mut self, active: &mut [Active]) -> usize {
+        active.iter_mut().map(|a| usize::from(tick_one(self.0, a))).sum()
+    }
+}
+
+/// One decoder per worker; each tick splits the active set into
+/// contiguous chunks and advances them on scoped threads. Sequences are
+/// fully state-swapped, so which decoder serves which sequence cannot
+/// change the tokens — only the wall clock.
+struct Pool<'d, D: Decoder + Send>(&'d mut [D]);
+
+impl<D: Decoder + Send> TickEngine for Pool<'_, D> {
+    fn vocab(&self) -> usize {
+        self.0[0].vocab()
+    }
+
+    fn init_state(&mut self) -> Vec<Vec<f32>> {
+        self.0[0].reset();
+        self.0[0].save_state()
+    }
+
+    fn tick(&mut self, active: &mut [Active]) -> usize {
+        let workers = self.0.len().min(active.len());
+        if workers <= 1 {
+            let dec = &mut self.0[0];
+            return active.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum();
+        }
+        let chunk = active.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = active
+                .chunks_mut(chunk)
+                .zip(self.0.iter_mut())
+                .map(|(slice, dec)| {
+                    s.spawn(move || {
+                        slice.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum::<usize>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tick worker panicked")).sum()
+        })
+    }
+}
+
+/// The serving loop body, written once for the sequential and pooled
+/// engines. Runs until every request from `rx` is answered (the channel
+/// must be closed by the submitters).
+fn serve_loop(
+    engine: &mut dyn TickEngine,
     rx: mpsc::Receiver<Request>,
     tx: mpsc::Sender<Response>,
     max_batch: usize,
@@ -126,60 +213,52 @@ pub fn serve<D: Decoder>(
         // admit into free slots
         let now = Instant::now();
         for pending in batcher.admit(max_batch - active.len(), now) {
-            let mut st = Active {
+            active.push(Active {
                 req: pending.item,
                 arrived: pending.arrived,
                 started: now,
-                state: Vec::new(),
-                logits: vec![0.0; decoder.vocab()],
+                state: engine.init_state(),
+                logits: vec![0.0; engine.vocab()],
                 generated: Vec::new(),
                 prompt_pos: 0,
-            };
-            decoder.reset();
-            st.state = decoder.save_state();
-            active.push(st);
+            });
         }
 
         if active.is_empty() {
             if !channel_open && batcher.queue_len() == 0 {
                 break;
             }
+            // bounded wait until the head-of-queue admission deadline —
+            // never a fixed-cadence poll, never an unbounded block
+            let wait = batcher
+                .next_deadline(Instant::now())
+                .map_or(idle_wait, |d| d.min(idle_wait))
+                .max(Duration::from_micros(50));
             if channel_open {
-                // idle: block on the channel (bounded) instead of spinning
-                match rx.recv_timeout(idle_wait) {
+                match rx.recv_timeout(wait) {
                     Ok(req) => batcher.push(req, Instant::now()),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => channel_open = false,
                 }
             } else {
-                // closed channel, queued items waiting out the batching
-                // window — sleep a tick rather than busy-poll admit()
-                std::thread::sleep(Duration::from_micros(200));
+                // channel closed, queued items waiting out the batching
+                // window: recv_timeout would return Disconnected at once,
+                // so sleep out the same bounded deadline instead
+                std::thread::sleep(wait);
             }
             continue;
         }
 
         // one continuous-batching tick: advance every active sequence
-        let mut finished: Vec<usize> = Vec::new();
-        for (i, a) in active.iter_mut().enumerate() {
-            decoder.load_state(&a.state);
-            let tok = if a.prompt_pos < a.req.prompt.len() {
-                let t = a.req.prompt[a.prompt_pos];
-                a.prompt_pos += 1;
-                t
-            } else {
-                let next = stats::argmax(&a.logits);
-                a.generated.push(next);
-                total_tokens += 1;
-                next
-            };
-            a.logits = decoder.step(tok);
-            a.state = decoder.save_state();
-            if a.generated.len() >= a.req.gen_len {
-                finished.push(i);
+        total_tokens += engine.tick(&mut active);
+
+        // retire finished sequences
+        let mut i = 0usize;
+        while i < active.len() {
+            if active[i].generated.len() < active[i].req.gen_len {
+                i += 1;
+                continue;
             }
-        }
-        for &i in finished.iter().rev() {
             let a = active.swap_remove(i);
             let latency = a.started.elapsed();
             latencies.push(latency);
@@ -204,14 +283,44 @@ pub fn serve<D: Decoder>(
     })
 }
 
-/// Convenience driver: push a fixed request set through [`serve`] and
-/// collect every response, sorted by request id. Shared by the CLI, the
-/// e2e example, the serve benches and the tests.
-pub fn serve_collect<D: Decoder>(
+/// Run the serving loop on a single decoder until every request from
+/// `rx` is answered (the channel must be closed by the submitters).
+pub fn serve<D: Decoder>(
     decoder: &mut D,
-    requests: Vec<Request>,
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Response>,
     max_batch: usize,
     max_wait: Duration,
+) -> Result<ServeStats> {
+    serve_loop(&mut Sequential(decoder), rx, tx, max_batch, max_wait)
+}
+
+/// Threaded variant of [`serve`]: one decoder per worker thread; the
+/// per-sequence decode steps of each tick fan out across the pool
+/// (sequence state is fully swapped in/out, so the output is
+/// token-identical to the sequential path). Callers pick the
+/// parallelism by the number of decoders they build — the
+/// `--tick-threads` knob upstream.
+///
+/// Workers are scoped threads spawned per tick, so each tick pays the
+/// spawn cost and starts with cold thread-local matvec scratch; this
+/// amortises well when one sequence step costs ≳100µs (the quantized
+/// lineup sizes) but can lose to the sequential path on tiny models —
+/// keep the default of 1 there. A persistent pool is a roadmap item.
+pub fn serve_pool<D: Decoder + Send>(
+    decoders: &mut [D],
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Response>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<ServeStats> {
+    anyhow::ensure!(!decoders.is_empty(), "serve_pool needs at least one decoder");
+    serve_loop(&mut Pool(decoders), rx, tx, max_batch, max_wait)
+}
+
+fn collect_responses(
+    requests: Vec<Request>,
+    run: impl FnOnce(mpsc::Receiver<Request>, mpsc::Sender<Response>) -> Result<ServeStats>,
 ) -> Result<(ServeStats, Vec<Response>)> {
     let (tx_req, rx_req) = mpsc::channel();
     let (tx_resp, rx_resp) = mpsc::channel();
@@ -221,10 +330,32 @@ pub fn serve_collect<D: Decoder>(
             .map_err(|e| anyhow::anyhow!("request channel closed: {e}"))?;
     }
     drop(tx_req);
-    let stats = serve(decoder, rx_req, tx_resp, max_batch, max_wait)?;
+    let stats = run(rx_req, tx_resp)?;
     let mut responses: Vec<Response> = rx_resp.iter().collect();
     responses.sort_by_key(|r| r.id);
     Ok((stats, responses))
+}
+
+/// Convenience driver: push a fixed request set through [`serve`] and
+/// collect every response, sorted by request id. Shared by the CLI, the
+/// e2e example, the serve benches and the tests.
+pub fn serve_collect<D: Decoder>(
+    decoder: &mut D,
+    requests: Vec<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<(ServeStats, Vec<Response>)> {
+    collect_responses(requests, |rx, tx| serve(decoder, rx, tx, max_batch, max_wait))
+}
+
+/// [`serve_collect`] over a decoder pool (see [`serve_pool`]).
+pub fn serve_collect_pool<D: Decoder + Send>(
+    decoders: &mut [D],
+    requests: Vec<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<(ServeStats, Vec<Response>)> {
+    collect_responses(requests, |rx, tx| serve_pool(decoders, rx, tx, max_batch, max_wait))
 }
 
 /// [`Decoder`] over the pure-Rust reference runner, generic over the
@@ -337,6 +468,32 @@ mod tests {
         let got: Vec<Response> = rx_resp.iter().collect();
         let r0 = got.iter().find(|r| r.id == 0).unwrap();
         assert_eq!(r0.tokens, want, "interleaving must not change outputs");
+    }
+
+    #[test]
+    fn pooled_ticks_are_token_identical_to_sequential() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(4));
+        let requests = || -> Vec<Request> {
+            (0..9u64)
+                .map(|id| Request {
+                    id,
+                    prompt: vec![(id as usize * 5 + 1) % 32, 2],
+                    gen_len: 6,
+                })
+                .collect()
+        };
+        let mut seq_dec = RunnerDecoder::new(&m);
+        let (_, seq) =
+            serve_collect(&mut seq_dec, requests(), 4, Duration::from_millis(1)).unwrap();
+        for threads in [1usize, 3] {
+            let mut decs: Vec<_> = (0..threads).map(|_| RunnerDecoder::new(&m)).collect();
+            let (stats, pooled) =
+                serve_collect_pool(&mut decs, requests(), 4, Duration::from_millis(1)).unwrap();
+            assert_eq!(stats.completed, 9);
+            let a: Vec<_> = seq.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            let b: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            assert_eq!(a, b, "{threads}-thread pool must match sequential tokens");
+        }
     }
 
     #[test]

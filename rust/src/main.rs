@@ -10,7 +10,7 @@
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve_collect, Request, RunnerDecoder};
+use rwkvquant::coordinator::serve::{serve_collect_pool, Request, RunnerDecoder};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
@@ -34,6 +34,7 @@ fn help() -> String {
         .opt("arch", "synthetic arch rwkv6|rwkv7 (default rwkv6)")
         .opt("requests", "serve: number of requests (default 16)")
         .opt("batch", "serve: max batch (default 8)")
+        .opt("tick-threads", "serve: worker threads per batch tick (default 1)")
         .opt("seed", "rng seed (default 42)")
         .render()
 }
@@ -129,13 +130,18 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
     let (q, rep) = quantize_model(&model, None, &cfg, 0);
     // serve straight from the packed payloads — no dense materialisation
     let qm = QuantizedModel::from_parts(&model, &q);
+    let tick_threads = args.get_usize("tick-threads", 1).max(1);
     println!(
-        "serving quantized model (avg {:.3} bpw, {} packed layers, {:.1} MB served)",
+        "serving quantized model (avg {:.3} bpw, {} packed layers, {:.1} MB served, \
+         {} kernel, {} tick thread{})",
         rep.avg_bpw,
         qm.n_packed(),
-        qm.served_storage_bits() as f64 / 8e6
+        qm.served_storage_bits() as f64 / 8e6,
+        rwkvquant::quant::exec::active_kernel().name(),
+        tick_threads,
+        if tick_threads == 1 { "" } else { "s" },
     );
-    let mut dec = RunnerDecoder::new(&qm);
+    let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
     let n = args.get_usize("requests", 16);
     let requests: Vec<Request> = (0..n as u64)
         .map(|id| Request {
@@ -144,8 +150,8 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
             gen_len: args.get_usize("gen-len", 12),
         })
         .collect();
-    let (stats, _) = serve_collect(
-        &mut dec,
+    let (stats, _) = serve_collect_pool(
+        &mut decoders,
         requests,
         args.get_usize("batch", 8),
         Duration::from_millis(2),
@@ -207,6 +213,7 @@ fn cmd_info() {
         "cores: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
     );
+    println!("matvec kernel: {}", rwkvquant::quant::exec::active_kernel().name());
 }
 
 fn main() {

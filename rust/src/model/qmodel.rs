@@ -27,7 +27,12 @@ use std::borrow::Cow;
 use std::collections::HashMap;
 
 /// A named-weight source the forward pass can run over.
-pub trait WeightProvider {
+///
+/// `Send + Sync` supertraits: providers are shared immutably across the
+/// serve tick worker pool (one `RwkvRunner` borrow per tick thread), so
+/// a provider must be safe to read concurrently — both existing
+/// providers are plain data.
+pub trait WeightProvider: Send + Sync {
     fn config(&self) -> &ModelConfig;
     /// Number of named entries.
     fn n_entries(&self) -> usize;

@@ -30,6 +30,246 @@
 
 use super::{QuantizedLayer, SqLayer, VqLayer};
 use crate::tensor::{linalg, Matrix};
+use std::sync::OnceLock;
+
+/// Instruction-set specialisation of the packed decode kernels.
+///
+/// Detected once at startup ([`active_kernel`]) and threaded through
+/// every matvec; the scalar code stays as the portable fallback and the
+/// correctness reference (`prop_kernels` asserts SIMD ≡ scalar). A
+/// variant that the host cannot run falls back to scalar at dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable fallback: auto-vectorisable two-pass scalar loops.
+    Scalar,
+    /// x86-64 AVX2+FMA: fused 8-lane unpack-widen-FMA dot.
+    Avx2,
+    /// AArch64 NEON: fused 4-lane widen-FMA dot.
+    Neon,
+}
+
+impl Kernel {
+    /// Runtime feature detection. AVX2 alone is not enough for the
+    /// fused path — the kernels use FMA, so both must be present.
+    pub fn detect() -> Kernel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Kernel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Scalar
+    }
+
+    /// Every kernel this host can run: scalar plus the detected SIMD
+    /// variant, if any. The equivalence tests and the scalar-vs-SIMD
+    /// bench sections iterate over this.
+    pub fn available() -> Vec<Kernel> {
+        let detected = Kernel::detect();
+        if detected == Kernel::Scalar {
+            vec![Kernel::Scalar]
+        } else {
+            vec![Kernel::Scalar, detected]
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// The kernel the serving stack uses, selected once (first call) by
+/// runtime feature detection.
+pub fn active_kernel() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(Kernel::detect)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Σ cs[j]·xs[j]: 8 byte-wide codes widened to f32 per FMA step.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support (see
+    /// [`super::Kernel::detect`]); `cs` and `xs` must be equally long.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_codes(cs: &[u8], xs: &[f32]) -> f32 {
+        debug_assert_eq!(cs.len(), xs.len());
+        let n = cs.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let raw = _mm_loadl_epi64(cs.as_ptr().add(j) as *const __m128i);
+            let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(raw));
+            let xv = _mm256_loadu_ps(xs.as_ptr().add(j));
+            acc = _mm256_fmadd_ps(cf, xv, acc);
+            j += 8;
+        }
+        let mut dot = hsum(acc);
+        while j < n {
+            dot += f32::from(*cs.get_unchecked(j)) * *xs.get_unchecked(j);
+            j += 1;
+        }
+        dot
+    }
+
+    /// Σ a[j]·b[j] over f32 slices (the VQ gathered-row accumulate).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support; `a` and `b` must be
+    /// equally long.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+            j += 8;
+        }
+        let mut dot = hsum(acc);
+        while j < n {
+            dot += *a.get_unchecked(j) * *b.get_unchecked(j);
+            j += 1;
+        }
+        dot
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Σ cs[j]·xs[j]: 8 byte-wide codes widened u8→u16→u32→f32, two
+    /// 4-lane FMAs per step.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support (see
+    /// [`super::Kernel::detect`]); `cs` and `xs` must be equally long.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_codes(cs: &[u8], xs: &[f32]) -> f32 {
+        debug_assert_eq!(cs.len(), xs.len());
+        let n = cs.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let c16 = vmovl_u8(vld1_u8(cs.as_ptr().add(j)));
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(c16)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(c16)));
+            acc = vfmaq_f32(acc, lo, vld1q_f32(xs.as_ptr().add(j)));
+            acc = vfmaq_f32(acc, hi, vld1q_f32(xs.as_ptr().add(j + 4)));
+            j += 8;
+        }
+        let mut dot = vaddvq_f32(acc);
+        while j < n {
+            dot += f32::from(*cs.get_unchecked(j)) * *xs.get_unchecked(j);
+            j += 1;
+        }
+        dot
+    }
+
+    /// Σ a[j]·b[j] over f32 slices (the VQ gathered-row accumulate).
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; `a` and `b` must be
+    /// equally long.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let av = vld1q_f32(a.as_ptr().add(j));
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            acc = vfmaq_f32(acc, av, bv);
+            j += 4;
+        }
+        let mut dot = vaddvq_f32(acc);
+        while j < n {
+            dot += *a.get_unchecked(j) * *b.get_unchecked(j);
+            j += 1;
+        }
+        dot
+    }
+}
+
+/// Two-way-unrolled scalar code·x dot (written to auto-vectorise).
+fn dot_codes_scalar(cs: &[u8], xs: &[f32]) -> f32 {
+    let n = cs.len();
+    let half = n / 2;
+    let mut d0 = 0.0f32;
+    let mut d1 = 0.0f32;
+    for j in 0..half {
+        d0 += f32::from(cs[2 * j]) * xs[2 * j];
+        d1 += f32::from(cs[2 * j + 1]) * xs[2 * j + 1];
+    }
+    if n % 2 == 1 {
+        d0 += f32::from(cs[n - 1]) * xs[n - 1];
+    }
+    d0 + d1
+}
+
+fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&av, &bv)| av * bv).sum()
+}
+
+/// Dispatch Σ cs[j]·xs[j] to the requested kernel (unsupported-on-host
+/// variants fall back to scalar).
+#[inline]
+fn dot_codes(kernel: Kernel, cs: &[u8], xs: &[f32]) -> f32 {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only handed out by detect() on AVX2+FMA hosts.
+        Kernel::Avx2 => unsafe { avx2::dot_codes(cs, xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only handed out by detect() on NEON hosts.
+        Kernel::Neon => unsafe { neon::dot_codes(cs, xs) },
+        _ => dot_codes_scalar(cs, xs),
+    }
+}
+
+/// Dispatch Σ a[j]·b[j] to the requested kernel.
+#[inline]
+fn dot_f32(kernel: Kernel, a: &[f32], b: &[f32]) -> f32 {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only handed out by detect() on AVX2+FMA hosts.
+        Kernel::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only handed out by detect() on NEON hosts.
+        Kernel::Neon => unsafe { neon::dot_f32(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
 
 /// A weight served as a linear operator `y = W x`. See the module docs
 /// for the contract.
@@ -156,9 +396,16 @@ thread_local! {
     /// Scratch for the unpacked per-row codes of the aligned fast path.
     static CODES_ROW: std::cell::RefCell<Vec<u8>> =
         const { std::cell::RefCell::new(Vec::new()) };
+    /// Scratch for the row-invariant per-group Σx of the aligned path.
+    static GROUP_XSUM: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    /// Scratch for the gathered codebook row of the VQ kernel.
+    static VQ_ROW: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
-/// y = W x for an SQ layer, streaming packed codes.
+/// y = W x for an SQ layer, streaming packed codes with the
+/// startup-detected kernel.
 ///
 /// AWQ layers (`col_inv_scale = Some`) are handled by folding the
 /// per-column inverse scale into `x` once per call:
@@ -166,6 +413,12 @@ thread_local! {
 /// QuaRot rotations cannot be fused this way (they mix columns) and
 /// must go through `dequantize()`.
 pub fn matvec_sq(l: &SqLayer, x: &[f32], y: &mut [f32]) {
+    matvec_sq_with(active_kernel(), l, x, y);
+}
+
+/// [`matvec_sq`] with an explicit kernel — the benches and the
+/// SIMD-vs-scalar equivalence tests pick the variant themselves.
+pub fn matvec_sq_with(kernel: Kernel, l: &SqLayer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     assert!(
@@ -177,106 +430,112 @@ pub fn matvec_sq(l: &SqLayer, x: &[f32], y: &mut [f32]) {
             let mut scaled = scratch.borrow_mut();
             scaled.clear();
             scaled.extend(x.iter().zip(inv).map(|(&xv, &s)| xv * s));
-            matvec_sq_plain(l, &scaled, y);
+            matvec_sq_plain(kernel, l, &scaled, y);
         }),
-        None => matvec_sq_plain(l, x, y),
+        None => matvec_sq_plain(kernel, l, x, y),
     }
 }
 
 /// The plain-grid kernel body (`x` already in the quantized basis).
-fn matvec_sq_plain(l: &SqLayer, x: &[f32], y: &mut [f32]) {
-    CODES_ROW.with(|scratch| {
-        let mut codes_row = scratch.borrow_mut();
-        codes_row.clear();
-        codes_row.resize(l.cols, 0);
-        matvec_sq_body(l, x, y, &mut codes_row);
+fn matvec_sq_plain(kernel: Kernel, l: &SqLayer, x: &[f32], y: &mut [f32]) {
+    CODES_ROW.with(|codes_scratch| {
+        GROUP_XSUM.with(|xsum_scratch| {
+            let mut codes_row = codes_scratch.borrow_mut();
+            codes_row.clear();
+            codes_row.resize(l.cols, 0);
+            let mut xsum = xsum_scratch.borrow_mut();
+            matvec_sq_body(kernel, l, x, y, &mut codes_row, &mut xsum);
+        });
     });
 }
 
-fn matvec_sq_body(l: &SqLayer, x: &[f32], y: &mut [f32], codes_row: &mut [u8]) {
+fn matvec_sq_body(
+    kernel: Kernel,
+    l: &SqLayer,
+    x: &[f32],
+    y: &mut [f32],
+    codes_row: &mut [u8],
+    xsum: &mut Vec<f32>,
+) {
     let group = l.group_size;
-    // Pre-compute group-wise Σx once: Σ_g (m_g + s_g·q)·x = m_g·Σx_g + s_g·Σ q·x.
+    // Group-wise identity: Σ_g (m_g + s_g·q)·x = m_g·Σx_g + s_g·Σ q·x.
     // Row-major groups may straddle rows only when cols % group != 0; the
     // common serving shapes (cols multiple of 32/64) take the fast path.
     let aligned = l.cols % group == 0;
-    let groups_per_row = l.cols / group.max(1);
-    for r in 0..l.rows {
-        let row_base = r * l.cols;
-        let mut acc = 0.0f32;
-        if aligned && l.bits <= 8 {
-            // pass 1: scalar bit-stream unpack into u8 (cheap, branch-free)
-            let mut reader = l.codes.reader(row_base);
-            for slot in codes_row.iter_mut() {
-                *slot = reader.next() as u8;
-            }
-            // pass 2: vectorisable dequant-dot per group
+    if aligned && l.bits <= 8 {
+        let groups_per_row = l.cols / group;
+        // the per-group Σx is row-invariant — hoist it out of the row loop
+        xsum.clear();
+        xsum.extend(
+            (0..groups_per_row).map(|gc| x[gc * group..(gc + 1) * group].iter().sum::<f32>()),
+        );
+        for r in 0..l.rows {
+            // pass 1: bit-stream unpack into u8 (cheap, branch-free)
+            l.codes.reader(r * l.cols).fill_u8(codes_row);
+            // pass 2: per-group fused dequant-dot, SIMD where available
+            let mut acc = 0.0f32;
             for gc in 0..groups_per_row {
                 let g = r * groups_per_row + gc;
-                let (s, m) = (l.scales[g], l.mins[g]);
                 let cs = &codes_row[gc * group..(gc + 1) * group];
                 let xs = &x[gc * group..(gc + 1) * group];
-                let mut d0 = 0.0f32;
-                let mut d1 = 0.0f32;
-                let mut q0 = 0.0f32;
-                let mut q1 = 0.0f32;
-                let half = group / 2;
-                for j in 0..half {
-                    d0 += cs[2 * j] as f32 * xs[2 * j];
-                    d1 += cs[2 * j + 1] as f32 * xs[2 * j + 1];
-                    q0 += xs[2 * j];
-                    q1 += xs[2 * j + 1];
-                }
-                if group % 2 == 1 {
-                    d0 += cs[group - 1] as f32 * xs[group - 1];
-                    q0 += xs[group - 1];
-                }
-                acc += m * (q0 + q1) + s * (d0 + d1);
+                acc += l.mins[g] * xsum[gc] + l.scales[g] * dot_codes(kernel, cs, xs);
             }
-        } else {
-            // general path: straddling groups / wide codes
+            y[r] = acc;
+        }
+    } else {
+        // general path: straddling groups / wide codes
+        for r in 0..l.rows {
+            let row_base = r * l.cols;
             let mut reader = l.codes.reader(row_base);
+            let mut acc = 0.0f32;
             let mut c = 0usize;
             while c < l.cols {
                 let flat = row_base + c;
                 let g = flat / group;
                 let run = group.min(l.cols - c).min(group - flat % group);
                 let (s, m) = (l.scales[g], l.mins[g]);
-                let xs = &x[c..c + run];
                 let mut dot = 0.0f32;
                 let mut qsum = 0.0f32;
-                for (j, &xv) in xs.iter().enumerate().take(run) {
-                    let _ = j;
+                for &xv in &x[c..c + run] {
                     dot += reader.next() as f32 * xv;
                     qsum += xv;
                 }
                 acc += m * qsum + s * dot;
                 c += run;
             }
+            y[r] = acc;
         }
-        y[r] = acc;
     }
 }
 
-/// y = W x for a VQ layer, gathering codebook entries by index.
+/// y = W x for a VQ layer with the startup-detected kernel.
 pub fn matvec_vq(l: &VqLayer, x: &[f32], y: &mut [f32]) {
+    matvec_vq_with(active_kernel(), l, x, y);
+}
+
+/// [`matvec_vq`] with an explicit kernel: codebook entries are gathered
+/// into a contiguous row buffer, then accumulated with one full-width
+/// vectorized dot (the d-sized entries are too short to feed the SIMD
+/// lanes directly).
+pub fn matvec_vq_with(kernel: Kernel, l: &VqLayer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     let d = l.d;
     debug_assert_eq!(l.cols % d, 0, "vectors are row-aligned by construction");
     let vecs_per_row = l.cols / d;
-    for r in 0..l.rows {
-        let mut acc = 0.0f32;
-        let vrow = r * vecs_per_row;
-        for vb in 0..vecs_per_row {
-            let e = l.indices.get(vrow + vb) as usize;
-            let entry = l.entry(e);
-            let xs = &x[vb * d..(vb + 1) * d];
-            for j in 0..d {
-                acc += entry[j] * xs[j];
+    VQ_ROW.with(|scratch| {
+        let mut row = scratch.borrow_mut();
+        row.clear();
+        row.resize(l.cols, 0.0);
+        for r in 0..l.rows {
+            let mut reader = l.indices.reader(r * vecs_per_row);
+            for vb in 0..vecs_per_row {
+                let e = reader.next() as usize;
+                row[vb * d..(vb + 1) * d].copy_from_slice(l.entry(e));
             }
+            y[r] = dot_f32(kernel, &row, x);
         }
-        y[r] = acc;
-    }
+    });
 }
 
 /// Dispatching matvec over any quantized layer (fp16 layers fall back to
@@ -287,13 +546,10 @@ pub fn matvec(layer: &QuantizedLayer, x: &[f32], y: &mut [f32]) {
         QuantizedLayer::Vq(l) => matvec_vq(l, x, y),
         QuantizedLayer::Fp16 { rows, cols, data } => {
             assert_eq!(x.len(), *cols);
-            for r in 0..*rows {
-                let row = &data[r * cols..(r + 1) * cols];
-                let mut acc = 0.0f32;
-                for (w, xv) in row.iter().zip(x) {
-                    acc += w * xv;
-                }
-                y[r] = acc;
+            assert_eq!(y.len(), *rows);
+            let kernel = active_kernel();
+            for (r, slot) in y.iter_mut().enumerate() {
+                *slot = dot_f32(kernel, &data[r * cols..(r + 1) * cols], x);
             }
         }
     }
@@ -389,6 +645,59 @@ mod tests {
         matvec(&l, &x, &mut got);
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn kernel_detection_is_stable_and_listed() {
+        let k = Kernel::detect();
+        assert_eq!(k, Kernel::detect(), "detection must be deterministic");
+        assert_eq!(active_kernel(), k);
+        let avail = Kernel::available();
+        assert_eq!(avail[0], Kernel::Scalar);
+        assert!(avail.contains(&k));
+        assert!(!k.name().is_empty());
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_sq() {
+        let (w, x) = rand(21, 40, 192);
+        let q = sq::rtn::quantize(&w, 3, 64);
+        let mut want = vec![0.0f32; 40];
+        matvec_sq_with(Kernel::Scalar, &q, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; 40];
+            matvec_sq_with(k, &q, &x, &mut got);
+            for i in 0..40 {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-5 * (1.0 + want[i].abs()),
+                    "{}: row {i}: {} vs {}",
+                    k.name(),
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_vq() {
+        let (w, x) = rand(22, 24, 96);
+        let q = vq::kmeans::quantize(&w, 6, 4, 8, &mut Rng::new(23));
+        let mut want = vec![0.0f32; 24];
+        matvec_vq_with(Kernel::Scalar, &q, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; 24];
+            matvec_vq_with(k, &q, &x, &mut got);
+            for i in 0..24 {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-5 * (1.0 + want[i].abs()),
+                    "{}: row {i}: {} vs {}",
+                    k.name(),
+                    got[i],
+                    want[i]
+                );
+            }
         }
     }
 

@@ -14,7 +14,7 @@ pub struct PackedInts {
 impl PackedInts {
     /// Pack `values`; every value must fit in `bits` bits.
     pub fn pack(values: &[u32], bits: u32) -> PackedInts {
-        assert!(bits >= 1 && bits <= 32, "bits must be 1..=32, got {bits}");
+        assert!((1..=32).contains(&bits), "bits must be 1..=32, got {bits}");
         let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
         let total_bits = values.len() * bits as usize;
         let mut words = vec![0u64; total_bits.div_ceil(64)];
@@ -107,6 +107,17 @@ impl BitReader<'_> {
         self.bitpos += bits;
         (v & mask) as u32
     }
+
+    /// Decode a contiguous run into a `u8` buffer — the unpack pass of
+    /// the SQ matvec kernels, which want byte-wide codes the SIMD lanes
+    /// can widen directly. Codes must fit in 8 bits.
+    #[inline]
+    pub fn fill_u8(&mut self, out: &mut [u8]) {
+        debug_assert!(self.bits <= 8, "fill_u8 needs codes ≤ 8 bits, got {}", self.bits);
+        for slot in out.iter_mut() {
+            *slot = self.next() as u8;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +150,18 @@ mod tests {
         let mut out = vec![0u32; 17];
         p.get_range(100, &mut out);
         assert_eq!(&out[..], &vals[100..117]);
+    }
+
+    #[test]
+    fn fill_u8_matches_get() {
+        let mut rng = Rng::new(5);
+        let vals: Vec<u32> = (0..301).map(|_| rng.below(8) as u32).collect();
+        let p = PackedInts::pack(&vals, 3);
+        let mut out = vec![0u8; 40];
+        p.reader(77).fill_u8(&mut out);
+        for (j, &b) in out.iter().enumerate() {
+            assert_eq!(u32::from(b), vals[77 + j]);
+        }
     }
 
     #[test]

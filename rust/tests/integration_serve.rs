@@ -5,7 +5,9 @@
 
 use rwkvquant::config::{ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve, serve_collect, Decoder, Request, Response, RunnerDecoder};
+use rwkvquant::coordinator::serve::{
+    serve, serve_collect, serve_collect_pool, Decoder, Request, Response, RunnerDecoder,
+};
 use rwkvquant::eval::dequantized_model;
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
 use rwkvquant::model::QuantizedModel;
@@ -83,6 +85,42 @@ fn batch_size_does_not_change_greedy_outputs() {
     };
 
     assert_eq!(run_with_batch(1), run_with_batch(4));
+}
+
+#[test]
+fn threaded_ticks_serve_token_identical_to_sequential() {
+    // tick_threads > 1 must be a pure wall-clock change: sequence state
+    // is fully swapped per tick, so the pooled decode is deterministic
+    let cfg = ModelConfig::rwkv6(2, 48, 96);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 21);
+    let qc = QuantConfig { kmeans_iters: 4, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let qm = QuantizedModel::from_parts(&m, &q);
+
+    let requests = || -> Vec<Request> {
+        (0..12u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id as usize * 11 + 2) % 96, 7, 3],
+                gen_len: 6,
+            })
+            .collect()
+    };
+    let mut seq_dec = RunnerDecoder::new(&qm);
+    let (seq_stats, seq) =
+        serve_collect(&mut seq_dec, requests(), 4, Duration::from_millis(1)).unwrap();
+    assert_eq!(seq_stats.completed, 12);
+
+    for threads in [2usize, 4] {
+        let mut decoders: Vec<_> = (0..threads).map(|_| RunnerDecoder::new(&qm)).collect();
+        let (stats, pooled) =
+            serve_collect_pool(&mut decoders, requests(), 4, Duration::from_millis(1)).unwrap();
+        assert_eq!(stats.completed, 12);
+        assert_eq!(stats.total_tokens, seq_stats.total_tokens);
+        let want: Vec<_> = seq.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let got: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(got, want, "{threads} tick threads changed the served tokens");
+    }
 }
 
 #[test]

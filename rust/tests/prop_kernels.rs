@@ -1,0 +1,126 @@
+//! Property tests for the SIMD matvec kernels: every kernel the host
+//! can run ([`Kernel::available`]) must agree with the portable scalar
+//! reference within 1e-5 across bit-widths, group sizes, odd row
+//! lengths, AWQ-scaled layers, and VQ vector dims. On hosts without a
+//! SIMD unit the properties degenerate to scalar-vs-scalar (still
+//! exercising both matvec entry points).
+
+use rwkvquant::quant::exec::{self, Kernel};
+use rwkvquant::quant::{sq, vq, CalibData};
+use rwkvquant::tensor::Matrix;
+use rwkvquant::util::ptest::{check, close_slices, Gen};
+use rwkvquant::util::rng::Rng;
+
+const ATOL: f32 = 1e-5;
+const RTOL: f32 = 1e-5;
+
+fn rand_weight(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+    let mut w = Matrix::zeros(rows, cols);
+    let mut rng = Rng::new(g.seed() ^ 0x77ee);
+    rng.fill_normal(&mut w.data, 0.0, 0.05);
+    w
+}
+
+fn rand_x(g: &mut Gen, cols: usize) -> Vec<f32> {
+    let mut rng = Rng::new(g.seed() ^ 0x5eed);
+    (0..cols).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn simd_sq_matches_scalar_across_shapes() {
+    check("simd matvec_sq ≡ scalar", 48, |g| {
+        let rows = g.usize_in(1..40);
+        // odd col counts force the straddling general path; multiples of
+        // the group size take the aligned SIMD path — cover both
+        let cols = g.usize_in(1..200);
+        let bits = *g.choose(&[3u32, 4, 5, 8]);
+        let group = *g.choose(&[8usize, 24, 32, 64]);
+        let w = rand_weight(g, rows, cols);
+        let q = sq::rtn::quantize(&w, bits, group);
+        let x = rand_x(g, cols);
+        let mut want = vec![0.0f32; rows];
+        exec::matvec_sq_with(Kernel::Scalar, &q, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; rows];
+            exec::matvec_sq_with(k, &q, &x, &mut got);
+            close_slices(&got, &want, ATOL, RTOL).map_err(|e| {
+                format!("{} vs scalar, {rows}x{cols} bits={bits} group={group}: {e}", k.name())
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_sq_matches_scalar_on_awq_scaled_layers() {
+    check("simd matvec_sq ≡ scalar (AWQ col_inv_scale)", 24, |g| {
+        let rows = g.usize_in(1..32);
+        let cols = *g.choose(&[32usize, 64, 96, 160]);
+        let bits = *g.choose(&[3u32, 4]);
+        let w = rand_weight(g, rows, cols);
+        // calibration with hot channels so AWQ produces real scales
+        let mut calib_x = Matrix::zeros(32, cols);
+        let mut rng = Rng::new(g.seed() ^ 0xca11b);
+        rng.fill_normal(&mut calib_x.data, 0.0, 1.0);
+        for r in 0..calib_x.rows {
+            for c in 0..4.min(cols) {
+                *calib_x.at_mut(r, c) *= 8.0;
+            }
+        }
+        let q = sq::awq::quantize(&w, bits, 32, Some(&CalibData { x: calib_x }));
+        if q.col_inv_scale.is_none() {
+            return Err("AWQ must produce column scales".into());
+        }
+        let x = rand_x(g, cols);
+        let mut want = vec![0.0f32; rows];
+        exec::matvec_sq_with(Kernel::Scalar, &q, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; rows];
+            exec::matvec_sq_with(k, &q, &x, &mut got);
+            close_slices(&got, &want, ATOL, RTOL)
+                .map_err(|e| format!("{} vs scalar (AWQ), {rows}x{cols}: {e}", k.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_vq_matches_scalar_across_vector_dims() {
+    check("simd matvec_vq ≡ scalar", 32, |g| {
+        let rows = g.usize_in(1..32);
+        let d = *g.choose(&[2usize, 3, 4, 8]);
+        let cols = d * g.usize_in(1..24);
+        let k_bits = *g.choose(&[4u32, 5, 6]);
+        let w = rand_weight(g, rows, cols);
+        let mut rng = Rng::new(g.seed() ^ 0x6b6d);
+        let q = vq::kmeans::quantize(&w, k_bits, d, 4, &mut rng);
+        let x = rand_x(g, cols);
+        let mut want = vec![0.0f32; rows];
+        exec::matvec_vq_with(Kernel::Scalar, &q, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; rows];
+            exec::matvec_vq_with(k, &q, &x, &mut got);
+            close_slices(&got, &want, ATOL, RTOL).map_err(|e| {
+                format!("{} vs scalar, {rows}x{cols} d={d} k={k_bits}: {e}", k.name())
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn public_matvecs_use_a_host_supported_kernel() {
+    // the default entry points must dispatch to whatever detect() found
+    // and agree with the scalar reference on a fixed layer
+    let mut rng = Rng::new(77);
+    let mut w = Matrix::zeros(24, 96);
+    rng.fill_normal(&mut w.data, 0.0, 0.05);
+    let q = sq::rtn::quantize(&w, 3, 32);
+    let x: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+    let mut via_default = vec![0.0f32; 24];
+    exec::matvec_sq(&q, &x, &mut via_default);
+    let mut via_scalar = vec![0.0f32; 24];
+    exec::matvec_sq_with(Kernel::Scalar, &q, &x, &mut via_scalar);
+    close_slices(&via_default, &via_scalar, ATOL, RTOL).unwrap();
+    assert!(Kernel::available().contains(&exec::active_kernel()));
+}
