@@ -7,18 +7,41 @@ threshold. BENCH_serve.json is written by
 
     RWKVQUANT_BENCH_FAST=1 cargo bench --bench table4_speed_memory
 
-Baselines carrying ``"provisional": true`` (committed before any
-measured CI run exists) report the current numbers but never fail — the
-gate arms itself the first time a measured BENCH_serve.json is
-committed.
+Behaviour matrix:
+
+* healthy baseline           -> prints a trajectory-delta summary over
+  the headline metrics, then gates on ``--key``.
+* ``"provisional": true``    -> summary of the current run only; never
+  fails (the gate arms itself the first time a measured BENCH_serve.json
+  is committed).
+* malformed baseline (bad JSON, missing keys, not a bench file) ->
+  reports exactly what is wrong in the job log, treats the baseline as
+  provisional, exits 0 — a broken baseline must be loud, not a silent
+  traceback, and must not mask the current run's numbers.
+* malformed CURRENT file     -> hard failure (exit 2); the bench run
+  itself is broken and that must gate.
+
+When ``GITHUB_STEP_SUMMARY`` is set, the trajectory table is also
+appended there so the delta shows on the workflow summary page.
 
 Usage:
-    python3 python/check_bench_regression.py BASELINE CURRENT [--threshold 0.10]
+    python3 python/check_bench_regression.py BASELINE CURRENT \
+        [--key speedup] [--threshold 0.10] [--no-summary]
 """
 
 import argparse
 import json
+import os
 import sys
+
+# Headline metrics reported in the trajectory summary (missing keys are
+# skipped silently — older baselines predate some of them).
+SUMMARY_KEYS = [
+    "speedup",
+    "fp32.tokens_per_sec",
+    "quant.tokens_per_sec",
+    "quant_threaded.tokens_per_sec",
+]
 
 
 def lookup(obj, dotted_key):
@@ -29,6 +52,55 @@ def lookup(obj, dotted_key):
             raise KeyError(f"key '{dotted_key}' missing at '{part}'")
         node = node[part]
     return float(node)
+
+
+def try_lookup(obj, dotted_key):
+    try:
+        return lookup(obj, dotted_key)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def load_json(path):
+    """Return (parsed, error_string); exactly one is None."""
+    try:
+        with open(path) as fh:
+            return json.load(fh), None
+    except OSError as e:
+        return None, f"cannot read {path}: {e}"
+    except json.JSONDecodeError as e:
+        return None, f"{path} is not valid JSON: {e}"
+
+
+def trajectory_summary(base, cur, gate_key, threshold):
+    """Render the delta table; returns the lines (also printed)."""
+    lines = ["", "perf trajectory (baseline -> current):"]
+    for key in SUMMARY_KEYS:
+        new = try_lookup(cur, key)
+        if new is None:
+            continue
+        old = try_lookup(base, key) if base is not None else None
+        gate_mark = "  [gated ±{:.0%}]".format(threshold) if key == gate_key else ""
+        if old in (None, 0.0):
+            lines.append(f"  {key:<30} {'-':>10} -> {new:10.2f}{gate_mark}")
+        else:
+            delta = new / old - 1.0
+            lines.append(
+                f"  {key:<30} {old:10.2f} -> {new:10.2f}  ({delta:+.1%}){gate_mark}"
+            )
+    kernel = (cur or {}).get("kernel")
+    if kernel:
+        lines.append(f"  kernel: {kernel}")
+    lines.append("")
+    print("\n".join(lines))
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        try:
+            with open(step_summary, "a") as fh:
+                fh.write("```\n" + "\n".join(lines).strip() + "\n```\n")
+        except OSError:
+            pass  # the job log already has the table
+    return lines
 
 
 def main():
@@ -46,24 +118,45 @@ def main():
         default="quant.tokens_per_sec",
         help="dotted metric key to gate on (default: packed served throughput)",
     )
+    parser.add_argument(
+        "--no-summary",
+        action="store_true",
+        help="skip the trajectory table (second gate invocation in CI)",
+    )
     args = parser.parse_args()
 
-    with open(args.baseline) as fh:
-        base = json.load(fh)
-    with open(args.current) as fh:
-        cur = json.load(fh)
-
-    new = lookup(cur, args.key)
+    cur, cur_err = load_json(args.current)
+    if cur_err is not None:
+        print(f"FAIL: current bench output is unusable — {cur_err}")
+        return 2
+    new = try_lookup(cur, args.key)
+    if new is None:
+        print(f"FAIL: current bench output has no '{args.key}' metric")
+        return 2
     print(f"current  {args.key} = {new:.2f}")
+
+    base, base_err = load_json(args.baseline)
+    if base is None or try_lookup(base, args.key) is None:
+        reason = base_err or f"baseline has no '{args.key}' metric"
+        print(f"WARNING: malformed baseline — {reason}")
+        print("treating baseline as provisional: reporting only, gate skipped")
+        if not args.no_summary:
+            trajectory_summary(None, cur, args.key, args.threshold)
+        print("commit this run's BENCH_serve.json artifact to restore the gate")
+        return 0
 
     if base.get("provisional"):
         print("baseline is provisional (no measured CI run committed yet) — gate skipped")
+        if not args.no_summary:
+            trajectory_summary(None, cur, args.key, args.threshold)
         print("commit this run's BENCH_serve.json artifact to arm the regression gate")
         return 0
 
     old = lookup(base, args.key)
     floor = old * (1.0 - args.threshold)
     print(f"baseline {args.key} = {old:.2f} (floor at -{args.threshold:.0%}: {floor:.2f})")
+    if not args.no_summary:
+        trajectory_summary(base, cur, args.key, args.threshold)
     if new < floor:
         print(
             f"FAIL: {args.key} regressed {1.0 - new / old:.1%} "

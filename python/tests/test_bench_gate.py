@@ -1,0 +1,73 @@
+"""Behaviour matrix of python/check_bench_regression.py — the CI
+perf-trajectory gate must report deltas, arm/disarm on provisional or
+malformed baselines, and only hard-fail on real regressions (or a broken
+current run)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[1] / "check_bench_regression.py"
+
+CURRENT = {
+    "kernel": "avx2",
+    "fp32": {"tokens_per_sec": 100.0},
+    "quant": {"tokens_per_sec": 250.0},
+    "quant_threaded": {"tokens_per_sec": 400.0},
+    "speedup": 2.5,
+}
+
+
+def run_gate(tmp_path, baseline, current, *extra):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(baseline if isinstance(baseline, str) else json.dumps(baseline))
+    cur.write_text(current if isinstance(current, str) else json.dumps(current))
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), str(base), str(cur), *extra],
+        capture_output=True,
+        text=True,
+    )
+    return proc.returncode, proc.stdout
+
+
+def test_provisional_baseline_reports_but_never_fails(tmp_path):
+    rc, out = run_gate(tmp_path, {"provisional": True, "speedup": 0}, CURRENT, "--key", "speedup")
+    assert rc == 0
+    assert "provisional" in out
+    assert "perf trajectory" in out
+
+
+def test_malformed_baseline_is_loud_and_skips_gate(tmp_path):
+    rc, out = run_gate(tmp_path, "this is not json {", CURRENT, "--key", "speedup")
+    assert rc == 0
+    assert "malformed baseline" in out
+    assert "perf trajectory" in out  # current numbers still reported
+
+
+def test_missing_gate_key_in_baseline_skips_gate(tmp_path):
+    rc, out = run_gate(tmp_path, {"other": 1}, CURRENT, "--key", "speedup")
+    assert rc == 0
+    assert "malformed baseline" in out
+
+
+def test_healthy_baseline_passes_and_prints_deltas(tmp_path):
+    base = {"fp32": {"tokens_per_sec": 90.0}, "quant": {"tokens_per_sec": 240.0}, "speedup": 2.4}
+    rc, out = run_gate(tmp_path, base, CURRENT, "--key", "speedup", "--threshold", "0.10")
+    assert rc == 0
+    assert "perf trajectory" in out
+    assert "OK: speedup" in out
+
+
+def test_regression_beyond_threshold_fails(tmp_path):
+    base = {"speedup": 3.5}
+    rc, out = run_gate(tmp_path, base, CURRENT, "--key", "speedup", "--threshold", "0.10")
+    assert rc == 1
+    assert "FAIL" in out
+
+
+def test_broken_current_run_hard_fails(tmp_path):
+    rc, out = run_gate(tmp_path, {"speedup": 2.4}, "nope{", "--key", "speedup")
+    assert rc == 2
+    assert "unusable" in out

@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   quantize   quantize a weight store (or a synthetic model) and report
+//!   pack       quantize and serialize to an RWKVQ2 packed checkpoint
 //!   eval       perplexity + zero-shot of a store on the corpus
-//!   serve      batched generation over a (quantized) store
+//!   serve      batched generation over a store (RWKVQ1 quantized on the
+//!              fly, or an RWKVQ2 checkpoint opened zero-copy via mmap)
 //!   proxy      proxy-scan a model (SQ/VQ classification per layer)
 //!   info       print artifact / environment status
 
@@ -14,7 +16,8 @@ use rwkvquant::coordinator::serve::{serve_collect_pool, Request, RunnerDecoder};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
-use rwkvquant::model::{ModelWeights, QuantizedModel, WeightProvider};
+use rwkvquant::model::store::{detect_format, StoreFormat};
+use rwkvquant::model::{LoadMode, ModelWeights, QuantizedModel, WeightProvider};
 use rwkvquant::report::{Cell, Table};
 use rwkvquant::runtime::artifacts_dir;
 use rwkvquant::util::cli::{Args, Help};
@@ -23,11 +26,15 @@ use std::time::Duration;
 fn help() -> String {
     Help::new("rwkvquant", "proxy-guided hybrid SQ/VQ post-training quantization for RWKV")
         .sub("quantize", "quantize a store or synthetic model, print the pipeline report")
+        .sub("pack", "quantize and write an RWKVQ2 packed checkpoint (--out)")
         .sub("eval", "perplexity + corpus zero-shot of a store")
         .sub("serve", "batched generation over a store (optionally quantized first)")
         .sub("proxy", "per-layer proxy scan (P_c, P_f, Eq.18 decision)")
         .sub("info", "artifact & environment status")
-        .opt("store", "path to a RWKVQ1 weight store (default artifacts/tiny_rwkv.bin)")
+        .opt("store", "path to a RWKVQ1/RWKVQ2 store (default artifacts/tiny_rwkv.bin)")
+        .opt("out", "pack: output path (default artifacts/model.rwkvq2)")
+        .opt("mmap", "serve: force memory-mapped RWKVQ2 loading (flag)")
+        .opt("buffered", "serve: force buffered RWKVQ2 loading (flag)")
         .opt("method", "rtn|gptq|awq|quarot|kmeans|gptvq|vptq|rwkvquant (default rwkvquant)")
         .opt("bpw", "target bits per weight for baselines (3.25/3.5)")
         .opt("size", "synthetic model size (0.1B..14B) when no store given")
@@ -124,17 +131,80 @@ fn cmd_eval(args: &Args) -> rwkvquant::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
+fn cmd_pack(args: &Args) -> rwkvquant::Result<()> {
     let model = load_model(args)?;
     let cfg = quant_config(args)?;
     let (q, rep) = quantize_model(&model, None, &cfg, 0);
-    // serve straight from the packed payloads — no dense materialisation
-    let qm = QuantizedModel::from_parts(&model, &q);
+    let mut qm = QuantizedModel::from_parts(&model, &q);
+    // make the on-disk f16 rounding resident, so this process and any
+    // later `serve --mmap` of the checkpoint are token-identical
+    qm.dense_to_f16();
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => artifacts_dir().join("model.rwkvq2"),
+    };
+    if let Some(parent) = out.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    qm.save(&out)?;
+    let bytes = std::fs::metadata(&out)?.len();
+    println!(
+        "packed {} entries ({} packed payloads, avg {:.3} bpw, SQ share {:.0}%) \
+         -> {} ({:.2} MB: {:.2} MB packed + {:.2} MB dense f16)",
+        qm.entries.len(),
+        qm.n_packed(),
+        rep.avg_bpw,
+        rep.sq_share() * 100.0,
+        out.display(),
+        bytes as f64 / 1e6,
+        (qm.served_storage_bits() - qm.dense_storage_bits()) as f64 / 8e6,
+        qm.dense_storage_bits() as f64 / 8e6,
+    );
+    println!("serve it with: rwkvquant serve --store {} --mmap", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
+    let mode = if args.flag("mmap") {
+        LoadMode::Mmap
+    } else if args.flag("buffered") {
+        LoadMode::Buffered
+    } else {
+        LoadMode::Auto
+    };
+    let packed_store = args
+        .get("store")
+        .map(std::path::PathBuf::from)
+        .filter(|p| detect_format(p).ok() == Some(StoreFormat::V2Packed));
+    let qm = match packed_store {
+        Some(path) => {
+            // zero-copy open: O(TOC) startup, pages fault in on demand
+            let t0 = std::time::Instant::now();
+            let qm = QuantizedModel::open_with(&path, mode)?;
+            println!(
+                "opened RWKVQ2 {} in {:.1} ms — {} entries, {} payloads borrowed \
+                 zero-copy from the mapping",
+                path.display(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                qm.entries.len(),
+                qm.n_mapped(),
+            );
+            qm
+        }
+        None => {
+            let model = load_model(args)?;
+            let cfg = quant_config(args)?;
+            let (q, _) = quantize_model(&model, None, &cfg, 0);
+            // serve straight from the packed payloads — no dense
+            // materialisation
+            QuantizedModel::from_parts(&model, &q)
+        }
+    };
     let tick_threads = args.get_usize("tick-threads", 1).max(1);
     println!(
-        "serving quantized model (avg {:.3} bpw, {} packed layers, {:.1} MB served, \
+        "serving quantized model (avg {:.3} bpw packed, {} packed layers, {:.1} MB served, \
          {} kernel, {} tick thread{})",
-        rep.avg_bpw,
+        qm.packed_bpw(),
         qm.n_packed(),
         qm.served_storage_bits() as f64 / 8e6,
         rwkvquant::quant::exec::active_kernel().name(),
@@ -143,10 +213,11 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
     );
     let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
     let n = args.get_usize("requests", 16);
+    let vocab = qm.config.vocab;
     let requests: Vec<Request> = (0..n as u64)
         .map(|id| Request {
             id,
-            prompt: vec![(id as usize * 7) % model.config.vocab, 1, 2],
+            prompt: vec![(id as usize * 7) % vocab, 1, 2],
             gen_len: args.get_usize("gen-len", 12),
         })
         .collect();
@@ -214,12 +285,21 @@ fn cmd_info() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
     );
     println!("matvec kernel: {}", rwkvquant::quant::exec::active_kernel().name());
+    println!(
+        "mmap checkpoint loading: {}",
+        if rwkvquant::util::mmap::Mmap::supported() {
+            "supported"
+        } else {
+            "unsupported (buffered fallback)"
+        }
+    );
 }
 
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand() {
         Some("quantize") => cmd_quantize(&args),
+        Some("pack") => cmd_pack(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
         Some("proxy") => cmd_proxy(&args),

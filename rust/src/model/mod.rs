@@ -1,9 +1,11 @@
 //! The RWKV model substrate.
 //!
 //! * [`store`] — layer descriptors, the in-memory weight store, and the
-//!   binary interchange format shared with the Python build path
-//!   (`python/compile/train.py` writes it, this crate reads it, and the
-//!   quantization pipeline writes quantized stores back).
+//!   binary interchange formats: dense fp32 `RWKVQ1` shared with the
+//!   Python build path (`python/compile/train.py` writes it, this crate
+//!   reads it) and the packed `RWKVQ2` checkpoint format, which
+//!   serializes a [`QuantizedModel`] directly and loads zero-copy
+//!   through a memory mapping ([`store::open_rwkvq2`]).
 //! * [`qmodel`] — the serving-side weight providers: the
 //!   [`WeightProvider`] abstraction the runner consumes, and
 //!   [`QuantizedModel`], which keeps matmul weights **packed** and
@@ -32,4 +34,4 @@ pub mod store;
 pub mod synthetic;
 
 pub use qmodel::{QuantizedModel, ServedParam, WeightProvider};
-pub use store::{LayerDesc, ModelWeights, ParamClass};
+pub use store::{LayerDesc, LoadMode, ModelWeights, ParamClass, StoreFormat};

@@ -11,6 +11,10 @@
 //!   quantized form and served through the streaming kernels of
 //!   [`crate::quant::exec`]; element-wise/vector params are dequantized
 //!   once at build time (they are `O(d)` and read per token anyway).
+//!   Built either in memory ([`QuantizedModel::from_parts`]) or straight
+//!   from an RWKVQ2 packed checkpoint ([`QuantizedModel::open`]), where
+//!   payloads are borrowed zero-copy from a memory mapping and dense
+//!   entries are resident in binary16 ([`ServedParam::DenseF16`]).
 //!
 //! This is what removes the old "dequantize the whole model to fp32
 //! before running" pattern: the forward pass is written once against
@@ -18,10 +22,11 @@
 //! through the identical code while the quantized path streams 3-ish
 //! bits per weight (the Table 4 memory-bound speedup).
 
-use super::store::{LayerDesc, ModelWeights, ParamClass};
+use super::store::{self, LayerDesc, LoadMode, ModelWeights, ParamClass};
 use crate::config::ModelConfig;
 use crate::quant::exec::LinearOp;
 use crate::quant::QuantizedLayer;
+use crate::tensor::f16::{round_via_f16, F16Tensor};
 use crate::tensor::Matrix;
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -41,8 +46,15 @@ pub trait WeightProvider: Send + Sync {
     /// The i-th entry as a matmul operator.
     fn linear_at(&self, i: usize) -> &dyn LinearOp;
     /// Dense row view of the i-th entry (`r = token` for embeddings,
-    /// `r = 0` for 1-D params). Panics if the entry is packed.
+    /// `r = 0` for 1-D params). Panics if the entry is packed or
+    /// f16-resident (use [`WeightProvider::row_f32`] for those).
     fn row_at(&self, i: usize, r: usize) -> &[f32];
+    /// Row `r` of the i-th entry as owned f32 — like
+    /// [`WeightProvider::row_at`] but also serves f16-resident entries
+    /// by widening (the embedding-lookup path of RWKVQ2 models).
+    fn row_f32(&self, i: usize, r: usize) -> Vec<f32> {
+        self.row_at(i, r).to_vec()
+    }
     /// Dense fp32 view of the i-th entry, materialised transiently if
     /// the entry is packed (PJRT upload path — one layer at a time,
     /// never the whole model).
@@ -86,9 +98,13 @@ impl WeightProvider for ModelWeights {
 pub enum ServedParam {
     /// Packed quantized payload, served through the streaming kernels.
     Packed(QuantizedLayer),
-    /// Dense fp32 (embeddings/heads/norms, dequantized-once element-wise
-    /// weights, and QuaRot layers whose rotation cannot be fused).
+    /// Dense fp32 (1-D norms/EW vectors read per token, and any dense
+    /// entry before [`QuantizedModel::dense_to_f16`] runs).
     Dense(Matrix),
+    /// Dense binary16 — the RWKVQ2-resident form of embeddings, heads
+    /// and QuaRot fallbacks: 16 bits/element physical, widened to f32
+    /// row-by-row at use ([`crate::quant::exec::matvec_f16`]).
+    DenseF16(F16Tensor),
 }
 
 impl ServedParam {
@@ -96,10 +112,30 @@ impl ServedParam {
         matches!(self, ServedParam::Packed(_))
     }
 
+    /// Is the payload borrowed zero-copy from a checkpoint mapping?
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            ServedParam::Packed(QuantizedLayer::Sq(l)) => l.codes.is_mapped(),
+            ServedParam::Packed(QuantizedLayer::Vq(l)) => l.indices.is_mapped(),
+            ServedParam::Packed(QuantizedLayer::Fp16 { .. }) => false,
+            ServedParam::Dense(_) => false,
+            ServedParam::DenseF16(t) => t.is_mapped(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            ServedParam::Packed(q) => q.numel(),
+            ServedParam::Dense(m) => m.numel(),
+            ServedParam::DenseF16(t) => t.numel(),
+        }
+    }
+
     pub fn storage_bits(&self) -> usize {
         match self {
             ServedParam::Packed(q) => q.storage_bits(),
             ServedParam::Dense(m) => m.numel() * 32,
+            ServedParam::DenseF16(t) => t.numel() * 16,
         }
     }
 
@@ -107,6 +143,7 @@ impl ServedParam {
         match self {
             ServedParam::Packed(q) => q,
             ServedParam::Dense(m) => m,
+            ServedParam::DenseF16(t) => t,
         }
     }
 }
@@ -157,12 +194,72 @@ impl QuantizedModel {
             };
             entries.push((desc.clone(), served));
         }
+        QuantizedModel::from_entries(fp.config.clone(), entries)
+    }
+
+    /// Assemble from already-served entries (the RWKVQ2 loader path).
+    pub fn from_entries(
+        config: ModelConfig,
+        entries: Vec<(LayerDesc, ServedParam)>,
+    ) -> QuantizedModel {
         let index = entries
             .iter()
             .enumerate()
             .map(|(i, (d, _))| (d.name.clone(), i))
             .collect();
-        QuantizedModel { config: fp.config.clone(), entries, index }
+        QuantizedModel { config, entries, index }
+    }
+
+    /// Make the fp16 dense accounting physical: 2-D dense entries
+    /// (embeddings, heads, QuaRot fallbacks) become
+    /// [`ServedParam::DenseF16`], and 1-D dense entries (norms, EW
+    /// vectors, decay/bonus — kept f32-resident because the runner
+    /// borrows their rows per token) are rounded through f16 in place.
+    ///
+    /// After this call the model serves **bit-identically** to itself
+    /// after an RWKVQ2 save/open round trip — every dense value has
+    /// already taken its on-disk f16 rounding.
+    pub fn dense_to_f16(&mut self) {
+        for (_, p) in &mut self.entries {
+            let replacement = match &*p {
+                ServedParam::Dense(m) if m.rows > 1 => {
+                    Some(ServedParam::DenseF16(F16Tensor::from_matrix(m)))
+                }
+                ServedParam::Packed(QuantizedLayer::Fp16 { rows, cols, data }) => {
+                    let m = Matrix::from_vec(*rows, *cols, data.clone());
+                    Some(ServedParam::DenseF16(F16Tensor::from_matrix(&m)))
+                }
+                _ => None,
+            };
+            if let Some(r) = replacement {
+                *p = r;
+            } else if let ServedParam::Dense(m) = p {
+                // 1-D vector: stays f32-resident, takes the disk rounding
+                m.map_inplace(round_via_f16);
+            }
+        }
+    }
+
+    /// Serialize to an RWKVQ2 packed checkpoint (see
+    /// [`crate::model::store`] for the layout). Dense f32 entries are
+    /// narrowed to f16 on disk — run [`QuantizedModel::dense_to_f16`]
+    /// first if this in-memory model must serve identically to the
+    /// reopened one.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        store::save_rwkvq2(self, path)
+    }
+
+    /// Open an RWKVQ2 checkpoint, memory-mapped when the host supports
+    /// it (falling back to a buffered read): packed payloads and 2-D
+    /// dense f16 entries are borrowed zero-copy from the mapping, so
+    /// open cost is O(TOC) and weight pages fault in on first use.
+    pub fn open(path: &std::path::Path) -> crate::Result<QuantizedModel> {
+        store::open_rwkvq2(path, LoadMode::Auto)
+    }
+
+    /// [`QuantizedModel::open`] with an explicit load mode.
+    pub fn open_with(path: &std::path::Path, mode: LoadMode) -> crate::Result<QuantizedModel> {
+        store::open_rwkvq2(path, mode)
     }
 
     pub fn get(&self, name: &str) -> Option<&ServedParam> {
@@ -172,6 +269,23 @@ impl QuantizedModel {
     /// Number of entries served from packed payloads.
     pub fn n_packed(&self) -> usize {
         self.entries.iter().filter(|(_, p)| p.is_packed()).count()
+    }
+
+    /// Number of entries whose payload is borrowed from a checkpoint
+    /// mapping (zero-copy).
+    pub fn n_mapped(&self) -> usize {
+        self.entries.iter().filter(|(_, p)| p.is_mapped()).count()
+    }
+
+    /// Resident storage of the dense (non-packed) entries, in bits —
+    /// 16/elem once [`QuantizedModel::dense_to_f16`] or the RWKVQ2
+    /// loader ran, 32/elem for f32 leftovers.
+    pub fn dense_storage_bits(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|(_, p)| !p.is_packed())
+            .map(|(_, p)| p.storage_bits())
+            .sum()
     }
 
     /// Average bits per weight over the packed entries.
@@ -207,6 +321,22 @@ impl WeightProvider for QuantizedModel {
     fn row_at(&self, i: usize, r: usize) -> &[f32] {
         match &self.entries[i].1 {
             ServedParam::Dense(m) => m.row(r),
+            ServedParam::DenseF16(_) => panic!(
+                "'{}' is f16-resident — borrow-free row views exist only for f32 entries \
+                 (use row_f32)",
+                self.entries[i].0.name
+            ),
+            ServedParam::Packed(_) => panic!(
+                "'{}' is packed — row views exist only for dense entries",
+                self.entries[i].0.name
+            ),
+        }
+    }
+
+    fn row_f32(&self, i: usize, r: usize) -> Vec<f32> {
+        match &self.entries[i].1 {
+            ServedParam::Dense(m) => m.row(r).to_vec(),
+            ServedParam::DenseF16(t) => t.row_f32(r),
             ServedParam::Packed(_) => panic!(
                 "'{}' is packed — row views exist only for dense entries",
                 self.entries[i].0.name
@@ -217,6 +347,7 @@ impl WeightProvider for QuantizedModel {
     fn materialize_at(&self, i: usize) -> Cow<'_, Matrix> {
         match &self.entries[i].1 {
             ServedParam::Dense(m) => Cow::Borrowed(m),
+            ServedParam::DenseF16(t) => Cow::Owned(t.to_matrix()),
             ServedParam::Packed(q) => Cow::Owned(q.dequantize()),
         }
     }
@@ -287,6 +418,62 @@ mod tests {
             let b = qm.materialize_at(i);
             assert_eq!((a.rows, a.cols), (b.rows, b.cols));
         }
+    }
+
+    #[test]
+    fn dense_to_f16_halves_dense_footprint_and_keeps_shapes() {
+        let m = small();
+        let cfg = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &cfg, 2);
+        let mut qm = QuantizedModel::from_parts(&m, &q);
+        let dense32 = qm.dense_storage_bits();
+        qm.dense_to_f16();
+        // 2-D dense entries (emb/head) dominate and drop to 16 bits/elem
+        let dense16 = qm.dense_storage_bits();
+        assert!(dense16 < dense32, "{dense16} !< {dense32}");
+        let two_d: usize = qm
+            .entries
+            .iter()
+            .filter(|(_, p)| matches!(p, ServedParam::DenseF16(_)))
+            .map(|(_, p)| p.numel())
+            .sum();
+        assert!(two_d > 0, "emb/head must become DenseF16");
+        for (desc, p) in &qm.entries {
+            if let ServedParam::DenseF16(t) = p {
+                assert!(t.rows > 1, "{} is 1-D and must stay f32", desc.name);
+                assert_eq!(p.storage_bits(), p.numel() * 16);
+            }
+        }
+        // nothing was mapped — this model was built in memory
+        assert_eq!(qm.n_mapped(), 0);
+        // the runner still serves it (f16 embedding lookup via row_f32)
+        let mut run = crate::model::rwkv::RwkvRunner::new(&qm);
+        assert!(run.forward_token(3).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dense_to_f16_is_idempotent_on_values() {
+        let m = small();
+        let mut qm = QuantizedModel::from_parts(&m, &HashMap::new());
+        qm.dense_to_f16();
+        let once: Vec<Matrix> =
+            (0..qm.n_entries()).map(|i| qm.materialize_at(i).into_owned()).collect();
+        qm.dense_to_f16();
+        for (i, want) in once.iter().enumerate() {
+            assert_eq!(&qm.materialize_at(i).into_owned(), want);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "f16-resident")]
+    fn row_view_of_f16_entry_panics() {
+        let m = small();
+        let mut qm = QuantizedModel::from_parts(&m, &HashMap::new());
+        qm.dense_to_f16();
+        let i = (0..qm.n_entries())
+            .find(|&i| matches!(qm.entries[i].1, ServedParam::DenseF16(_)))
+            .expect("at least one f16 entry");
+        let _ = qm.row_at(i, 0);
     }
 
     #[test]

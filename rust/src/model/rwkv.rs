@@ -178,7 +178,8 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
         let (d, vocab, n_layer) = (cfg.d_model, cfg.vocab, cfg.n_layer);
         assert!(token < vocab, "token {token} >= vocab {vocab}");
         let emb_pos = self.pos("emb");
-        let mut x: Vec<f32> = self.weights.row_at(emb_pos, token).to_vec();
+        // owned-row lookup: also serves f16-resident RWKVQ2 embeddings
+        let mut x: Vec<f32> = self.weights.row_f32(emb_pos, token);
 
         for b in 0..n_layer {
             let p = |suffix: &str| format!("blocks.{b}.{suffix}");

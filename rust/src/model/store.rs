@@ -1,9 +1,10 @@
-//! Weight store: layer inventory + tensors + binary interchange format.
+//! Weight store: layer inventory + tensors + binary interchange formats.
 //!
-//! The format (`RWKVQ1`) is written by `python/compile/train.py` after
+//! Two on-disk formats live here, both little-endian:
+//!
+//! **`RWKVQ1`** — dense fp32, written by `python/compile/train.py` after
 //! the tiny-corpus training run and read here; the quantization pipeline
-//! can also persist a dequantized store for the PJRT runtime. Layout
-//! (little-endian):
+//! can also persist a dequantized store for the PJRT runtime. Layout:
 //!
 //! ```text
 //! magic   8  b"RWKVQ1\0\0"
@@ -16,13 +17,44 @@
 //!   rows  u64, cols u64
 //!   data  rows*cols f32
 //! ```
+//!
+//! **`RWKVQ2`** — the packed checkpoint format: a
+//! [`crate::model::QuantizedModel`] serialized as-is, so load never
+//! re-quantizes and never materialises fp32 weights. Layout:
+//!
+//! ```text
+//! magic   8  b"RWKVQ2\0\0"
+//! header  arch/n_layer/d_model/vocab/head_dim/ffn_ratio/count (as v1)
+//! TOC     count records: name, class, kind
+//!           (0=DenseF16, 1=Sq, 2=Vq), rows, cols,
+//!           kind-specific metadata + absolute payload offsets
+//! payload 64-byte-aligned arrays: packed code/index bitstreams
+//!           (u64 words), f16 dense data (u16), f32 scale/min/
+//!           codebook/tail/col-scale metadata
+//! ```
+//!
+//! Every payload offset is 64-byte aligned, so [`open_rwkvq2`] in mmap
+//! mode ([`LoadMode`]) can borrow the bitstreams and f16 dense payloads
+//! **zero-copy** out of the mapping (`PackedBytes::Mapped` /
+//! `F16Tensor::from_mapped`): open cost is O(header + TOC + f32
+//! metadata) and the weight pages fault in lazily on first matvec. The
+//! buffered mode reads the file once and owns every payload — the
+//! portable fallback (non-unix, big-endian). Scalar grids store one f32
+//! scale/min pair per group on disk so a save→open round trip is
+//! bit-exact against the in-memory model (the bpw *accounting* keeps the
+//! paper's fp16-per-group convention).
 
 use crate::config::ModelConfig;
-use crate::quant::LayerKind;
+use crate::model::qmodel::{QuantizedModel, ServedParam};
+use crate::quant::packing::{MappedWords, PackedBytes, PackedInts};
+use crate::quant::{LayerKind, QuantizedLayer, SqLayer, VqLayer};
+use crate::tensor::f16::{f16_to_f32, f32_to_f16, F16Tensor};
 use crate::tensor::Matrix;
+use crate::util::mmap::Mmap;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Parameter classification — drives quantizability and the §3.2 path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -215,6 +247,581 @@ fn read_str<R: Read>(f: &mut R) -> Result<String> {
     Ok(String::from_utf8(buf)?)
 }
 
+// ---- RWKVQ2: the packed checkpoint format ----
+
+const MAGIC_V1: &[u8; 8] = b"RWKVQ1\0\0";
+const MAGIC_V2: &[u8; 8] = b"RWKVQ2\0\0";
+/// Every payload array starts on a 64-byte boundary: cache-line
+/// friendly, and ≥ the 8-byte alignment the zero-copy `u64` word views
+/// require.
+const PAYLOAD_ALIGN: usize = 64;
+
+const KIND_DENSE_F16: u8 = 0;
+const KIND_SQ: u8 = 1;
+const KIND_VQ: u8 = 2;
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(PAYLOAD_ALIGN) * PAYLOAD_ALIGN
+}
+
+/// How [`open_rwkvq2`] acquires the file bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Memory-map when the host supports it, else buffered.
+    Auto,
+    /// Memory-map (error on hosts without mmap support).
+    Mmap,
+    /// Read the whole file once; every payload is owned.
+    Buffered,
+}
+
+/// Which on-disk format a store file carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreFormat {
+    /// `RWKVQ1` — dense fp32 ([`ModelWeights`]).
+    V1Dense,
+    /// `RWKVQ2` — packed quantized ([`QuantizedModel`]).
+    V2Packed,
+}
+
+/// Sniff the magic of a store file.
+pub fn detect_format(path: &std::path::Path) -> Result<StoreFormat> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).with_context(|| format!("read magic of {path:?}"))?;
+    match &magic {
+        m if m == MAGIC_V1 => Ok(StoreFormat::V1Dense),
+        m if m == MAGIC_V2 => Ok(StoreFormat::V2Packed),
+        other => bail!("{path:?} is not an RWKVQ store (magic {other:?})"),
+    }
+}
+
+fn w_u32<W: Write>(f: &mut W, v: u32) -> Result<()> {
+    f.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64<W: Write>(f: &mut W, v: u64) -> Result<()> {
+    f.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64s<W: Write>(f: &mut W, v: &[u64]) -> Result<()> {
+    for w in v {
+        f.write_all(&w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u16s<W: Write>(f: &mut W, v: &[u16]) -> Result<()> {
+    for w in v {
+        f.write_all(&w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_f32s<W: Write>(f: &mut W, v: &[f32]) -> Result<()> {
+    for w in v {
+        f.write_all(&w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serialization plan of one entry: what payload arrays it owns.
+enum PlanKind<'a> {
+    /// f16 dense data (owned = freshly narrowed f32, borrowed = already
+    /// f16-resident)
+    Dense(std::borrow::Cow<'a, [u16]>),
+    Sq(&'a SqLayer),
+    Vq(&'a VqLayer),
+}
+
+struct Planned<'a> {
+    name: &'a str,
+    class: ParamClass,
+    rows: usize,
+    cols: usize,
+    kind: PlanKind<'a>,
+    /// byte sizes of the payload arrays, in on-disk order
+    sizes: [usize; 4],
+    /// absolute file offsets, parallel to `sizes` (0 for absent arrays)
+    offs: [usize; 4],
+}
+
+impl Planned<'_> {
+    /// Exact TOC record length in bytes (checked against the actual
+    /// write in `save_rwkvq2`).
+    fn record_len(&self) -> usize {
+        let base = 4 + self.name.len() + 1 + 1 + 8 + 8;
+        base + match &self.kind {
+            PlanKind::Dense(_) => 8,
+            PlanKind::Sq(_) => 61,
+            PlanKind::Vq(_) => 52,
+        }
+    }
+}
+
+fn plan_entry<'a>(desc: &'a LayerDesc, p: &'a ServedParam) -> Result<Planned<'a>> {
+    use std::borrow::Cow;
+    let narrow = |m: &Matrix| -> Cow<'static, [u16]> {
+        Cow::Owned(m.data.iter().map(|&v| f32_to_f16(v)).collect())
+    };
+    let (rows, cols, kind, sizes) = match p {
+        ServedParam::Dense(m) => {
+            (m.rows, m.cols, PlanKind::Dense(narrow(m)), [m.numel() * 2, 0, 0, 0])
+        }
+        ServedParam::DenseF16(t) => {
+            (t.rows, t.cols, PlanKind::Dense(Cow::Borrowed(t.as_bits())), [t.numel() * 2, 0, 0, 0])
+        }
+        ServedParam::Packed(QuantizedLayer::Fp16 { rows, cols, data }) => {
+            let m = Matrix::from_vec(*rows, *cols, data.clone());
+            (*rows, *cols, PlanKind::Dense(narrow(&m)), [m.numel() * 2, 0, 0, 0])
+        }
+        ServedParam::Packed(QuantizedLayer::Sq(l)) => {
+            if l.rotation.is_some() {
+                bail!("'{}': QuaRot payloads are served dense and cannot be packed", desc.name);
+            }
+            let groups = l.numel().div_ceil(l.group_size);
+            if l.scales.len() != groups || l.mins.len() != groups {
+                bail!("'{}': scale/min count does not match the group count", desc.name);
+            }
+            let col_inv = l.col_inv_scale.as_ref().map_or(0, |v| v.len() * 4);
+            let sizes = [l.codes.words().len() * 8, groups * 4, groups * 4, col_inv];
+            (l.rows, l.cols, PlanKind::Sq(l), sizes)
+        }
+        ServedParam::Packed(QuantizedLayer::Vq(l)) => {
+            // mirror qmodel::servable_packed — matvec_vq gathers per row
+            // and silently drops a flat tail in release builds
+            if l.d == 0 || l.cols % l.d != 0 || !l.tail.is_empty() {
+                bail!("'{}': only row-tiling VQ layers (no tail) serve packed", desc.name);
+            }
+            let sizes = [l.codebook.len() * 4, l.indices.words().len() * 8, l.tail.len() * 4, 0];
+            (l.rows, l.cols, PlanKind::Vq(l), sizes)
+        }
+    };
+    Ok(Planned { name: &desc.name, class: desc.class, rows, cols, kind, sizes, offs: [0; 4] })
+}
+
+/// Serialize a [`QuantizedModel`] to the RWKVQ2 packed format. See the
+/// module docs for the layout and alignment guarantees.
+pub fn save_rwkvq2(qm: &QuantizedModel, path: &std::path::Path) -> Result<()> {
+    let mut plans = Vec::with_capacity(qm.entries.len());
+    for (desc, p) in &qm.entries {
+        plans.push(plan_entry(desc, p)?);
+    }
+    // size header + TOC, then assign aligned payload offsets
+    let header_len = 8 + 4 + qm.config.arch.len() + 4 * 4 + 8 + 4;
+    let toc_len: usize = plans.iter().map(|p| p.record_len()).sum();
+    let mut cursor = align_up(header_len + toc_len);
+    for p in &mut plans {
+        let sizes = p.sizes;
+        for (i, &size) in sizes.iter().enumerate() {
+            if size > 0 {
+                p.offs[i] = cursor;
+                cursor = align_up(cursor + size);
+            }
+        }
+    }
+
+    // header + TOC, buffered so the record-length math is self-checked
+    let mut head: Vec<u8> = Vec::with_capacity(header_len + toc_len);
+    head.write_all(MAGIC_V2)?;
+    write_str(&mut head, &qm.config.arch)?;
+    w_u32(&mut head, qm.config.n_layer as u32)?;
+    w_u32(&mut head, qm.config.d_model as u32)?;
+    w_u32(&mut head, qm.config.vocab as u32)?;
+    w_u32(&mut head, qm.config.head_dim as u32)?;
+    head.write_all(&qm.config.ffn_ratio.to_le_bytes())?;
+    w_u32(&mut head, plans.len() as u32)?;
+    for p in &plans {
+        let before = head.len();
+        write_str(&mut head, p.name)?;
+        head.write_all(&[p.class.to_u8()])?;
+        let kind_tag = match &p.kind {
+            PlanKind::Dense(_) => KIND_DENSE_F16,
+            PlanKind::Sq(_) => KIND_SQ,
+            PlanKind::Vq(_) => KIND_VQ,
+        };
+        head.write_all(&[kind_tag])?;
+        w_u64(&mut head, p.rows as u64)?;
+        w_u64(&mut head, p.cols as u64)?;
+        match &p.kind {
+            PlanKind::Dense(_) => w_u64(&mut head, p.offs[0] as u64)?,
+            PlanKind::Sq(l) => {
+                w_u32(&mut head, l.bits)?;
+                w_u64(&mut head, l.group_size as u64)?;
+                w_u64(&mut head, l.extra_flops_per_token)?;
+                w_u64(&mut head, p.offs[0] as u64)?; // codes
+                w_u64(&mut head, l.scales.len() as u64)?;
+                w_u64(&mut head, p.offs[1] as u64)?; // scales
+                w_u64(&mut head, p.offs[2] as u64)?; // mins
+                head.write_all(&[u8::from(l.col_inv_scale.is_some())])?;
+                w_u64(&mut head, p.offs[3] as u64)?; // col_inv
+            }
+            PlanKind::Vq(l) => {
+                w_u64(&mut head, l.d as u64)?;
+                w_u32(&mut head, l.k)?;
+                w_u64(&mut head, l.n_entries() as u64)?;
+                w_u64(&mut head, p.offs[0] as u64)?; // codebook
+                w_u64(&mut head, p.offs[1] as u64)?; // indices
+                w_u64(&mut head, l.tail.len() as u64)?;
+                w_u64(&mut head, p.offs[2] as u64)?; // tail
+            }
+        }
+        debug_assert_eq!(head.len() - before, p.record_len(), "TOC sizing drifted");
+    }
+    assert_eq!(head.len(), header_len + toc_len, "header sizing drifted");
+
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(&head)?;
+    let mut pos = head.len();
+    let zeros = [0u8; PAYLOAD_ALIGN];
+    let pad_to = |f: &mut dyn Write, pos: &mut usize, target: usize| -> Result<()> {
+        while *pos < target {
+            let n = (target - *pos).min(PAYLOAD_ALIGN);
+            f.write_all(&zeros[..n])?;
+            *pos += n;
+        }
+        Ok(())
+    };
+    for p in &plans {
+        match &p.kind {
+            PlanKind::Dense(bits) => {
+                pad_to(&mut f, &mut pos, p.offs[0])?;
+                write_u16s(&mut f, bits)?;
+                pos += p.sizes[0];
+            }
+            PlanKind::Sq(l) => {
+                pad_to(&mut f, &mut pos, p.offs[0])?;
+                write_u64s(&mut f, l.codes.words())?;
+                pos += p.sizes[0];
+                pad_to(&mut f, &mut pos, p.offs[1])?;
+                write_f32s(&mut f, &l.scales)?;
+                pos += p.sizes[1];
+                pad_to(&mut f, &mut pos, p.offs[2])?;
+                write_f32s(&mut f, &l.mins)?;
+                pos += p.sizes[2];
+                if let Some(inv) = &l.col_inv_scale {
+                    pad_to(&mut f, &mut pos, p.offs[3])?;
+                    write_f32s(&mut f, inv)?;
+                    pos += p.sizes[3];
+                }
+            }
+            PlanKind::Vq(l) => {
+                pad_to(&mut f, &mut pos, p.offs[0])?;
+                write_f32s(&mut f, &l.codebook)?;
+                pos += p.sizes[0];
+                pad_to(&mut f, &mut pos, p.offs[1])?;
+                write_u64s(&mut f, l.indices.words())?;
+                pos += p.sizes[1];
+                if !l.tail.is_empty() {
+                    pad_to(&mut f, &mut pos, p.offs[2])?;
+                    write_f32s(&mut f, &l.tail)?;
+                    pos += p.sizes[2];
+                }
+            }
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Bounds-checked byte cursor over a loaded/mapped RWKVQ2 file.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("RWKVQ2 offset overflow")?;
+        if end > self.buf.len() {
+            bail!("RWKVQ2 file truncated at byte {} (need {})", self.buf.len(), end);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 1 << 20 {
+            bail!("string length {len} implausible");
+        }
+        Ok(String::from_utf8(self.take(len)?.to_vec())?)
+    }
+}
+
+/// Validate an absolute `n × elem`-byte payload window against the file
+/// and return its offset as `usize`. All size math runs in u64 so a
+/// crafted TOC cannot wrap a bounds check on any pointer width; the
+/// returned offset (and `n * elem` downstream, both ≤ file length) are
+/// then safe in `usize`.
+fn checked_window(buf: &[u8], off: u64, n: u64, elem: u64, what: &str) -> Result<usize> {
+    let bytes = n.checked_mul(elem).with_context(|| format!("{what}: payload size overflow"))?;
+    let end = off.checked_add(bytes).with_context(|| format!("{what}: payload end overflow"))?;
+    if end > buf.len() as u64 {
+        bail!("{what}: payload [{off}, {end}) overruns the {}-byte file", buf.len());
+    }
+    Ok(off as usize)
+}
+
+fn f32s_at(buf: &[u8], off: u64, n: u64, what: &str) -> Result<Vec<f32>> {
+    let off = checked_window(buf, off, n, 4, what)?;
+    Ok(buf[off..off + n as usize * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn u16s_at(buf: &[u8], off: u64, n: u64, what: &str) -> Result<Vec<u16>> {
+    let off = checked_window(buf, off, n, 2, what)?;
+    Ok(buf[off..off + n as usize * 2]
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn u64s_at(buf: &[u8], off: u64, n: u64, what: &str) -> Result<Vec<u64>> {
+    let off = checked_window(buf, off, n, 8, what)?;
+    Ok(buf[off..off + n as usize * 8]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Packed word payload: borrowed zero-copy from the mapping when one is
+/// given, owned otherwise.
+fn words_payload(
+    buf: &[u8],
+    map: Option<&Arc<Mmap>>,
+    off: u64,
+    words: u64,
+    what: &str,
+) -> Result<PackedBytes> {
+    let off_usize = checked_window(buf, off, words, 8, what)?;
+    match map {
+        Some(m) => {
+            if off % 8 != 0 {
+                bail!("{what}: payload offset {off} is not 8-aligned");
+            }
+            Ok(PackedBytes::Mapped(MappedWords::new(m.clone(), off_usize, words as usize)))
+        }
+        None => Ok(PackedBytes::Owned(u64s_at(buf, off, words, what)?)),
+    }
+}
+
+/// Open an RWKVQ2 packed checkpoint as a servable [`QuantizedModel`].
+///
+/// In mmap mode the code/index bitstreams and 2-D f16 dense payloads are
+/// borrowed zero-copy from the mapping (pages fault in on first use);
+/// f32 metadata (scales/mins/codebooks/tails) and 1-D dense vectors are
+/// materialised eagerly — they are the O(metadata) fraction the runner
+/// reads per token anyway.
+pub fn open_rwkvq2(path: &std::path::Path, mode: LoadMode) -> Result<QuantizedModel> {
+    let use_mmap = match mode {
+        LoadMode::Mmap => true,
+        LoadMode::Buffered => false,
+        LoadMode::Auto => Mmap::supported(),
+    };
+    if use_mmap {
+        let map = Arc::new(Mmap::open(path)?);
+        parse_rwkvq2(map.as_bytes(), Some(&map))
+            .with_context(|| format!("parsing mapped {path:?}"))
+    } else {
+        let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        parse_rwkvq2(&bytes, None).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+fn parse_rwkvq2(buf: &[u8], map: Option<&Arc<Mmap>>) -> Result<QuantizedModel> {
+    let mut r = ByteReader { buf, pos: 0 };
+    if r.take(8)? != MAGIC_V2.as_slice() {
+        bail!("not an RWKVQ2 file (bad magic)");
+    }
+    let arch = r.str()?;
+    let n_layer = r.u32()? as usize;
+    let d_model = r.u32()? as usize;
+    let vocab = r.u32()? as usize;
+    let head_dim = r.u32()? as usize;
+    let ffn_ratio = r.f64()?;
+    let config = ModelConfig { arch, n_layer, d_model, vocab, head_dim, ffn_ratio };
+    let count = r.u32()? as usize;
+    if count > 1 << 20 {
+        bail!("entry count {count} implausible");
+    }
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = r.str()?;
+        let class = ParamClass::from_u8(r.u8()?)?;
+        let kind = r.u8()?;
+        // shape fields stay u64 until validated: the per-entry element
+        // cap (2^31) keeps every later byte-size product inside u64 (and
+        // inside usize on 32-bit buffered-fallback hosts)
+        let rows64 = r.u64()?;
+        let cols64 = r.u64()?;
+        let numel64 = rows64
+            .checked_mul(cols64)
+            .with_context(|| format!("'{name}': numel overflow"))?;
+        if numel64 > 1 << 31 {
+            bail!("'{name}': shape {rows64}x{cols64} implausible");
+        }
+        let (rows, cols, numel) = (rows64 as usize, cols64 as usize, numel64 as usize);
+        let served = match kind {
+            KIND_DENSE_F16 => {
+                let off = r.u64()?;
+                let off_usize = checked_window(buf, off, numel64, 2, &name)?;
+                if rows <= 1 {
+                    // 1-D vectors stay f32-resident: the runner borrows
+                    // their rows per token (O(d) each, exact after the
+                    // writer's f16 narrowing)
+                    let data = u16s_at(buf, off, numel64, &name)?;
+                    let wide = data.iter().map(|&b| f16_to_f32(b)).collect();
+                    ServedParam::Dense(Matrix::from_vec(rows, cols, wide))
+                } else {
+                    let t = match map {
+                        Some(m) => {
+                            if off % 2 != 0 {
+                                bail!("'{name}': f16 payload offset {off} is not 2-aligned");
+                            }
+                            F16Tensor::from_mapped(rows, cols, m.clone(), off_usize)
+                        }
+                        None => {
+                            F16Tensor::from_bits(rows, cols, u16s_at(buf, off, numel64, &name)?)
+                        }
+                    };
+                    ServedParam::DenseF16(t)
+                }
+            }
+            KIND_SQ => {
+                let bits = r.u32()?;
+                if !(1..=32).contains(&bits) {
+                    bail!("'{name}': SQ bit-width {bits} out of range");
+                }
+                let group_size = r.u64()?;
+                if !(1..=1 << 24).contains(&group_size) {
+                    bail!("'{name}': SQ group size {group_size} out of range");
+                }
+                let extra_flops_per_token = r.u64()?;
+                let codes_off = r.u64()?;
+                let n_groups = r.u64()?;
+                let scales_off = r.u64()?;
+                let mins_off = r.u64()?;
+                let has_col_inv = r.u8()?;
+                let col_inv_off = r.u64()?;
+                if n_groups != numel64.div_ceil(group_size) {
+                    bail!("'{name}': group count {n_groups} inconsistent with shape");
+                }
+                let words = (numel64 * u64::from(bits)).div_ceil(64);
+                let codes = PackedInts::from_raw(
+                    bits,
+                    numel,
+                    words_payload(buf, map, codes_off, words, &name)?,
+                );
+                let scales = f32s_at(buf, scales_off, n_groups, &name)?;
+                let mins = f32s_at(buf, mins_off, n_groups, &name)?;
+                let col_inv_scale = match has_col_inv {
+                    0 => None,
+                    1 => Some(f32s_at(buf, col_inv_off, cols64, &name)?),
+                    other => bail!("'{name}': bad col_inv flag {other}"),
+                };
+                ServedParam::Packed(QuantizedLayer::Sq(SqLayer {
+                    rows,
+                    cols,
+                    bits,
+                    group_size: group_size as usize,
+                    codes,
+                    scales,
+                    mins,
+                    extra_flops_per_token,
+                    rotation: None,
+                    col_inv_scale,
+                }))
+            }
+            KIND_VQ => {
+                let d64 = r.u64()?;
+                if !(1..=1 << 16).contains(&d64) {
+                    bail!("'{name}': VQ vector dim {d64} out of range");
+                }
+                let k = r.u32()?;
+                if !(1..=32).contains(&k) {
+                    bail!("'{name}': VQ index width {k} out of range");
+                }
+                let n_entries = r.u64()?;
+                let cb_off = r.u64()?;
+                let idx_off = r.u64()?;
+                let tail_len = r.u64()?;
+                let tail_off = r.u64()?;
+                if cols64 % d64 != 0 {
+                    // matvec_vq gathers per row; a non-tiling dim would
+                    // silently drop columns in release builds
+                    bail!("'{name}': VQ dim {d64} does not tile the row width {cols64}");
+                }
+                if tail_len != numel64 % d64 {
+                    bail!("'{name}': tail length {tail_len} inconsistent with shape");
+                }
+                let d = d64 as usize;
+                let nvec64 = numel64 / d64;
+                let words = (nvec64 * u64::from(k)).div_ceil(64);
+                let cb_len = n_entries
+                    .checked_mul(d64)
+                    .with_context(|| format!("'{name}': codebook size overflow"))?;
+                if n_entries == 0 && nvec64 > 0 {
+                    bail!("'{name}': empty codebook with {nvec64} coded vectors");
+                }
+                let codebook = f32s_at(buf, cb_off, cb_len, &name)?;
+                let indices = PackedInts::from_raw(
+                    k,
+                    nvec64 as usize,
+                    words_payload(buf, map, idx_off, words, &name)?,
+                );
+                // semantic check, buffered mode only: the payload is
+                // already resident, so rejecting out-of-codebook indices
+                // here is free — the mmap path stays O(TOC) and a
+                // corrupt mapped index instead panics at first matvec
+                if map.is_none() {
+                    for v in 0..indices.len {
+                        if u64::from(indices.get(v)) >= n_entries {
+                            bail!("'{name}': VQ index {} exceeds the codebook", indices.get(v));
+                        }
+                    }
+                }
+                let tail = f32s_at(buf, tail_off, tail_len, &name)?;
+                ServedParam::Packed(QuantizedLayer::Vq(VqLayer {
+                    rows,
+                    cols,
+                    d,
+                    k,
+                    codebook,
+                    indices,
+                    tail,
+                }))
+            }
+            other => bail!("'{name}': unknown entry kind {other}"),
+        };
+        entries.push((LayerDesc { name, class }, served));
+    }
+    Ok(QuantizedModel::from_entries(config, entries))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +870,59 @@ mod tests {
         let path = std::env::temp_dir().join("rwkvq_badmagic.bin");
         std::fs::write(&path, b"NOTMAGIC________").unwrap();
         assert!(ModelWeights::load(&path).is_err());
+        assert!(detect_format(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn detect_format_distinguishes_v1_and_v2() {
+        let m = demo_model();
+        let p1 = std::env::temp_dir().join("rwkvq_detect_v1.bin");
+        m.save(&p1).unwrap();
+        assert_eq!(detect_format(&p1).unwrap(), StoreFormat::V1Dense);
+        let qm = QuantizedModel::from_parts(&m, &std::collections::HashMap::new());
+        let p2 = std::env::temp_dir().join("rwkvq_detect_v2.bin");
+        save_rwkvq2(&qm, &p2).unwrap();
+        assert_eq!(detect_format(&p2).unwrap(), StoreFormat::V2Packed);
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn v2_truncated_file_errors_cleanly() {
+        let m = demo_model();
+        let mut qm = QuantizedModel::from_parts(&m, &std::collections::HashMap::new());
+        qm.dense_to_f16();
+        let path = std::env::temp_dir().join("rwkvq_truncated_v2.bin");
+        qm.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [7usize, 40, full.len() / 2, full.len() - 3] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            // both load paths must report an error, never panic
+            assert!(open_rwkvq2(&path, LoadMode::Buffered).is_err(), "cut at {cut}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_round_trip_of_unquantized_model_is_f16_exact() {
+        use crate::model::WeightProvider;
+        let m = demo_model();
+        let mut qm = QuantizedModel::from_parts(&m, &std::collections::HashMap::new());
+        qm.dense_to_f16();
+        let path = std::env::temp_dir().join("rwkvq_v2_dense_roundtrip.bin");
+        qm.save(&path).unwrap();
+        for mode in [LoadMode::Buffered, LoadMode::Auto] {
+            let back = open_rwkvq2(&path, mode).unwrap();
+            assert_eq!(back.config, qm.config);
+            assert_eq!(back.entries.len(), qm.entries.len());
+            for i in 0..qm.n_entries() {
+                assert_eq!(qm.entry_name(i), back.entry_name(i));
+                let a = qm.materialize_at(i).into_owned();
+                let b = back.materialize_at(i).into_owned();
+                assert_eq!(a, b, "entry {} drifted through the round trip", qm.entry_name(i));
+            }
+        }
         std::fs::remove_file(path).ok();
     }
 

@@ -29,6 +29,7 @@
 //! hybrid checkpoints all run the identical forward-pass code.
 
 use super::{QuantizedLayer, SqLayer, VqLayer};
+use crate::tensor::f16::F16Tensor;
 use crate::tensor::{linalg, Matrix};
 use std::sync::OnceLock;
 
@@ -402,6 +403,9 @@ thread_local! {
     /// Scratch for the gathered codebook row of the VQ kernel.
     static VQ_ROW: std::cell::RefCell<Vec<f32>> =
         const { std::cell::RefCell::new(Vec::new()) };
+    /// Scratch for the widened row of the f16 dense matvec.
+    static F16_ROW: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// y = W x for an SQ layer, streaming packed codes with the
@@ -538,6 +542,49 @@ pub fn matvec_vq_with(kernel: Kernel, l: &VqLayer, x: &[f32], y: &mut [f32]) {
     });
 }
 
+/// y = W x for a half-precision dense tensor (RWKVQ2-resident
+/// embeddings/heads/fallbacks): each row is widened f16→f32 into a
+/// thread-local scratch, then accumulated with the full-width vectorized
+/// dot — the dense twin of the SQ unpack-then-dot two-pass shape. Works
+/// identically for owned and mapped payloads (the mapped case faults
+/// checkpoint pages in on first touch).
+pub fn matvec_f16(t: &F16Tensor, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), t.cols);
+    assert_eq!(y.len(), t.rows);
+    let kernel = active_kernel();
+    F16_ROW.with(|scratch| {
+        let mut row = scratch.borrow_mut();
+        row.clear();
+        row.resize(t.cols, 0.0);
+        for (r, slot) in y.iter_mut().enumerate() {
+            t.row_f32_into(r, &mut row);
+            *slot = dot_f32(kernel, &row, x);
+        }
+    });
+}
+
+impl LinearOp for F16Tensor {
+    fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        matvec_f16(self, x, y);
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.numel() * 16
+    }
+
+    fn flops_per_token(&self) -> u64 {
+        2 * self.numel() as u64
+    }
+}
+
 /// Dispatching matvec over any quantized layer (fp16 layers fall back to
 /// the dense path).
 pub fn matvec(layer: &QuantizedLayer, x: &[f32], y: &mut [f32]) {
@@ -646,6 +693,26 @@ mod tests {
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn f16_matvec_matches_widened_dense() {
+        let (w, x) = rand(6, 24, 48);
+        let t = F16Tensor::from_matrix(&w);
+        // reference: widen the whole tensor, then dense matvec
+        let want = linalg::matvec(&t.to_matrix(), &x);
+        let mut got = vec![0.0f32; 24];
+        matvec_f16(&t, &x, &mut got);
+        for i in 0..24 {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-5 * (1.0 + want[i].abs()),
+                "{i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        assert_eq!(LinearOp::storage_bits(&t), 24 * 48 * 16);
+        assert_eq!(LinearOp::flops_per_token(&t), 2 * 24 * 48);
     }
 
     #[test]

@@ -1,14 +1,95 @@
-//! Bit-packing of small unsigned integers into a dense `Vec<u64>` word
+//! Bit-packing of small unsigned integers into a dense `u64` word
 //! stream. Used for SQ codes (3–8 bit) and VQ codebook indices (≤16 bit).
 //! Packing is little-endian within each 64-bit word; values may straddle
 //! word boundaries.
+//!
+//! The word stream itself lives behind [`PackedBytes`]: either an owned
+//! `Vec<u64>` (the quantization pipeline's output) or a borrowed window
+//! of a memory-mapped RWKVQ2 checkpoint — the zero-copy serving path,
+//! where the packed payload is never copied out of the mapping and pages
+//! fault in on first matvec.
+
+use crate::util::mmap::Mmap;
+use std::sync::Arc;
+
+/// Backing storage for a packed word stream: owned words, or an aligned
+/// window borrowed from a checkpoint mapping.
+#[derive(Clone, Debug)]
+pub enum PackedBytes {
+    Owned(Vec<u64>),
+    Mapped(MappedWords),
+}
+
+impl PackedBytes {
+    /// View the payload as `u64` words (little-endian on disk; the
+    /// mapped variant reinterprets in place and is only constructed on
+    /// little-endian hosts — see `util::mmap::SUPPORTED`).
+    #[inline]
+    pub fn as_words(&self) -> &[u64] {
+        match self {
+            PackedBytes::Owned(v) => v,
+            PackedBytes::Mapped(m) => m.as_words(),
+        }
+    }
+
+    /// Is this payload borrowed from a checkpoint mapping?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, PackedBytes::Mapped(_))
+    }
+}
+
+/// An 8-aligned `u64` window of a shared read-only mapping.
+#[derive(Clone)]
+pub struct MappedWords {
+    map: Arc<Mmap>,
+    offset: usize,
+    words: usize,
+}
+
+impl MappedWords {
+    /// Borrow `words` u64 words at byte `offset` of `map`. The offset
+    /// must be 8-aligned and in bounds (the RWKVQ2 writer aligns every
+    /// payload to 64 bytes).
+    pub fn new(map: Arc<Mmap>, offset: usize, words: usize) -> MappedWords {
+        assert_eq!(offset % 8, 0, "packed payload offset {offset} unaligned");
+        // non-wrapping bounds check (u128: immune to crafted sizes)
+        let end = offset as u128 + words as u128 * 8;
+        assert!(end <= map.len() as u128, "packed payload at {offset} overruns the mapping");
+        MappedWords { map, offset, words }
+    }
+
+    #[inline]
+    fn as_words(&self) -> &[u64] {
+        let bytes = &self.map.as_bytes()[self.offset..self.offset + self.words * 8];
+        // SAFETY: 8-aligned in-bounds window of a live read-only mapping
+        // (checked in `new`); u64 has no invalid bit patterns.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u64, self.words) }
+    }
+}
+
+impl std::fmt::Debug for MappedWords {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedWords")
+            .field("offset", &self.offset)
+            .field("words", &self.words)
+            .finish()
+    }
+}
 
 /// A bit-packed array of `len` unsigned integers of `bits` bits each.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct PackedInts {
     pub bits: u32,
     pub len: usize,
-    words: Vec<u64>,
+    words: PackedBytes,
+}
+
+impl PartialEq for PackedInts {
+    fn eq(&self, other: &Self) -> bool {
+        self.bits == other.bits
+            && self.len == other.len
+            && self.words.as_words() == other.words.as_words()
+    }
 }
 
 impl PackedInts {
@@ -29,21 +110,39 @@ impl PackedInts {
                 words[word + 1] |= v >> (64 - off);
             }
         }
-        PackedInts { bits, len: values.len(), words }
+        PackedInts { bits, len: values.len(), words: PackedBytes::Owned(words) }
+    }
+
+    /// Reassemble from a deserialized word stream (RWKVQ2 loader). The
+    /// word count must match `len` values of `bits` bits.
+    pub fn from_raw(bits: u32, len: usize, words: PackedBytes) -> PackedInts {
+        assert!((1..=32).contains(&bits), "bits must be 1..=32, got {bits}");
+        // u64 product: len*bits must not wrap the word-count check on
+        // 32-bit (buffered-fallback) hosts
+        let need = (len as u64 * u64::from(bits)).div_ceil(64);
+        let have = words.as_words().len() as u64;
+        assert_eq!(need, have, "{len}x{bits}-bit payload needs {need} words, got {have}");
+        PackedInts { bits, len, words }
+    }
+
+    /// Is the payload borrowed from a checkpoint mapping?
+    pub fn is_mapped(&self) -> bool {
+        self.words.is_mapped()
     }
 
     /// Read the i-th value.
     #[inline]
     pub fn get(&self, i: usize) -> u32 {
         debug_assert!(i < self.len);
+        let words = self.words.as_words();
         let bits = self.bits as usize;
         let mask = if self.bits == 32 { u64::from(u32::MAX) } else { (1u64 << self.bits) - 1 };
         let bit = i * bits;
         let word = bit / 64;
         let off = bit % 64;
-        let mut v = self.words[word] >> off;
+        let mut v = words[word] >> off;
         if off + bits > 64 {
-            v |= self.words[word + 1] << (64 - off);
+            v |= words[word + 1] << (64 - off);
         }
         (v & mask) as u32
     }
@@ -64,7 +163,7 @@ impl PackedInts {
     /// `len`/`bits` header, which is negligible and counted separately in
     /// the bpw accounting).
     pub fn payload_bytes(&self) -> usize {
-        self.words.len() * 8
+        self.words.as_words().len() * 8
     }
 
     /// Exact payload size in bits (len * bits, before word rounding).
@@ -72,16 +171,20 @@ impl PackedInts {
         self.len * self.bits as usize
     }
 
-    /// Raw word storage (for sequential decoders).
+    /// Raw word storage (for sequential decoders and the RWKVQ2 writer).
     pub fn words(&self) -> &[u64] {
-        &self.words
+        self.words.as_words()
     }
 
     /// Sequential reader positioned at element `start` — much faster
     /// than repeated `get` for contiguous runs (the quantized-matvec
     /// hot path).
     pub fn reader(&self, start: usize) -> BitReader<'_> {
-        BitReader { words: &self.words, bitpos: start * self.bits as usize, bits: self.bits }
+        BitReader {
+            words: self.words.as_words(),
+            bitpos: start * self.bits as usize,
+            bits: self.bits,
+        }
     }
 }
 
@@ -175,6 +278,47 @@ mod tests {
         let p = PackedInts::pack(&[], 7);
         assert_eq!(p.len, 0);
         assert!(p.unpack().is_empty());
+    }
+
+    #[test]
+    fn from_raw_owned_round_trips() {
+        let vals: Vec<u32> = (0..200).map(|i| i % 32).collect();
+        let p = PackedInts::pack(&vals, 5);
+        let rebuilt = PackedInts::from_raw(5, vals.len(), PackedBytes::Owned(p.words().to_vec()));
+        assert_eq!(rebuilt, p);
+        assert!(!rebuilt.is_mapped());
+        assert_eq!(rebuilt.unpack(), vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "words")]
+    fn from_raw_word_count_mismatch_panics() {
+        let _ = PackedInts::from_raw(5, 100, PackedBytes::Owned(vec![0u64; 2]));
+    }
+
+    #[test]
+    fn mapped_words_round_trip() {
+        if !Mmap::supported() {
+            return;
+        }
+        let vals: Vec<u32> = (0..513).map(|i| (i * 3) % 8).collect();
+        let p = PackedInts::pack(&vals, 3);
+        let mut bytes = Vec::new();
+        for w in p.words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let path = std::env::temp_dir().join("rwkvq_packed_mapped_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let mapped = PackedInts::from_raw(
+            3,
+            vals.len(),
+            PackedBytes::Mapped(MappedWords::new(map, 0, p.words().len())),
+        );
+        assert!(mapped.is_mapped());
+        assert_eq!(mapped, p);
+        assert_eq!(mapped.unpack(), vals);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! IEEE 754 binary16 ⇄ binary32 conversion and the half-precision dense
+//! tensor used for serving.
+//!
+//! The compared PTQ frameworks (and this repo's bpw accounting) keep
+//! embeddings, heads, norms and element-wise weights in fp16; until the
+//! RWKVQ2 format landed they were still *resident* in fp32. [`F16Tensor`]
+//! makes the 16-bit accounting physical: raw `u16` payloads, owned or
+//! borrowed zero-copy from a checkpoint mapping
+//! ([`crate::util::mmap::Mmap`]), widened to f32 row-by-row on the fly
+//! (`quant::exec::matvec_f16` / [`F16Tensor::row_f32`]).
+//!
+//! The scalar conversions implement round-to-nearest-even with full
+//! subnormal, infinity and NaN handling — exercised bit-exhaustively by
+//! the tests below.
+
+use crate::tensor::Matrix;
+use crate::util::mmap::Mmap;
+use std::sync::Arc;
+
+/// Convert an f32 to binary16 bits (round-to-nearest-even; overflow to
+/// ±inf, underflow through the subnormal range to ±0; NaN stays NaN but
+/// payload bits are not preserved).
+pub fn f32_to_f16(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let raw_exp = (x >> 23) & 0xff;
+    let mantissa = x & 0x007f_ffff;
+    if raw_exp == 0xff {
+        if mantissa == 0 {
+            return sign | 0x7c00; // ±inf
+        }
+        return sign | 0x7e00; // NaN (quiet)
+    }
+    let exp = raw_exp as i32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → ±0
+        }
+        // subnormal half: shift the (implicit-1) mantissa into place
+        let m = mantissa | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        // rounding may carry into the smallest normal (0x0400) — correct
+        return sign | (half + u32::from(round_up)) as u16;
+    }
+    let half = ((exp as u32) << 10) | (mantissa >> 13);
+    let rem = mantissa & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // rounding may carry into the exponent, up to 0x7c00 = inf — correct
+    sign | (half + u32::from(round_up)) as u16
+}
+
+/// Convert binary16 bits to f32 (exact — every f16 value is
+/// representable in f32).
+#[inline]
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign32 = ((bits as u32) & 0x8000) << 16;
+    let exp = (bits >> 10) & 0x1f;
+    let frac = (bits & 0x03ff) as u32;
+    if exp == 0 {
+        if frac == 0 {
+            return f32::from_bits(sign32); // ±0
+        }
+        // subnormal: frac · 2^-24 (exact in f32)
+        let v = frac as f32 * f32::from_bits(0x3380_0000);
+        return if sign32 != 0 { -v } else { v };
+    }
+    if exp == 0x1f {
+        if frac == 0 {
+            return f32::from_bits(sign32 | 0x7f80_0000); // ±inf
+        }
+        return f32::from_bits(sign32 | 0x7fc0_0000 | (frac << 13)); // NaN
+    }
+    f32::from_bits(sign32 | ((exp as u32 + 112) << 23) | (frac << 13))
+}
+
+/// Round an f32 through f16 and back — the value a dense entry takes
+/// after an RWKVQ2 save/open round trip.
+#[inline]
+pub fn round_via_f16(v: f32) -> f32 {
+    f16_to_f32(f32_to_f16(v))
+}
+
+/// Backing storage of an [`F16Tensor`]: an owned buffer or a borrowed
+/// window of a checkpoint mapping (zero copy, pages faulted on first
+/// touch).
+#[derive(Clone)]
+enum F16Data {
+    Owned(Vec<u16>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+/// Row-major dense binary16 matrix — the resident form of RWKVQ2 dense
+/// entries (embeddings, heads, QuaRot fallbacks).
+#[derive(Clone)]
+pub struct F16Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    data: F16Data,
+}
+
+impl F16Tensor {
+    /// Convert a dense f32 matrix (round-to-nearest-even per element).
+    pub fn from_matrix(m: &Matrix) -> F16Tensor {
+        let data = m.data.iter().map(|&v| f32_to_f16(v)).collect();
+        F16Tensor { rows: m.rows, cols: m.cols, data: F16Data::Owned(data) }
+    }
+
+    /// Wrap raw binary16 payload bits.
+    pub fn from_bits(rows: usize, cols: usize, bits: Vec<u16>) -> F16Tensor {
+        assert_eq!(rows * cols, bits.len(), "shape {rows}x{cols} != len {}", bits.len());
+        F16Tensor { rows, cols, data: F16Data::Owned(bits) }
+    }
+
+    /// Borrow `rows*cols` binary16 elements starting at byte `offset` of
+    /// a checkpoint mapping. The offset must be 2-aligned and in bounds
+    /// (the RWKVQ2 writer aligns every payload to 64 bytes).
+    pub fn from_mapped(rows: usize, cols: usize, map: Arc<Mmap>, offset: usize) -> F16Tensor {
+        let len = rows * cols;
+        assert_eq!(offset % 2, 0, "f16 payload offset {offset} unaligned");
+        // non-wrapping bounds check (u128: immune to crafted sizes)
+        let end = offset as u128 + len as u128 * 2;
+        assert!(end <= map.len() as u128, "f16 payload at {offset} overruns the mapping");
+        F16Tensor { rows, cols, data: F16Data::Mapped { map, offset, len } }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Is the payload borrowed from a checkpoint mapping (vs owned)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.data, F16Data::Mapped { .. })
+    }
+
+    /// The raw binary16 elements, row-major.
+    pub fn as_bits(&self) -> &[u16] {
+        match &self.data {
+            F16Data::Owned(v) => v,
+            F16Data::Mapped { map, offset, len } => {
+                let bytes = &map.as_bytes()[*offset..*offset + *len * 2];
+                // SAFETY: 2-aligned in-bounds window of a live read-only
+                // mapping (checked in from_mapped); u16 has no invalid
+                // bit patterns. LE host reinterprets LE payload exactly.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u16, *len) }
+            }
+        }
+    }
+
+    /// Row `r` widened to f32.
+    pub fn row_f32(&self, r: usize) -> Vec<f32> {
+        let bits = self.as_bits();
+        bits[r * self.cols..(r + 1) * self.cols].iter().map(|&b| f16_to_f32(b)).collect()
+    }
+
+    /// Widen a row into a caller-provided buffer (hot-path form).
+    pub fn row_f32_into(&self, r: usize, out: &mut [f32]) {
+        let bits = &self.as_bits()[r * self.cols..(r + 1) * self.cols];
+        for (dst, &b) in out.iter_mut().zip(bits) {
+            *dst = f16_to_f32(b);
+        }
+    }
+
+    /// Widen the whole tensor to a dense f32 matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        let data = self.as_bits().iter().map(|&b| f16_to_f32(b)).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+impl std::fmt::Debug for F16Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("F16Tensor")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+impl PartialEq for F16Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.as_bits() == other.as_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_f16_value_round_trips_exactly() {
+        // exhaustive: f16 → f32 → f16 must be the identity for all
+        // 65536 bit patterns (modulo NaN payload canonicalisation)
+        for bits in 0..=u16::MAX {
+            let widened = f16_to_f32(bits);
+            let back = f32_to_f16(widened);
+            if widened.is_nan() {
+                assert!(f16_to_f32(back).is_nan(), "NaN lost: {bits:#06x} -> {back:#06x}");
+            } else {
+                assert_eq!(back, bits, "{bits:#06x} widened to {widened} narrowed to {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals_widen_exactly() {
+        // smallest positive subnormal: 2^-24
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        // largest subnormal: 1023 · 2^-24
+        assert_eq!(f16_to_f32(0x03ff), 1023.0 * 2.0f32.powi(-24));
+        // negative subnormal
+        assert_eq!(f16_to_f32(0x8001), -(2.0f32.powi(-24)));
+        // narrowing an exactly representable subnormal is exact
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-15)), 0x0200);
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 (even) and 1 + 2^-10 → 1.0
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // 1 + 3·2^-11 sits between 1+2^-10 (odd) and 1+2^-9 (even) → up
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // just above the halfway point rounds up
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3c01);
+    }
+
+    #[test]
+    fn inf_nan_and_overflow() {
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // beyond the f16 range (max finite = 65504) → inf
+        assert_eq!(f32_to_f16(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16(1e30), 0x7c00);
+        assert_eq!(f32_to_f16(-1e30), 0xfc00);
+        // largest finite f16 survives
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+    }
+
+    #[test]
+    fn signed_zero_and_underflow() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f16_to_f32(0x8000), 0.0);
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+        // below half the smallest subnormal → ±0
+        assert_eq!(f32_to_f16(2.0f32.powi(-26)), 0x0000);
+        assert_eq!(f32_to_f16(-2.0f32.powi(-26)), 0x8000);
+    }
+
+    #[test]
+    fn tensor_round_trips_through_matrix() {
+        let m = Matrix::from_vec(2, 3, vec![0.5, -1.25, 3.75, 0.0, 100.0, -0.0625]);
+        let t = F16Tensor::from_matrix(&m);
+        assert_eq!(t.numel(), 6);
+        assert!(!t.is_mapped());
+        // all values above are exactly representable in f16
+        assert_eq!(t.to_matrix(), m);
+        assert_eq!(t.row_f32(1), vec![0.0, 100.0, -0.0625]);
+        let mut buf = vec![0.0f32; 3];
+        t.row_f32_into(0, &mut buf);
+        assert_eq!(buf, vec![0.5, -1.25, 3.75]);
+    }
+
+    #[test]
+    fn round_via_f16_quantizes() {
+        let v = 1.0 + 2.0f32.powi(-12); // below half-ULP at 1.0 → drops
+        assert_eq!(round_via_f16(v), 1.0);
+        assert_eq!(round_via_f16(0.5), 0.5);
+    }
+}

@@ -4,8 +4,10 @@
 //! provides the small, allocation-conscious matrix type they share, plus
 //! row/column views and elementary ops. Heavier numerics (matmul,
 //! Cholesky, Hadamard transforms) live in [`linalg`]; summary statistics
-//! in [`stats`].
+//! in [`stats`]; binary16 conversion and the half-precision dense tensor
+//! served from RWKVQ2 checkpoints in [`f16`].
 
+pub mod f16;
 pub mod linalg;
 pub mod stats;
 

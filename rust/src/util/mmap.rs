@@ -1,0 +1,184 @@
+//! Minimal read-only memory mapping — `memmap`-style, no dependencies.
+//!
+//! The RWKVQ2 loader ([`crate::model::store`]) borrows packed payloads
+//! straight out of a [`Mmap`], so model startup touches only the table
+//! of contents and the OS faults weight pages in lazily on first use.
+//! The wrapper goes through raw `libc` `mmap`/`munmap` declared here
+//! (the offline vendor set has no `memmap2`); platforms without support
+//! (non-unix, 32-bit, big-endian) report [`Mmap::supported`] = false and
+//! callers fall back to buffered reads.
+//!
+//! Endianness note: the RWKVQ2 format is little-endian on disk and the
+//! mapped payloads are reinterpreted in place, so the zero-copy path is
+//! gated to little-endian hosts; the buffered fallback decodes portably.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// Can this build memory-map checkpoint files? (64-bit unix,
+/// little-endian — everything CI runs on; other hosts use the
+/// buffered-read fallback.)
+pub const SUPPORTED: bool =
+    cfg!(all(unix, target_pointer_width = "64", target_endian = "little"));
+
+/// A read-only, page-aligned memory mapping of an entire file.
+///
+/// The mapping is private (copy-on-write, never written) and lives until
+/// drop; shared ownership across borrowed payload views goes through
+/// `Arc<Mmap>`.
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only for its whole lifetime and the
+// pointer is never handed out mutably — concurrent reads are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Whether [`Mmap::open`] can succeed on this host.
+    pub fn supported() -> bool {
+        SUPPORTED
+    }
+
+    /// Map `path` read-only in its entirety.
+    #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let len = file.metadata().with_context(|| format!("stat {path:?}"))?.len() as usize;
+        if len == 0 {
+            bail!("cannot map empty file {path:?}");
+        }
+        // SAFETY: null hint, PROT_READ/MAP_PRIVATE over a freshly opened
+        // fd, offset 0 — the fd may be closed after mmap returns (the
+        // mapping keeps its own reference to the file).
+        let ptr = unsafe {
+            let (prot, flags) = (sys::PROT_READ, sys::MAP_PRIVATE);
+            sys::mmap(std::ptr::null_mut(), len, prot, flags, file.as_raw_fd(), 0)
+        };
+        if ptr == sys::MAP_FAILED {
+            bail!("mmap({path:?}) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: ptr as *mut u8, len })
+    }
+
+    /// Stub for hosts without mmap support — callers are expected to
+    /// check [`Mmap::supported`] and take the buffered-read path.
+    #[cfg(not(all(unix, target_pointer_width = "64", target_endian = "little")))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        bail!("memory-mapped loading is not supported on this host — open {path:?} buffered");
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped file contents.
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping until drop.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+        // SAFETY: ptr/len came from a successful mmap and are unmapped
+        // exactly once.
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        // 64-bit unix only: off_t is i64 on Linux LP64 and macOS, and
+        // size_t matches usize — both checked by the cfg gate above.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        if !Mmap::supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join("rwkvq_mmap_test.bin");
+        std::fs::write(&path, b"hello mapping").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), 13);
+        assert!(!m.is_empty());
+        assert_eq!(m.as_bytes(), b"hello mapping");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        if !Mmap::supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join("rwkvq_mmap_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        assert!(Mmap::open(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let path = std::env::temp_dir().join("rwkvq_mmap_nonexistent.bin");
+        assert!(Mmap::open(&path).is_err());
+    }
+
+    #[test]
+    fn mapping_is_shareable_across_threads() {
+        if !Mmap::supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join("rwkvq_mmap_threads.bin");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let m = std::sync::Arc::new(Mmap::open(&path).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.as_bytes().iter().map(|&b| b as usize).sum::<usize>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -4,5 +4,6 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod mmap;
 pub mod ptest;
 pub mod rng;

@@ -1,0 +1,184 @@
+//! Integration: the RWKVQ2 packed checkpoint format — the CI
+//! format/round-trip matrix.
+//!
+//! A tiny hybrid-quantized model is packed to RWKVQ2 and re-opened both
+//! memory-mapped and buffered; both reopened models must produce
+//! **bit-identical logits and token-identical greedy output** against
+//! the in-memory `QuantizedModel` twin (which took the same dense f16
+//! rounding via `dense_to_f16`). The mmap path must borrow every packed
+//! payload zero-copy from the mapping, and dense 2-D entries must be
+//! resident at 16 bits/element.
+
+use rwkvquant::config::{Method, ModelConfig, QuantConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::model::rwkv::{init_params, RwkvRunner};
+use rwkvquant::model::store::{detect_format, open_rwkvq2};
+use rwkvquant::model::{
+    LoadMode, ModelWeights, QuantizedModel, ServedParam, StoreFormat, WeightProvider,
+};
+use rwkvquant::util::mmap::Mmap;
+use rwkvquant::util::rng::Rng;
+
+fn packed_tiny(seed: u64) -> (ModelWeights, QuantizedModel) {
+    let m = init_params(&ModelConfig::rwkv6(2, 32, 64), &mut Rng::new(seed));
+    let cfg = QuantConfig { kmeans_iters: 5, vq_bits: 6, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &cfg, 0);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    // resident dense entries take the on-disk f16 rounding up front, so
+    // the reopened checkpoint serves bit-identically to this twin
+    qm.dense_to_f16();
+    (m, qm)
+}
+
+fn greedy<W: WeightProvider>(w: &W, prompt: &[usize], n: usize) -> Vec<usize> {
+    let argmax = |l: &[f32]| {
+        l.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let mut run = RwkvRunner::new(w);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = run.forward_token(t);
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut tok = argmax(&logits);
+    for _ in 0..n {
+        out.push(tok);
+        tok = argmax(&run.forward_token(tok));
+    }
+    out
+}
+
+#[test]
+fn rwkvq2_round_trip_serves_token_identical_in_both_load_modes() {
+    let (_, qm) = packed_tiny(11);
+    let path = std::env::temp_dir().join("rwkvq2_roundtrip_matrix.bin");
+    qm.save(&path).unwrap();
+    assert_eq!(detect_format(&path).unwrap(), StoreFormat::V2Packed);
+
+    let mut modes = vec![(LoadMode::Buffered, false)];
+    if Mmap::supported() {
+        modes.push((LoadMode::Mmap, true));
+    }
+    for (mode, mapped) in modes {
+        let back = open_rwkvq2(&path, mode).unwrap();
+        assert_eq!(back.config, qm.config);
+        assert_eq!(back.entries.len(), qm.entries.len());
+
+        // per-entry: same names/shapes, and bit-identical logits — the
+        // reopened payloads reproduce the twin's dequantization exactly
+        for i in 0..qm.n_entries() {
+            assert_eq!(qm.entry_name(i), back.entry_name(i));
+            let a = qm.materialize_at(i).into_owned();
+            let b = back.materialize_at(i).into_owned();
+            assert_eq!(a, b, "entry '{}' drifted ({mode:?})", qm.entry_name(i));
+        }
+        let mut run_a = RwkvRunner::new(&qm);
+        let mut run_b = RwkvRunner::new(&back);
+        for t in [0usize, 3, 17, 63, 5] {
+            assert_eq!(run_a.forward_token(t), run_b.forward_token(t), "logits drifted at {t}");
+        }
+
+        // greedy decode twin check (fresh state on both sides)
+        for seed_tok in [1usize, 9, 40] {
+            let want = greedy(&qm, &[seed_tok, 2, 7], 16);
+            let got = greedy(&back, &[seed_tok, 2, 7], 16);
+            assert_eq!(want, got, "greedy output diverged ({mode:?})");
+        }
+
+        // zero-copy + residency assertions
+        if mapped {
+            for (desc, p) in &back.entries {
+                if p.is_packed() {
+                    assert!(p.is_mapped(), "'{}' packed payload was copied", desc.name);
+                }
+                if let ServedParam::DenseF16(t) = p {
+                    assert!(t.is_mapped(), "'{}' f16 payload was copied", desc.name);
+                }
+            }
+            assert!(back.n_mapped() > 0);
+        } else {
+            assert_eq!(back.n_mapped(), 0, "buffered load must own its payloads");
+        }
+        for (desc, p) in &back.entries {
+            match p {
+                ServedParam::DenseF16(_) => {
+                    assert_eq!(p.storage_bits(), p.numel() * 16, "'{}' not 16b", desc.name)
+                }
+                ServedParam::Dense(m) => {
+                    assert_eq!(m.rows, 1, "only 1-D vectors may stay f32: '{}'", desc.name)
+                }
+                ServedParam::Packed(_) => {}
+            }
+        }
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn rwkvq2_halves_dense_and_beats_v1_on_disk() {
+    let (m, qm) = packed_tiny(23);
+    let v1 = std::env::temp_dir().join("rwkvq2_size_v1.bin");
+    let v2 = std::env::temp_dir().join("rwkvq2_size_v2.bin");
+    m.save(&v1).unwrap();
+    qm.save(&v2).unwrap();
+    let s1 = std::fs::metadata(&v1).unwrap().len();
+    let s2 = std::fs::metadata(&v2).unwrap().len();
+    // packed + f16 dense must undercut the dense fp32 interchange store
+    assert!(s2 * 2 < s1, "RWKVQ2 {s2}B not < half of RWKVQ1 {s1}B");
+    // resident dense storage is 16 bits/elem for every 2-D dense entry
+    let dense16: usize = qm
+        .entries
+        .iter()
+        .filter(|(_, p)| matches!(p, ServedParam::DenseF16(_)))
+        .map(|(_, p)| p.numel())
+        .sum();
+    assert!(dense16 > 0);
+    std::fs::remove_file(v1).ok();
+    std::fs::remove_file(v2).ok();
+}
+
+#[test]
+fn rwkvq2_quarot_fallback_round_trips_dense() {
+    // QuaRot payloads cannot be served packed — from_parts stores them
+    // dense, and the checkpoint must carry them as f16 dense entries
+    let m = init_params(&ModelConfig::rwkv6(1, 32, 64), &mut Rng::new(31));
+    let cfg = QuantConfig { method: Method::QuaRot, kmeans_iters: 4, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &cfg, 0);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    assert_eq!(qm.n_packed(), 0);
+    let path = std::env::temp_dir().join("rwkvq2_quarot.bin");
+    qm.save(&path).unwrap();
+    let back = open_rwkvq2(&path, LoadMode::Auto).unwrap();
+    assert_eq!(back.n_packed(), 0);
+    let mut run_a = RwkvRunner::new(&qm);
+    let mut run_b = RwkvRunner::new(&back);
+    for t in [2usize, 8, 33] {
+        assert_eq!(run_a.forward_token(t), run_b.forward_token(t));
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn v1_interchange_still_round_trips() {
+    // v1 compatibility: the dense fp32 store written by the Python build
+    // path keeps loading bit-exactly alongside the new format
+    let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(7));
+    let path = std::env::temp_dir().join("rwkvq2_v1_compat.bin");
+    m.save(&path).unwrap();
+    assert_eq!(detect_format(&path).unwrap(), StoreFormat::V1Dense);
+    let back = ModelWeights::load(&path).unwrap();
+    assert_eq!(back.config, m.config);
+    assert_eq!(back.layers.len(), m.layers.len());
+    for ((da, ma), (db, mb)) in m.layers.iter().zip(&back.layers) {
+        assert_eq!(da.name, db.name);
+        assert_eq!(ma, mb);
+    }
+    // and a v2 opener must refuse it cleanly
+    assert!(open_rwkvq2(&path, LoadMode::Buffered).is_err());
+    std::fs::remove_file(path).ok();
+}
