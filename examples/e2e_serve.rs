@@ -18,15 +18,18 @@
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_serve
-//! # fan each batch tick over 4 worker threads (token-identical output):
+//! # fan each batch tick over 4 persistent pool lanes (token-identical):
 //! cargo run --release --example e2e_serve -- --tick-threads 4
+//! # or auto-detect one lane per hardware thread:
+//! cargo run --release --example e2e_serve -- --tick-threads 0
 //! ```
 
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::QuantConfig;
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    serve_collect_pool, Decoder, Request, Response, RunnerDecoder, ServeStats,
+    resolve_tick_threads, serve_collect_pool, Decoder, Request, Response, RunnerDecoder,
+    ServeStats,
 };
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
@@ -56,7 +59,9 @@ fn serve_requests<D: Decoder + Send>(
 
 fn main() -> rwkvquant::Result<()> {
     let args = Args::from_env();
-    let tick_threads = args.get_usize("tick-threads", 1).max(1);
+    let requested_threads = args.get_usize("tick-threads", 1);
+    // serve_requests ticks with max_batch = 8; auto-detect caps there
+    let tick_threads = resolve_tick_threads(requested_threads, 8);
     let dir = artifacts_dir();
     if !dir.join("tiny_rwkv.bin").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");
@@ -145,10 +150,11 @@ fn main() -> rwkvquant::Result<()> {
 
     // ---- 5. batched serving: dense fp32 vs packed quantized ----
     println!(
-        "serving with the {} matvec kernel, {} tick thread{}",
+        "serving with the {} matvec kernel, {} tick thread{}{} (persistent pool)",
         exec::active_kernel().name(),
         tick_threads,
         if tick_threads == 1 { "" } else { "s" },
+        if requested_threads == 0 { " — auto-detected" } else { "" },
     );
     let n_req = 24u64;
     let mut fp_decs: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&model)).collect();

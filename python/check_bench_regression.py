@@ -21,15 +21,29 @@ Behaviour matrix:
 * malformed CURRENT file     -> hard failure (exit 2); the bench run
   itself is broken and that must gate.
 
-When ``GITHUB_STEP_SUMMARY`` is set, the trajectory table is also
-appended there so the delta shows on the workflow summary page.
+Two further CI modes:
+
+* ``--history PATH``         -> append this run's headline metrics
+  (keyed by commit SHA + date) to a JSONL trajectory file and print the
+  last-5-run table, so the workflow summary shows where the numbers are
+  *heading*, not just the delta against one baseline.
+* ``--require-armed``        -> exit 3 with a copy-paste arming
+  instruction when the committed baseline is still provisional or
+  malformed; exit 0 when a measured baseline is committed. Run on main
+  so an unarmed gate is a red build, not a silent footnote.
+
+When ``GITHUB_STEP_SUMMARY`` is set, the trajectory tables are also
+appended there so they show on the workflow summary page.
 
 Usage:
     python3 python/check_bench_regression.py BASELINE CURRENT \
-        [--key speedup] [--threshold 0.10] [--no-summary]
+        [--key speedup] [--threshold 0.10] [--no-summary] \
+        [--history bench_history.jsonl] [--sha SHA] [--run-date DATE] \
+        [--require-armed]
 """
 
 import argparse
+import datetime
 import json
 import os
 import sys
@@ -41,7 +55,19 @@ SUMMARY_KEYS = [
     "fp32.tokens_per_sec",
     "quant.tokens_per_sec",
     "quant_threaded.tokens_per_sec",
+    "pool_vs_spawn",
 ]
+
+# Columns of the --history table: (header, dotted key in BENCH_serve).
+HISTORY_COLUMNS = [
+    ("speedup", "speedup"),
+    ("quant tok/s", "quant.tokens_per_sec"),
+    ("fp32 tok/s", "fp32.tokens_per_sec"),
+    ("pool tok/s", "quant_threaded.tokens_per_sec"),
+    ("pool/spawn", "pool_vs_spawn"),
+]
+
+HISTORY_SHOWN_RUNS = 5
 
 
 def lookup(obj, dotted_key):
@@ -93,6 +119,11 @@ def trajectory_summary(base, cur, gate_key, threshold):
         lines.append(f"  kernel: {kernel}")
     lines.append("")
     print("\n".join(lines))
+    append_step_summary(lines)
+    return lines
+
+
+def append_step_summary(lines):
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:
         try:
@@ -100,7 +131,87 @@ def trajectory_summary(base, cur, gate_key, threshold):
                 fh.write("```\n" + "\n".join(lines).strip() + "\n```\n")
         except OSError:
             pass  # the job log already has the table
-    return lines
+
+
+def update_history(path, cur, sha, run_date):
+    """Append this run's headline metrics to the JSONL trajectory file
+    and print the last-N-run table (also to the step summary)."""
+    entry = {"sha": sha, "date": run_date, "kernel": (cur or {}).get("kernel")}
+    for _, key in HISTORY_COLUMNS:
+        val = try_lookup(cur, key)
+        if val is not None:
+            entry[key] = val
+    runs = []
+    try:
+        with open(path) as fh:
+            for ln, raw in enumerate(fh, 1):
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    runs.append(json.loads(raw))
+                except json.JSONDecodeError:
+                    print(f"WARNING: {path}:{ln} is not valid JSON — dropping the line")
+    except OSError:
+        pass  # first run: no history yet
+    runs.append(entry)
+    try:
+        with open(path, "w") as fh:
+            for run in runs:
+                fh.write(json.dumps(run) + "\n")
+    except OSError as e:
+        print(f"WARNING: cannot write bench history {path}: {e}")
+
+    shown = runs[-HISTORY_SHOWN_RUNS:]
+    lines = ["", f"bench trajectory (last {len(shown)} of {len(runs)} recorded runs):"]
+    header = f"  {'sha':<9} {'date':<11}"
+    for title, _ in HISTORY_COLUMNS:
+        header += f" {title:>12}"
+    lines.append(header + "  kernel")
+    for run in shown:
+        row = f"  {str(run.get('sha', '?'))[:8]:<9} {str(run.get('date', '?')):<11}"
+        for _, key in HISTORY_COLUMNS:
+            val = run.get(key)
+            row += f" {val:12.2f}" if isinstance(val, (int, float)) else f" {'-':>12}"
+        lines.append(row + f"  {run.get('kernel') or '-'}")
+    lines.append("")
+    print("\n".join(lines))
+    append_step_summary(lines)
+
+
+def require_armed(baseline_path, key):
+    """Exit code for the main-branch arming check: 0 once a measured
+    baseline is committed, 3 (with a copy-paste instruction) before."""
+    base, base_err = load_json(baseline_path)
+    if not isinstance(base, dict):
+        base = None  # valid JSON but not a bench object — still unarmed
+        base_err = base_err or f"{baseline_path} is not a bench-result object"
+    measured = (
+        base is not None
+        and not base.get("provisional")
+        and try_lookup(base, key) is not None
+    )
+    if measured:
+        print(f"OK: committed baseline is measured ({key} = {lookup(base, key):.2f}) — gate armed")
+        return 0
+    reason = base_err or (
+        "baseline is provisional" if base is not None and base.get("provisional")
+        else f"baseline has no '{key}' metric"
+    )
+    print(f"FAIL: the perf-regression gate is NOT armed — {reason}.")
+    print("")
+    print("This run produced a measured BENCH_serve.json (uploaded as the")
+    print("'BENCH_serve' artifact). Arm the gate with either:")
+    print("")
+    print("  # a) guarded auto-commit from CI:")
+    print("  gh workflow run ci.yml -f commit_baseline=true")
+    print("")
+    print("  # b) or commit the artifact by hand:")
+    print("  gh run download --name BENCH_serve --dir .")
+    print("  git add BENCH_serve.json")
+    print('  git commit -m "ci: arm the bench gate with the first measured baseline"')
+    print("  git push")
+    return 3
 
 
 def main():
@@ -123,7 +234,32 @@ def main():
         action="store_true",
         help="skip the trajectory table (second gate invocation in CI)",
     )
+    parser.add_argument(
+        "--history",
+        metavar="PATH",
+        help="append this run to a JSONL trajectory file and print the "
+        f"last-{HISTORY_SHOWN_RUNS}-run table",
+    )
+    parser.add_argument(
+        "--sha",
+        default=os.environ.get("GITHUB_SHA", "local"),
+        help="commit SHA recorded in --history entries (default: $GITHUB_SHA)",
+    )
+    parser.add_argument(
+        "--run-date",
+        default=None,
+        help="date recorded in --history entries (default: today, UTC)",
+    )
+    parser.add_argument(
+        "--require-armed",
+        action="store_true",
+        help="exit 3 with an arming instruction if the baseline is still "
+        "provisional (run on main so an unarmed gate fails loudly)",
+    )
     args = parser.parse_args()
+
+    if args.require_armed:
+        return require_armed(args.baseline, args.key)
 
     cur, cur_err = load_json(args.current)
     if cur_err is not None:
@@ -134,6 +270,10 @@ def main():
         print(f"FAIL: current bench output has no '{args.key}' metric")
         return 2
     print(f"current  {args.key} = {new:.2f}")
+
+    if args.history:
+        run_date = args.run_date or datetime.datetime.now(datetime.timezone.utc).date().isoformat()
+        update_history(args.history, cur, args.sha, run_date)
 
     base, base_err = load_json(args.baseline)
     if base is None or try_lookup(base, args.key) is None:

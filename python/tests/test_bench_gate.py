@@ -71,3 +71,85 @@ def test_broken_current_run_hard_fails(tmp_path):
     rc, out = run_gate(tmp_path, {"speedup": 2.4}, "nope{", "--key", "speedup")
     assert rc == 2
     assert "unusable" in out
+
+
+def test_require_armed_fails_on_provisional_with_instruction(tmp_path):
+    rc, out = run_gate(
+        tmp_path, {"provisional": True, "speedup": 0}, CURRENT, "--key", "speedup",
+        "--require-armed",
+    )
+    assert rc == 3
+    assert "NOT armed" in out
+    # the failure must be copy-paste actionable
+    assert "commit_baseline=true" in out
+    assert "git add BENCH_serve.json" in out
+
+
+def test_require_armed_fails_on_malformed_baseline(tmp_path):
+    rc, out = run_gate(tmp_path, "junk {", CURRENT, "--key", "speedup", "--require-armed")
+    assert rc == 3
+    assert "NOT armed" in out
+
+
+def test_require_armed_handles_non_object_baseline(tmp_path):
+    # valid JSON that is not a bench object must exit 3, not traceback
+    rc, out = run_gate(tmp_path, "[1, 2, 3]", CURRENT, "--key", "speedup", "--require-armed")
+    assert rc == 3
+    assert "NOT armed" in out
+    assert "Traceback" not in out
+
+
+def test_require_armed_passes_on_measured_baseline(tmp_path):
+    rc, out = run_gate(
+        tmp_path, {"speedup": 2.4}, CURRENT, "--key", "speedup", "--require-armed"
+    )
+    assert rc == 0
+    assert "gate armed" in out
+
+
+def test_history_appends_and_prints_last_five(tmp_path):
+    hist = tmp_path / "bench_history.jsonl"
+    base = {"speedup": 2.4}
+    for i in range(6):
+        cur = dict(CURRENT, speedup=2.2 + i / 10.0)
+        rc, out = run_gate(
+            tmp_path, base, cur, "--key", "speedup",
+            "--history", str(hist), "--sha", f"sha{i}{i}{i}{i}{i}{i}{i}{i}",
+            "--run-date", f"2026-07-{20 + i}",
+        )
+        assert rc == 0
+    lines = [ln for ln in hist.read_text().splitlines() if ln.strip()]
+    assert len(lines) == 6
+    assert json.loads(lines[-1])["speedup"] == 2.7
+    assert json.loads(lines[0])["sha"].startswith("sha0")
+    # the table shows only the last 5 runs: run 0 aged out, run 5 present
+    assert "bench trajectory (last 5 of 6" in out
+    assert "sha55555" in out
+    assert "sha00000" not in out
+
+
+def test_history_survives_a_corrupt_line(tmp_path):
+    hist = tmp_path / "bench_history.jsonl"
+    hist.write_text('{"sha": "aaaa", "date": "2026-07-01", "speedup": 2.0}\nnot json\n')
+    rc, out = run_gate(
+        tmp_path, {"speedup": 2.4}, CURRENT, "--key", "speedup",
+        "--history", str(hist), "--sha", "bbbbbbbb", "--run-date", "2026-07-29",
+    )
+    assert rc == 0
+    assert "dropping the line" in out
+    lines = [ln for ln in hist.read_text().splitlines() if ln.strip()]
+    assert len(lines) == 2  # corrupt line dropped, new entry appended
+    assert "aaaa" in out and "bbbbbbbb" in out
+
+
+def test_history_records_gate_failures_too(tmp_path):
+    # a regressing run must still land in the trajectory before the gate
+    # fails — the history is how the regression gets diagnosed
+    hist = tmp_path / "bench_history.jsonl"
+    rc, out = run_gate(
+        tmp_path, {"speedup": 3.5}, CURRENT, "--key", "speedup",
+        "--history", str(hist), "--sha", "cccccccc", "--run-date", "2026-07-29",
+    )
+    assert rc == 1
+    assert "FAIL" in out
+    assert hist.exists() and "cccccccc" in hist.read_text()

@@ -1,16 +1,24 @@
 //! Perf bench: the hot paths the §Perf pass optimises — WKV recurrence
-//! step, dense vs quantized matvec, proxy computation, the pipeline's
-//! parallel speedup, and (when artifacts exist) the PJRT decode step.
+//! step, dense vs quantized matvec (incl. the f16 widen), the persistent
+//! tick pool vs per-tick thread spawning, proxy computation, the
+//! pipeline's parallel speedup, and (when artifacts exist) the PJRT
+//! decode step.
 
 use rwkvquant::config::{Method, ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
+use rwkvquant::coordinator::serve::{
+    serve_collect_per_tick_spawn, serve_collect_pool, Request, RunnerDecoder,
+};
+use rwkvquant::experiments::build_model;
 use rwkvquant::model::rwkv::{init_params, RwkvRunner};
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
 use rwkvquant::quant::exec::{self, Kernel};
 use rwkvquant::quant::{proxy, sq, vq};
+use rwkvquant::tensor::f16::F16Tensor;
 use rwkvquant::tensor::{linalg, Matrix};
 use rwkvquant::util::benchkit::{throughput, Bencher};
 use rwkvquant::util::rng::Rng;
+use std::time::Duration;
 
 fn main() {
     let mut b = Bencher::new();
@@ -38,6 +46,7 @@ fn main() {
         let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
         let mut y = vec![0.0f32; dim];
         b.bench(&format!("matvec fp32 {dim}x{dim}"), || linalg::matvec_into(&w, &x, &mut y));
+        let f16 = F16Tensor::from_matrix(&w);
         for k in Kernel::available() {
             b.bench(&format!("matvec q3 {} {dim}x{dim}", k.name()), || {
                 exec::matvec_sq_with(k, &q3, &x, &mut y)
@@ -45,7 +54,48 @@ fn main() {
             b.bench(&format!("matvec vq {} {dim}x{dim}", k.name()), || {
                 exec::matvec_vq_with(k, &qv, &x, &mut y)
             });
+            // the DenseF16 head/emb path: widen (scalar vs F16C/NEON) + dot
+            b.bench(&format!("matvec f16 {} {dim}x{dim}", k.name()), || {
+                exec::matvec_f16_with(k, &f16, &x, &mut y)
+            });
         }
+    }
+
+    // persistent tick pool vs per-tick thread spawning, batch 4 on the
+    // synthetic 3B config (ROADMAP: the pool must win once spawn cost
+    // and cold per-thread scratch are off the per-token path)
+    {
+        let m3 = build_model("rwkv6", "3B", 13);
+        let vocab = m3.config.vocab;
+        let requests = || -> Vec<Request> {
+            (0..12u64)
+                .map(|id| Request {
+                    id,
+                    prompt: vec![(id as usize * 29 + 1) % vocab, 2, 3],
+                    gen_len: 6,
+                })
+                .collect()
+        };
+        let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(2, 4);
+        let mut decs: Vec<_> = (0..lanes).map(|_| RunnerDecoder::new(&m3)).collect();
+        // warm up page cache / branch predictors on both paths once
+        serve_collect_pool(&mut decs, requests(), 4, Duration::from_millis(1)).unwrap();
+        let (spawn_out, t_spawn) = b.once(&format!("serve 3B batch4 per-tick spawn x{lanes}"), || {
+            serve_collect_per_tick_spawn(&mut decs, requests(), 4, Duration::from_millis(1))
+                .unwrap()
+        });
+        let (pool_out, t_pool) = b.once(&format!("serve 3B batch4 persistent pool x{lanes}"), || {
+            serve_collect_pool(&mut decs, requests(), 4, Duration::from_millis(1)).unwrap()
+        });
+        let spawn_tps = spawn_out.0.tokens_per_sec();
+        let pool_tps = pool_out.0.tokens_per_sec();
+        println!(
+            "tick pool vs per-tick spawn at batch 4 (3B, {lanes} lanes): \
+             {pool_tps:.1} vs {spawn_tps:.1} tok/s ({:.2}x, wall {:.0} ms vs {:.0} ms)",
+            pool_tps / spawn_tps.max(1e-9),
+            t_pool.as_secs_f64() * 1e3,
+            t_spawn.as_secs_f64() * 1e3,
+        );
     }
 
     // proxy cost on a realistic layer

@@ -14,7 +14,9 @@
 //!       future PRs.
 
 use rwkvquant::config::Method;
-use rwkvquant::coordinator::serve::{serve_collect_pool, Request, RunnerDecoder, ServeStats};
+use rwkvquant::coordinator::serve::{
+    serve_collect_per_tick_spawn, serve_collect_pool, Request, RunnerDecoder, ServeStats,
+};
 use rwkvquant::experiments::{bench_config, build_model, fast_mode};
 use rwkvquant::model::flops::{rwkv_step, CostModel};
 use rwkvquant::model::synthetic::size_config;
@@ -29,12 +31,15 @@ use rwkvquant::util::rng::Rng;
 use std::time::Duration;
 
 /// Push a fixed request set through `serve` over the given provider,
-/// with `tick_threads` decode workers per batch tick.
+/// with `tick_threads` decode lanes per batch tick — on the persistent
+/// pool, or on the legacy per-tick-spawn engine when `spawn` is set (the
+/// pool's measurement baseline).
 fn serve_tokens_per_sec<W: WeightProvider>(
     weights: &W,
     n_req: u64,
     gen_len: usize,
     tick_threads: usize,
+    spawn: bool,
 ) -> ServeStats {
     let vocab = weights.config().vocab;
     let mut decoders: Vec<_> =
@@ -46,8 +51,12 @@ fn serve_tokens_per_sec<W: WeightProvider>(
             gen_len,
         })
         .collect();
-    let (stats, _) =
-        serve_collect_pool(&mut decoders, requests, 8, Duration::from_millis(1)).unwrap();
+    let (stats, _) = if spawn {
+        serve_collect_per_tick_spawn(&mut decoders, requests, 8, Duration::from_millis(1))
+            .unwrap()
+    } else {
+        serve_collect_pool(&mut decoders, requests, 8, Duration::from_millis(1)).unwrap()
+    };
     stats
 }
 
@@ -136,12 +145,14 @@ fn main() {
     let cfg = bench_config(Method::RwkvQuant, 3.275, 9);
     let (q, rep) = rwkvquant::coordinator::quantize_model(&m, None, &cfg, 0);
     let qm = QuantizedModel::from_parts(&m, &q);
-    let fp_stats = serve_tokens_per_sec(&m, n_req, gen_len, 1);
-    let q_stats = serve_tokens_per_sec(&qm, n_req, gen_len, 1);
+    let fp_stats = serve_tokens_per_sec(&m, n_req, gen_len, 1, false);
+    let q_stats = serve_tokens_per_sec(&qm, n_req, gen_len, 1, false);
     let tick_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
-    let q_mt_stats = serve_tokens_per_sec(&qm, n_req, gen_len, tick_threads);
+    let q_mt_stats = serve_tokens_per_sec(&qm, n_req, gen_len, tick_threads, false);
+    let q_spawn_stats = serve_tokens_per_sec(&qm, n_req, gen_len, tick_threads, true);
     let speedup = q_stats.tokens_per_sec() / fp_stats.tokens_per_sec().max(1e-9);
     let mt_speedup = q_mt_stats.tokens_per_sec() / q_stats.tokens_per_sec().max(1e-9);
+    let pool_vs_spawn = q_mt_stats.tokens_per_sec() / q_spawn_stats.tokens_per_sec().max(1e-9);
     let mut t3 = Table::new(
         format!("Table 4d — served decode throughput ({} kernel)", simd.name()),
         &["path", "tok/s", "bits/weight", "p50", "p99"],
@@ -161,15 +172,23 @@ fn main() {
         Cell::s(format!("{:?}", q_stats.p99_latency)),
     ]);
     t3.row(vec![
-        Cell::s(format!("packed quant ×{tick_threads} ticks")),
+        Cell::s(format!("packed quant ×{tick_threads} pool")),
         Cell::f(q_mt_stats.tokens_per_sec(), 1),
         Cell::f(qm.packed_bpw(), 3),
         Cell::s(format!("{:?}", q_mt_stats.p50_latency)),
         Cell::s(format!("{:?}", q_mt_stats.p99_latency)),
     ]);
+    t3.row(vec![
+        Cell::s(format!("packed quant ×{tick_threads} spawn")),
+        Cell::f(q_spawn_stats.tokens_per_sec(), 1),
+        Cell::f(qm.packed_bpw(), 3),
+        Cell::s(format!("{:?}", q_spawn_stats.p50_latency)),
+        Cell::s(format!("{:?}", q_spawn_stats.p99_latency)),
+    ]);
     t3.print();
     println!("served speedup (packed vs fp32): {speedup:.2}x");
-    println!("threaded-tick speedup (×{tick_threads} vs sequential): {mt_speedup:.2}x");
+    println!("threaded-tick speedup (×{tick_threads} pool vs sequential): {mt_speedup:.2}x");
+    println!("persistent pool vs per-tick spawn (×{tick_threads}): {pool_vs_spawn:.2}x");
 
     // perf-trajectory baseline for future PRs (the CI bench-baseline job
     // gates on `speedup`, with an absolute quant.tokens_per_sec backstop
@@ -198,8 +217,11 @@ fn main() {
             "quant_threaded",
             Json::obj()
                 .set("tokens_per_sec", q_mt_stats.tokens_per_sec())
-                .set("tick_threads", tick_threads),
+                .set("tick_threads", tick_threads)
+                .set("engine", "persistent-pool")
+                .set("spawn_tokens_per_sec", q_spawn_stats.tokens_per_sec()),
         )
+        .set("pool_vs_spawn", pool_vs_spawn)
         .set("speedup", speedup);
     match std::fs::write("BENCH_serve.json", bench.render()) {
         Ok(()) => println!("wrote BENCH_serve.json"),

@@ -14,12 +14,23 @@
 //! server loop decodes from the dense fp32 store or straight from a
 //! packed [`crate::model::QuantizedModel`] — quantized serving is the
 //! default path, no dense materialisation involved.
+//!
+//! Multi-threaded ticks run on a persistent [`TickPool`]: worker threads
+//! are spawned once per serving session, fed chunk jobs over a shared
+//! queue (occupancy capped per tick by the dispatch protocol), and
+//! joined deterministically when the pool drops.
+//! Because the threads persist, each worker's thread-local matvec
+//! scratch ([`crate::quant::exec::MatvecScratch`]) stays warm across
+//! ticks — the old per-tick scoped spawning re-paid both the spawn and
+//! the cold-scratch cost on every token.
 
 use super::batcher::DynamicBatcher;
 use crate::model::WeightProvider;
 use crate::tensor::stats;
 use crate::Result;
-use std::sync::mpsc;
+use std::collections::HashSet;
+use std::sync::{mpsc, Mutex};
+use std::thread::ThreadId;
 use std::time::{Duration, Instant};
 
 /// Anything that can decode tokens with hidden recurrent state.
@@ -27,11 +38,33 @@ pub trait Decoder {
     fn reset(&mut self);
     /// feed one token, get next-token logits
     fn step(&mut self, token: usize) -> Vec<f32>;
+    /// [`Decoder::step`] into a caller-owned buffer (resized as needed)
+    /// — the tick loop's allocation-free form. The default delegates to
+    /// `step`; decoders with an `_into` forward pass should override.
+    fn step_into(&mut self, token: usize, out: &mut Vec<f32>) {
+        *out = self.step(token);
+    }
     fn vocab(&self) -> usize;
     /// snapshot / restore the recurrent state (continuous batching swaps
     /// sequence states in and out of the decoder between ticks)
     fn save_state(&self) -> Vec<Vec<f32>>;
     fn load_state(&mut self, state: &[Vec<f32>]);
+}
+
+/// Resolve the `--tick-threads` knob: `0` means auto-detect one lane
+/// per available hardware thread, capped at `max_batch` — a tick never
+/// has more than `max_batch` sequences, so lanes beyond it could never
+/// receive work yet would each cost a decoder and a parked thread. An
+/// explicit (non-zero) request is honoured as given.
+pub fn resolve_tick_threads(requested: usize, max_batch: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, max_batch.max(1))
+    }
 }
 
 /// A generation request.
@@ -92,7 +125,9 @@ struct Active {
 
 /// Advance one sequence by one token: swap its state in, feed the next
 /// prompt token or the greedy continuation, swap the state back out.
-/// Returns whether a generated (non-prompt) token was produced.
+/// Returns whether a generated (non-prompt) token was produced. The
+/// logits buffer is reused in place (`step_into`), so a warmed-up
+/// sequence ticks without allocating.
 fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active) -> bool {
     decoder.load_state(&a.state);
     let (tok, generated) = if a.prompt_pos < a.req.prompt.len() {
@@ -104,7 +139,7 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active) -> bool {
         a.generated.push(next);
         (next, true)
     };
-    a.logits = decoder.step(tok);
+    decoder.step_into(tok, &mut a.logits);
     a.state = decoder.save_state();
     generated
 }
@@ -139,12 +174,14 @@ impl<D: Decoder> TickEngine for Sequential<'_, D> {
 }
 
 /// One decoder per worker; each tick splits the active set into
-/// contiguous chunks and advances them on scoped threads. Sequences are
-/// fully state-swapped, so which decoder serves which sequence cannot
-/// change the tokens — only the wall clock.
-struct Pool<'d, D: Decoder + Send>(&'d mut [D]);
+/// contiguous chunks and advances them on **freshly spawned** scoped
+/// threads. Superseded by [`TickPool`] (which reuses its threads and
+/// their warm matvec scratch across ticks) and retained only as the
+/// measurement baseline the pool is benchmarked against
+/// ([`serve_collect_per_tick_spawn`], `perf_hotpath`).
+struct SpawnPerTick<'d, D: Decoder + Send>(&'d mut [D]);
 
-impl<D: Decoder + Send> TickEngine for Pool<'_, D> {
+impl<D: Decoder + Send> TickEngine for SpawnPerTick<'_, D> {
     fn vocab(&self) -> usize {
         self.0[0].vocab()
     }
@@ -174,6 +211,323 @@ impl<D: Decoder + Send> TickEngine for Pool<'_, D> {
             handles.into_iter().map(|h| h.join().expect("tick worker panicked")).sum()
         })
     }
+}
+
+/// Upper bound on work chunks per parallel lane and tick: the active set
+/// is split into up to `lanes × CHUNK_OVERSUB` chunks pulled dynamically
+/// from a shared queue, so one slow lane (OS preemption, cold cache, a
+/// sequence mix that doesn't divide evenly) cannot serialize a tick
+/// behind itself — idle lanes absorb the remainder. The injector queue
+/// itself is an unbounded deque; its occupancy is bounded to one tick's
+/// `lanes × CHUNK_OVERSUB` chunks by the tick protocol (every chunk is
+/// claimed and acknowledged before the tick — and hence the next push —
+/// completes), not by a channel capacity, so `push_tick` never blocks.
+const CHUNK_OVERSUB: usize = 4;
+
+/// A contiguous window of the serve loop's active set, dispatched to one
+/// pool worker for one tick. Raw pointer + length because the borrow of
+/// `active` lasts only one tick while the pool's channels live for the
+/// whole serve loop.
+struct Chunk {
+    ptr: *mut Active,
+    len: usize,
+}
+
+// SAFETY: a Chunk is a uniquely-owned disjoint window of the active set,
+// consumed by exactly one worker per tick; `TickPool::tick` blocks until
+// every dispatched chunk is acknowledged before the `active` borrow
+// ends, so no chunk pointer outlives the data it points into.
+unsafe impl Send for Chunk {}
+
+/// What a worker reports back after processing a chunk.
+enum Ack {
+    /// Number of generated (non-prompt) tokens in the chunk, plus the
+    /// worker's thread id (lifecycle tests assert thread reuse with it).
+    Done { generated: usize, worker: ThreadId },
+    /// The decoder panicked mid-chunk; the pool re-raises on the serve
+    /// thread so shutdown stays deterministic (drop → join).
+    Panicked,
+}
+
+/// The shared work queue every pool lane drains. Bounded by
+/// construction: one tick enqueues at most `lanes × CHUNK_OVERSUB`
+/// chunks and drains them all before the next tick can push. A Condvar
+/// (not a shared channel receiver) so that an idle worker blocks on the
+/// *queue*, never while holding the lock another lane needs.
+struct Injector {
+    state: Mutex<InjectorState>,
+    ready: std::sync::Condvar,
+}
+
+struct InjectorState {
+    jobs: std::collections::VecDeque<Chunk>,
+    closed: bool,
+}
+
+impl Injector {
+    fn new() -> Injector {
+        Injector {
+            state: Mutex::new(InjectorState {
+                jobs: std::collections::VecDeque::new(),
+                closed: false,
+            }),
+            ready: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Queue one tick's chunks; returns how many were queued.
+    fn push_tick(&self, chunks: impl Iterator<Item = Chunk>) -> usize {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(st.jobs.is_empty(), "previous tick fully drained");
+        st.jobs.extend(chunks);
+        let n = st.jobs.len();
+        drop(st);
+        self.ready.notify_all();
+        n
+    }
+
+    /// Blocking claim for workers; `None` means the pool shut down.
+    fn claim_blocking(&self) -> Option<Chunk> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(c) = st.jobs.pop_front() {
+                return Some(c);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking claim for the lead lane.
+    fn claim(&self) -> Option<Chunk> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).jobs.pop_front()
+    }
+
+    /// Signal shutdown: blocked workers wake and return.
+    fn close(&self) {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
+        self.ready.notify_all();
+    }
+}
+
+fn pool_worker<D: Decoder>(dec: &mut D, injector: &Injector, done: &mpsc::Sender<Ack>) {
+    while let Some(chunk) = injector.claim_blocking() {
+        // SAFETY: see `Chunk` — disjoint window, alive until acked.
+        let slice = unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.len) };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            slice.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum::<usize>()
+        }));
+        let ack = match outcome {
+            Ok(generated) => Ack::Done { generated, worker: std::thread::current().id() },
+            Err(_) => Ack::Panicked,
+        };
+        let poisoned = matches!(ack, Ack::Panicked);
+        if done.send(ack).is_err() || poisoned {
+            return;
+        }
+    }
+}
+
+/// A persistent tick worker pool: `N` decoders become one lead lane (the
+/// serve thread itself) plus `N−1` long-lived worker threads, created
+/// **once per serve session** and joined deterministically when the pool
+/// is dropped (closing the job queue is the shutdown signal — no
+/// detached threads). Each tick splits the active set into chunks (see
+/// [`CHUNK_OVERSUB`], which also caps the queue's occupancy per tick)
+/// pushed onto a shared queue that every lane drains; workers keep
+/// their thread-local matvec scratch warm across ticks, which is
+/// exactly what the old per-tick spawning threw away.
+///
+/// Sequences are fully state-swapped per tick, so which lane serves
+/// which sequence cannot change the tokens — only the wall clock.
+/// Construct via [`with_tick_pool`]; [`serve_pool`] wraps the common
+/// one-session case.
+pub struct TickPool<'p, D: Decoder> {
+    lead: &'p mut D,
+    spawned: usize,
+    injector: Option<&'p Injector>,
+    done_rx: Option<mpsc::Receiver<Ack>>,
+    ticks: u64,
+    seen_workers: HashSet<ThreadId>,
+}
+
+impl<D: Decoder> Drop for TickPool<'_, D> {
+    fn drop(&mut self) {
+        // deterministic shutdown: closing the injector wakes every idle
+        // worker, which then returns; the owning scope joins them before
+        // with_tick_pool returns (also on unwind)
+        if let Some(injector) = self.injector {
+            injector.close();
+        }
+    }
+}
+
+impl<D: Decoder + Send> TickPool<'_, D> {
+    /// Run one serving session on this pool (the loop of [`serve`], fed
+    /// by `rx` until the channel closes and every request is answered).
+    /// A pool outlives its sessions: call this repeatedly to serve
+    /// several request streams on the same warm workers.
+    pub fn serve(
+        &mut self,
+        rx: mpsc::Receiver<Request>,
+        tx: mpsc::Sender<Response>,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Result<ServeStats> {
+        serve_loop(self, rx, tx, max_batch, max_wait)
+    }
+
+    /// Worker threads spawned for this pool (0 = single-lane, no
+    /// threads).
+    pub fn spawned_workers(&self) -> usize {
+        self.spawned
+    }
+
+    /// Ticks executed across all sessions served on this pool.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Distinct worker threads that have acknowledged work so far. On a
+    /// healthy pool this never exceeds [`TickPool::spawned_workers`] no
+    /// matter how many sessions ran — per-tick spawning would grow it
+    /// with every tick (the lifecycle twin tests assert exactly this).
+    pub fn distinct_worker_threads(&self) -> usize {
+        self.seen_workers.len()
+    }
+}
+
+impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
+    fn vocab(&self) -> usize {
+        self.lead.vocab()
+    }
+
+    fn init_state(&mut self) -> Vec<Vec<f32>> {
+        self.lead.reset();
+        self.lead.save_state()
+    }
+
+    fn tick(&mut self, active: &mut [Active]) -> usize {
+        self.ticks += 1;
+        let (Some(injector), Some(done_rx)) = (self.injector, self.done_rx.as_ref()) else {
+            // single-lane pool: tick sequentially on the lead decoder
+            return active.iter_mut().map(|a| usize::from(tick_one(&mut *self.lead, a))).sum();
+        };
+        if active.len() <= 1 {
+            return active.iter_mut().map(|a| usize::from(tick_one(&mut *self.lead, a))).sum();
+        }
+        let lanes = self.spawned + 1;
+        let n_chunks = active.len().min(lanes * CHUNK_OVERSUB);
+        let chunk = active.len().div_ceil(n_chunks);
+        let queued = injector.push_tick(
+            active
+                .chunks_mut(chunk)
+                .map(|slice| Chunk { ptr: slice.as_mut_ptr(), len: slice.len() }),
+        );
+        // The lead lane drains the queue alongside the workers (an empty
+        // queue means every chunk has been claimed, not that work is
+        // done). A lead-lane panic must not unwind past this frame yet:
+        // workers may still hold chunk pointers into `active`, so any
+        // failure is deferred until every dispatched chunk is accounted
+        // for.
+        let mut generated = 0usize;
+        let claimed_by_lead = std::cell::Cell::new(0usize);
+        let lead = &mut *self.lead;
+        let lead_outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut n = 0usize;
+            while let Some(job) = injector.claim() {
+                claimed_by_lead.set(claimed_by_lead.get() + 1);
+                // SAFETY: see `Chunk` — disjoint window, alive until the
+                // ack accounting below completes.
+                let slice = unsafe { std::slice::from_raw_parts_mut(job.ptr, job.len) };
+                n += slice.iter_mut().map(|a| usize::from(tick_one(&mut *lead, a))).sum::<usize>();
+            }
+            n
+        }));
+        let mut faulted = match lead_outcome {
+            Ok(n) => {
+                generated += n;
+                false
+            }
+            Err(_) => true,
+        };
+        // Block until all worker-claimed chunks are acknowledged — the
+        // `active` borrow must not end while a chunk pointer lives. An
+        // ack-channel error means every worker has exited, and workers
+        // only exit after acking their last claim, so any chunks still
+        // unclaimed sit inert in the queue (never dereferenced again).
+        let outstanding = queued - claimed_by_lead.get();
+        for _ in 0..outstanding {
+            match done_rx.recv() {
+                Ok(Ack::Done { generated: n, worker }) => {
+                    self.seen_workers.insert(worker);
+                    generated += n;
+                }
+                Ok(Ack::Panicked) => faulted = true,
+                Err(_) => {
+                    faulted = true;
+                    break;
+                }
+            }
+        }
+        if faulted {
+            // drop any chunks that were never claimed (possible only
+            // when every worker already exited) so no stale pointer
+            // survives this tick, then re-raise on the serve thread
+            while injector.claim().is_some() {}
+            panic!("tick worker panicked");
+        }
+        generated
+    }
+}
+
+/// Build a persistent [`TickPool`] over `decoders` (one lead lane plus
+/// one worker thread per further decoder), run `f` with it, then shut
+/// the pool down deterministically: dropping the pool closes the job
+/// channel, every worker observes the close and returns, and the scope
+/// joins them before this function does — no detached threads, even when
+/// `f` unwinds.
+pub fn with_tick_pool<D: Decoder + Send, R>(
+    decoders: &mut [D],
+    f: impl FnOnce(&mut TickPool<'_, D>) -> R,
+) -> R {
+    let (lead, rest) = decoders.split_first_mut().expect("tick pool needs ≥ 1 decoder");
+    if rest.is_empty() {
+        let mut pool = TickPool {
+            lead,
+            spawned: 0,
+            injector: None,
+            done_rx: None,
+            ticks: 0,
+            seen_workers: HashSet::new(),
+        };
+        return f(&mut pool);
+    }
+    let injector = Injector::new();
+    let (done_tx, done_rx) = mpsc::channel::<Ack>();
+    std::thread::scope(|s| {
+        for dec in rest.iter_mut() {
+            let done = done_tx.clone();
+            let injector = &injector;
+            s.spawn(move || pool_worker(dec, injector, &done));
+        }
+        // workers hold the only Ack senders: a vanished worker surfaces
+        // as a recv error in tick(), never as a silent hang
+        drop(done_tx);
+        let mut pool = TickPool {
+            lead,
+            spawned: rest.len(),
+            injector: Some(&injector),
+            done_rx: Some(done_rx),
+            ticks: 0,
+            seen_workers: HashSet::new(),
+        };
+        f(&mut pool)
+        // `pool` drops here (closing the injector); the scope then joins
+        // every worker before returning
+    })
 }
 
 /// The serving loop body, written once for the sequential and pooled
@@ -295,18 +649,19 @@ pub fn serve<D: Decoder>(
     serve_loop(&mut Sequential(decoder), rx, tx, max_batch, max_wait)
 }
 
-/// Threaded variant of [`serve`]: one decoder per worker thread; the
-/// per-sequence decode steps of each tick fan out across the pool
-/// (sequence state is fully swapped in/out, so the output is
-/// token-identical to the sequential path). Callers pick the
+/// Threaded variant of [`serve`]: one decoder per pool lane; the
+/// per-sequence decode steps of each tick fan out across a persistent
+/// [`TickPool`] (sequence state is fully swapped in/out, so the output
+/// is token-identical to the sequential path). Callers pick the
 /// parallelism by the number of decoders they build — the
-/// `--tick-threads` knob upstream.
+/// `--tick-threads` knob upstream (`0` = auto, see
+/// [`resolve_tick_threads`]).
 ///
-/// Workers are scoped threads spawned per tick, so each tick pays the
-/// spawn cost and starts with cold thread-local matvec scratch; this
-/// amortises well when one sequence step costs ≳100µs (the quantized
-/// lineup sizes) but can lose to the sequential path on tiny models —
-/// keep the default of 1 there. A persistent pool is a roadmap item.
+/// The worker threads are created once for the whole serving session and
+/// joined when it ends, so a tick pays only a queue handoff — not a
+/// thread spawn — and each worker's thread-local matvec scratch stays
+/// warm across ticks. To serve several sessions on one warm pool, use
+/// [`with_tick_pool`] directly.
 pub fn serve_pool<D: Decoder + Send>(
     decoders: &mut [D],
     rx: mpsc::Receiver<Request>,
@@ -315,7 +670,7 @@ pub fn serve_pool<D: Decoder + Send>(
     max_wait: Duration,
 ) -> Result<ServeStats> {
     anyhow::ensure!(!decoders.is_empty(), "serve_pool needs at least one decoder");
-    serve_loop(&mut Pool(decoders), rx, tx, max_batch, max_wait)
+    with_tick_pool(decoders, |pool| pool.serve(rx, tx, max_batch, max_wait))
 }
 
 fn collect_responses(
@@ -358,6 +713,23 @@ pub fn serve_collect_pool<D: Decoder + Send>(
     collect_responses(requests, |rx, tx| serve_pool(decoders, rx, tx, max_batch, max_wait))
 }
 
+/// [`serve_collect`] over the legacy per-tick-spawn engine: scoped
+/// worker threads created and joined **every tick**. Kept only so the
+/// persistent pool has a measured baseline (`perf_hotpath`, the table-4
+/// bench) and a token-identity twin in the tests — deployments should
+/// use [`serve_collect_pool`].
+pub fn serve_collect_per_tick_spawn<D: Decoder + Send>(
+    decoders: &mut [D],
+    requests: Vec<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<(ServeStats, Vec<Response>)> {
+    anyhow::ensure!(!decoders.is_empty(), "spawn engine needs at least one decoder");
+    collect_responses(requests, |rx, tx| {
+        serve_loop(&mut SpawnPerTick(decoders), rx, tx, max_batch, max_wait)
+    })
+}
+
 /// [`Decoder`] over the pure-Rust reference runner, generic over the
 /// weight provider: dense fp32 or packed quantized.
 pub struct RunnerDecoder<'a, W: WeightProvider = crate::model::ModelWeights> {
@@ -377,6 +749,10 @@ impl<W: WeightProvider> Decoder for RunnerDecoder<'_, W> {
 
     fn step(&mut self, token: usize) -> Vec<f32> {
         self.runner.forward_token(token)
+    }
+
+    fn step_into(&mut self, token: usize, out: &mut Vec<f32>) {
+        self.runner.forward_token_into(token, out);
     }
 
     fn vocab(&self) -> usize {
@@ -494,6 +870,186 @@ mod tests {
             let b: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
             assert_eq!(a, b, "{threads}-thread pool must match sequential tokens");
         }
+    }
+
+    #[test]
+    fn per_tick_spawn_twin_matches_pool() {
+        // the legacy spawn engine is the pool's bench baseline; both
+        // must stay token-identical to each other (and hence sequential)
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(7));
+        let requests = || -> Vec<Request> {
+            (0..8u64)
+                .map(|id| Request { id, prompt: vec![(id as usize * 3 + 1) % 32], gen_len: 5 })
+                .collect()
+        };
+        let mut pool_decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
+        let (_, pooled) =
+            serve_collect_pool(&mut pool_decs, requests(), 4, Duration::from_millis(1)).unwrap();
+        let mut spawn_decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
+        let (_, spawned) =
+            serve_collect_per_tick_spawn(&mut spawn_decs, requests(), 4, Duration::from_millis(1))
+                .unwrap();
+        let a: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let b: Vec<_> = spawned.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, b);
+    }
+
+    /// Wraps a decoder with a per-step delay so a pool tick is long
+    /// enough that condvar-woken workers reliably win chunk claims
+    /// against the lead lane — on a toy model a tick is otherwise so
+    /// short the lead can drain the whole queue before a worker wakes,
+    /// which would make thread-reuse assertions racy.
+    struct Throttled<'a, W: WeightProvider> {
+        inner: RunnerDecoder<'a, W>,
+    }
+
+    impl<W: WeightProvider> Decoder for Throttled<'_, W> {
+        fn reset(&mut self) {
+            self.inner.reset();
+        }
+
+        fn step(&mut self, token: usize) -> Vec<f32> {
+            std::thread::sleep(Duration::from_micros(200));
+            self.inner.step(token)
+        }
+
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn save_state(&self) -> Vec<Vec<f32>> {
+            self.inner.save_state()
+        }
+
+        fn load_state(&mut self, state: &[Vec<f32>]) {
+            self.inner.load_state(state);
+        }
+    }
+
+    #[test]
+    fn pool_reuses_worker_threads_across_serve_sessions() {
+        // two full serve sessions back-to-back on ONE pool: the worker
+        // set must not grow (per-tick spawning would mint fresh threads
+        // every tick) and both sessions must match the sequential twin
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(9));
+        let requests = || -> Vec<Request> {
+            (0..10u64)
+                .map(|id| Request {
+                    id,
+                    prompt: vec![(id as usize * 7 + 2) % 32, 4],
+                    gen_len: 6,
+                })
+                .collect()
+        };
+        let mut seq_dec = RunnerDecoder::new(&m);
+        let (_, want) =
+            serve_collect(&mut seq_dec, requests(), 4, Duration::from_millis(1)).unwrap();
+        let want: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
+
+        let mut decs: Vec<_> =
+            (0..4).map(|_| Throttled { inner: RunnerDecoder::new(&m) }).collect();
+        with_tick_pool(&mut decs, |pool| {
+            assert_eq!(pool.spawned_workers(), 3);
+            let mut run_session = |pool: &mut TickPool<'_, _>| {
+                let (tx_req, rx_req) = mpsc::channel();
+                let (tx_resp, rx_resp) = mpsc::channel();
+                for r in requests() {
+                    tx_req.send(r).unwrap();
+                }
+                drop(tx_req);
+                let stats = pool.serve(rx_req, tx_resp, 4, Duration::from_millis(1)).unwrap();
+                assert_eq!(stats.completed, 10);
+                let mut got: Vec<_> = rx_resp.iter().map(|r| (r.id, r.tokens)).collect();
+                got.sort();
+                got
+            };
+            let first = run_session(pool);
+            assert_eq!(first, want, "session 1 must match sequential");
+            let workers_after_first = pool.distinct_worker_threads();
+            let ticks_after_first = pool.ticks();
+            assert!(workers_after_first >= 1, "pool must have fanned out");
+            assert!(workers_after_first <= pool.spawned_workers());
+
+            let second = run_session(pool);
+            assert_eq!(second, want, "session 2 must match sequential");
+            assert!(pool.ticks() > ticks_after_first);
+            // no worker leak: the same threads served both sessions
+            assert!(
+                pool.distinct_worker_threads() <= pool.spawned_workers(),
+                "{} distinct workers > {} spawned — threads were re-created",
+                pool.distinct_worker_threads(),
+                pool.spawned_workers()
+            );
+        });
+    }
+
+    /// A decoder that panics after a shared countdown reaches zero —
+    /// injects a fault mid-tick on whichever pool lane draws it.
+    struct PanicAfter<'a, W: WeightProvider> {
+        inner: RunnerDecoder<'a, W>,
+        fuse: std::sync::Arc<std::sync::atomic::AtomicIsize>,
+    }
+
+    impl<W: WeightProvider> Decoder for PanicAfter<'_, W> {
+        fn reset(&mut self) {
+            self.inner.reset();
+        }
+
+        fn step(&mut self, token: usize) -> Vec<f32> {
+            use std::sync::atomic::Ordering;
+            if self.fuse.fetch_sub(1, Ordering::SeqCst) <= 0 {
+                panic!("injected decoder fault");
+            }
+            self.inner.step(token)
+        }
+
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn save_state(&self) -> Vec<Vec<f32>> {
+            self.inner.save_state()
+        }
+
+        fn load_state(&mut self, state: &[Vec<f32>]) {
+            self.inner.load_state(state);
+        }
+    }
+
+    #[test]
+    fn pool_shutdown_under_load_joins_cleanly() {
+        // a decoder fault mid-tick must tear the whole pool down
+        // deterministically: the panic surfaces on the serve thread, the
+        // pool's Drop closes the injector, and the scope joins every
+        // worker — the test completing (Err, no hang) is the assertion
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(11));
+        let fuse = std::sync::Arc::new(std::sync::atomic::AtomicIsize::new(20));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut decs: Vec<_> = (0..3)
+                .map(|_| PanicAfter { inner: RunnerDecoder::new(&m), fuse: fuse.clone() })
+                .collect();
+            let requests: Vec<Request> = (0..8u64)
+                .map(|id| Request { id, prompt: vec![(id as usize) % 32, 1], gen_len: 8 })
+                .collect();
+            serve_collect_pool(&mut decs, requests, 8, Duration::from_millis(1))
+        }));
+        assert!(result.is_err(), "the injected fault must propagate to the caller");
+        assert!(
+            fuse.load(std::sync::atomic::Ordering::SeqCst) <= 0,
+            "the fault must have fired mid-serve, not before"
+        );
+    }
+
+    #[test]
+    fn resolve_tick_threads_zero_is_auto_capped_at_batch() {
+        assert_eq!(resolve_tick_threads(3, 8), 3);
+        assert_eq!(resolve_tick_threads(1, 8), 1);
+        // explicit requests are honoured even beyond the batch size
+        assert_eq!(resolve_tick_threads(12, 4), 12);
+        // auto-detect caps at the batch (no lane can ever be idle-only)
+        let auto = resolve_tick_threads(0, 4);
+        assert!((1..=4).contains(&auto), "auto lanes {auto} not in 1..=4");
+        assert!(resolve_tick_threads(0, 0) >= 1, "degenerate batch still gets one lane");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
-use rwkvquant::coordinator::serve::{serve_collect_pool, Request, RunnerDecoder};
+use rwkvquant::coordinator::serve::{
+    resolve_tick_threads, serve_collect_pool, Request, RunnerDecoder,
+};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
@@ -41,7 +43,7 @@ fn help() -> String {
         .opt("arch", "synthetic arch rwkv6|rwkv7 (default rwkv6)")
         .opt("requests", "serve: number of requests (default 16)")
         .opt("batch", "serve: max batch (default 8)")
-        .opt("tick-threads", "serve: worker threads per batch tick (default 1)")
+        .opt("tick-threads", "serve: decode lanes per batch tick (0 = auto-detect, default 1)")
         .opt("seed", "rng seed (default 42)")
         .render()
 }
@@ -200,16 +202,19 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
             QuantizedModel::from_parts(&model, &q)
         }
     };
-    let tick_threads = args.get_usize("tick-threads", 1).max(1);
+    let batch = args.get_usize("batch", 8);
+    let requested_threads = args.get_usize("tick-threads", 1);
+    let tick_threads = resolve_tick_threads(requested_threads, batch);
     println!(
         "serving quantized model (avg {:.3} bpw packed, {} packed layers, {:.1} MB served, \
-         {} kernel, {} tick thread{})",
+         {} kernel, {} tick thread{}{})",
         qm.packed_bpw(),
         qm.n_packed(),
         qm.served_storage_bits() as f64 / 8e6,
         rwkvquant::quant::exec::active_kernel().name(),
         tick_threads,
         if tick_threads == 1 { "" } else { "s" },
+        if requested_threads == 0 { " — auto-detected" } else { "" },
     );
     let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
     let n = args.get_usize("requests", 16);
@@ -221,12 +226,7 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
             gen_len: args.get_usize("gen-len", 12),
         })
         .collect();
-    let (stats, _) = serve_collect_pool(
-        &mut decoders,
-        requests,
-        args.get_usize("batch", 8),
-        Duration::from_millis(2),
-    )?;
+    let (stats, _) = serve_collect_pool(&mut decoders, requests, batch, Duration::from_millis(2))?;
     println!(
         "{} requests | {:.1} tok/s | p50 {:?} p95 {:?} p99 {:?}",
         stats.completed,

@@ -34,9 +34,11 @@ use std::collections::HashMap;
 /// A named-weight source the forward pass can run over.
 ///
 /// `Send + Sync` supertraits: providers are shared immutably across the
-/// serve tick worker pool (one `RwkvRunner` borrow per tick thread), so
-/// a provider must be safe to read concurrently — both existing
-/// providers are plain data.
+/// serve tick worker pool (one `RwkvRunner` per pool lane, each holding
+/// a `&W` borrow for the life of the pool — the persistent workers in
+/// `coordinator::serve` are scoped threads precisely so these borrows
+/// need no `'static` bound), so a provider must be safe to read
+/// concurrently — both existing providers are plain data.
 pub trait WeightProvider: Send + Sync {
     fn config(&self) -> &ModelConfig;
     /// Number of named entries.
@@ -54,6 +56,14 @@ pub trait WeightProvider: Send + Sync {
     /// by widening (the embedding-lookup path of RWKVQ2 models).
     fn row_f32(&self, i: usize, r: usize) -> Vec<f32> {
         self.row_at(i, r).to_vec()
+    }
+    /// [`WeightProvider::row_f32`] into a reusable buffer (resized as
+    /// needed) — the per-token hot-path form: the runner's embedding
+    /// lookup goes through this, so a warm decode step allocates
+    /// nothing.
+    fn row_f32_into(&self, i: usize, r: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(self.row_at(i, r));
     }
     /// Dense fp32 view of the i-th entry, materialised transiently if
     /// the entry is packed (PJRT upload path — one layer at a time,
@@ -337,6 +347,31 @@ impl WeightProvider for QuantizedModel {
         match &self.entries[i].1 {
             ServedParam::Dense(m) => m.row(r).to_vec(),
             ServedParam::DenseF16(t) => t.row_f32(r),
+            ServedParam::Packed(_) => panic!(
+                "'{}' is packed — row views exist only for dense entries",
+                self.entries[i].0.name
+            ),
+        }
+    }
+
+    fn row_f32_into(&self, i: usize, r: usize, out: &mut Vec<f32>) {
+        match &self.entries[i].1 {
+            ServedParam::Dense(m) => {
+                out.clear();
+                out.extend_from_slice(m.row(r));
+            }
+            ServedParam::DenseF16(t) => {
+                out.clear();
+                out.resize(t.cols, 0.0);
+                // SIMD widen (VCVTPH2PS / NEON lanes) — this is the
+                // per-token embedding lookup, the hottest DenseF16 row
+                let bits = t.as_bits();
+                crate::quant::exec::widen_f16_into(
+                    crate::quant::exec::active_kernel(),
+                    &bits[r * t.cols..(r + 1) * t.cols],
+                    out,
+                );
+            }
             ServedParam::Packed(_) => panic!(
                 "'{}' is packed — row views exist only for dense entries",
                 self.entries[i].0.name

@@ -117,6 +117,8 @@ pub struct RwkvRunner<'a, W: WeightProvider = ModelWeights> {
     buf_g_in: Vec<f32>,
     buf_g: Vec<f32>,
     buf_ffn: Vec<f32>,
+    buf_x: Vec<f32>,
+    buf_wkv: Vec<f32>,
 }
 
 impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
@@ -144,6 +146,8 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
             buf_g_in: vec![0.0; if gated { d } else { 0 }],
             buf_g: vec![0.0; if gated { d } else { 0 }],
             buf_ffn: vec![0.0; ffn],
+            buf_x: vec![0.0; d],
+            buf_wkv: vec![0.0; d],
         }
     }
 
@@ -174,12 +178,29 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
 
     /// Forward one token id; returns the next-token logits.
     pub fn forward_token(&mut self, token: usize) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.forward_token_into(token, &mut logits);
+        logits
+    }
+
+    /// [`RwkvRunner::forward_token`] into a caller-owned logits buffer
+    /// (resized to `vocab`) — with the runner's internal scratch this
+    /// makes the decode step allocation-free after warm-up, which is
+    /// what lets persistent serve workers reuse their buffers across
+    /// ticks instead of re-allocating per token.
+    pub fn forward_token_into(&mut self, token: usize, logits: &mut Vec<f32>) {
         let cfg = self.weights.config();
         let (d, vocab, n_layer) = (cfg.d_model, cfg.vocab, cfg.n_layer);
         assert!(token < vocab, "token {token} >= vocab {vocab}");
         let emb_pos = self.pos("emb");
+        // reusable activation scratch, taken out of `self` so the many
+        // short `&self` parameter lookups below stay borrow-compatible
+        let mut x = std::mem::take(&mut self.buf_x);
+        let mut wkv = std::mem::take(&mut self.buf_wkv);
+        wkv.clear();
+        wkv.resize(d, 0.0);
         // owned-row lookup: also serves f16-resident RWKVQ2 embeddings
-        let mut x: Vec<f32> = self.weights.row_f32(emb_pos, token);
+        self.weights.row_f32_into(emb_pos, token, &mut x);
 
         for b in 0..n_layer {
             let p = |suffix: &str| format!("blocks.{b}.{suffix}");
@@ -228,8 +249,8 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
                 }
             }
 
-            // WKV recurrence (channel-wise, stabilised)
-            let mut wkv = vec![0.0f32; d];
+            // WKV recurrence (channel-wise, stabilised); `wkv` is fully
+            // overwritten below, so the cross-block reuse is safe
             {
                 let st = &mut self.state[b];
                 for c in 0..d {
@@ -299,9 +320,11 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
         }
 
         let xo = layer_norm(&x, self.vrow("ln_out.g"), self.vrow("ln_out.b"));
-        let mut logits = vec![0.0f32; vocab];
-        self.op("head").matvec(&xo, &mut logits);
-        logits
+        logits.clear();
+        logits.resize(vocab, 0.0);
+        self.op("head").matvec(&xo, logits);
+        self.buf_x = x;
+        self.buf_wkv = wkv;
     }
 
     /// Forward a token sequence, returning logits at every position.

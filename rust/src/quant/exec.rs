@@ -29,7 +29,7 @@
 //! hybrid checkpoints all run the identical forward-pass code.
 
 use super::{QuantizedLayer, SqLayer, VqLayer};
-use crate::tensor::f16::F16Tensor;
+use crate::tensor::f16::{f16_to_f32, F16Tensor};
 use crate::tensor::{linalg, Matrix};
 use std::sync::OnceLock;
 
@@ -98,6 +98,22 @@ pub fn active_kernel() -> Kernel {
     *ACTIVE.get_or_init(Kernel::detect)
 }
 
+/// Does the host have both AVX2 and the VCVTPH2PS half-to-float
+/// conversion (F16C)? Detected separately from [`Kernel::detect`]: F16C
+/// is a distinct CPUID bit from AVX2+FMA, so an [`Kernel::Avx2`] host
+/// without it still runs the packed kernels and only the f16 widen
+/// falls back to scalar. AVX2 is re-checked here (not assumed from the
+/// kernel value) because [`widen_f16_into`] is a safe public fn whose
+/// callers may pass any [`Kernel`] — the dispatch guard, not the
+/// caller, carries the whole target-feature precondition.
+#[cfg(target_arch = "x86_64")]
+fn f16c_available() -> bool {
+    static F16C: OnceLock<bool> = OnceLock::new();
+    *F16C.get_or_init(|| {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("f16c")
+    })
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::*;
@@ -163,6 +179,28 @@ mod avx2 {
         }
         dot
     }
+
+    /// Widen binary16 bits to f32, 8 lanes per VCVTPH2PS.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+F16C support (see
+    /// [`super::f16c_available`]); `bits` and `out` must be equally long.
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn widen_f16(bits: &[u16], out: &mut [f32]) {
+        debug_assert_eq!(bits.len(), out.len());
+        let n = bits.len();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let h = _mm_loadu_si128(bits.as_ptr().add(j) as *const __m128i);
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_cvtph_ps(h));
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) =
+                crate::tensor::f16::f16_to_f32(*bits.get_unchecked(j));
+            j += 1;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -221,6 +259,57 @@ mod neon {
         }
         dot
     }
+
+    /// Widen binary16 bits to f32, 4 lanes per step.
+    ///
+    /// The stable NEON surface has no f16 vector types, so this is the
+    /// branch-free integer widen done in lanes: shift the sign/exponent/
+    /// mantissa into f32 position, rebias the exponent, then fix the two
+    /// special exponent classes by compare-select — Inf/NaN get the
+    /// remaining exponent distance, subnormals are renormalised by one
+    /// exact float subtraction. Bit-exact against the scalar
+    /// [`crate::tensor::f16::f16_to_f32`] for every non-NaN pattern
+    /// (NaNs stay NaN; the scalar reference canonicalises the quiet bit,
+    /// this path preserves the payload — both are NaN).
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; `bits` and `out` must be
+    /// equally long.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn widen_f16(bits: &[u16], out: &mut [f32]) {
+        debug_assert_eq!(bits.len(), out.len());
+        let n = bits.len();
+        let shifted_exp = vdupq_n_u32(0x7c00 << 13);
+        let exp_adjust = vdupq_n_u32((127 - 15) << 23);
+        let inf_adjust = vdupq_n_u32((128 - 16) << 23);
+        let one_exp = vdupq_n_u32(1 << 23);
+        // 2^-14: subtracting it renormalises a shifted f16 subnormal
+        let sub_magic = vreinterpretq_f32_u32(vdupq_n_u32(113 << 23));
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let h = vmovl_u16(vld1_u16(bits.as_ptr().add(j)));
+            let sign = vshlq_n_u32::<16>(vandq_u32(h, vdupq_n_u32(0x8000)));
+            let om = vshlq_n_u32::<13>(vandq_u32(h, vdupq_n_u32(0x7fff)));
+            let exp = vandq_u32(om, shifted_exp);
+            let adjusted = vaddq_u32(om, exp_adjust);
+            let inf_fixed = vaddq_u32(adjusted, inf_adjust);
+            let sub_bits = vaddq_u32(adjusted, one_exp);
+            let sub_fixed = vreinterpretq_u32_f32(vsubq_f32(
+                vreinterpretq_f32_u32(sub_bits),
+                sub_magic,
+            ));
+            let o = vbslq_u32(vceqq_u32(exp, shifted_exp), inf_fixed, adjusted);
+            let o = vbslq_u32(vceqq_u32(exp, vdupq_n_u32(0)), sub_fixed, o);
+            let o = vorrq_u32(o, sign);
+            vst1q_f32(out.as_mut_ptr().add(j), vreinterpretq_f32_u32(o));
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) =
+                crate::tensor::f16::f16_to_f32(*bits.get_unchecked(j));
+            j += 1;
+        }
+    }
 }
 
 /// Two-way-unrolled scalar code·x dot (written to auto-vectorise).
@@ -269,6 +358,29 @@ fn dot_f32(kernel: Kernel, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: Neon is only handed out by detect() on NEON hosts.
         Kernel::Neon => unsafe { neon::dot_f32(a, b) },
         _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Widen binary16 bits into f32, dispatched to the requested kernel.
+/// The scalar [`f16_to_f32`] stays the correctness reference; every SIMD
+/// path is bit-exact against it for non-NaN inputs (asserted
+/// exhaustively by the tests and `prop_kernels`).
+#[inline]
+pub fn widen_f16_into(kernel: Kernel, bits: &[u16], out: &mut [f32]) {
+    assert_eq!(bits.len(), out.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only handed out by detect() on AVX2+FMA hosts,
+        // and the F16C bit is checked separately right here.
+        Kernel::Avx2 if f16c_available() => unsafe { avx2::widen_f16(bits, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only handed out by detect() on NEON hosts.
+        Kernel::Neon => unsafe { neon::widen_f16(bits, out) },
+        _ => {
+            for (dst, &b) in out.iter_mut().zip(bits) {
+                *dst = f16_to_f32(b);
+            }
+        }
     }
 }
 
@@ -389,23 +501,51 @@ impl LinearOp for QuantizedLayer {
     }
 }
 
+/// Reusable scratch for the packed matvec kernels: one allocation set
+/// per owner, reused across calls. The serve tick workers each own one
+/// for the life of the pool (via this module's thread-local — persistent
+/// worker threads keep it warm across ticks), and benches/tests can pass
+/// an explicit instance through the `*_scratch` entry points to control
+/// reuse precisely.
+#[derive(Debug)]
+pub struct MatvecScratch {
+    /// AWQ folded-scale input (`x ⊙ 1/s`).
+    pub scaled_x: Vec<f32>,
+    /// Unpacked per-row codes of the aligned SQ fast path.
+    pub codes_row: Vec<u8>,
+    /// Row-invariant per-group Σx of the aligned SQ path.
+    pub group_xsum: Vec<f32>,
+    /// Gathered codebook row of the VQ kernel.
+    pub vq_row: Vec<f32>,
+    /// Widened row of the f16 dense matvec.
+    pub f16_row: Vec<f32>,
+}
+
+impl MatvecScratch {
+    pub const fn new() -> MatvecScratch {
+        MatvecScratch {
+            scaled_x: Vec::new(),
+            codes_row: Vec::new(),
+            group_xsum: Vec::new(),
+            vq_row: Vec::new(),
+            f16_row: Vec::new(),
+        }
+    }
+}
+
+impl Default for MatvecScratch {
+    fn default() -> Self {
+        MatvecScratch::new()
+    }
+}
+
 thread_local! {
-    /// Scratch for the AWQ folded-scale input (hot path: one serve loop
-    /// per thread, so a thread-local avoids a per-call allocation).
-    static SCALED_X: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-    /// Scratch for the unpacked per-row codes of the aligned fast path.
-    static CODES_ROW: std::cell::RefCell<Vec<u8>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-    /// Scratch for the row-invariant per-group Σx of the aligned path.
-    static GROUP_XSUM: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-    /// Scratch for the gathered codebook row of the VQ kernel.
-    static VQ_ROW: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-    /// Scratch for the widened row of the f16 dense matvec.
-    static F16_ROW: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
+    /// Per-thread scratch behind the implicit matvec entry points. The
+    /// hot path is one long-lived serve worker per thread (the tick pool
+    /// keeps its threads across ticks precisely so this stays warm), so
+    /// a thread-local avoids a per-call allocation.
+    static SCRATCH: std::cell::RefCell<MatvecScratch> =
+        const { std::cell::RefCell::new(MatvecScratch::new()) };
 }
 
 /// y = W x for an SQ layer, streaming packed codes with the
@@ -421,36 +561,39 @@ pub fn matvec_sq(l: &SqLayer, x: &[f32], y: &mut [f32]) {
 }
 
 /// [`matvec_sq`] with an explicit kernel — the benches and the
-/// SIMD-vs-scalar equivalence tests pick the variant themselves.
+/// SIMD-vs-scalar equivalence tests pick the variant themselves. Uses
+/// the calling thread's scratch.
 pub fn matvec_sq_with(kernel: Kernel, l: &SqLayer, x: &[f32], y: &mut [f32]) {
+    SCRATCH.with(|s| matvec_sq_scratch(kernel, l, x, y, &mut s.borrow_mut()));
+}
+
+/// [`matvec_sq`] with an explicit kernel *and* caller-owned scratch —
+/// the fully explicit form the tick pool workers and benches build on.
+pub fn matvec_sq_scratch(
+    kernel: Kernel,
+    l: &SqLayer,
+    x: &[f32],
+    y: &mut [f32],
+    scratch: &mut MatvecScratch,
+) {
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     assert!(
         l.rotation.is_none(),
         "fused matvec cannot undo a QuaRot rotation — dequantize instead"
     );
-    match &l.col_inv_scale {
-        Some(inv) => SCALED_X.with(|scratch| {
-            let mut scaled = scratch.borrow_mut();
-            scaled.clear();
-            scaled.extend(x.iter().zip(inv).map(|(&xv, &s)| xv * s));
-            matvec_sq_plain(kernel, l, &scaled, y);
-        }),
-        None => matvec_sq_plain(kernel, l, x, y),
-    }
-}
-
-/// The plain-grid kernel body (`x` already in the quantized basis).
-fn matvec_sq_plain(kernel: Kernel, l: &SqLayer, x: &[f32], y: &mut [f32]) {
-    CODES_ROW.with(|codes_scratch| {
-        GROUP_XSUM.with(|xsum_scratch| {
-            let mut codes_row = codes_scratch.borrow_mut();
-            codes_row.clear();
-            codes_row.resize(l.cols, 0);
-            let mut xsum = xsum_scratch.borrow_mut();
-            matvec_sq_body(kernel, l, x, y, &mut codes_row, &mut xsum);
-        });
-    });
+    let MatvecScratch { scaled_x, codes_row, group_xsum, .. } = scratch;
+    let x_eff: &[f32] = match &l.col_inv_scale {
+        Some(inv) => {
+            scaled_x.clear();
+            scaled_x.extend(x.iter().zip(inv).map(|(&xv, &s)| xv * s));
+            scaled_x
+        }
+        None => x,
+    };
+    codes_row.clear();
+    codes_row.resize(l.cols, 0);
+    matvec_sq_body(kernel, l, x_eff, y, codes_row, group_xsum);
 }
 
 fn matvec_sq_body(
@@ -520,47 +663,72 @@ pub fn matvec_vq(l: &VqLayer, x: &[f32], y: &mut [f32]) {
 /// [`matvec_vq`] with an explicit kernel: codebook entries are gathered
 /// into a contiguous row buffer, then accumulated with one full-width
 /// vectorized dot (the d-sized entries are too short to feed the SIMD
-/// lanes directly).
+/// lanes directly). Uses the calling thread's scratch.
 pub fn matvec_vq_with(kernel: Kernel, l: &VqLayer, x: &[f32], y: &mut [f32]) {
+    SCRATCH.with(|s| matvec_vq_scratch(kernel, l, x, y, &mut s.borrow_mut()));
+}
+
+/// [`matvec_vq`] with an explicit kernel *and* caller-owned scratch.
+pub fn matvec_vq_scratch(
+    kernel: Kernel,
+    l: &VqLayer,
+    x: &[f32],
+    y: &mut [f32],
+    scratch: &mut MatvecScratch,
+) {
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     let d = l.d;
     debug_assert_eq!(l.cols % d, 0, "vectors are row-aligned by construction");
     let vecs_per_row = l.cols / d;
-    VQ_ROW.with(|scratch| {
-        let mut row = scratch.borrow_mut();
-        row.clear();
-        row.resize(l.cols, 0.0);
-        for r in 0..l.rows {
-            let mut reader = l.indices.reader(r * vecs_per_row);
-            for vb in 0..vecs_per_row {
-                let e = reader.next() as usize;
-                row[vb * d..(vb + 1) * d].copy_from_slice(l.entry(e));
-            }
-            y[r] = dot_f32(kernel, &row, x);
+    let row = &mut scratch.vq_row;
+    row.clear();
+    row.resize(l.cols, 0.0);
+    for r in 0..l.rows {
+        let mut reader = l.indices.reader(r * vecs_per_row);
+        for vb in 0..vecs_per_row {
+            let e = reader.next() as usize;
+            row[vb * d..(vb + 1) * d].copy_from_slice(l.entry(e));
         }
-    });
+        y[r] = dot_f32(kernel, row, x);
+    }
 }
 
 /// y = W x for a half-precision dense tensor (RWKVQ2-resident
-/// embeddings/heads/fallbacks): each row is widened f16→f32 into a
-/// thread-local scratch, then accumulated with the full-width vectorized
-/// dot — the dense twin of the SQ unpack-then-dot two-pass shape. Works
-/// identically for owned and mapped payloads (the mapped case faults
-/// checkpoint pages in on first touch).
+/// embeddings/heads/fallbacks): each row is widened f16→f32 into scratch
+/// — through VCVTPH2PS / the NEON lane widen where the host has them —
+/// then accumulated with the full-width vectorized dot, the dense twin
+/// of the SQ unpack-then-dot two-pass shape. Works identically for owned
+/// and mapped payloads (the mapped case faults checkpoint pages in on
+/// first touch).
 pub fn matvec_f16(t: &F16Tensor, x: &[f32], y: &mut [f32]) {
+    matvec_f16_with(active_kernel(), t, x, y);
+}
+
+/// [`matvec_f16`] with an explicit kernel, on the calling thread's
+/// scratch.
+pub fn matvec_f16_with(kernel: Kernel, t: &F16Tensor, x: &[f32], y: &mut [f32]) {
+    SCRATCH.with(|s| matvec_f16_scratch(kernel, t, x, y, &mut s.borrow_mut()));
+}
+
+/// [`matvec_f16`] with an explicit kernel *and* caller-owned scratch.
+pub fn matvec_f16_scratch(
+    kernel: Kernel,
+    t: &F16Tensor,
+    x: &[f32],
+    y: &mut [f32],
+    scratch: &mut MatvecScratch,
+) {
     assert_eq!(x.len(), t.cols);
     assert_eq!(y.len(), t.rows);
-    let kernel = active_kernel();
-    F16_ROW.with(|scratch| {
-        let mut row = scratch.borrow_mut();
-        row.clear();
-        row.resize(t.cols, 0.0);
-        for (r, slot) in y.iter_mut().enumerate() {
-            t.row_f32_into(r, &mut row);
-            *slot = dot_f32(kernel, &row, x);
-        }
-    });
+    let row = &mut scratch.f16_row;
+    row.clear();
+    row.resize(t.cols, 0.0);
+    let bits = t.as_bits();
+    for (r, slot) in y.iter_mut().enumerate() {
+        widen_f16_into(kernel, &bits[r * t.cols..(r + 1) * t.cols], row);
+        *slot = dot_f32(kernel, row, x);
+    }
 }
 
 impl LinearOp for F16Tensor {
@@ -713,6 +881,98 @@ mod tests {
         }
         assert_eq!(LinearOp::storage_bits(&t), 24 * 48 * 16);
         assert_eq!(LinearOp::flops_per_token(&t), 2 * 24 * 48);
+    }
+
+    #[test]
+    fn every_available_kernel_widens_f16_bit_exactly() {
+        // exhaustive: all 65536 f16 patterns must widen to the same f32
+        // bits as the scalar reference (NaNs only need to stay NaN — the
+        // lane widen preserves payloads, the scalar canonicalises them)
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let mut want = vec![0.0f32; bits.len()];
+        widen_f16_into(Kernel::Scalar, &bits, &mut want);
+        for (i, (&b, &w)) in bits.iter().zip(&want).enumerate() {
+            assert_eq!(w.to_bits(), crate::tensor::f16::f16_to_f32(b).to_bits(), "{i}");
+        }
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; bits.len()];
+            widen_f16_into(k, &bits, &mut got);
+            for (&b, (&g, &w)) in bits.iter().zip(got.iter().zip(&want)) {
+                if w.is_nan() {
+                    assert!(g.is_nan(), "{}: {b:#06x} must stay NaN", k.name());
+                } else {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{}: {b:#06x} widened to {g} want {w}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widen_handles_unaligned_tails() {
+        // lengths that leave 1..7 scalar-tail elements after the lanes
+        for n in [1usize, 3, 5, 7, 9, 12, 15] {
+            let bits: Vec<u16> = (0..n as u16).map(|i| 0x3c00 + i * 7).collect();
+            let mut want = vec![0.0f32; n];
+            widen_f16_into(Kernel::Scalar, &bits, &mut want);
+            for k in Kernel::available() {
+                let mut got = vec![0.0f32; n];
+                widen_f16_into(k, &bits, &mut got);
+                assert_eq!(got, want, "{} len {n}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_f16_matvec() {
+        let (w, x) = rand(31, 24, 100); // 100 = 12 lanes of 8 + tail 4
+        let t = F16Tensor::from_matrix(&w);
+        let mut want = vec![0.0f32; 24];
+        matvec_f16_with(Kernel::Scalar, &t, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; 24];
+            matvec_f16_with(k, &t, &x, &mut got);
+            for i in 0..24 {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-5 * (1.0 + want[i].abs()),
+                    "{}: row {i}: {} vs {}",
+                    k.name(),
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_scratch_matches_thread_local_paths() {
+        // one scratch reused across all three kernels and repeated calls
+        let mut scratch = MatvecScratch::new();
+        let (w, x) = rand(33, 20, 64);
+        let sq = sq::rtn::quantize(&w, 4, 32);
+        let vq = vq::kmeans::quantize(&w, 5, 4, 6, &mut Rng::new(34));
+        let f = F16Tensor::from_matrix(&w);
+        for _ in 0..2 {
+            let k = active_kernel();
+            let (mut a, mut b) = (vec![0.0f32; 20], vec![0.0f32; 20]);
+            matvec_sq(&sq, &x, &mut a);
+            matvec_sq_scratch(k, &sq, &x, &mut b, &mut scratch);
+            assert_eq!(a, b);
+            matvec_vq(&vq, &x, &mut a);
+            matvec_vq_scratch(k, &vq, &x, &mut b, &mut scratch);
+            assert_eq!(a, b);
+            matvec_f16(&f, &x, &mut a);
+            matvec_f16_scratch(k, &f, &x, &mut b, &mut scratch);
+            assert_eq!(a, b);
+        }
+        // the buffers stayed allocated for reuse
+        assert!(scratch.codes_row.capacity() >= 64);
+        assert!(scratch.vq_row.capacity() >= 64);
+        assert!(scratch.f16_row.capacity() >= 64);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 use rwkvquant::config::{ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    serve, serve_collect, serve_collect_pool, Decoder, Request, Response, RunnerDecoder,
+    serve, serve_collect, serve_collect_per_tick_spawn, serve_collect_pool, with_tick_pool,
+    Decoder, Request, Response, RunnerDecoder,
 };
 use rwkvquant::eval::dequantized_model;
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
@@ -121,6 +122,66 @@ fn threaded_ticks_serve_token_identical_to_sequential() {
         let got: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
         assert_eq!(got, want, "{threads} tick threads changed the served tokens");
     }
+}
+
+#[test]
+fn one_pool_serves_consecutive_sessions_token_identically() {
+    // the lifecycle contract of the persistent pool on a real quantized
+    // model: two full serving sessions back-to-back on ONE pool, no
+    // worker re-creation between them, tokens identical to the
+    // sequential reference in both — and the legacy per-tick-spawn
+    // engine still agrees (it is the pool's perf baseline)
+    let cfg = ModelConfig::rwkv6(2, 48, 96);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 31);
+    let qc = QuantConfig { kmeans_iters: 4, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let qm = QuantizedModel::from_parts(&m, &q);
+
+    let requests = || -> Vec<Request> {
+        (0..10u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id as usize * 13 + 1) % 96, 5],
+                gen_len: 6,
+            })
+            .collect()
+    };
+    let mut seq_dec = RunnerDecoder::new(&qm);
+    let (_, seq) = serve_collect(&mut seq_dec, requests(), 4, Duration::from_millis(1)).unwrap();
+    let want: Vec<_> = seq.iter().map(|r| (r.id, r.tokens.clone())).collect();
+
+    let mut spawn_decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&qm)).collect();
+    let (_, spawned) =
+        serve_collect_per_tick_spawn(&mut spawn_decs, requests(), 4, Duration::from_millis(1))
+            .unwrap();
+    let got: Vec<_> = spawned.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    assert_eq!(got, want, "per-tick spawn engine diverged");
+
+    let mut decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&qm)).collect();
+    with_tick_pool(&mut decs, |pool| {
+        assert_eq!(pool.spawned_workers(), 2);
+        for session in 0..2 {
+            let (tx_req, rx_req) = mpsc::channel();
+            let (tx_resp, rx_resp) = mpsc::channel();
+            for r in requests() {
+                tx_req.send(r).unwrap();
+            }
+            drop(tx_req);
+            let stats = pool.serve(rx_req, tx_resp, 4, Duration::from_millis(1)).unwrap();
+            assert_eq!(stats.completed, 10, "session {session}");
+            let mut got: Vec<_> = rx_resp.iter().map(|r| (r.id, r.tokens)).collect();
+            got.sort();
+            assert_eq!(got, want, "session {session} diverged from sequential");
+            // no worker churn: the distinct thread set stays within the
+            // spawned pool across sessions (per-tick spawning would mint
+            // new threads every tick)
+            assert!(
+                pool.distinct_worker_threads() <= pool.spawned_workers(),
+                "session {session}: worker threads leaked"
+            );
+        }
+        assert!(pool.ticks() > 0);
+    });
 }
 
 #[test]

@@ -1,12 +1,14 @@
 //! Property tests for the SIMD matvec kernels: every kernel the host
 //! can run ([`Kernel::available`]) must agree with the portable scalar
 //! reference within 1e-5 across bit-widths, group sizes, odd row
-//! lengths, AWQ-scaled layers, and VQ vector dims. On hosts without a
-//! SIMD unit the properties degenerate to scalar-vs-scalar (still
-//! exercising both matvec entry points).
+//! lengths, AWQ-scaled layers, VQ vector dims, and f16 dense tensors
+//! (where the widen itself must be bit-exact, not just close). On hosts
+//! without a SIMD unit the properties degenerate to scalar-vs-scalar
+//! (still exercising both matvec entry points).
 
 use rwkvquant::quant::exec::{self, Kernel};
 use rwkvquant::quant::{sq, vq, CalibData};
+use rwkvquant::tensor::f16::{f16_to_f32, F16Tensor};
 use rwkvquant::tensor::Matrix;
 use rwkvquant::util::ptest::{check, close_slices, Gen};
 use rwkvquant::util::rng::Rng;
@@ -103,6 +105,57 @@ fn simd_vq_matches_scalar_across_vector_dims() {
             close_slices(&got, &want, ATOL, RTOL).map_err(|e| {
                 format!("{} vs scalar, {rows}x{cols} d={d} k={k_bits}: {e}", k.name())
             })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_f16_matvec_matches_scalar_across_shapes() {
+    check("simd matvec_f16 ≡ scalar", 32, |g| {
+        let rows = g.usize_in(1..32);
+        // odd col counts exercise the scalar tail after the 8/4-lane loop
+        let cols = g.usize_in(1..130);
+        let w = rand_weight(g, rows, cols);
+        let t = F16Tensor::from_matrix(&w);
+        let x = rand_x(g, cols);
+        let mut want = vec![0.0f32; rows];
+        exec::matvec_f16_with(Kernel::Scalar, &t, &x, &mut want);
+        for k in Kernel::available() {
+            let mut got = vec![0.0f32; rows];
+            exec::matvec_f16_with(k, &t, &x, &mut got);
+            close_slices(&got, &want, ATOL, RTOL)
+                .map_err(|e| format!("{} vs scalar, {rows}x{cols}: {e}", k.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_f16_widen_is_bit_exact_on_random_payloads() {
+    // the widen is conversion, not arithmetic: every kernel must produce
+    // the exact f32 bits of the scalar f16_to_f32 reference, including
+    // subnormal and extreme-exponent payloads the normal path never hits
+    check("widen_f16 bit-exact", 32, |g| {
+        let n = g.usize_in(1..200);
+        let mut rng = Rng::new(g.seed() ^ 0xf16);
+        let bits: Vec<u16> = (0..n).map(|_| rng.below(1 << 16) as u16).collect();
+        for k in Kernel::available() {
+            let mut out = vec![0.0f32; n];
+            exec::widen_f16_into(k, &bits, &mut out);
+            for (i, (&b, &got)) in bits.iter().zip(&out).enumerate() {
+                let want = f16_to_f32(b);
+                if want.is_nan() {
+                    if !got.is_nan() {
+                        return Err(format!("{}: [{i}] {b:#06x} lost NaN", k.name()));
+                    }
+                } else if got.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "{}: [{i}] {b:#06x} -> {got} want {want}",
+                        k.name()
+                    ));
+                }
+            }
         }
         Ok(())
     });
