@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""End-to-end smoke of the HTTP serving gateway (CI `http-smoke` job).
+
+Stdlib only. The script:
+
+  1. packs a tiny synthetic model into an RWKVQ2 checkpoint,
+  2. starts `rwkvquant serve --http` on it and waits for /healthz,
+  3. streams a completion (SSE over chunked transfer), checks the
+     incremental token events agree with the final `done` event,
+  4. repeats the request with `"stream": false` and requires identical
+     tokens,
+  5. runs the in-process twin (`serve --prompt ... --print-tokens`) on
+     the same store and **gates on token-identical output**,
+  6. scrapes /metrics and checks the serving counters,
+  7. sends SIGTERM and requires a graceful exit with code 0.
+
+Usage: python3 python/http_smoke.py --bin target/release/rwkvquant
+"""
+
+import argparse
+import http.client
+import json
+import re
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+GEN_LEN = 8
+PROMPT = [3, 1, 2]
+
+
+def log(msg: str) -> None:
+    print(f"[http-smoke] {msg}", flush=True)
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def wait_healthy(port: int, proc: subprocess.Popen, timeout: float = 120.0) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise SystemExit(f"server exited early with code {proc.returncode}")
+        try:
+            conn = http.client.HTTPConnection("127.0.0.1", port, timeout=2)
+            conn.request("GET", "/healthz")
+            resp = conn.getresponse()
+            body = resp.read()
+            conn.close()
+            if resp.status == 200 and body.strip() == b"ok":
+                return
+        except OSError:
+            pass
+        time.sleep(0.2)
+    raise SystemExit("server never became healthy")
+
+
+def generate(port: int, stream: bool) -> list[int]:
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    payload = json.dumps({"prompt": PROMPT, "gen_len": GEN_LEN, "stream": stream})
+    conn.request(
+        "POST", "/v1/generate", body=payload, headers={"Content-Type": "application/json"}
+    )
+    resp = conn.getresponse()
+    body = resp.read().decode()
+    conn.close()
+    if resp.status != 200:
+        raise SystemExit(f"/v1/generate (stream={stream}) answered {resp.status}: {body}")
+    if not stream:
+        return json.loads(body)["tokens"]
+    if "text/event-stream" not in (resp.getheader("Content-Type") or ""):
+        raise SystemExit(f"streamed response has wrong content type: {resp.getheader('Content-Type')}")
+    events = [json.loads(line[len("data: "):]) for line in body.splitlines() if line.startswith("data: ")]
+    incremental = [e["token"] for e in events if "token" in e]
+    done = [e for e in events if e.get("done")]
+    if len(done) != 1:
+        raise SystemExit(f"expected exactly one done event, got {len(done)}: {body!r}")
+    if incremental != done[0]["tokens"]:
+        raise SystemExit(
+            f"incremental tokens {incremental} disagree with done event {done[0]['tokens']}"
+        )
+    return incremental
+
+
+def scrape_metrics(port: int) -> str:
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    conn.request("GET", "/metrics")
+    resp = conn.getresponse()
+    text = resp.read().decode()
+    conn.close()
+    if resp.status != 200:
+        raise SystemExit(f"/metrics answered {resp.status}")
+    return text
+
+
+def metric_value(text: str, name: str) -> float:
+    m = re.search(rf"^{re.escape(name)} (\S+)$", text, re.MULTILINE)
+    if not m:
+        raise SystemExit(f"metric {name} missing from /metrics:\n{text}")
+    return float(m.group(1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", required=True, help="path to the rwkvquant binary")
+    args = ap.parse_args()
+    binary = str(Path(args.bin).resolve())
+
+    tmp = Path(tempfile.mkdtemp(prefix="rwkvq_http_smoke_"))
+    store = tmp / "smoke.rwkvq2"
+    log("packing tiny model …")
+    subprocess.run(
+        [binary, "pack", "--size", "0.1B", "--seed", "7", "--out", str(store)],
+        check=True,
+    )
+
+    port = free_port()
+    log(f"starting gateway on 127.0.0.1:{port} …")
+    server = subprocess.Popen(
+        [
+            binary, "serve", "--store", str(store),
+            "--http", f"127.0.0.1:{port}",
+            "--max-queue", "8", "--batch", "4", "--tick-threads", "2",
+        ]
+    )
+    try:
+        wait_healthy(port, server)
+        log("healthz OK")
+
+        streamed = generate(port, stream=True)
+        log(f"streamed tokens: {streamed}")
+        if len(streamed) != GEN_LEN:
+            raise SystemExit(f"expected {GEN_LEN} tokens, got {len(streamed)}")
+
+        collected = generate(port, stream=False)
+        if collected != streamed:
+            raise SystemExit(f"stream={streamed} != collected={collected}")
+        log("stream / non-stream agreement OK")
+
+        # in-process twin on the same store must produce identical tokens
+        twin = subprocess.run(
+            [
+                binary, "serve", "--store", str(store),
+                "--requests", "1", "--gen-len", str(GEN_LEN),
+                "--prompt", ",".join(str(t) for t in PROMPT),
+                "--print-tokens",
+            ],
+            check=True, capture_output=True, text=True,
+        )
+        m = re.search(r"^tokens\[0\]: (.+)$", twin.stdout, re.MULTILINE)
+        if not m:
+            raise SystemExit(f"twin output has no token line:\n{twin.stdout}")
+        twin_tokens = [int(t) for t in m.group(1).split(",")]
+        if twin_tokens != streamed:
+            raise SystemExit(
+                f"TOKEN MISMATCH: http={streamed} vs in-process={twin_tokens}"
+            )
+        log("token-identical to the in-process twin OK")
+
+        text = scrape_metrics(port)
+        served = metric_value(text, "rwkvquant_served_tokens_total")
+        if served < 2 * GEN_LEN:
+            raise SystemExit(f"served_tokens_total {served} < {2 * GEN_LEN}")
+        metric_value(text, "rwkvquant_requests_shed_total")  # present even at 0
+        metric_value(text, "rwkvquant_served_tokens_per_sec")
+        metric_value(text, "rwkvquant_queue_depth")
+        log("metrics OK")
+
+        log("sending SIGTERM for a graceful drain …")
+        server.send_signal(signal.SIGTERM)
+        code = server.wait(timeout=60)
+        if code != 0:
+            raise SystemExit(f"server exited {code} after SIGTERM (want 0)")
+        log("graceful drain OK (exit 0)")
+    finally:
+        if server.poll() is None:
+            server.kill()
+            server.wait(timeout=10)
+
+    log("PASS")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,11 +69,7 @@ fn main() {
         let vocab = m3.config.vocab;
         let requests = || -> Vec<Request> {
             (0..12u64)
-                .map(|id| Request {
-                    id,
-                    prompt: vec![(id as usize * 29 + 1) % vocab, 2, 3],
-                    gen_len: 6,
-                })
+                .map(|id| Request::new(id, vec![(id as usize * 29 + 1) % vocab, 2, 3], 6))
                 .collect()
         };
         let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(2, 4);

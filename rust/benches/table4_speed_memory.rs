@@ -45,11 +45,7 @@ fn serve_tokens_per_sec<W: WeightProvider>(
     let mut decoders: Vec<_> =
         (0..tick_threads.max(1)).map(|_| RunnerDecoder::new(weights)).collect();
     let requests: Vec<Request> = (0..n_req)
-        .map(|id| Request {
-            id,
-            prompt: vec![(id as usize * 13) % vocab, 1, 2, 3],
-            gen_len,
-        })
+        .map(|id| Request::new(id, vec![(id as usize * 13) % vocab, 1, 2, 3], gen_len))
         .collect();
     let (stats, _) = if spawn {
         serve_collect_per_tick_spawn(&mut decoders, requests, 8, Duration::from_millis(1))

@@ -17,6 +17,7 @@ pub struct Pending<T> {
 /// Admission policy state.
 pub struct DynamicBatcher<T> {
     queue: VecDeque<Pending<T>>,
+    hwm: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
 }
@@ -24,15 +25,22 @@ pub struct DynamicBatcher<T> {
 impl<T> DynamicBatcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
-        DynamicBatcher { queue: VecDeque::new(), max_batch, max_wait }
+        DynamicBatcher { queue: VecDeque::new(), hwm: 0, max_batch, max_wait }
     }
 
     pub fn push(&mut self, item: T, now: Instant) {
         self.queue.push_back(Pending { item, arrived: now });
+        self.hwm = self.hwm.max(self.queue.len());
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Deepest the queue has ever been — the backlog side of the serve
+    /// summary and the `/metrics` queue gauge's lifetime companion.
+    pub fn high_water_mark(&self) -> usize {
+        self.hwm
     }
 
     /// Time until the head-of-queue request ages past `max_wait` — the
@@ -137,6 +145,24 @@ mod tests {
             b.next_deadline(now + Duration::from_millis(250)),
             Some(Duration::ZERO)
         );
+    }
+
+    #[test]
+    fn high_water_mark_survives_draining() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(0));
+        let now = t0();
+        assert_eq!(b.high_water_mark(), 0);
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        assert_eq!(b.high_water_mark(), 5);
+        let batch = b.admit(4, now + Duration::from_millis(1));
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.queue_len(), 1);
+        // draining must not lower the mark
+        assert_eq!(b.high_water_mark(), 5);
+        b.push(9, now);
+        assert_eq!(b.high_water_mark(), 5);
     }
 
     #[test]

@@ -67,12 +67,46 @@ pub fn resolve_tick_threads(requested: usize, max_batch: usize) -> usize {
     }
 }
 
+/// Per-request lifecycle events, delivered live on [`Request::stream`]
+/// while the sequence is being served. The HTTP gateway turns these into
+/// SSE chunks; in-process callers that only need the final tokens can
+/// ignore the stream entirely and read the [`Response`].
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// Left the admission queue and entered the active set after
+    /// `queued` of waiting.
+    Admitted { queued: Duration },
+    /// One generated (non-prompt) token, in generation order.
+    Token(usize),
+    /// Generation finished; the final [`Response`] carries the same
+    /// tokens. Sent before the per-request sender is dropped.
+    Done { latency: Duration },
+    /// Rejected at admission: the bounded queue ([`ServeOpts::max_queue`])
+    /// was full. No other event follows (HTTP maps this to 429).
+    Shed,
+}
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub gen_len: usize,
+    /// Optional live event stream (see [`StreamEvent`]). Send errors are
+    /// ignored — a vanished listener never stalls the serve loop.
+    pub stream: Option<mpsc::Sender<StreamEvent>>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<usize>, gen_len: usize) -> Request {
+        Request { id, prompt, gen_len, stream: None }
+    }
+
+    /// Attach a live event stream to this request.
+    pub fn with_stream(mut self, tx: mpsc::Sender<StreamEvent>) -> Request {
+        self.stream = Some(tx);
+        self
+    }
 }
 
 /// The server's answer.
@@ -82,6 +116,9 @@ pub struct Response {
     pub tokens: Vec<usize>,
     pub queued: Duration,
     pub latency: Duration,
+    /// The request was shed at admission (bounded queue full) and never
+    /// decoded; `tokens` is empty and the timings are zero.
+    pub shed: bool,
 }
 
 /// Aggregate serving metrics.
@@ -93,6 +130,16 @@ pub struct ServeStats {
     pub p50_latency: Duration,
     pub p95_latency: Duration,
     pub p99_latency: Duration,
+    /// Requests rejected at admission because the bounded queue was full.
+    pub shed: usize,
+    /// Deepest the admission queue ever got (see
+    /// [`DynamicBatcher::high_water_mark`]).
+    pub queue_hwm: usize,
+    /// Ceil-rank percentiles of the admission wait (arrival → active
+    /// set), same convention as the latency percentiles.
+    pub p50_admission_wait: Duration,
+    pub p95_admission_wait: Duration,
+    pub p99_admission_wait: Duration,
 }
 
 impl ServeStats {
@@ -101,10 +148,58 @@ impl ServeStats {
     }
 }
 
+/// Serving-loop policy knobs beyond the classic `(max_batch, max_wait)`
+/// pair. [`ServeOpts::new`] reproduces the historical behaviour
+/// (unbounded admission queue); the HTTP gateway bounds the queue so
+/// overload is shed instead of buffered without limit.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Admission-queue bound: a request arriving while this many are
+    /// already queued is shed ([`StreamEvent::Shed`] + a `shed`
+    /// [`Response`]). `None` = unbounded (the in-process default).
+    pub max_queue: Option<usize>,
+}
+
+impl ServeOpts {
+    pub fn new(max_batch: usize, max_wait: Duration) -> ServeOpts {
+        ServeOpts { max_batch, max_wait, max_queue: None }
+    }
+
+    pub fn with_max_queue(mut self, cap: usize) -> ServeOpts {
+        self.max_queue = Some(cap);
+        self
+    }
+}
+
+/// Live observation hook for the serving loop — every method has a no-op
+/// default, so in-process callers pass [`NoopObserver`] while the HTTP
+/// gateway plugs in its atomic metrics registry (`server::Metrics`).
+/// All calls happen on the serve thread; implementations must be `Sync`
+/// because the observer is shared with whatever thread scrapes it.
+pub trait ServeObserver: Sync {
+    /// The admission queue changed depth (after a push or an admit).
+    fn on_queue_depth(&self, _depth: usize) {}
+    /// A request entered the active set after waiting `wait`.
+    fn on_admitted(&self, _wait: Duration) {}
+    /// A tick produced `n` generated (non-prompt) tokens.
+    fn on_tokens(&self, _n: usize) {}
+    /// A request was shed at admission (bounded queue full).
+    fn on_shed(&self) {}
+    /// A request finished decoding.
+    fn on_completed(&self, _latency: Duration) {}
+}
+
+/// The do-nothing [`ServeObserver`].
+pub struct NoopObserver;
+
+impl ServeObserver for NoopObserver {}
+
 /// Ceil-rank percentile over an ascending-sorted sample: the smallest
 /// element whose cumulative rank covers fraction `p` (0 < p ≤ 1) of the
 /// population. Empty samples yield zero.
-pub(crate) fn percentile(sorted: &[Duration], p: f64) -> Duration {
+pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
     if sorted.is_empty() {
         return Duration::ZERO;
     }
@@ -121,6 +216,10 @@ struct Active {
     logits: Vec<f32>,
     generated: Vec<usize>,
     prompt_pos: usize,
+    /// How many of `generated` have been delivered on the request's
+    /// event stream (the serve thread flushes the delta after each
+    /// tick, so workers never touch the sender).
+    streamed: usize,
 }
 
 /// Advance one sequence by one token: swap its state in, feed the next
@@ -376,7 +475,19 @@ impl<D: Decoder + Send> TickPool<'_, D> {
         max_batch: usize,
         max_wait: Duration,
     ) -> Result<ServeStats> {
-        serve_loop(self, rx, tx, max_batch, max_wait)
+        self.serve_with(rx, tx, &ServeOpts::new(max_batch, max_wait), &NoopObserver)
+    }
+
+    /// [`TickPool::serve`] with full policy knobs ([`ServeOpts`]) and a
+    /// live [`ServeObserver`] — the HTTP gateway's entry point.
+    pub fn serve_with(
+        &mut self,
+        rx: mpsc::Receiver<Request>,
+        tx: mpsc::Sender<Response>,
+        opts: &ServeOpts,
+        obs: &dyn ServeObserver,
+    ) -> Result<ServeStats> {
+        serve_loop(self, rx, tx, opts, obs)
     }
 
     /// Worker threads spawned for this pool (0 = single-lane, no
@@ -537,25 +648,51 @@ fn serve_loop(
     engine: &mut dyn TickEngine,
     rx: mpsc::Receiver<Request>,
     tx: mpsc::Sender<Response>,
-    max_batch: usize,
-    max_wait: Duration,
+    opts: &ServeOpts,
+    obs: &dyn ServeObserver,
 ) -> Result<ServeStats> {
+    let ServeOpts { max_batch, max_wait, max_queue } = *opts;
     let mut batcher = DynamicBatcher::new(max_batch, max_wait);
     let mut active: Vec<Active> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
+    let mut admission_waits: Vec<Duration> = Vec::new();
     let mut total_tokens = 0usize;
     let mut completed = 0usize;
+    let mut shed = 0usize;
     let t_start = Instant::now();
     let mut channel_open = true;
     // bounded idle wait: long enough not to spin, short enough to honour
     // the batcher's max_wait admission deadline
     let idle_wait = max_wait.max(Duration::from_millis(1));
 
+    // admission control: queue the arrival, or shed it on the spot when
+    // the bounded queue is already full (never silently dropped — the
+    // submitter gets a Shed event and a `shed` Response immediately)
+    let take = |batcher: &mut DynamicBatcher<Request>, shed: &mut usize, req: Request| {
+        if max_queue.is_some_and(|cap| batcher.queue_len() >= cap) {
+            *shed += 1;
+            obs.on_shed();
+            if let Some(s) = &req.stream {
+                let _ = s.send(StreamEvent::Shed);
+            }
+            let _ = tx.send(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                queued: Duration::ZERO,
+                latency: Duration::ZERO,
+                shed: true,
+            });
+        } else {
+            batcher.push(req, Instant::now());
+            obs.on_queue_depth(batcher.queue_len());
+        }
+    };
+
     while channel_open || batcher.queue_len() > 0 || !active.is_empty() {
         // drain newly-arrived requests into the admission queue
         loop {
             match rx.try_recv() {
-                Ok(req) => batcher.push(req, Instant::now()),
+                Ok(req) => take(&mut batcher, &mut shed, req),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     channel_open = false;
@@ -566,7 +703,17 @@ fn serve_loop(
 
         // admit into free slots
         let now = Instant::now();
-        for pending in batcher.admit(max_batch - active.len(), now) {
+        let admitted = batcher.admit(max_batch - active.len(), now);
+        if !admitted.is_empty() {
+            obs.on_queue_depth(batcher.queue_len());
+        }
+        for pending in admitted {
+            let wait = now.duration_since(pending.arrived);
+            admission_waits.push(wait);
+            obs.on_admitted(wait);
+            if let Some(s) = &pending.item.stream {
+                let _ = s.send(StreamEvent::Admitted { queued: wait });
+            }
             active.push(Active {
                 req: pending.item,
                 arrived: pending.arrived,
@@ -575,6 +722,7 @@ fn serve_loop(
                 logits: vec![0.0; engine.vocab()],
                 generated: Vec::new(),
                 prompt_pos: 0,
+                streamed: 0,
             });
         }
 
@@ -590,7 +738,7 @@ fn serve_loop(
                 .max(Duration::from_micros(50));
             if channel_open {
                 match rx.recv_timeout(wait) {
-                    Ok(req) => batcher.push(req, Instant::now()),
+                    Ok(req) => take(&mut batcher, &mut shed, req),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => channel_open = false,
                 }
@@ -604,7 +752,20 @@ fn serve_loop(
         }
 
         // one continuous-batching tick: advance every active sequence
-        total_tokens += engine.tick(&mut active);
+        let produced = engine.tick(&mut active);
+        total_tokens += produced;
+        obs.on_tokens(produced);
+
+        // flush newly generated tokens to each request's event stream
+        // (serve thread only — workers never touch the senders)
+        for a in active.iter_mut() {
+            if let Some(s) = &a.req.stream {
+                for &t in &a.generated[a.streamed..] {
+                    let _ = s.send(StreamEvent::Token(t));
+                }
+            }
+            a.streamed = a.generated.len();
+        }
 
         // retire finished sequences
         let mut i = 0usize;
@@ -617,16 +778,22 @@ fn serve_loop(
             let latency = a.started.elapsed();
             latencies.push(latency);
             completed += 1;
+            obs.on_completed(latency);
+            if let Some(s) = &a.req.stream {
+                let _ = s.send(StreamEvent::Done { latency });
+            }
             let _ = tx.send(Response {
                 id: a.req.id,
                 tokens: a.generated,
                 queued: a.started.duration_since(a.arrived),
                 latency,
+                shed: false,
             });
         }
     }
 
     latencies.sort();
+    admission_waits.sort();
     Ok(ServeStats {
         completed,
         total_tokens,
@@ -634,6 +801,11 @@ fn serve_loop(
         p50_latency: percentile(&latencies, 0.50),
         p95_latency: percentile(&latencies, 0.95),
         p99_latency: percentile(&latencies, 0.99),
+        shed,
+        queue_hwm: batcher.high_water_mark(),
+        p50_admission_wait: percentile(&admission_waits, 0.50),
+        p95_admission_wait: percentile(&admission_waits, 0.95),
+        p99_admission_wait: percentile(&admission_waits, 0.99),
     })
 }
 
@@ -646,7 +818,19 @@ pub fn serve<D: Decoder>(
     max_batch: usize,
     max_wait: Duration,
 ) -> Result<ServeStats> {
-    serve_loop(&mut Sequential(decoder), rx, tx, max_batch, max_wait)
+    serve_with(decoder, rx, tx, &ServeOpts::new(max_batch, max_wait), &NoopObserver)
+}
+
+/// [`serve`] with full policy knobs ([`ServeOpts`] — bounded admission
+/// queue, shedding) and a live [`ServeObserver`].
+pub fn serve_with<D: Decoder>(
+    decoder: &mut D,
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Response>,
+    opts: &ServeOpts,
+    obs: &dyn ServeObserver,
+) -> Result<ServeStats> {
+    serve_loop(&mut Sequential(decoder), rx, tx, opts, obs)
 }
 
 /// Threaded variant of [`serve`]: one decoder per pool lane; the
@@ -669,8 +853,20 @@ pub fn serve_pool<D: Decoder + Send>(
     max_batch: usize,
     max_wait: Duration,
 ) -> Result<ServeStats> {
+    serve_pool_with(decoders, rx, tx, &ServeOpts::new(max_batch, max_wait), &NoopObserver)
+}
+
+/// [`serve_pool`] with full policy knobs and a live observer (see
+/// [`serve_with`]).
+pub fn serve_pool_with<D: Decoder + Send>(
+    decoders: &mut [D],
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Response>,
+    opts: &ServeOpts,
+    obs: &dyn ServeObserver,
+) -> Result<ServeStats> {
     anyhow::ensure!(!decoders.is_empty(), "serve_pool needs at least one decoder");
-    with_tick_pool(decoders, |pool| pool.serve(rx, tx, max_batch, max_wait))
+    with_tick_pool(decoders, |pool| pool.serve_with(rx, tx, opts, obs))
 }
 
 fn collect_responses(
@@ -726,7 +922,13 @@ pub fn serve_collect_per_tick_spawn<D: Decoder + Send>(
 ) -> Result<(ServeStats, Vec<Response>)> {
     anyhow::ensure!(!decoders.is_empty(), "spawn engine needs at least one decoder");
     collect_responses(requests, |rx, tx| {
-        serve_loop(&mut SpawnPerTick(decoders), rx, tx, max_batch, max_wait)
+        serve_loop(
+            &mut SpawnPerTick(decoders),
+            rx,
+            tx,
+            &ServeOpts::new(max_batch, max_wait),
+            &NoopObserver,
+        )
     })
 }
 
@@ -801,9 +1003,7 @@ mod tests {
         let (tx_req, rx_req) = mpsc::channel();
         let (tx_resp, rx_resp) = mpsc::channel();
         for id in 0..6 {
-            tx_req
-                .send(Request { id, prompt: vec![1, 2, 3], gen_len: 4 })
-                .unwrap();
+            tx_req.send(Request::new(id, vec![1, 2, 3], 4)).unwrap();
         }
         drop(tx_req);
         let stats =
@@ -837,8 +1037,8 @@ mod tests {
         let mut dec = RunnerDecoder::new(&m);
         let (tx_req, rx_req) = mpsc::channel();
         let (tx_resp, rx_resp) = mpsc::channel();
-        tx_req.send(Request { id: 0, prompt: prompt.to_vec(), gen_len: 5 }).unwrap();
-        tx_req.send(Request { id: 1, prompt: vec![7, 7], gen_len: 5 }).unwrap();
+        tx_req.send(Request::new(0, prompt.to_vec(), 5)).unwrap();
+        tx_req.send(Request::new(1, vec![7, 7], 5)).unwrap();
         drop(tx_req);
         serve(&mut dec, rx_req, tx_resp, 2, Duration::from_millis(0)).unwrap();
         let got: Vec<Response> = rx_resp.iter().collect();
@@ -851,11 +1051,7 @@ mod tests {
         let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(4));
         let requests = || -> Vec<Request> {
             (0..9u64)
-                .map(|id| Request {
-                    id,
-                    prompt: vec![(id as usize * 5 + 1) % 32, 2],
-                    gen_len: 6,
-                })
+                .map(|id| Request::new(id, vec![(id as usize * 5 + 1) % 32, 2], 6))
                 .collect()
         };
         let mut seq_dec = RunnerDecoder::new(&m);
@@ -879,7 +1075,7 @@ mod tests {
         let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(7));
         let requests = || -> Vec<Request> {
             (0..8u64)
-                .map(|id| Request { id, prompt: vec![(id as usize * 3 + 1) % 32], gen_len: 5 })
+                .map(|id| Request::new(id, vec![(id as usize * 3 + 1) % 32], 5))
                 .collect()
         };
         let mut pool_decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
@@ -934,11 +1130,7 @@ mod tests {
         let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(9));
         let requests = || -> Vec<Request> {
             (0..10u64)
-                .map(|id| Request {
-                    id,
-                    prompt: vec![(id as usize * 7 + 2) % 32, 4],
-                    gen_len: 6,
-                })
+                .map(|id| Request::new(id, vec![(id as usize * 7 + 2) % 32, 4], 6))
                 .collect()
         };
         let mut seq_dec = RunnerDecoder::new(&m);
@@ -1029,7 +1221,7 @@ mod tests {
                 .map(|_| PanicAfter { inner: RunnerDecoder::new(&m), fuse: fuse.clone() })
                 .collect();
             let requests: Vec<Request> = (0..8u64)
-                .map(|id| Request { id, prompt: vec![(id as usize) % 32, 1], gen_len: 8 })
+                .map(|id| Request::new(id, vec![(id as usize) % 32, 1], 8))
                 .collect();
             serve_collect_pool(&mut decs, requests, 8, Duration::from_millis(1))
         }));
@@ -1082,5 +1274,140 @@ mod tests {
         let hundred: Vec<Duration> = (1u64..=100).map(ms).collect();
         assert_eq!(percentile(&hundred, 0.99), ms(99));
         assert_eq!(percentile(&hundred, 0.50), ms(50));
+    }
+
+    #[test]
+    fn stream_events_mirror_the_final_response() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(21));
+        let mut dec = RunnerDecoder::new(&m);
+        let (tx_req, rx_req) = mpsc::channel();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        let (tx_ev, rx_ev) = mpsc::channel();
+        tx_req.send(Request::new(0, vec![5, 2, 9], 6).with_stream(tx_ev)).unwrap();
+        drop(tx_req);
+        serve(&mut dec, rx_req, tx_resp, 2, Duration::from_millis(1)).unwrap();
+        let resp: Vec<Response> = rx_resp.iter().collect();
+        assert_eq!(resp.len(), 1);
+        assert!(!resp[0].shed);
+
+        let events: Vec<StreamEvent> = rx_ev.iter().collect();
+        assert!(
+            matches!(events.first(), Some(StreamEvent::Admitted { .. })),
+            "first event must be Admitted, got {:?}",
+            events.first()
+        );
+        assert!(matches!(events.last(), Some(StreamEvent::Done { .. })));
+        let streamed: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token(t) => Some(*t),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streamed, resp[0].tokens, "streamed tokens must equal the response");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overflow_with_event_and_response() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(23));
+        let mut dec = RunnerDecoder::new(&m);
+        let (tx_req, rx_req) = mpsc::channel();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        // max_batch 1 + max_queue 1: all five requests are already in
+        // the channel when the loop starts, so the first drain pass sees
+        // all of them before any admission happens — deterministically,
+        // the first fills the queue and the other four are shed
+        let mut evs = Vec::new();
+        for id in 0..5u64 {
+            let (tx_ev, rx_ev) = mpsc::channel();
+            evs.push(rx_ev);
+            tx_req.send(Request::new(id, vec![3, 1], 4).with_stream(tx_ev)).unwrap();
+        }
+        drop(tx_req);
+        let opts = ServeOpts::new(1, Duration::from_millis(0)).with_max_queue(1);
+        let stats = serve_with(&mut dec, rx_req, tx_resp, &opts, &NoopObserver).unwrap();
+        assert_eq!(stats.completed, 1, "the queued request must finish");
+        assert_eq!(stats.shed, 4, "overflow beyond the bounded queue must shed");
+        assert_eq!(stats.queue_hwm, 1);
+        let mut responses: Vec<Response> = rx_resp.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 5, "shed requests still get a response");
+        assert_eq!(responses.iter().filter(|r| r.shed).count(), 4);
+        for r in &responses {
+            let events: Vec<StreamEvent> = evs[r.id as usize].iter().collect();
+            if r.shed {
+                assert!(r.tokens.is_empty());
+                assert!(
+                    matches!(events.as_slice(), [StreamEvent::Shed]),
+                    "a shed request gets exactly one Shed event, got {events:?}"
+                );
+            } else {
+                assert_eq!(r.tokens.len(), 4);
+                assert!(matches!(events.first(), Some(StreamEvent::Admitted { .. })));
+            }
+        }
+    }
+
+    #[test]
+    fn admission_wait_percentiles_are_populated() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(25));
+        let mut dec = RunnerDecoder::new(&m);
+        let requests: Vec<Request> =
+            (0..6u64).map(|id| Request::new(id, vec![(id as usize) % 32], 3)).collect();
+        let (stats, _) = serve_collect(&mut dec, requests, 2, Duration::from_millis(1)).unwrap();
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.shed, 0);
+        // six requests through a batch of 2: at least four sat in the
+        // queue, so the high-water mark must reflect a real backlog
+        assert!(stats.queue_hwm >= 2, "queue_hwm {} too small", stats.queue_hwm);
+        assert!(stats.p99_admission_wait >= stats.p50_admission_wait);
+    }
+
+    /// A live observer must see the same totals the stats report.
+    #[test]
+    fn observer_counts_agree_with_stats() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        #[derive(Default)]
+        struct Counting {
+            tokens: AtomicUsize,
+            admitted: AtomicUsize,
+            completed: AtomicUsize,
+            shed: AtomicUsize,
+            hwm: AtomicUsize,
+        }
+        impl ServeObserver for Counting {
+            fn on_queue_depth(&self, depth: usize) {
+                self.hwm.fetch_max(depth, Ordering::Relaxed);
+            }
+            fn on_admitted(&self, _wait: Duration) {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+            }
+            fn on_tokens(&self, n: usize) {
+                self.tokens.fetch_add(n, Ordering::Relaxed);
+            }
+            fn on_shed(&self) {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            fn on_completed(&self, _latency: Duration) {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(27));
+        let mut dec = RunnerDecoder::new(&m);
+        let (tx_req, rx_req) = mpsc::channel();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        for id in 0..6u64 {
+            tx_req.send(Request::new(id, vec![(id as usize) + 1], 5)).unwrap();
+        }
+        drop(tx_req);
+        let obs = Counting::default();
+        let opts = ServeOpts::new(2, Duration::from_millis(1)).with_max_queue(2);
+        let stats = serve_with(&mut dec, rx_req, tx_resp, &opts, &obs).unwrap();
+        drop(rx_resp);
+        assert_eq!(obs.completed.load(Ordering::Relaxed), stats.completed);
+        assert_eq!(obs.shed.load(Ordering::Relaxed), stats.shed);
+        assert_eq!(obs.tokens.load(Ordering::Relaxed), stats.total_tokens);
+        assert_eq!(obs.admitted.load(Ordering::Relaxed), stats.completed);
+        assert_eq!(obs.hwm.load(Ordering::Relaxed), stats.queue_hwm);
     }
 }

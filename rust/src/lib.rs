@@ -23,6 +23,10 @@
 //!   by `python/compile/aot.py` (JAX + Pallas, build-time only).
 //! * [`coordinator`] — the layer-quantization pipeline (worker pool) and
 //!   the batched generation server used for end-to-end evaluation.
+//! * [`server`] — the dependency-free HTTP/1.1 gateway: JSON requests
+//!   in, SSE token streams out of the same serve loop, with bounded
+//!   admission (429 shedding), Prometheus `/metrics` and
+//!   drain-to-completion shutdown.
 //! * [`calib`], [`data`], [`eval`] — calibration management, synthetic
 //!   corpus/tokenizer, and the perplexity / zero-shot / vision
 //!   evaluation harnesses.
@@ -40,6 +44,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;
 

@@ -5,7 +5,10 @@
 //!   pack       quantize and serialize to an RWKVQ2 packed checkpoint
 //!   eval       perplexity + zero-shot of a store on the corpus
 //!   serve      batched generation over a store (RWKVQ1 quantized on the
-//!              fly, or an RWKVQ2 checkpoint opened zero-copy via mmap)
+//!              fly, or an RWKVQ2 checkpoint opened zero-copy via mmap);
+//!              with --http it becomes the streaming HTTP gateway
+//!              (SSE tokens, /healthz, /metrics, 429 shedding, graceful
+//!              SIGINT/SIGTERM drain)
 //!   proxy      proxy-scan a model (SQ/VQ classification per layer)
 //!   info       print artifact / environment status
 
@@ -13,7 +16,7 @@ use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    resolve_tick_threads, serve_collect_pool, Request, RunnerDecoder,
+    resolve_tick_threads, serve_collect_pool, Request, RunnerDecoder, ServeStats,
 };
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
@@ -43,7 +46,13 @@ fn help() -> String {
         .opt("arch", "synthetic arch rwkv6|rwkv7 (default rwkv6)")
         .opt("requests", "serve: number of requests (default 16)")
         .opt("batch", "serve: max batch (default 8)")
+        .opt("gen-len", "serve: tokens generated per request (default 12)")
+        .opt("prompt", "serve: comma-separated token ids used as every request's prompt")
+        .opt("print-tokens", "serve: print each response's token ids (flag)")
         .opt("tick-threads", "serve: decode lanes per batch tick (0 = auto-detect, default 1)")
+        .opt("http", "serve: run the HTTP gateway on ADDR (bare flag = 127.0.0.1:8080)")
+        .opt("max-queue", "serve --http: admission queue bound, overflow shed with 429 (default 64)")
+        .opt("max-gen-len", "serve --http: per-request gen_len cap (default 512)")
         .opt("seed", "rng seed (default 42)")
         .render()
 }
@@ -217,25 +226,80 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         if requested_threads == 0 { " — auto-detected" } else { "" },
     );
     let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
-    let n = args.get_usize("requests", 16);
     let vocab = qm.config.vocab;
+
+    // ---- HTTP gateway mode: serve real sockets until drained ----
+    if let Some(addr) = args.flag_value("http", "127.0.0.1:8080") {
+        use rwkvquant::server::{signal, Gateway, GatewayConfig};
+        let heeding = signal::install_shutdown_signals();
+        signal::clear_shutdown_signal();
+        let mut gcfg = GatewayConfig::new(addr);
+        gcfg.max_batch = batch;
+        gcfg.max_queue = args.get_usize("max-queue", 64);
+        gcfg.max_gen_len = args.get_usize("max-gen-len", 512);
+        gcfg.heed_signals = heeding;
+        let gateway = Gateway::bind(gcfg, vocab)?;
+        println!(
+            "HTTP gateway on http://{} — POST /v1/generate (SSE), GET /healthz, GET /metrics; \
+             max-queue {} (overflow → 429); {} to drain and exit",
+            gateway.local_addr(),
+            args.get_usize("max-queue", 64),
+            if heeding { "Ctrl-C / SIGTERM" } else { "no signal handler — kill to stop" },
+        );
+        let stats = gateway.serve(&mut decoders)?;
+        print_serve_summary(&stats);
+        println!("drained cleanly — all in-flight requests completed");
+        return Ok(());
+    }
+
+    // ---- in-process self-drive mode ----
+    let n = args.get_usize("requests", 16);
+    let prompt_override: Option<Vec<usize>> = args.get("prompt").map(|p| {
+        p.split(',')
+            .map(|t| {
+                let tok: usize = t
+                    .trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--prompt expects comma-separated ids, got '{t}'"));
+                assert!(tok < vocab, "--prompt token {tok} is outside the vocab ({vocab})");
+                tok
+            })
+            .collect()
+    });
     let requests: Vec<Request> = (0..n as u64)
-        .map(|id| Request {
-            id,
-            prompt: vec![(id as usize * 7) % vocab, 1, 2],
-            gen_len: args.get_usize("gen-len", 12),
+        .map(|id| {
+            let prompt = prompt_override
+                .clone()
+                .unwrap_or_else(|| vec![(id as usize * 7) % vocab, 1, 2]);
+            Request::new(id, prompt, args.get_usize("gen-len", 12))
         })
         .collect();
-    let (stats, _) = serve_collect_pool(&mut decoders, requests, batch, Duration::from_millis(2))?;
+    let (stats, responses) =
+        serve_collect_pool(&mut decoders, requests, batch, Duration::from_millis(2))?;
+    if args.flag("print-tokens") {
+        for r in &responses {
+            let list: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
+            println!("tokens[{}]: {}", r.id, list.join(","));
+        }
+    }
+    print_serve_summary(&stats);
+    Ok(())
+}
+
+fn print_serve_summary(stats: &ServeStats) {
     println!(
-        "{} requests | {:.1} tok/s | p50 {:?} p95 {:?} p99 {:?}",
+        "{} requests ({} shed) | {:.1} tok/s | p50 {:?} p95 {:?} p99 {:?} | \
+         queue hwm {} | admission wait p50 {:?} p99 {:?}",
         stats.completed,
+        stats.shed,
         stats.tokens_per_sec(),
         stats.p50_latency,
         stats.p95_latency,
-        stats.p99_latency
+        stats.p99_latency,
+        stats.queue_hwm,
+        stats.p50_admission_wait,
+        stats.p99_admission_wait,
     );
-    Ok(())
 }
 
 fn cmd_proxy(args: &Args) -> rwkvquant::Result<()> {

@@ -34,4 +34,6 @@ pub mod store;
 pub mod synthetic;
 
 pub use qmodel::{QuantizedModel, ServedParam, WeightProvider};
-pub use store::{LayerDesc, LoadMode, ModelWeights, ParamClass, StoreFormat};
+pub use store::{
+    EntryDecl, EntryKind, LayerDesc, LoadMode, ModelWeights, ParamClass, Rwkvq2Writer, StoreFormat,
+};

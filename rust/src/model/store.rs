@@ -43,6 +43,12 @@
 //! scale/min pair per group on disk so a save→open round trip is
 //! bit-exact against the in-memory model (the bpw *accounting* keeps the
 //! paper's fp16-per-group convention).
+//!
+//! Writing goes through the **streaming** [`Rwkvq2Writer`]: entries are
+//! declared up front (fixing the TOC size), payloads are appended one
+//! entry at a time with dense f32 → f16 narrowing chunked through a
+//! bounded buffer, and the TOC is backpatched on finish — so packing
+//! never holds a second (narrowed) copy of the model in memory.
 
 use crate::config::ModelConfig;
 use crate::model::qmodel::{QuantizedModel, ServedParam};
@@ -327,205 +333,331 @@ fn write_f32s<W: Write>(f: &mut W, v: &[f32]) -> Result<()> {
     Ok(())
 }
 
-/// Serialization plan of one entry: what payload arrays it owns.
-enum PlanKind<'a> {
-    /// f16 dense data (owned = freshly narrowed f32, borrowed = already
-    /// f16-resident)
-    Dense(std::borrow::Cow<'a, [u16]>),
-    Sq(&'a SqLayer),
-    Vq(&'a VqLayer),
+/// Values narrowed per chunk by the streaming f32 → f16 dense writer —
+/// the writer's only transient buffer, bounded regardless of entry size.
+const NARROW_CHUNK: usize = 8192;
+
+/// What kind of RWKVQ2 entry a [`ServedParam`] serializes as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    DenseF16,
+    Sq,
+    Vq,
 }
 
-struct Planned<'a> {
-    name: &'a str,
-    class: ParamClass,
-    rows: usize,
-    cols: usize,
-    kind: PlanKind<'a>,
-    /// byte sizes of the payload arrays, in on-disk order
-    sizes: [usize; 4],
-    /// absolute file offsets, parallel to `sizes` (0 for absent arrays)
-    offs: [usize; 4],
-}
+impl EntryKind {
+    fn tag(self) -> u8 {
+        match self {
+            EntryKind::DenseF16 => KIND_DENSE_F16,
+            EntryKind::Sq => KIND_SQ,
+            EntryKind::Vq => KIND_VQ,
+        }
+    }
 
-impl Planned<'_> {
-    /// Exact TOC record length in bytes (checked against the actual
-    /// write in `save_rwkvq2`).
-    fn record_len(&self) -> usize {
-        let base = 4 + self.name.len() + 1 + 1 + 8 + 8;
-        base + match &self.kind {
-            PlanKind::Dense(_) => 8,
-            PlanKind::Sq(_) => 61,
-            PlanKind::Vq(_) => 52,
+    /// TOC-record bytes past the common name/class/kind/shape prefix.
+    fn meta_len(self) -> usize {
+        match self {
+            EntryKind::DenseF16 => 8,
+            EntryKind::Sq => 61,
+            EntryKind::Vq => 52,
         }
     }
 }
 
-fn plan_entry<'a>(desc: &'a LayerDesc, p: &'a ServedParam) -> Result<Planned<'a>> {
-    use std::borrow::Cow;
-    let narrow = |m: &Matrix| -> Cow<'static, [u16]> {
-        Cow::Owned(m.data.iter().map(|&v| f32_to_f16(v)).collect())
-    };
-    let (rows, cols, kind, sizes) = match p {
-        ServedParam::Dense(m) => {
-            (m.rows, m.cols, PlanKind::Dense(narrow(m)), [m.numel() * 2, 0, 0, 0])
-        }
-        ServedParam::DenseF16(t) => {
-            (t.rows, t.cols, PlanKind::Dense(Cow::Borrowed(t.as_bits())), [t.numel() * 2, 0, 0, 0])
-        }
-        ServedParam::Packed(QuantizedLayer::Fp16 { rows, cols, data }) => {
-            let m = Matrix::from_vec(*rows, *cols, data.clone());
-            (*rows, *cols, PlanKind::Dense(narrow(&m)), [m.numel() * 2, 0, 0, 0])
-        }
-        ServedParam::Packed(QuantizedLayer::Sq(l)) => {
-            if l.rotation.is_some() {
-                bail!("'{}': QuaRot payloads are served dense and cannot be packed", desc.name);
-            }
-            let groups = l.numel().div_ceil(l.group_size);
-            if l.scales.len() != groups || l.mins.len() != groups {
-                bail!("'{}': scale/min count does not match the group count", desc.name);
-            }
-            let col_inv = l.col_inv_scale.as_ref().map_or(0, |v| v.len() * 4);
-            let sizes = [l.codes.words().len() * 8, groups * 4, groups * 4, col_inv];
-            (l.rows, l.cols, PlanKind::Sq(l), sizes)
-        }
-        ServedParam::Packed(QuantizedLayer::Vq(l)) => {
-            // mirror qmodel::servable_packed — matvec_vq gathers per row
-            // and silently drops a flat tail in release builds
-            if l.d == 0 || l.cols % l.d != 0 || !l.tail.is_empty() {
-                bail!("'{}': only row-tiling VQ layers (no tail) serve packed", desc.name);
-            }
-            let sizes = [l.codebook.len() * 4, l.indices.words().len() * 8, l.tail.len() * 4, 0];
-            (l.rows, l.cols, PlanKind::Vq(l), sizes)
-        }
-    };
-    Ok(Planned { name: &desc.name, class: desc.class, rows, cols, kind, sizes, offs: [0; 4] })
+/// Declaration of one upcoming entry: exactly what the TOC sizing needs
+/// **before** any payload bytes exist, so [`Rwkvq2Writer`] can reserve
+/// the table of contents up front and a caller can stream entries one
+/// at a time without ever holding the whole model resident.
+#[derive(Debug, Clone)]
+pub struct EntryDecl {
+    pub name: String,
+    pub class: ParamClass,
+    pub kind: EntryKind,
 }
 
-/// Serialize a [`QuantizedModel`] to the RWKVQ2 packed format. See the
-/// module docs for the layout and alignment guarantees.
-pub fn save_rwkvq2(qm: &QuantizedModel, path: &std::path::Path) -> Result<()> {
-    let mut plans = Vec::with_capacity(qm.entries.len());
-    for (desc, p) in &qm.entries {
-        plans.push(plan_entry(desc, p)?);
-    }
-    // size header + TOC, then assign aligned payload offsets
-    let header_len = 8 + 4 + qm.config.arch.len() + 4 * 4 + 8 + 4;
-    let toc_len: usize = plans.iter().map(|p| p.record_len()).sum();
-    let mut cursor = align_up(header_len + toc_len);
-    for p in &mut plans {
-        let sizes = p.sizes;
-        for (i, &size) in sizes.iter().enumerate() {
-            if size > 0 {
-                p.offs[i] = cursor;
-                cursor = align_up(cursor + size);
+impl EntryDecl {
+    /// Classify (and validate) how `p` will serialize — the write-side
+    /// mirror of the loader's `servable_packed` gate.
+    pub fn of(desc: &LayerDesc, p: &ServedParam) -> Result<EntryDecl> {
+        let kind = match p {
+            ServedParam::Dense(_)
+            | ServedParam::DenseF16(_)
+            | ServedParam::Packed(QuantizedLayer::Fp16 { .. }) => EntryKind::DenseF16,
+            ServedParam::Packed(QuantizedLayer::Sq(l)) => {
+                if l.rotation.is_some() {
+                    bail!("'{}': QuaRot payloads are served dense and cannot be packed", desc.name);
+                }
+                let groups = l.numel().div_ceil(l.group_size);
+                if l.scales.len() != groups || l.mins.len() != groups {
+                    bail!("'{}': scale/min count does not match the group count", desc.name);
+                }
+                EntryKind::Sq
             }
-        }
-    }
-
-    // header + TOC, buffered so the record-length math is self-checked
-    let mut head: Vec<u8> = Vec::with_capacity(header_len + toc_len);
-    head.write_all(MAGIC_V2)?;
-    write_str(&mut head, &qm.config.arch)?;
-    w_u32(&mut head, qm.config.n_layer as u32)?;
-    w_u32(&mut head, qm.config.d_model as u32)?;
-    w_u32(&mut head, qm.config.vocab as u32)?;
-    w_u32(&mut head, qm.config.head_dim as u32)?;
-    head.write_all(&qm.config.ffn_ratio.to_le_bytes())?;
-    w_u32(&mut head, plans.len() as u32)?;
-    for p in &plans {
-        let before = head.len();
-        write_str(&mut head, p.name)?;
-        head.write_all(&[p.class.to_u8()])?;
-        let kind_tag = match &p.kind {
-            PlanKind::Dense(_) => KIND_DENSE_F16,
-            PlanKind::Sq(_) => KIND_SQ,
-            PlanKind::Vq(_) => KIND_VQ,
+            ServedParam::Packed(QuantizedLayer::Vq(l)) => {
+                // mirror qmodel::servable_packed — matvec_vq gathers per
+                // row and silently drops a flat tail in release builds
+                if l.d == 0 || l.cols % l.d != 0 || !l.tail.is_empty() {
+                    bail!("'{}': only row-tiling VQ layers (no tail) serve packed", desc.name);
+                }
+                EntryKind::Vq
+            }
         };
-        head.write_all(&[kind_tag])?;
-        w_u64(&mut head, p.rows as u64)?;
-        w_u64(&mut head, p.cols as u64)?;
-        match &p.kind {
-            PlanKind::Dense(_) => w_u64(&mut head, p.offs[0] as u64)?,
-            PlanKind::Sq(l) => {
-                w_u32(&mut head, l.bits)?;
-                w_u64(&mut head, l.group_size as u64)?;
-                w_u64(&mut head, l.extra_flops_per_token)?;
-                w_u64(&mut head, p.offs[0] as u64)?; // codes
-                w_u64(&mut head, l.scales.len() as u64)?;
-                w_u64(&mut head, p.offs[1] as u64)?; // scales
-                w_u64(&mut head, p.offs[2] as u64)?; // mins
-                head.write_all(&[u8::from(l.col_inv_scale.is_some())])?;
-                w_u64(&mut head, p.offs[3] as u64)?; // col_inv
-            }
-            PlanKind::Vq(l) => {
-                w_u64(&mut head, l.d as u64)?;
-                w_u32(&mut head, l.k)?;
-                w_u64(&mut head, l.n_entries() as u64)?;
-                w_u64(&mut head, p.offs[0] as u64)?; // codebook
-                w_u64(&mut head, p.offs[1] as u64)?; // indices
-                w_u64(&mut head, l.tail.len() as u64)?;
-                w_u64(&mut head, p.offs[2] as u64)?; // tail
-            }
-        }
-        debug_assert_eq!(head.len() - before, p.record_len(), "TOC sizing drifted");
+        Ok(EntryDecl { name: desc.name.clone(), class: desc.class, kind })
     }
-    assert_eq!(head.len(), header_len + toc_len, "header sizing drifted");
 
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
-    );
-    f.write_all(&head)?;
-    let mut pos = head.len();
-    let zeros = [0u8; PAYLOAD_ALIGN];
-    let pad_to = |f: &mut dyn Write, pos: &mut usize, target: usize| -> Result<()> {
-        while *pos < target {
-            let n = (target - *pos).min(PAYLOAD_ALIGN);
-            f.write_all(&zeros[..n])?;
-            *pos += n;
+    /// Exact TOC record length in bytes (checked against the actual
+    /// record in [`Rwkvq2Writer::write_entry`]).
+    fn record_len(&self) -> usize {
+        4 + self.name.len() + 1 + 1 + 8 + 8 + self.kind.meta_len()
+    }
+}
+
+/// Streaming RWKVQ2 writer: declare every entry up front (names and
+/// kinds only — that fixes the TOC size), then feed payloads **one
+/// entry at a time** in declaration order, then [`Rwkvq2Writer::finish`]
+/// seeks back and fills in the table of contents. Dense f32 entries are
+/// narrowed to f16 through a bounded chunk buffer during their write,
+/// so peak writer memory is O([`NARROW_CHUNK`]) + the entry currently
+/// being written — never a second copy of the model (the PR-3 ROADMAP
+/// leftover). [`save_rwkvq2`] is this writer driven over an in-memory
+/// [`QuantizedModel`]; the byte output is identical either way
+/// (asserted by `streaming_writer_bytes_identical_to_save`).
+pub struct Rwkvq2Writer {
+    file: std::io::BufWriter<std::fs::File>,
+    decls: Vec<EntryDecl>,
+    /// Accumulated real TOC records, backpatched over the placeholder
+    /// on finish.
+    toc: Vec<u8>,
+    toc_start: usize,
+    toc_len: usize,
+    /// Bytes written to the file so far (absolute).
+    pos: usize,
+    /// Next aligned payload-offset assignment.
+    cursor: usize,
+    /// Next entry index expected by `write_entry`.
+    next: usize,
+    narrow_buf: Vec<u16>,
+}
+
+impl Rwkvq2Writer {
+    /// Write the header and reserve the TOC region for `decls`.
+    pub fn create(
+        path: &std::path::Path,
+        config: &ModelConfig,
+        decls: Vec<EntryDecl>,
+    ) -> Result<Rwkvq2Writer> {
+        let mut head: Vec<u8> = Vec::new();
+        head.write_all(MAGIC_V2)?;
+        write_str(&mut head, &config.arch)?;
+        w_u32(&mut head, config.n_layer as u32)?;
+        w_u32(&mut head, config.d_model as u32)?;
+        w_u32(&mut head, config.vocab as u32)?;
+        w_u32(&mut head, config.head_dim as u32)?;
+        head.write_all(&config.ffn_ratio.to_le_bytes())?;
+        w_u32(&mut head, decls.len() as u32)?;
+        let toc_start = head.len();
+        let toc_len: usize = decls.iter().map(EntryDecl::record_len).sum();
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        file.write_all(&head)?;
+        // placeholder TOC — finish() seeks back over it
+        file.write_all(&vec![0u8; toc_len])?;
+        let pos = toc_start + toc_len;
+        Ok(Rwkvq2Writer {
+            file,
+            decls,
+            toc: Vec::with_capacity(toc_len),
+            toc_start,
+            toc_len,
+            pos,
+            cursor: align_up(pos),
+            next: 0,
+            narrow_buf: Vec::new(),
+        })
+    }
+
+    fn pad_to(&mut self, target: usize) -> Result<()> {
+        const ZEROS: [u8; PAYLOAD_ALIGN] = [0u8; PAYLOAD_ALIGN];
+        while self.pos < target {
+            let n = (target - self.pos).min(PAYLOAD_ALIGN);
+            self.file.write_all(&ZEROS[..n])?;
+            self.pos += n;
         }
         Ok(())
-    };
-    for p in &plans {
-        match &p.kind {
-            PlanKind::Dense(bits) => {
-                pad_to(&mut f, &mut pos, p.offs[0])?;
-                write_u16s(&mut f, bits)?;
-                pos += p.sizes[0];
+    }
+
+    /// Claim the next aligned payload window and pad up to it.
+    fn begin_payload(&mut self, size: usize) -> Result<usize> {
+        let off = self.cursor;
+        self.cursor = align_up(off + size);
+        self.pad_to(off)?;
+        Ok(off)
+    }
+
+    fn payload_u64s(&mut self, v: &[u64]) -> Result<u64> {
+        let off = self.begin_payload(v.len() * 8)?;
+        write_u64s(&mut self.file, v)?;
+        self.pos += v.len() * 8;
+        Ok(off as u64)
+    }
+
+    fn payload_f32s(&mut self, v: &[f32]) -> Result<u64> {
+        let off = self.begin_payload(v.len() * 4)?;
+        write_f32s(&mut self.file, v)?;
+        self.pos += v.len() * 4;
+        Ok(off as u64)
+    }
+
+    fn payload_u16s(&mut self, v: &[u16]) -> Result<u64> {
+        let off = self.begin_payload(v.len() * 2)?;
+        write_u16s(&mut self.file, v)?;
+        self.pos += v.len() * 2;
+        Ok(off as u64)
+    }
+
+    /// Stream-narrow an f32 payload to on-disk f16 through the bounded
+    /// chunk buffer — never a whole-entry u16 copy.
+    fn payload_f16_from_f32(&mut self, data: &[f32]) -> Result<u64> {
+        let size = data.len() * 2;
+        let off = self.begin_payload(size)?;
+        let mut buf = std::mem::take(&mut self.narrow_buf);
+        for chunk in data.chunks(NARROW_CHUNK) {
+            buf.clear();
+            buf.extend(chunk.iter().map(|&v| f32_to_f16(v)));
+            write_u16s(&mut self.file, &buf)?;
+        }
+        self.narrow_buf = buf;
+        self.pos += size;
+        Ok(off as u64)
+    }
+
+    /// Serialize the next declared entry. Entries must arrive in
+    /// declaration order with matching name/class/kind.
+    pub fn write_entry(&mut self, desc: &LayerDesc, p: &ServedParam) -> Result<()> {
+        let decl = self
+            .decls
+            .get(self.next)
+            .cloned()
+            .with_context(|| format!("'{}': more entries written than declared", desc.name))?;
+        anyhow::ensure!(
+            decl.name == desc.name && decl.class == desc.class,
+            "entry {} is '{}' but '{}' was declared",
+            self.next,
+            desc.name,
+            decl.name
+        );
+        let actual = EntryDecl::of(desc, p)?;
+        anyhow::ensure!(
+            actual.kind == decl.kind,
+            "'{}': declared {:?} but the payload serializes as {:?}",
+            desc.name,
+            decl.kind,
+            actual.kind
+        );
+        self.next += 1;
+
+        let record_start = self.toc.len();
+        write_str(&mut self.toc, &decl.name)?;
+        self.toc.push(decl.class.to_u8());
+        self.toc.push(decl.kind.tag());
+        match p {
+            ServedParam::Dense(m) => {
+                w_u64(&mut self.toc, m.rows as u64)?;
+                w_u64(&mut self.toc, m.cols as u64)?;
+                let off = self.payload_f16_from_f32(&m.data)?;
+                w_u64(&mut self.toc, off)?;
             }
-            PlanKind::Sq(l) => {
-                pad_to(&mut f, &mut pos, p.offs[0])?;
-                write_u64s(&mut f, l.codes.words())?;
-                pos += p.sizes[0];
-                pad_to(&mut f, &mut pos, p.offs[1])?;
-                write_f32s(&mut f, &l.scales)?;
-                pos += p.sizes[1];
-                pad_to(&mut f, &mut pos, p.offs[2])?;
-                write_f32s(&mut f, &l.mins)?;
-                pos += p.sizes[2];
-                if let Some(inv) = &l.col_inv_scale {
-                    pad_to(&mut f, &mut pos, p.offs[3])?;
-                    write_f32s(&mut f, inv)?;
-                    pos += p.sizes[3];
-                }
+            ServedParam::DenseF16(t) => {
+                w_u64(&mut self.toc, t.rows as u64)?;
+                w_u64(&mut self.toc, t.cols as u64)?;
+                let off = self.payload_u16s(t.as_bits())?;
+                w_u64(&mut self.toc, off)?;
             }
-            PlanKind::Vq(l) => {
-                pad_to(&mut f, &mut pos, p.offs[0])?;
-                write_f32s(&mut f, &l.codebook)?;
-                pos += p.sizes[0];
-                pad_to(&mut f, &mut pos, p.offs[1])?;
-                write_u64s(&mut f, l.indices.words())?;
-                pos += p.sizes[1];
-                if !l.tail.is_empty() {
-                    pad_to(&mut f, &mut pos, p.offs[2])?;
-                    write_f32s(&mut f, &l.tail)?;
-                    pos += p.sizes[2];
-                }
+            ServedParam::Packed(QuantizedLayer::Fp16 { rows, cols, data }) => {
+                w_u64(&mut self.toc, *rows as u64)?;
+                w_u64(&mut self.toc, *cols as u64)?;
+                let off = self.payload_f16_from_f32(data)?;
+                w_u64(&mut self.toc, off)?;
+            }
+            ServedParam::Packed(QuantizedLayer::Sq(l)) => {
+                w_u64(&mut self.toc, l.rows as u64)?;
+                w_u64(&mut self.toc, l.cols as u64)?;
+                let codes_off = self.payload_u64s(l.codes.words())?;
+                let scales_off = self.payload_f32s(&l.scales)?;
+                let mins_off = self.payload_f32s(&l.mins)?;
+                let col_inv_off = match &l.col_inv_scale {
+                    Some(inv) => self.payload_f32s(inv)?,
+                    None => 0,
+                };
+                w_u32(&mut self.toc, l.bits)?;
+                w_u64(&mut self.toc, l.group_size as u64)?;
+                w_u64(&mut self.toc, l.extra_flops_per_token)?;
+                w_u64(&mut self.toc, codes_off)?;
+                w_u64(&mut self.toc, l.scales.len() as u64)?;
+                w_u64(&mut self.toc, scales_off)?;
+                w_u64(&mut self.toc, mins_off)?;
+                self.toc.push(u8::from(l.col_inv_scale.is_some()));
+                w_u64(&mut self.toc, col_inv_off)?;
+            }
+            ServedParam::Packed(QuantizedLayer::Vq(l)) => {
+                w_u64(&mut self.toc, l.rows as u64)?;
+                w_u64(&mut self.toc, l.cols as u64)?;
+                let cb_off = self.payload_f32s(&l.codebook)?;
+                let idx_off = self.payload_u64s(l.indices.words())?;
+                // EntryDecl::of only admits tail-free layers
+                let tail_off = 0u64;
+                w_u64(&mut self.toc, l.d as u64)?;
+                w_u32(&mut self.toc, l.k)?;
+                w_u64(&mut self.toc, l.n_entries() as u64)?;
+                w_u64(&mut self.toc, cb_off)?;
+                w_u64(&mut self.toc, idx_off)?;
+                w_u64(&mut self.toc, l.tail.len() as u64)?;
+                w_u64(&mut self.toc, tail_off)?;
             }
         }
+        debug_assert_eq!(
+            self.toc.len() - record_start,
+            decl.record_len(),
+            "TOC sizing drifted"
+        );
+        Ok(())
     }
-    f.flush()?;
-    Ok(())
+
+    /// Backpatch the real TOC over the placeholder and flush. Errors if
+    /// any declared entry was never written.
+    pub fn finish(mut self) -> Result<()> {
+        use std::io::Seek;
+        anyhow::ensure!(
+            self.next == self.decls.len(),
+            "{} entries declared but only {} written",
+            self.decls.len(),
+            self.next
+        );
+        assert_eq!(self.toc.len(), self.toc_len, "TOC sizing drifted");
+        self.file.flush()?;
+        let f = self.file.get_mut();
+        f.seek(std::io::SeekFrom::Start(self.toc_start as u64))?;
+        f.write_all(&self.toc)?;
+        f.flush()?;
+        Ok(())
+    }
+}
+
+/// Serialize a [`QuantizedModel`] to the RWKVQ2 packed format (see the
+/// module docs for the layout and alignment guarantees) by driving
+/// [`Rwkvq2Writer`] over its entries — one entry resident in the write
+/// path at a time.
+pub fn save_rwkvq2(qm: &QuantizedModel, path: &std::path::Path) -> Result<()> {
+    let mut decls = Vec::with_capacity(qm.entries.len());
+    for (desc, p) in &qm.entries {
+        decls.push(EntryDecl::of(desc, p)?);
+    }
+    let mut w = Rwkvq2Writer::create(path, &qm.config, decls)?;
+    for (desc, p) in &qm.entries {
+        w.write_entry(desc, p)?;
+    }
+    w.finish()
 }
 
 /// Bounds-checked byte cursor over a loaded/mapped RWKVQ2 file.
@@ -923,6 +1055,86 @@ mod tests {
                 assert_eq!(a, b, "entry {} drifted through the round trip", qm.entry_name(i));
             }
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    /// A quantized model with real SQ + VQ payloads for writer tests.
+    fn quantized_demo() -> QuantizedModel {
+        use crate::config::QuantConfig;
+        let cfg = ModelConfig::rwkv6(1, 32, 64);
+        let m = crate::model::rwkv::init_params(&cfg, &mut Rng::new(13));
+        let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = crate::coordinator::quantize_model(&m, None, &qc, 2);
+        let mut qm = QuantizedModel::from_parts(&m, &q);
+        qm.dense_to_f16();
+        qm
+    }
+
+    #[test]
+    fn streaming_writer_bytes_identical_to_save() {
+        let qm = quantized_demo();
+        let via_save = std::env::temp_dir().join("rwkvq_stream_a.rwkvq2");
+        let via_writer = std::env::temp_dir().join("rwkvq_stream_b.rwkvq2");
+        save_rwkvq2(&qm, &via_save).unwrap();
+
+        // drive the streaming API explicitly: declare, then feed one
+        // entry at a time
+        let decls: Vec<EntryDecl> =
+            qm.entries.iter().map(|(d, p)| EntryDecl::of(d, p).unwrap()).collect();
+        assert!(
+            decls.iter().any(|d| d.kind == EntryKind::Sq),
+            "demo model must exercise SQ payloads"
+        );
+        assert!(decls.iter().any(|d| d.kind == EntryKind::DenseF16));
+        let mut w = Rwkvq2Writer::create(&via_writer, &qm.config, decls).unwrap();
+        for (desc, p) in &qm.entries {
+            w.write_entry(desc, p).unwrap();
+        }
+        w.finish().unwrap();
+
+        let a = std::fs::read(&via_save).unwrap();
+        let b = std::fs::read(&via_writer).unwrap();
+        assert_eq!(a, b, "streaming writer output must be byte-identical to save()");
+
+        // and the streamed file round-trips to the same served values
+        let back = open_rwkvq2(&via_writer, LoadMode::Buffered).unwrap();
+        use crate::model::WeightProvider;
+        assert_eq!(back.n_entries(), qm.n_entries());
+        for i in 0..qm.n_entries() {
+            assert_eq!(
+                qm.materialize_at(i).into_owned(),
+                back.materialize_at(i).into_owned(),
+                "entry {} drifted through the streamed file",
+                qm.entry_name(i)
+            );
+        }
+        std::fs::remove_file(via_save).ok();
+        std::fs::remove_file(via_writer).ok();
+    }
+
+    #[test]
+    fn streaming_writer_rejects_declaration_drift() {
+        let qm = quantized_demo();
+        let path = std::env::temp_dir().join("rwkvq_stream_drift.rwkvq2");
+        let decls: Vec<EntryDecl> =
+            qm.entries.iter().map(|(d, p)| EntryDecl::of(d, p).unwrap()).collect();
+        let mut w = Rwkvq2Writer::create(&path, &qm.config, decls).unwrap();
+        // write entry 1 where entry 0 was declared → name mismatch
+        let (desc, p) = &qm.entries[1];
+        assert!(w.write_entry(desc, p).is_err(), "out-of-order entry must be rejected");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn streaming_writer_requires_every_declared_entry() {
+        let qm = quantized_demo();
+        let path = std::env::temp_dir().join("rwkvq_stream_short.rwkvq2");
+        let decls: Vec<EntryDecl> =
+            qm.entries.iter().map(|(d, p)| EntryDecl::of(d, p).unwrap()).collect();
+        let mut w = Rwkvq2Writer::create(&path, &qm.config, decls).unwrap();
+        let (desc, p) = &qm.entries[0];
+        w.write_entry(desc, p).unwrap();
+        assert!(w.finish().is_err(), "finish with missing entries must be rejected");
         std::fs::remove_file(path).ok();
     }
 

@@ -34,6 +34,53 @@ impl Json {
         s
     }
 
+    // ---- value accessors (the HTTP gateway parses request bodies into
+    // this type via `server::json::parse`) ----
+
+    /// Member of an object, `None` for other variants / missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number (exact in f64), `None` otherwise.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.0e15 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -166,5 +213,24 @@ mod tests {
     fn integral_floats_render_as_ints() {
         assert_eq!(Json::Num(42.0).render(), "42");
         assert_eq!(Json::Num(2.5).render(), "2.5");
+    }
+
+    #[test]
+    fn accessors_match_variants() {
+        let j = Json::obj()
+            .set("n", 3.0)
+            .set("frac", 2.5)
+            .set("s", "hi")
+            .set("b", true)
+            .set("xs", vec![1.0, 2.0]);
+        assert_eq!(j.get("n").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("frac").and_then(Json::as_usize), None);
+        assert_eq!(j.get("frac").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("hi"));
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("xs").and_then(Json::as_array).map(<[Json]>::len), Some(2));
+        assert!(j.get("missing").is_none());
+        assert!(Json::Null.get("n").is_none());
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
     }
 }

@@ -1,0 +1,685 @@
+//! The HTTP serving gateway: the first network boundary in the
+//! codebase. A `TcpListener` accept loop feeds per-connection handler
+//! threads; each generation request is parsed ([`super::http`] +
+//! [`super::json`]), forwarded into the **same** `coordinator::serve`
+//! loop the CLI uses (over a persistent `TickPool`), and its tokens are
+//! streamed back incrementally as Server-Sent Events over chunked
+//! transfer — one SSE chunk per tick-produced token.
+//!
+//! Operational behaviour:
+//!
+//! * **Admission control** — the serve loop's bounded queue
+//!   (`--max-queue`) sheds overflow; a shed request is answered `429
+//!   Too Many Requests` (with `Retry-After`) and counted in `/metrics`.
+//!   A connection cap answers `503` before parsing when the handler
+//!   pool is exhausted.
+//! * **Observability** — `GET /healthz` for probes, `GET /metrics` in
+//!   Prometheus text format ([`Metrics`]): served tokens/sec, queue
+//!   depth + high-water mark, shed count, latency and admission-wait
+//!   quantiles.
+//! * **Graceful drain** — [`GatewayHandle::shutdown`] (or
+//!   SIGINT/SIGTERM when [`GatewayConfig::heed_signals`] is set) stops
+//!   the accept loop, closes the listener, lets every in-flight request
+//!   decode to completion through the tick pool, then returns the
+//!   session's [`ServeStats`]. The process exits 0 — never mid-tick.
+//!
+//! There is no request cancellation: a client that disconnects
+//! mid-stream stops receiving tokens, but its sequence decodes to
+//! completion (events into a dropped channel are discarded).
+
+use crate::coordinator::serve::{
+    with_tick_pool, Decoder, Request, Response, ServeOpts, ServeStats, StreamEvent,
+};
+use crate::report::json::Json;
+use crate::server::http::{self, ChunkedWriter, HttpRequest, Limits};
+use crate::server::metrics::Metrics;
+use crate::server::{json, signal};
+use crate::Result;
+use anyhow::Context;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Accept-loop poll cadence while idle (the listener is non-blocking so
+/// the loop can observe the shutdown flag).
+const ACCEPT_POLL: Duration = Duration::from_millis(15);
+/// Per-connection read timeout: bounds how long an idle keep-alive
+/// connection can delay a drain.
+const CONN_READ_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-connection write timeout: a client that stops reading its
+/// response cannot park a handler thread (and its admission-channel
+/// clone) forever — the stalled write errors out and the connection is
+/// dropped, so a drain always completes.
+const CONN_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Longest accepted prompt, in tokens.
+const MAX_PROMPT: usize = 4096;
+
+/// Gateway policy. `addr` is `host:port` (`:0` binds an ephemeral port,
+/// reported by [`Gateway::local_addr`]).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub addr: String,
+    /// Continuous-batching width of the serve session.
+    pub max_batch: usize,
+    /// Batch-forming wait of the serve session.
+    pub max_wait: Duration,
+    /// Bounded admission queue: overflow is shed with a 429.
+    pub max_queue: usize,
+    /// Per-request `gen_len` cap (400 beyond it).
+    pub max_gen_len: usize,
+    /// Concurrent-connection cap (503 beyond it).
+    pub max_connections: usize,
+    /// Also drain on SIGINT/SIGTERM (requires
+    /// [`signal::install_shutdown_signals`]; the CLI sets this, tests
+    /// use the explicit handle so a test-raised signal cannot leak into
+    /// unrelated gateways).
+    pub heed_signals: bool,
+}
+
+impl GatewayConfig {
+    pub fn new(addr: impl Into<String>) -> GatewayConfig {
+        GatewayConfig {
+            addr: addr.into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue: 64,
+            max_gen_len: 512,
+            max_connections: 128,
+            heed_signals: false,
+        }
+    }
+}
+
+/// A bound (but not yet serving) gateway. Two-phase so callers learn
+/// the ephemeral port and can clone a [`GatewayHandle`] before the
+/// blocking [`Gateway::serve`] call.
+pub struct Gateway {
+    listener: TcpListener,
+    cfg: GatewayConfig,
+    vocab: usize,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+}
+
+/// Clonable remote control for a running gateway.
+#[derive(Clone)]
+pub struct GatewayHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+}
+
+impl GatewayHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin a graceful drain: stop accepting, finish in-flight work,
+    /// return from [`Gateway::serve`].
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+impl Gateway {
+    /// Bind the listener; serving starts with [`Gateway::serve`].
+    pub fn bind(cfg: GatewayConfig, vocab: usize) -> Result<Gateway> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        Ok(Gateway {
+            listener,
+            cfg,
+            vocab,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has a local addr")
+    }
+
+    pub fn handle(&self) -> GatewayHandle {
+        GatewayHandle {
+            addr: self.local_addr(),
+            shutdown: self.shutdown.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Run the gateway until a drain is requested: the calling thread
+    /// becomes the accept loop, a scoped sibling thread runs the serve
+    /// session on a persistent `TickPool` over `decoders` (one lane
+    /// per decoder), and each connection gets a scoped handler thread.
+    /// Returns the serve session's stats once every in-flight request
+    /// has decoded to completion.
+    pub fn serve<D: Decoder + Send>(self, decoders: &mut [D]) -> Result<ServeStats> {
+        anyhow::ensure!(!decoders.is_empty(), "the gateway needs at least one decoder");
+        let Gateway { listener, cfg, vocab, shutdown, metrics } = self;
+        listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let (tx_req, rx_req) = mpsc::channel::<Request>();
+        let (tx_resp, rx_resp) = mpsc::channel::<Response>();
+        // final Responses are redundant here — every handler consumes
+        // its own event stream — and the serve loop tolerates a closed
+        // response channel, so drop the receiver up front
+        drop(rx_resp);
+        let opts = ServeOpts::new(cfg.max_batch, cfg.max_wait).with_max_queue(cfg.max_queue);
+        let next_id = AtomicU64::new(0);
+        let metrics_ref: &Metrics = &metrics;
+        let shutdown_ref: &AtomicBool = &shutdown;
+        let cfg_ref = &cfg;
+        let next_id_ref = &next_id;
+        let opts_ref = &opts;
+
+        std::thread::scope(|s| {
+            let engine = s.spawn(move || {
+                with_tick_pool(decoders, |pool| {
+                    pool.serve_with(rx_req, tx_resp, opts_ref, metrics_ref)
+                })
+            });
+
+            loop {
+                if draining(cfg_ref, shutdown_ref) {
+                    break;
+                }
+                if engine.is_finished() {
+                    // the serve loop died (decoder fault) — stop
+                    // accepting and surface the panic via join below
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let open = metrics_ref.open_connections.load(Ordering::Relaxed);
+                        if open >= cfg_ref.max_connections as u64 {
+                            metrics_ref.http_errors.fetch_add(1, Ordering::Relaxed);
+                            let mut w = stream;
+                            w.set_nonblocking(false).ok();
+                            w.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).ok();
+                            let _ = http::write_response(
+                                &mut w,
+                                503,
+                                &[("Content-Type", "application/json"), ("Connection", "close")],
+                                br#"{"error":"too many connections"}"#,
+                            );
+                            continue;
+                        }
+                        metrics_ref.open_connections.fetch_add(1, Ordering::Relaxed);
+                        let tx = tx_req.clone();
+                        s.spawn(move || {
+                            // a handler panic must not tear down the
+                            // whole gateway at scope join
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                handle_connection(
+                                    stream,
+                                    vocab,
+                                    cfg_ref,
+                                    tx,
+                                    next_id_ref,
+                                    metrics_ref,
+                                    shutdown_ref,
+                                );
+                            }));
+                            metrics_ref.open_connections.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        eprintln!("gateway: accept error: {e}");
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                }
+            }
+
+            // drain: stop accepting (new connects are refused), close
+            // admissions once the in-flight handlers hang up, and wait
+            // for the serve loop to finish every admitted sequence
+            drop(listener);
+            drop(tx_req);
+            engine.join().expect("serve engine thread panicked")
+        })
+    }
+}
+
+fn draining(cfg: &GatewayConfig, shutdown: &AtomicBool) -> bool {
+    shutdown.load(Ordering::SeqCst) || (cfg.heed_signals && signal::shutdown_signalled())
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    vocab: usize,
+    cfg: &GatewayConfig,
+    tx_req: mpsc::Sender<Request>,
+    next_id: &AtomicU64,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+) {
+    // the listener is non-blocking and BSD-family kernels (macOS) let
+    // accepted sockets inherit O_NONBLOCK — undo it explicitly, the
+    // handler wants blocking reads bounded by the timeouts below
+    stream.set_nonblocking(false).ok();
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let limits = Limits::default();
+    loop {
+        if draining(cfg, shutdown) {
+            break;
+        }
+        match http::read_request(&mut reader, &limits) {
+            Ok(None) => break, // clean keep-alive close
+            Ok(Some(req)) => {
+                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                let close_requested = req
+                    .header("connection")
+                    .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+                if route(&mut writer, &req, vocab, cfg, &tx_req, next_id, metrics).is_err() {
+                    break; // client hung up mid-response
+                }
+                if close_requested || draining(cfg, shutdown) {
+                    break;
+                }
+            }
+            Err(e) => {
+                // a timed-out idle keep-alive read lands here too
+                // (Io → no status → just close)
+                if let Some(status) = e.status() {
+                    metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = http::write_response(
+                        &mut writer,
+                        status,
+                        &[("Content-Type", "application/json"), ("Connection", "close")],
+                        error_body(&e.message()).as_bytes(),
+                    );
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj().set("error", msg).render()
+}
+
+fn route(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    vocab: usize,
+    cfg: &GatewayConfig,
+    tx_req: &mpsc::Sender<Request>,
+    next_id: &AtomicU64,
+    metrics: &Metrics,
+) -> std::io::Result<()> {
+    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => {
+            http::write_response(w, 200, &[("Content-Type", "text/plain")], b"ok\n")
+        }
+        ("GET", "/metrics") => {
+            let text = metrics.render_prometheus();
+            http::write_response(
+                w,
+                200,
+                &[("Content-Type", "text/plain; version=0.0.4")],
+                text.as_bytes(),
+            )
+        }
+        ("POST", "/v1/generate") => generate(w, req, vocab, cfg, tx_req, next_id, metrics),
+        (_, "/healthz" | "/metrics") => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                405,
+                &[JSON_CT, ("Allow", "GET")],
+                error_body("method not allowed").as_bytes(),
+            )
+        }
+        (_, "/v1/generate") => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                405,
+                &[JSON_CT, ("Allow", "POST")],
+                error_body("method not allowed").as_bytes(),
+            )
+        }
+        _ => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(w, 404, &[JSON_CT], error_body("no such endpoint").as_bytes())
+        }
+    }
+}
+
+/// A validated `/v1/generate` body.
+struct GenRequest {
+    prompt: Vec<usize>,
+    gen_len: usize,
+    stream: bool,
+}
+
+fn parse_generate_body(
+    body: &[u8],
+    vocab: usize,
+    max_gen_len: usize,
+) -> std::result::Result<GenRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let arr = v
+        .get("prompt")
+        .and_then(Json::as_array)
+        .ok_or_else(|| "missing 'prompt' (array of token ids)".to_string())?;
+    if arr.is_empty() {
+        return Err("'prompt' must not be empty".to_string());
+    }
+    if arr.len() > MAX_PROMPT {
+        return Err(format!("'prompt' longer than {MAX_PROMPT} tokens"));
+    }
+    let prompt = arr
+        .iter()
+        .map(|t| {
+            t.as_usize()
+                .filter(|&t| t < vocab)
+                .ok_or_else(|| format!("prompt tokens must be integers below the vocab ({vocab})"))
+        })
+        .collect::<std::result::Result<Vec<usize>, String>>()?;
+    let gen_len = match v.get("gen_len") {
+        None => 16,
+        Some(g) => g
+            .as_usize()
+            .filter(|&n| (1..=max_gen_len).contains(&n))
+            .ok_or_else(|| format!("'gen_len' must be an integer in 1..={max_gen_len}"))?,
+    };
+    let stream = match v.get("stream") {
+        None => true,
+        Some(s) => s.as_bool().ok_or_else(|| "'stream' must be a boolean".to_string())?,
+    };
+    Ok(GenRequest { prompt, gen_len, stream })
+}
+
+/// Render token ids as a JSON array (`[1,2,30]`) — shared with the
+/// tests and examples that build request bodies by hand.
+pub fn tokens_json(tokens: &[usize]) -> String {
+    let mut s = String::from("[");
+    for (i, t) in tokens.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&t.to_string());
+    }
+    s.push(']');
+    s
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn generate(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    vocab: usize,
+    cfg: &GatewayConfig,
+    tx_req: &mpsc::Sender<Request>,
+    next_id: &AtomicU64,
+    metrics: &Metrics,
+) -> std::io::Result<()> {
+    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
+    let gen = match parse_generate_body(&req.body, vocab, cfg.max_gen_len) {
+        Ok(g) => g,
+        Err(msg) => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            return http::write_response(w, 400, &[JSON_CT], error_body(&msg).as_bytes());
+        }
+    };
+    metrics.generate_requests.fetch_add(1, Ordering::Relaxed);
+    let (tx_ev, rx_ev) = mpsc::channel();
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let request = Request::new(id, gen.prompt, gen.gen_len).with_stream(tx_ev);
+    if tx_req.send(request).is_err() {
+        metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        return http::write_response(
+            w,
+            503,
+            &[JSON_CT, ("Connection", "close")],
+            error_body("server is draining").as_bytes(),
+        );
+    }
+    // the first event decides the status line: Shed → 429 before any
+    // body byte, Admitted → 200 and the stream begins
+    match rx_ev.recv() {
+        Err(_) => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                500,
+                &[JSON_CT],
+                error_body("serve loop dropped the request").as_bytes(),
+            )
+        }
+        Ok(StreamEvent::Shed) => {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                429,
+                &[JSON_CT, ("Retry-After", "1")],
+                error_body("admission queue full").as_bytes(),
+            )
+        }
+        Ok(first) => {
+            if gen.stream {
+                stream_sse(w, id, first, rx_ev)
+            } else {
+                collect_json(w, id, first, rx_ev)
+            }
+        }
+    }
+}
+
+/// Stream one request's events as SSE over chunked transfer: one
+/// `data:` chunk per token as the tick produces it, a final `done`
+/// event carrying the full token list and timings.
+fn stream_sse(
+    w: &mut TcpStream,
+    id: u64,
+    first: StreamEvent,
+    rx: mpsc::Receiver<StreamEvent>,
+) -> std::io::Result<()> {
+    let id_text = id.to_string();
+    let mut cw = ChunkedWriter::begin(
+        &mut *w,
+        200,
+        &[
+            ("Content-Type", "text/event-stream"),
+            ("Cache-Control", "no-cache"),
+            ("X-Request-Id", &id_text),
+        ],
+    )?;
+    let mut tokens: Vec<usize> = Vec::new();
+    let mut queued_ms = 0.0f64;
+    let mut ev = Some(first);
+    loop {
+        let e = match ev.take() {
+            Some(e) => e,
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => break, // serve loop gone; terminate the stream
+            },
+        };
+        match e {
+            StreamEvent::Admitted { queued } => {
+                queued_ms = ms(queued);
+                cw.chunk(
+                    format!("data: {{\"admitted\":true,\"queued_ms\":{queued_ms:.3}}}\n\n")
+                        .as_bytes(),
+                )?;
+            }
+            StreamEvent::Token(t) => {
+                tokens.push(t);
+                cw.chunk(format!("data: {{\"token\":{t}}}\n\n").as_bytes())?;
+            }
+            StreamEvent::Done { latency } => {
+                cw.chunk(
+                    format!(
+                        "data: {{\"done\":true,\"id\":{id},\"tokens\":{},\
+                         \"queued_ms\":{queued_ms:.3},\"latency_ms\":{:.3}}}\n\n",
+                        tokens_json(&tokens),
+                        ms(latency),
+                    )
+                    .as_bytes(),
+                )?;
+                break;
+            }
+            // unreachable after admission; terminate defensively
+            StreamEvent::Shed => break,
+        }
+    }
+    cw.finish()
+}
+
+/// `"stream": false` — wait for completion, answer one JSON document.
+/// Nothing has been written yet when the serve loop dies mid-request,
+/// so a missing `Done` is answered as a 500 — a truncated token list
+/// must never masquerade as a completed generation.
+fn collect_json(
+    w: &mut TcpStream,
+    id: u64,
+    first: StreamEvent,
+    rx: mpsc::Receiver<StreamEvent>,
+) -> std::io::Result<()> {
+    let mut tokens: Vec<usize> = Vec::new();
+    let mut queued_ms = 0.0f64;
+    let mut latency_ms = 0.0f64;
+    let mut finished = false;
+    let mut ev = Some(first);
+    loop {
+        let e = match ev.take() {
+            Some(e) => e,
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => break, // serve loop died before Done
+            },
+        };
+        match e {
+            StreamEvent::Admitted { queued } => queued_ms = ms(queued),
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Done { latency } => {
+                latency_ms = ms(latency);
+                finished = true;
+                break;
+            }
+            StreamEvent::Shed => break,
+        }
+    }
+    if !finished {
+        return http::write_response(
+            w,
+            500,
+            &[("Content-Type", "application/json")],
+            error_body("generation aborted before completion").as_bytes(),
+        );
+    }
+    let body = format!(
+        "{{\"id\":{id},\"tokens\":{},\"queued_ms\":{queued_ms:.3},\"latency_ms\":{latency_ms:.3}}}",
+        tokens_json(&tokens)
+    );
+    http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
+}
+
+/// Split an SSE body into its `data: ` payloads (client-side helper for
+/// the tests, the e2e example and the smoke driver).
+pub fn sse_data(body: &str) -> Vec<&str> {
+    body.lines().filter_map(|l| l.strip_prefix("data: ")).collect()
+}
+
+/// Extract the streamed tokens from an SSE body: the incremental
+/// `token` events, checked against the final `done` event's list.
+pub fn sse_tokens(body: &str) -> Result<Vec<usize>> {
+    let mut streamed = Vec::new();
+    let mut done_tokens: Option<Vec<usize>> = None;
+    for payload in sse_data(body) {
+        let v = json::parse(payload).map_err(|e| anyhow::anyhow!("bad SSE payload: {e}"))?;
+        if let Some(t) = v.get("token").and_then(Json::as_usize) {
+            streamed.push(t);
+        }
+        if v.get("done").and_then(Json::as_bool) == Some(true) {
+            let list = v
+                .get("tokens")
+                .and_then(Json::as_array)
+                .context("done event without tokens")?
+                .iter()
+                .map(|t| t.as_usize().context("non-integer token in done event"))
+                .collect::<Result<Vec<usize>>>()?;
+            done_tokens = Some(list);
+        }
+    }
+    let done = done_tokens.context("SSE stream ended without a done event")?;
+    anyhow::ensure!(
+        streamed == done,
+        "incrementally streamed tokens {streamed:?} disagree with the done event {done:?}"
+    );
+    Ok(done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_body_validation() {
+        let ok = parse_generate_body(br#"{"prompt":[1,2,3],"gen_len":4}"#, 32, 64).unwrap();
+        assert_eq!(ok.prompt, vec![1, 2, 3]);
+        assert_eq!(ok.gen_len, 4);
+        assert!(ok.stream, "stream defaults to true");
+
+        let ok = parse_generate_body(br#"{"prompt":[0],"stream":false}"#, 32, 64).unwrap();
+        assert_eq!(ok.gen_len, 16, "gen_len defaults to 16");
+        assert!(!ok.stream);
+
+        for (bad, why) in [
+            (&br#"{"gen_len":4}"#[..], "missing prompt"),
+            (br#"{"prompt":[]}"#, "empty prompt"),
+            (br#"{"prompt":[99]}"#, "token >= vocab"),
+            (br#"{"prompt":[-1]}"#, "negative token"),
+            (br#"{"prompt":[1.5]}"#, "fractional token"),
+            (br#"{"prompt":[1],"gen_len":0}"#, "gen_len 0"),
+            (br#"{"prompt":[1],"gen_len":65}"#, "gen_len beyond cap"),
+            (br#"{"prompt":[1],"stream":"yes"}"#, "non-bool stream"),
+            (br#"{"prompt":"abc"}"#, "non-array prompt"),
+            (b"not json", "not json"),
+            (&[0xff, 0xfe][..], "not utf-8"),
+        ] {
+            assert!(parse_generate_body(bad, 32, 64).is_err(), "{why} must be rejected");
+        }
+    }
+
+    #[test]
+    fn sse_token_extraction_checks_consistency() {
+        let body = "data: {\"admitted\":true,\"queued_ms\":0.1}\n\n\
+                    data: {\"token\":5}\n\ndata: {\"token\":9}\n\n\
+                    data: {\"done\":true,\"id\":0,\"tokens\":[5,9],\"queued_ms\":0.1,\"latency_ms\":2.0}\n\n";
+        assert_eq!(sse_tokens(body).unwrap(), vec![5, 9]);
+
+        let inconsistent = body.replace("[5,9]", "[5,8]");
+        assert!(sse_tokens(&inconsistent).is_err());
+        assert!(sse_tokens("data: {\"token\":5}\n\n").is_err(), "missing done must error");
+    }
+
+    #[test]
+    fn tokens_json_renders_plain_arrays() {
+        assert_eq!(tokens_json(&[]), "[]");
+        assert_eq!(tokens_json(&[7]), "[7]");
+        assert_eq!(tokens_json(&[1, 2, 30]), "[1,2,30]");
+    }
+}

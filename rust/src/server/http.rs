@@ -1,0 +1,621 @@
+//! Dependency-free HTTP/1.1 substrate for the serving gateway: a
+//! hardened request parser, response writers (fixed-length and chunked),
+//! and a small client used by the tests, the e2e example and the CI
+//! smoke driver.
+//!
+//! The parser is written for a network boundary, not a friendly peer:
+//! every length is bounded ([`Limits`]), both `Content-Length` and
+//! `chunked` request bodies are supported, and **every** malformed,
+//! truncated or oversized input maps to a clean [`HttpError`] with an
+//! HTTP status — never a panic (fuzzed in `rust/tests/prop_http.rs`).
+//! Bytes are read one at a time through `BufRead`, so a hostile peer
+//! cannot make a header line allocate beyond its cap.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Parser bounds. Exceeding a header bound maps to 431, a body bound to
+/// 413; everything else malformed is a 400.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Longest accepted request line (method + target + version).
+    pub max_request_line: usize,
+    /// Longest accepted single header line.
+    pub max_header_line: usize,
+    /// Most accepted header fields.
+    pub max_headers: usize,
+    /// Largest accepted body, whatever the framing.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_request_line: 8 << 10,
+            max_header_line: 8 << 10,
+            max_headers: 64,
+            max_body: 1 << 20,
+        }
+    }
+}
+
+/// Why a request could not be parsed (or a socket died). `status()`
+/// says what to answer — `None` means the connection is beyond help
+/// (I/O failure), just close it.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed syntax, truncated framing, invalid lengths → 400.
+    Bad(String),
+    /// Body beyond [`Limits::max_body`] → 413.
+    BodyTooLarge(String),
+    /// Header section beyond its limits → 431.
+    HeadersTooLarge(String),
+    /// A `Transfer-Encoding` this server does not implement → 501.
+    Unsupported(String),
+    /// An HTTP version this server does not speak → 505.
+    Version(String),
+    /// The socket failed mid-request; no response can be delivered.
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// Status line to answer with, `None` for dead-socket errors.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Bad(_) => Some(400),
+            HttpError::BodyTooLarge(_) => Some(413),
+            HttpError::HeadersTooLarge(_) => Some(431),
+            HttpError::Unsupported(_) => Some(501),
+            HttpError::Version(_) => Some(505),
+            HttpError::Io(_) => None,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::Bad(m)
+            | HttpError::BodyTooLarge(m)
+            | HttpError::HeadersTooLarge(m)
+            | HttpError::Unsupported(m)
+            | HttpError::Version(m) => m.clone(),
+            HttpError::Io(e) => e.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.status() {
+            Some(code) => write!(f, "{} {}: {}", code, reason_phrase(code), self.message()),
+            None => write!(f, "connection error: {}", self.message()),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Raw request target (`/path?query`).
+    pub target: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this name (case-insensitive), trimmed.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Target path without the query string.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Query string after `?`, if any.
+    pub fn query(&self) -> Option<&str> {
+        self.target.split_once('?').map(|(_, q)| q)
+    }
+}
+
+/// Read one CRLF/LF-terminated line, capped at `cap` bytes (excluding
+/// the terminator). `Ok(None)` = clean EOF before any byte.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    over: impl Fn(String) -> HttpError,
+) -> Result<Option<Vec<u8>>, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                return if line.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::Bad("connection closed mid-line".into()))
+                };
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(line));
+                }
+                if line.len() >= cap {
+                    return Err(over(format!("line exceeds {cap} bytes")));
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+fn read_exact_body<R: BufRead>(r: &mut R, out: &mut Vec<u8>, n: usize) -> Result<(), HttpError> {
+    let start = out.len();
+    out.resize(start + n, 0);
+    r.read_exact(&mut out[start..]).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            HttpError::Bad("body truncated before the declared length".into())
+        } else {
+            HttpError::Io(e)
+        }
+    })
+}
+
+fn valid_token(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b))
+}
+
+/// Parse one request off the stream. `Ok(None)` = the peer closed the
+/// connection cleanly between requests (normal keep-alive end).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let Some(line) = read_line(r, limits.max_request_line, HttpError::HeadersTooLarge)? else {
+        return Ok(None);
+    };
+    let line = String::from_utf8(line)
+        .map_err(|_| HttpError::Bad("request line is not UTF-8".into()))?;
+    let mut parts = line.split(' ').filter(|p| !p.is_empty());
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v.to_string()),
+        _ => return Err(HttpError::Bad(format!("malformed request line '{line}'"))),
+    };
+    if !valid_token(&method) {
+        return Err(HttpError::Bad(format!("invalid method '{method}'")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::Version(format!("unsupported version '{version}'")));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(r, limits.max_header_line, HttpError::HeadersTooLarge)?
+            .ok_or_else(|| HttpError::Bad("connection closed inside the header block".into()))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "more than {} header fields",
+                limits.max_headers
+            )));
+        }
+        let line = String::from_utf8(line)
+            .map_err(|_| HttpError::Bad("header line is not UTF-8".into()))?;
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Bad(format!("header line without ':': '{line}'")))?;
+        if !valid_token(name) {
+            return Err(HttpError::Bad(format!("invalid header name '{name}'")));
+        }
+        headers.push((name.to_string(), value.trim().to_string()));
+    }
+
+    let mut req = HttpRequest { method, target, version, headers, body: Vec::new() };
+    // owned copies: the borrows must end before the body is filled in
+    let content_length = req.header("content-length").map(str::to_string);
+    let transfer_encoding = req.header("transfer-encoding").map(str::to_string);
+    match (content_length.as_deref(), transfer_encoding.as_deref()) {
+        (Some(_), Some(_)) => {
+            return Err(HttpError::Bad(
+                "both Content-Length and Transfer-Encoding present".into(),
+            ));
+        }
+        (Some(cl), None) => {
+            let n: usize = cl
+                .parse()
+                .map_err(|_| HttpError::Bad(format!("invalid Content-Length '{cl}'")))?;
+            if n > limits.max_body {
+                return Err(HttpError::BodyTooLarge(format!(
+                    "Content-Length {n} exceeds the {}-byte limit",
+                    limits.max_body
+                )));
+            }
+            read_exact_body(r, &mut req.body, n)?;
+        }
+        (None, Some(te)) => {
+            if !te.eq_ignore_ascii_case("chunked") {
+                return Err(HttpError::Unsupported(format!(
+                    "Transfer-Encoding '{te}' is not implemented"
+                )));
+            }
+            read_chunked_body(r, &mut req.body, limits)?;
+        }
+        (None, None) => {}
+    }
+    Ok(Some(req))
+}
+
+/// Decode a `Transfer-Encoding: chunked` body into `out`, bounded by
+/// `limits.max_body` across all chunks.
+fn read_chunked_body<R: BufRead>(
+    r: &mut R,
+    out: &mut Vec<u8>,
+    limits: &Limits,
+) -> Result<(), HttpError> {
+    loop {
+        let line = read_line(r, limits.max_header_line, HttpError::Bad)?
+            .ok_or_else(|| HttpError::Bad("truncated chunked body (missing size line)".into()))?;
+        let line = String::from_utf8(line)
+            .map_err(|_| HttpError::Bad("chunk size line is not UTF-8".into()))?;
+        // chunk extensions (";ext=val") are tolerated and ignored
+        let size_text = line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_text, 16)
+            .map_err(|_| HttpError::Bad(format!("invalid chunk size '{size_text}'")))?;
+        if size == 0 {
+            // trailer section: lines until the final empty line
+            loop {
+                let t = read_line(r, limits.max_header_line, HttpError::Bad)?.ok_or_else(
+                    || HttpError::Bad("truncated chunked body (missing final CRLF)".into()),
+                )?;
+                if t.is_empty() {
+                    return Ok(());
+                }
+            }
+        }
+        if out.len().saturating_add(size) > limits.max_body {
+            return Err(HttpError::BodyTooLarge(format!(
+                "chunked body exceeds the {}-byte limit",
+                limits.max_body
+            )));
+        }
+        read_exact_body(r, out, size)?;
+        let sep = read_line(r, 2, HttpError::Bad)?
+            .ok_or_else(|| HttpError::Bad("truncated chunked body (missing chunk CRLF)".into()))?;
+        if !sep.is_empty() {
+            return Err(HttpError::Bad("chunk data not followed by CRLF".into()));
+        }
+    }
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (status line, `headers`,
+/// `Content-Length`, body) and flush.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason_phrase(status))?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Incremental `Transfer-Encoding: chunked` response writer — the SSE
+/// stream's transport. Every [`ChunkedWriter::chunk`] is flushed so a
+/// token reaches the client as soon as the tick produced it.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head (with `Transfer-Encoding: chunked`) and
+    /// hand back the body writer.
+    pub fn begin(mut w: W, status: u16, headers: &[(&str, &str)]) -> io::Result<ChunkedWriter<W>> {
+        write!(w, "HTTP/1.1 {} {}\r\n", status, reason_phrase(status))?;
+        for (k, v) in headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "Transfer-Encoding: chunked\r\n\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        write!(self.w, "\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (`0\r\n\r\n`).
+    pub fn finish(mut self) -> io::Result<()> {
+        write!(self.w, "0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+// ---- client side (tests, e2e example, CI smoke twin) ----
+
+/// A parsed response: status, headers, body (chunked transfer decoded).
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// Read one full response (client side). Generous limits — this side
+/// talks to our own server, not the internet.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<HttpResponse, HttpError> {
+    let limits = Limits { max_body: 64 << 20, max_headers: 256, ..Limits::default() };
+    let line = read_line(r, limits.max_header_line, HttpError::Bad)?
+        .ok_or_else(|| HttpError::Bad("connection closed before the status line".into()))?;
+    let line = String::from_utf8(line)
+        .map_err(|_| HttpError::Bad("status line is not UTF-8".into()))?;
+    let mut parts = line.splitn(3, ' ');
+    let (version, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad(format!("malformed status line '{line}'")));
+    }
+    let status: u16 = code
+        .parse()
+        .map_err(|_| HttpError::Bad(format!("invalid status code '{code}'")))?;
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, limits.max_header_line, HttpError::Bad)?
+            .ok_or_else(|| HttpError::Bad("connection closed inside response headers".into()))?;
+        if line.is_empty() {
+            break;
+        }
+        let line = String::from_utf8(line)
+            .map_err(|_| HttpError::Bad("response header is not UTF-8".into()))?;
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.to_string(), v.trim().to_string()));
+        }
+    }
+    let mut resp = HttpResponse { status, headers, body: Vec::new() };
+    let te_chunked = resp
+        .header("transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    let content_length = resp.header("content-length").map(str::to_string);
+    if te_chunked {
+        read_chunked_body(r, &mut resp.body, &limits)?;
+    } else if let Some(cl) = content_length {
+        let n: usize =
+            cl.parse().map_err(|_| HttpError::Bad(format!("invalid Content-Length '{cl}'")))?;
+        if n > limits.max_body {
+            return Err(HttpError::BodyTooLarge(format!("response body {n} too large")));
+        }
+        read_exact_body(r, &mut resp.body, n)?;
+    } else {
+        // no framing: body runs to connection close
+        r.read_to_end(&mut resp.body).map_err(HttpError::Io)?;
+    }
+    Ok(resp)
+}
+
+/// One-shot client request against `addr` (connect → send → read →
+/// close). `body = None` sends no body and no Content-Length.
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> crate::Result<HttpResponse> {
+    use anyhow::Context;
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut w = stream.try_clone().context("clone client socket")?;
+    write!(w, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n")?;
+    match body {
+        Some(b) => {
+            write!(w, "Content-Type: application/json\r\nContent-Length: {}\r\n\r\n", b.len())?;
+            w.write_all(b.as_bytes())?;
+        }
+        None => write!(w, "\r\n")?,
+    }
+    w.flush()?;
+    let mut r = io::BufReader::new(stream);
+    read_response(&mut r).map_err(|e| anyhow::anyhow!("reading response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut Cursor::new(bytes), &Limits::default())
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse(b"GET /healthz?probe=1 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path(), "/healthz");
+        assert_eq!(req.query(), Some("probe=1"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_content_length_body() {
+        let req = parse(b"POST /v1/generate HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn parses_chunked_body_with_extensions_and_trailers() {
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4;ext=1\r\nwiki\r\n5\r\npedia\r\n0\r\nTrailer: v\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.body, b"wikipedia");
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_error() {
+        assert!(parse(b"").unwrap().is_none());
+        let full = b"POST /x HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        for cut in 1..full.len() {
+            let r = parse(&full[..cut]);
+            assert!(r.is_err(), "prefix of {cut} bytes must be an error");
+            assert!(
+                r.err().unwrap().status().is_some_and(|s| (400..500).contains(&s)),
+                "prefix of {cut} bytes must map to a 4xx"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_chunked_bodies_are_4xx() {
+        let full = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nwiki\r\n0\r\n\r\n";
+        for cut in 1..full.len() {
+            let r = parse(&full[..cut]);
+            assert!(r.is_err(), "chunked prefix of {cut} bytes must error");
+        }
+    }
+
+    #[test]
+    fn oversized_inputs_map_to_413_and_431() {
+        let big_header = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "a".repeat(10 << 10));
+        assert_eq!(parse(big_header.as_bytes()).err().unwrap().status(), Some(431));
+
+        let many: String = (0..100).map(|i| format!("H{i}: v\r\n")).collect();
+        let too_many = format!("GET / HTTP/1.1\r\n{many}\r\n");
+        assert_eq!(parse(too_many.as_bytes()).err().unwrap().status(), Some(431));
+
+        let big_body = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 2 << 20);
+        assert_eq!(parse(big_body.as_bytes()).err().unwrap().status(), Some(413));
+
+        let big_chunk = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nfffffff\r\n";
+        assert_eq!(parse(big_chunk).err().unwrap().status(), Some(413));
+    }
+
+    #[test]
+    fn protocol_violations_have_specific_statuses() {
+        assert_eq!(parse(b"GET / HTTP/2.0\r\n\r\n").err().unwrap().status(), Some(505));
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n").err().unwrap().status(),
+            Some(501)
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 1\r\nTransfer-Encoding: chunked\r\n\r\nx")
+                .err()
+                .unwrap()
+                .status(),
+            Some(400)
+        );
+        assert_eq!(parse(b"GET/ HTTP/1.1\r\n\r\n").err().unwrap().status(), Some(400));
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").err().unwrap().status(),
+            Some(400)
+        );
+        assert_eq!(parse(b"G@T / HTTP/1.1\r\n\r\n").err().unwrap().status(), Some(400));
+        let no_colon = parse(b"GET / HTTP/1.1\r\nNo-Colon-Here\r\n\r\n");
+        assert_eq!(no_colon.err().unwrap().status(), Some(400));
+    }
+
+    #[test]
+    fn chunked_writer_round_trips_through_the_client_reader() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::begin(
+                &mut wire,
+                200,
+                &[("Content-Type", "text/event-stream")],
+            )
+            .unwrap();
+            cw.chunk(b"data: {\"token\":5}\n\n").unwrap();
+            cw.chunk(b"").unwrap(); // no-op, must not terminate
+            cw.chunk(b"data: {\"done\":true}\n\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+        assert_eq!(
+            resp.body_str(),
+            "data: {\"token\":5}\n\ndata: {\"done\":true}\n\n"
+        );
+    }
+
+    #[test]
+    fn write_response_round_trips() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, &[("Retry-After", "1")], b"{\"error\":\"queue full\"}")
+            .unwrap();
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body, b"{\"error\":\"queue full\"}");
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_tolerated() {
+        let req = parse(b"GET / HTTP/1.1\nHost: x\n\n").unwrap().unwrap();
+        assert_eq!(req.header("host"), Some("x"));
+    }
+}

@@ -1,0 +1,299 @@
+//! Minimal JSON parser for the gateway's request bodies (no serde in
+//! the offline vendor set). Produces the crate's existing
+//! [`crate::report::json::Json`] value type, so the emitter and the
+//! parser share one representation.
+//!
+//! Scope: full JSON syntax (objects, arrays, strings with escapes and
+//! `\uXXXX` incl. surrogate pairs, numbers, literals), with two
+//! deliberate hardening limits for a network-facing parser — a nesting
+//! depth cap and "last key wins" duplicate-object-key semantics. Input
+//! is `&str`, so UTF-8 validity is the caller's concern (the HTTP layer
+//! rejects invalid UTF-8 bodies with a 400 before parsing).
+
+use crate::report::json::Json;
+use std::collections::BTreeMap;
+
+/// Nesting cap: a request body has no business nesting deeper, and the
+/// recursive-descent parser must not let a hostile body overflow the
+/// stack.
+const MAX_DEPTH: usize = 64;
+
+/// Parse one complete JSON value (surrounding whitespace allowed;
+/// trailing garbage is an error).
+pub fn parse(s: &str) -> Result<Json, String> {
+    let mut p = Parser { b: s.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(format!("trailing bytes after JSON value at offset {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        Some(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        match self.bump() {
+            Some(got) if got == c => Ok(()),
+            Some(got) => Err(format!(
+                "expected '{}' at offset {}, got '{}'",
+                c as char,
+                self.pos - 1,
+                got as char
+            )),
+            None => Err(format!("expected '{}', got end of input", c as char)),
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected byte 0x{c:02x} at offset {}", self.pos)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii number bytes");
+        let n: f64 =
+            text.parse().map_err(|_| format!("invalid number '{text}' at offset {start}"))?;
+        if !n.is_finite() {
+            return Err(format!("non-finite number '{text}' at offset {start}"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => out.push(self.unicode_escape()?),
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(c) if c < 0x20 => {
+                    return Err(format!("raw control byte 0x{c:02x} in string"));
+                }
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    // multi-byte UTF-8: the input is a valid &str, so
+                    // re-decode the sequence starting one byte back
+                    let start = self.pos - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let end = (start + len).min(self.b.len());
+                    let s = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    let ch = s.chars().next().ok_or("invalid UTF-8 in string")?;
+                    out.push(ch);
+                    self.pos = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or("truncated \\u escape")?;
+            let d = (c as char).to_digit(16).ok_or("non-hex digit in \\u escape")?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        // surrogate pair: \uD800-\uDBFF must be followed by \uDC00-\uDFFF
+        if (0xD800..=0xDBFF).contains(&hi) {
+            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                return Err("lone high surrogate".into());
+            }
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                return Err("invalid low surrogate".into());
+            }
+            let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return char::from_u32(code).ok_or_else(|| "invalid surrogate pair".into());
+        }
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err("lone low surrogate".into());
+        }
+        char::from_u32(hi).ok_or_else(|| "invalid \\u escape".into())
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(xs)),
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.pos - 1)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            m.insert(key, val); // duplicate keys: last one wins
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(m)),
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.pos - 1)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generation_request_shape() {
+        let v = parse(r#"{"prompt": [3, 1, 2], "gen_len": 8, "stream": false}"#).unwrap();
+        let prompt: Vec<usize> = v
+            .get("prompt")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|t| t.as_usize().unwrap())
+            .collect();
+        assert_eq!(prompt, vec![3, 1, 2]);
+        assert_eq!(v.get("gen_len").and_then(Json::as_usize), Some(8));
+        assert_eq!(v.get("stream").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn round_trips_through_the_emitter() {
+        let text = r#"{"a":[1,2.5,true,null,"x\ny"],"b":{"c":-3}}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(parse(&v.render()).unwrap().render(), v.render());
+    }
+
+    #[test]
+    fn string_escapes_and_unicode() {
+        assert_eq!(parse(r#""\u0041\t\"\\""#).unwrap().as_str(), Some("A\t\"\\"));
+        // surrogate pair for 𝄞 (U+1D11E)
+        assert_eq!(parse(r#""\uD834\uDD1E""#).unwrap().as_str(), Some("𝄞"));
+        // raw multi-byte UTF-8 passes through
+        assert_eq!(parse("\"héllo — 日本\"").unwrap().as_str(), Some("héllo — 日本"));
+        assert!(parse(r#""\uD834""#).is_err(), "lone surrogate must error");
+        assert!(parse("\"a\nb\"").is_err(), "raw control byte must error");
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        for bad in [
+            "", "{", "}", "[", "[1,", "[1 2]", "{\"a\"}", "{\"a\":}", "{a:1}", "tru", "nul",
+            "01a", "1.2.3", "--1", "\"unterminated", "{\"a\":1}x", "[1]]", "1e999",
+            "\"\\q\"", "\"\\u12\"", "[,]",
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let deep: String = "[".repeat(MAX_DEPTH + 2) + &"]".repeat(MAX_DEPTH + 2);
+        assert!(parse(&deep).is_err());
+        let ok: String = "[".repeat(MAX_DEPTH / 2) + &"]".repeat(MAX_DEPTH / 2);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn numbers_parse_and_reject_non_finite() {
+        assert_eq!(parse("-0.5e2").unwrap().as_f64(), Some(-50.0));
+        assert_eq!(parse("12").unwrap().as_usize(), Some(12));
+        assert!(parse("1e400").is_err(), "overflowing number must be rejected");
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let v = parse(r#"{"a":1,"a":2}"#).unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_usize), Some(2));
+    }
+}

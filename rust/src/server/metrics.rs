@@ -1,0 +1,263 @@
+//! Live gateway metrics: an atomic registry fed by the serving loop
+//! (via [`ServeObserver`]) and the connection handlers, rendered as
+//! Prometheus text exposition on `GET /metrics`.
+//!
+//! Counters and gauges are plain relaxed atomics — every update site is
+//! a single monotonic increment or gauge store, so no cross-field
+//! consistency is promised (exactly the Prometheus scrape model).
+//! Latency and admission-wait quantiles come from fixed-size ring
+//! windows over the most recent samples, sorted per scrape with the same
+//! ceil-rank [`percentile`] convention as `ServeStats`.
+
+use crate::coordinator::serve::{percentile, ServeObserver};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Samples kept per quantile window. Big enough that p99 is meaningful,
+/// small enough that a scrape's sort is trivial.
+const WINDOW: usize = 512;
+
+/// Ring window of the most recent duration samples.
+struct Window {
+    buf: Vec<Duration>,
+    next: usize,
+}
+
+impl Window {
+    fn new() -> Window {
+        Window { buf: Vec::with_capacity(WINDOW), next: 0 }
+    }
+
+    fn push(&mut self, d: Duration) {
+        if self.buf.len() < WINDOW {
+            self.buf.push(d);
+        } else {
+            self.buf[self.next] = d;
+            self.next = (self.next + 1) % WINDOW;
+        }
+    }
+
+    fn sorted(&self) -> Vec<Duration> {
+        let mut v = self.buf.clone();
+        v.sort();
+        v
+    }
+}
+
+/// The gateway's live metrics registry. One instance per gateway,
+/// shared (`Arc`) between the serve loop, every connection handler and
+/// the `/metrics` scraper.
+pub struct Metrics {
+    start: Instant,
+    /// HTTP requests parsed off a socket (any route).
+    pub http_requests: AtomicU64,
+    /// Requests answered with an error status (4xx/5xx).
+    pub http_errors: AtomicU64,
+    /// Generation requests forwarded into the serve loop.
+    pub generate_requests: AtomicU64,
+    /// Generation requests decoded to completion.
+    pub completed: AtomicU64,
+    /// Generation requests shed at admission (answered 429).
+    pub shed: AtomicU64,
+    /// Generated (non-prompt) tokens served.
+    pub tokens: AtomicU64,
+    /// Current admission-queue depth (gauge).
+    pub queue_depth: AtomicU64,
+    /// Deepest the admission queue has been.
+    pub queue_hwm: AtomicU64,
+    /// Currently open client connections (gauge).
+    pub open_connections: AtomicU64,
+    latencies: Mutex<Window>,
+    admission_waits: Mutex<Window>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            http_requests: AtomicU64::new(0),
+            http_errors: AtomicU64::new(0),
+            generate_requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_hwm: AtomicU64::new(0),
+            open_connections: AtomicU64::new(0),
+            latencies: Mutex::new(Window::new()),
+            admission_waits: Mutex::new(Window::new()),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Lifetime-average served tokens per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens.load(Ordering::Relaxed) as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Render the Prometheus text exposition format (version 0.0.4).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(2048);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            "rwkvquant_http_requests_total",
+            "HTTP requests parsed off a socket (any route).",
+            self.http_requests.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_http_errors_total",
+            "HTTP requests answered with an error status.",
+            self.http_errors.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_generate_requests_total",
+            "Generation requests forwarded to the serve loop.",
+            self.generate_requests.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_requests_completed_total",
+            "Generation requests decoded to completion.",
+            self.completed.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_requests_shed_total",
+            "Generation requests shed at admission (HTTP 429).",
+            self.shed.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_served_tokens_total",
+            "Generated (non-prompt) tokens streamed to clients.",
+            self.tokens.load(Ordering::Relaxed),
+        );
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        gauge(
+            "rwkvquant_served_tokens_per_sec",
+            "Lifetime-average served tokens per second.",
+            self.tokens_per_sec(),
+        );
+        gauge(
+            "rwkvquant_queue_depth",
+            "Current admission-queue depth.",
+            self.queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        gauge(
+            "rwkvquant_queue_depth_high_water_mark",
+            "Deepest the admission queue has been.",
+            self.queue_hwm.load(Ordering::Relaxed) as f64,
+        );
+        gauge(
+            "rwkvquant_open_connections",
+            "Currently open client connections.",
+            self.open_connections.load(Ordering::Relaxed) as f64,
+        );
+        gauge(
+            "rwkvquant_uptime_seconds",
+            "Seconds since the gateway started.",
+            self.start.elapsed().as_secs_f64(),
+        );
+        let mut quantiles = |name: &str, help: &str, w: &Mutex<Window>| {
+            let sorted = w.lock().unwrap_or_else(|e| e.into_inner()).sorted();
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                let _ = writeln!(
+                    out,
+                    "{name}{{quantile=\"{label}\"}} {}",
+                    percentile(&sorted, q).as_secs_f64()
+                );
+            }
+            let _ = writeln!(out, "{name}_count {}", sorted.len());
+        };
+        quantiles(
+            "rwkvquant_request_latency_seconds",
+            "Admission-to-completion latency (last 512 requests).",
+            &self.latencies,
+        );
+        quantiles(
+            "rwkvquant_admission_wait_seconds",
+            "Arrival-to-admission wait (last 512 requests).",
+            &self.admission_waits,
+        );
+        out
+    }
+}
+
+impl ServeObserver for Metrics {
+    fn on_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.queue_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    fn on_admitted(&self, wait: Duration) {
+        self.admission_waits.lock().unwrap_or_else(|e| e.into_inner()).push(wait);
+    }
+
+    fn on_tokens(&self, n: usize) {
+        self.tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn on_completed(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies.lock().unwrap_or_else(|e| e.into_inner()).push(latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observer_updates_land_in_the_exposition() {
+        let m = Metrics::new();
+        m.on_queue_depth(3);
+        m.on_queue_depth(1);
+        m.on_admitted(Duration::from_millis(4));
+        m.on_tokens(7);
+        m.on_tokens(5);
+        m.on_shed();
+        m.on_completed(Duration::from_millis(20));
+        m.http_requests.fetch_add(2, Ordering::Relaxed);
+        let text = m.render_prometheus();
+        assert!(text.contains("rwkvquant_served_tokens_total 12"), "{text}");
+        assert!(text.contains("rwkvquant_requests_shed_total 1"));
+        assert!(text.contains("rwkvquant_requests_completed_total 1"));
+        assert!(text.contains("rwkvquant_queue_depth 1"));
+        assert!(text.contains("rwkvquant_queue_depth_high_water_mark 3"));
+        assert!(text.contains("rwkvquant_http_requests_total 2"));
+        assert!(text.contains("rwkvquant_request_latency_seconds{quantile=\"0.99\"} 0.02"));
+        assert!(text.contains("rwkvquant_request_latency_seconds_count 1"));
+        assert!(text.contains("rwkvquant_admission_wait_seconds{quantile=\"0.5\"} 0.004"));
+    }
+
+    #[test]
+    fn window_wraps_and_keeps_recent_samples() {
+        let mut w = Window::new();
+        for i in 0..(WINDOW + 10) {
+            w.push(Duration::from_micros(i as u64));
+        }
+        let sorted = w.sorted();
+        assert_eq!(sorted.len(), WINDOW);
+        // the 10 oldest samples were overwritten
+        assert_eq!(sorted[0], Duration::from_micros(10));
+        assert_eq!(sorted[WINDOW - 1], Duration::from_micros((WINDOW + 9) as u64));
+    }
+}

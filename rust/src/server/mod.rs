@@ -1,0 +1,29 @@
+//! The HTTP serving front end — the first network boundary of the
+//! codebase, built dependency-free on `std::net`:
+//!
+//! * [`http`] — hardened HTTP/1.1 request parser (bounded, fuzzed,
+//!   chunked-body capable), response writers (fixed + chunked), and the
+//!   small client the tests and smoke drivers use.
+//! * [`json`] — JSON parser for request bodies, sharing the
+//!   [`crate::report::json::Json`] value type with the emitter.
+//! * [`metrics`] — live Prometheus-text metrics registry, fed by the
+//!   serve loop through [`crate::coordinator::serve::ServeObserver`].
+//! * [`signal`] — SIGINT/SIGTERM → graceful-drain flag (raw `signal(2)`,
+//!   no `signal_hook` in the offline vendor set).
+//! * [`gateway`] — the connection loop tying it together: JSON requests
+//!   in, SSE token streams out, bounded admission with 429 shedding,
+//!   `/healthz` + `/metrics`, drain-to-completion shutdown.
+//!
+//! The gateway and the CLI's in-process mode share one engine: both run
+//! `coordinator::serve` over a persistent `TickPool`, so HTTP serving is
+//! token-identical to `serve_collect` on the same store by construction
+//! (and asserted over real sockets in `rust/tests/integration_gateway.rs`).
+
+pub mod gateway;
+pub mod http;
+pub mod json;
+pub mod metrics;
+pub mod signal;
+
+pub use gateway::{Gateway, GatewayConfig, GatewayHandle};
+pub use metrics::Metrics;

@@ -1,0 +1,86 @@
+//! SIGINT/SIGTERM → graceful-drain flag, with no `signal_hook` crate in
+//! the offline vendor set: the raw POSIX `signal(2)` entry point is
+//! declared here (the same idiom as `util::mmap`'s raw `mmap`), and the
+//! handler does the only async-signal-safe thing — set a process-wide
+//! atomic the gateway's accept loop polls.
+//!
+//! On non-unix hosts installation reports `false` and the gateway's
+//! explicit [`super::gateway::GatewayHandle::shutdown`] is the only stop
+//! signal.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const SIGINT: c_int = 2;
+    pub const SIGTERM: c_int = 15;
+    /// `signal(2)` handler values are word-sized on every unix ABI we
+    /// build for; `SIG_ERR` is the all-ones sentinel.
+    pub const SIG_ERR: usize = usize::MAX;
+
+    extern "C" {
+        pub fn signal(signum: c_int, handler: usize) -> usize;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: std::os::raw::c_int) {
+    // async-signal-safe: one atomic store, nothing else
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT/SIGTERM handler. Returns whether the handler is
+/// actually installed (always `false` off unix). Idempotent.
+pub fn install_shutdown_signals() -> bool {
+    #[cfg(unix)]
+    {
+        // SAFETY: on_signal only performs an atomic store, which is
+        // async-signal-safe; re-installation is harmless.
+        unsafe {
+            let handler = on_signal as extern "C" fn(std::os::raw::c_int) as usize;
+            let a = sys::signal(sys::SIGINT, handler);
+            let b = sys::signal(sys::SIGTERM, handler);
+            a != sys::SIG_ERR && b != sys::SIG_ERR
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+/// Has SIGINT/SIGTERM been received since the last
+/// [`clear_shutdown_signal`]?
+pub fn shutdown_signalled() -> bool {
+    SIGNALLED.load(Ordering::SeqCst)
+}
+
+/// Reset the flag (start of a serve session, and test isolation).
+pub fn clear_shutdown_signal() {
+    SIGNALLED.store(false, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_set_and_clear() {
+        clear_shutdown_signal();
+        assert!(!shutdown_signalled());
+        SIGNALLED.store(true, Ordering::SeqCst);
+        assert!(shutdown_signalled());
+        clear_shutdown_signal();
+        assert!(!shutdown_signalled());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn handler_installs() {
+        assert!(install_shutdown_signals());
+    }
+}

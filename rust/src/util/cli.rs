@@ -57,6 +57,15 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Option that may also be passed as a bare flag: `--name value`
+    /// yields `Some(value)`, a bare `--name` yields `Some(default)`,
+    /// and an absent `--name` yields `None` (`rwkvquant serve --http`
+    /// binds the default address; without `--http` there is no
+    /// gateway at all).
+    pub fn flag_value<'a>(&'a self, name: &str, default: &'a str) -> Option<&'a str> {
+        self.get(name).or_else(|| self.flag(name).then_some(default))
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
@@ -151,6 +160,18 @@ mod tests {
         let a = args(&[]);
         assert_eq!(a.get_usize("seed", 42), 42);
         assert_eq!(a.get_or("out", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn flag_value_covers_all_three_spellings() {
+        let a = args(&["serve", "--http", "0.0.0.0:9000"]);
+        assert_eq!(a.flag_value("http", "127.0.0.1:8080"), Some("0.0.0.0:9000"));
+        // bare flag (next token is another option) → the default
+        let a = args(&["serve", "--http", "--mmap"]);
+        assert_eq!(a.flag_value("http", "127.0.0.1:8080"), Some("127.0.0.1:8080"));
+        // absent → None
+        let a = args(&["serve"]);
+        assert_eq!(a.flag_value("http", "127.0.0.1:8080"), None);
     }
 
     #[test]

@@ -28,13 +28,7 @@ fn quantized_model_serves_batched_requests() {
     let (tx_req, rx_req) = mpsc::channel();
     let (tx_resp, rx_resp) = mpsc::channel();
     for id in 0..10u64 {
-        tx_req
-            .send(Request {
-                id,
-                prompt: vec![(id as usize) % 128, 3, 5],
-                gen_len: 6,
-            })
-            .unwrap();
+        tx_req.send(Request::new(id, vec![(id as usize) % 128, 3, 5], 6)).unwrap();
     }
     drop(tx_req);
     let stats = serve(&mut dec, rx_req, tx_resp, 4, Duration::from_millis(2)).unwrap();
@@ -73,9 +67,7 @@ fn batch_size_does_not_change_greedy_outputs() {
         let (tx_req, rx_req) = mpsc::channel();
         let (tx_resp, rx_resp) = mpsc::channel();
         for id in 0..5u64 {
-            tx_req
-                .send(Request { id, prompt: vec![(id as usize) + 1], gen_len: 5 })
-                .unwrap();
+            tx_req.send(Request::new(id, vec![(id as usize) + 1], 5)).unwrap();
         }
         drop(tx_req);
         serve(&mut dec, rx_req, tx_resp, max_batch, Duration::from_millis(0)).unwrap();
@@ -100,11 +92,7 @@ fn threaded_ticks_serve_token_identical_to_sequential() {
 
     let requests = || -> Vec<Request> {
         (0..12u64)
-            .map(|id| Request {
-                id,
-                prompt: vec![(id as usize * 11 + 2) % 96, 7, 3],
-                gen_len: 6,
-            })
+            .map(|id| Request::new(id, vec![(id as usize * 11 + 2) % 96, 7, 3], 6))
             .collect()
     };
     let mut seq_dec = RunnerDecoder::new(&qm);
@@ -139,11 +127,7 @@ fn one_pool_serves_consecutive_sessions_token_identically() {
 
     let requests = || -> Vec<Request> {
         (0..10u64)
-            .map(|id| Request {
-                id,
-                prompt: vec![(id as usize * 13 + 1) % 96, 5],
-                gen_len: 6,
-            })
+            .map(|id| Request::new(id, vec![(id as usize * 13 + 1) % 96, 5], 6))
             .collect()
     };
     let mut seq_dec = RunnerDecoder::new(&qm);
@@ -195,11 +179,7 @@ fn packed_decoder_completes_with_same_tokens_as_dequantized_twin() {
 
     fn run<D: Decoder>(dec: &mut D) -> Vec<(u64, Vec<usize>)> {
         let requests: Vec<Request> = (0..6u64)
-            .map(|id| Request {
-                id,
-                prompt: vec![(id as usize * 17 + 1) % 128, 9, 4],
-                gen_len: 5,
-            })
+            .map(|id| Request::new(id, vec![(id as usize * 17 + 1) % 128, 9, 4], 5))
             .collect();
         let (_, responses) =
             serve_collect(dec, requests, 3, Duration::from_millis(1)).unwrap();

@@ -1,0 +1,177 @@
+//! Property/fuzz-style tests over the gateway's HTTP request parser:
+//! random byte soup, systematic truncation of valid requests (including
+//! chunked framing), hostile header/body sizes and random mutations must
+//! all map to clean `HttpError`s — never a panic, never an unbounded
+//! allocation. Valid requests must round-trip field-for-field.
+
+use rwkvquant::server::http::{read_request, HttpError, HttpRequest, Limits};
+use rwkvquant::util::ptest::{check, Gen};
+use std::io::Cursor;
+
+fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+    read_request(&mut Cursor::new(bytes), &Limits::default())
+}
+
+/// Build a syntactically valid request from generator choices, returning
+/// the wire bytes and the expected body.
+fn gen_valid_request(g: &mut Gen) -> (Vec<u8>, String, Vec<u8>) {
+    let method = ["GET", "POST", "PUT", "DELETE"][g.rng().below(4)].to_string();
+    let path = format!("/p{}?q={}", g.rng().below(100), g.rng().below(10));
+    let n_headers = g.rng().below(5);
+    let mut wire = format!("{method} {path} HTTP/1.1\r\n");
+    for i in 0..n_headers {
+        wire.push_str(&format!("X-H{i}: v{}\r\n", g.rng().below(1000)));
+    }
+    let body_len = g.rng().below(64) + 1; // ≥ 1 so every strict prefix truncates
+    let body: Vec<u8> = (0..body_len).map(|_| (g.rng().below(256)) as u8).collect();
+    if g.prob(0.5) {
+        // Content-Length framing
+        wire.push_str(&format!("Content-Length: {body_len}\r\n\r\n"));
+        let mut bytes = wire.into_bytes();
+        bytes.extend_from_slice(&body);
+        (bytes, method, body)
+    } else {
+        // chunked framing, body split into 1..=3 chunks
+        wire.push_str("Transfer-Encoding: chunked\r\n\r\n");
+        let mut bytes = wire.into_bytes();
+        let cuts = g.rng().below(3) + 1;
+        let mut rest: &[u8] = &body;
+        for i in 0..cuts {
+            if rest.is_empty() {
+                break;
+            }
+            let take = if i + 1 == cuts {
+                rest.len()
+            } else {
+                (g.rng().below(rest.len()) + 1).min(rest.len())
+            };
+            let (chunk, tail) = rest.split_at(take);
+            bytes.extend_from_slice(format!("{:x}\r\n", chunk.len()).as_bytes());
+            bytes.extend_from_slice(chunk);
+            bytes.extend_from_slice(b"\r\n");
+            rest = tail;
+        }
+        bytes.extend_from_slice(b"0\r\n\r\n");
+        (bytes, method, body)
+    }
+}
+
+#[test]
+fn random_bytes_never_panic() {
+    check("random bytes parse to Ok or a clean error", 300, |g| {
+        let n = g.rng().below(512);
+        let soup: Vec<u8> = (0..n).map(|_| g.rng().below(256) as u8).collect();
+        // any outcome is fine — reaching this line without a panic is
+        // the property; errors must carry a mappable status or be Io
+        if let Err(e) = parse(&soup) {
+            let _ = e.status();
+            let _ = e.message();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn valid_requests_round_trip() {
+    check("generated requests parse field-for-field", 200, |g| {
+        let (wire, method, body) = gen_valid_request(g);
+        match parse(&wire) {
+            Ok(Some(req)) => {
+                if req.method != method {
+                    return Err(format!("method {} != {method}", req.method));
+                }
+                if req.body != body {
+                    return Err(format!(
+                        "body mismatch: {} vs {} bytes",
+                        req.body.len(),
+                        body.len()
+                    ));
+                }
+                Ok(())
+            }
+            other => Err(format!("valid request failed to parse: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn every_strict_prefix_is_a_clean_4xx() {
+    check("truncations map to 4xx, never panic", 80, |g| {
+        let (wire, _, _) = gen_valid_request(g);
+        let cut = g.rng().below(wire.len() - 1) + 1; // 1..len-1: strictly inside
+        match parse(&wire[..cut]) {
+            Ok(Some(req)) => Err(format!(
+                "truncated at {cut}/{} parsed as a full request ({} body bytes)",
+                wire.len(),
+                req.body.len()
+            )),
+            Ok(None) => Err(format!("truncated at {cut} read as clean EOF")),
+            Err(e) => match e.status() {
+                Some(s) if (400..500).contains(&s) => Ok(()),
+                other => Err(format!("truncation at {cut} mapped to {other:?}")),
+            },
+        }
+    });
+}
+
+#[test]
+fn random_mutations_never_panic() {
+    check("byte mutations parse or error cleanly", 200, |g| {
+        let (mut wire, _, _) = gen_valid_request(g);
+        // flip up to 4 bytes anywhere in the message
+        for _ in 0..(g.rng().below(4) + 1) {
+            let i = g.rng().below(wire.len());
+            wire[i] = g.rng().below(256) as u8;
+        }
+        let _ = parse(&wire); // no panic is the property
+        Ok(())
+    });
+}
+
+#[test]
+fn hostile_sizes_do_not_allocate_unbounded() {
+    // a Content-Length of usize::MAX must be rejected before any
+    // allocation happens (the parser checks the limit first)
+    let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", usize::MAX);
+    assert_eq!(parse(huge.as_bytes()).err().unwrap().status(), Some(413));
+
+    // a header line that never ends is cut off at the line cap, not
+    // buffered forever — the parser reads it bounded and errors
+    let mut endless = b"GET / HTTP/1.1\r\nX-Endless: ".to_vec();
+    endless.resize(endless.len() + (1 << 20), b'a');
+    assert_eq!(parse(&endless).err().unwrap().status(), Some(431));
+
+    // a chunked stream claiming an enormous chunk is rejected at the
+    // size line, before reading the (absent) payload
+    let big_chunk = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffffff\r\n";
+    assert_eq!(parse(big_chunk).err().unwrap().status(), Some(413));
+
+    // an over-long chunk-size line cannot buffer unbounded either
+    let mut long_size = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+    long_size.resize(long_size.len() + (1 << 20), b'1');
+    let e = parse(&long_size).err().unwrap();
+    assert!(e.status().is_some_and(|s| (400..500).contains(&s)), "{e}");
+}
+
+#[test]
+fn pathological_but_valid_inputs_parse() {
+    // header value with embedded colons, odd casing, whitespace padding
+    let req = parse(
+        b"GET /x HTTP/1.1\r\ncOnTeNt-TyPe:   a:b:c  \r\n\r\n",
+    )
+    .unwrap()
+    .unwrap();
+    assert_eq!(req.header("content-type"), Some("a:b:c"));
+
+    // empty chunked body
+    let req = parse(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n")
+        .unwrap()
+        .unwrap();
+    assert!(req.body.is_empty());
+
+    // maximum allowed header count exactly at the limit
+    let lim = Limits::default();
+    let headers: String = (0..lim.max_headers).map(|i| format!("H{i}: v\r\n")).collect();
+    let wire = format!("GET / HTTP/1.1\r\n{headers}\r\n");
+    assert!(parse(wire.as_bytes()).unwrap().is_some());
+}
