@@ -32,8 +32,8 @@ use rwkvquant::calib::CalibSet;
 use rwkvquant::config::QuantConfig;
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    resolve_tick_threads, serve_collect_pool, Decoder, Request, Response, RunnerDecoder,
-    ServeStats,
+    resolve_tick_threads, serve_collect_pool_with, Decoder, PoolOpts, Request, Response,
+    RunnerDecoder, ServeOpts, ServeStats,
 };
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{dequantized_model, ppl, zeroshot};
@@ -47,6 +47,8 @@ use std::time::Instant;
 
 /// Serve a fixed request set drawn from the corpus through a decoder
 /// pool (one decoder per tick worker; `&mut [d]` of one is sequential).
+/// Prompts prefill in chunks of 8 — one tick per whole prompt here —
+/// which is token-identical to one-per-tick prefill by construction.
 fn serve_requests<D: Decoder + Send>(
     decoders: &mut [D],
     corpus: &BinCorpus,
@@ -58,7 +60,8 @@ fn serve_requests<D: Decoder + Send>(
             Request::new(id, corpus.valid[start..start + 8].to_vec(), 16)
         })
         .collect();
-    serve_collect_pool(decoders, requests, 8, Duration::from_millis(2))
+    let opts = ServeOpts::new(8, Duration::from_millis(2)).with_prefill_chunk(8);
+    serve_collect_pool_with(decoders, requests, &opts, PoolOpts::default())
 }
 
 fn main() -> rwkvquant::Result<()> {
@@ -181,11 +184,14 @@ fn main() -> rwkvquant::Result<()> {
     println!("packed greedy outputs match the dequantized reference on all {n_req} requests ✓");
     for (label, stats) in [("fp32 dense", &fp_stats), ("packed quant", &q_stats)] {
         println!(
-            "  {label:<12} {} req / {} tok in {:.2}s — {:.1} tok/s, p50 {:?} p95 {:?} p99 {:?}",
+            "  {label:<12} {} req / {} tok (+{} prefill) in {:.2}s — {:.1} tok/s, \
+             ttft p50 {:?}, p50 {:?} p95 {:?} p99 {:?}",
             stats.completed,
             stats.total_tokens,
+            stats.prompt_tokens,
             stats.wall.as_secs_f64(),
             stats.tokens_per_sec(),
+            stats.p50_ttft,
             stats.p50_latency,
             stats.p95_latency,
             stats.p99_latency
@@ -267,6 +273,10 @@ fn main() -> rwkvquant::Result<()> {
             anyhow::ensure!(
                 metrics.body_str().contains("rwkvquant_served_tokens_total"),
                 "metrics endpoint is missing the token counter"
+            );
+            anyhow::ensure!(
+                metrics.body_str().contains("rwkvquant_ttft_seconds"),
+                "metrics endpoint is missing the TTFT summary"
             );
             Ok(())
         };

@@ -37,7 +37,8 @@ appended there so they show on the workflow summary page.
 
 Usage:
     python3 python/check_bench_regression.py BASELINE CURRENT \
-        [--key speedup] [--threshold 0.10] [--no-summary] \
+        [--key speedup] [--max-key batch64.ttft_ms] \
+        [--threshold 0.10] [--no-summary] \
         [--history bench_history.jsonl] [--sha SHA] [--run-date DATE] \
         [--require-armed]
 """
@@ -56,6 +57,9 @@ SUMMARY_KEYS = [
     "quant.tokens_per_sec",
     "quant_threaded.tokens_per_sec",
     "pool_vs_spawn",
+    "batch64.tokens_per_sec",
+    "batch64.prefill_tokens_per_sec",
+    "batch64.ttft_ms",
 ]
 
 # Columns of the --history table: (header, dotted key in BENCH_serve).
@@ -65,6 +69,8 @@ HISTORY_COLUMNS = [
     ("fp32 tok/s", "fp32.tokens_per_sec"),
     ("pool tok/s", "quant_threaded.tokens_per_sec"),
     ("pool/spawn", "pool_vs_spawn"),
+    ("b64 tok/s", "batch64.tokens_per_sec"),
+    ("b64 ttft ms", "batch64.ttft_ms"),
 ]
 
 HISTORY_SHOWN_RUNS = 5
@@ -98,7 +104,7 @@ def load_json(path):
         return None, f"{path} is not valid JSON: {e}"
 
 
-def trajectory_summary(base, cur, gate_key, threshold):
+def trajectory_summary(base, cur, gate_key, threshold, max_key=None):
     """Render the delta table; returns the lines (also printed)."""
     lines = ["", "perf trajectory (baseline -> current):"]
     for key in SUMMARY_KEYS:
@@ -106,7 +112,12 @@ def trajectory_summary(base, cur, gate_key, threshold):
         if new is None:
             continue
         old = try_lookup(base, key) if base is not None else None
-        gate_mark = "  [gated ±{:.0%}]".format(threshold) if key == gate_key else ""
+        if key == gate_key:
+            gate_mark = "  [gated -{:.0%}]".format(threshold)
+        elif key == max_key:
+            gate_mark = "  [gated +{:.0%}]".format(threshold)
+        else:
+            gate_mark = ""
         if old in (None, 0.0):
             lines.append(f"  {key:<30} {'-':>10} -> {new:10.2f}{gate_mark}")
         else:
@@ -230,6 +241,12 @@ def main():
         help="dotted metric key to gate on (default: packed served throughput)",
     )
     parser.add_argument(
+        "--max-key",
+        default=None,
+        help="dotted metric key gated UPWARD — higher is worse (e.g. "
+        "batch64.ttft_ms): fail when it grows past baseline*(1+threshold)",
+    )
+    parser.add_argument(
         "--no-summary",
         action="store_true",
         help="skip the trajectory table (second gate invocation in CI)",
@@ -270,6 +287,13 @@ def main():
         print(f"FAIL: current bench output has no '{args.key}' metric")
         return 2
     print(f"current  {args.key} = {new:.2f}")
+    max_new = None
+    if args.max_key:
+        max_new = try_lookup(cur, args.max_key)
+        if max_new is None:
+            print(f"FAIL: current bench output has no '{args.max_key}' metric")
+            return 2
+        print(f"current  {args.max_key} = {max_new:.2f}")
 
     if args.history:
         run_date = args.run_date or datetime.datetime.now(datetime.timezone.utc).date().isoformat()
@@ -296,7 +320,7 @@ def main():
     floor = old * (1.0 - args.threshold)
     print(f"baseline {args.key} = {old:.2f} (floor at -{args.threshold:.0%}: {floor:.2f})")
     if not args.no_summary:
-        trajectory_summary(base, cur, args.key, args.threshold)
+        trajectory_summary(base, cur, args.key, args.threshold, args.max_key)
     if new < floor:
         print(
             f"FAIL: {args.key} regressed {1.0 - new / old:.1%} "
@@ -305,6 +329,33 @@ def main():
         return 1
     delta = new / old - 1.0
     print(f"OK: {args.key} changed {delta:+.1%}")
+
+    # upward-bound gate: latency-style metrics regress by GROWING
+    if args.max_key:
+        old_max = try_lookup(base, args.max_key)
+        if old_max is None:
+            print(
+                f"WARNING: baseline has no '{args.max_key}' metric — "
+                "upward gate skipped until a newer baseline is committed"
+            )
+        elif old_max <= 0.0:
+            print(
+                f"WARNING: baseline '{args.max_key}' is {old_max:.2f} — "
+                "upward gate skipped (unmeasured placeholder value)"
+            )
+        else:
+            ceiling = old_max * (1.0 + args.threshold)
+            print(
+                f"baseline {args.max_key} = {old_max:.2f} "
+                f"(ceiling at +{args.threshold:.0%}: {ceiling:.2f})"
+            )
+            if max_new > ceiling:
+                print(
+                    f"FAIL: {args.max_key} grew {max_new / old_max - 1.0:+.1%} "
+                    f"(> +{args.threshold:.0%} allowed)"
+                )
+                return 1
+            print(f"OK: {args.max_key} changed {max_new / old_max - 1.0:+.1%}")
     return 0
 
 

@@ -8,7 +8,8 @@ Stdlib only. The script:
   3. streams a completion (SSE over chunked transfer), checks the
      incremental token events agree with the final `done` event,
   4. repeats the request with `"stream": false` and requires identical
-     tokens,
+     tokens, then sends a 96-token prompt through the chunked-prefill
+     path and requires `0 < ttft_ms < latency_ms` in the response,
   5. runs the in-process twin (`serve --prompt ... --print-tokens`) on
      the same store and **gates on token-identical output**,
   6. scrapes /metrics and checks the serving counters,
@@ -128,6 +129,7 @@ def main() -> None:
             binary, "serve", "--store", str(store),
             "--http", f"127.0.0.1:{port}",
             "--max-queue", "8", "--batch", "4", "--tick-threads", "2",
+            "--prefill-chunk", "16",
         ]
     )
     try:
@@ -143,6 +145,28 @@ def main() -> None:
         if collected != streamed:
             raise SystemExit(f"stream={streamed} != collected={collected}")
         log("stream / non-stream agreement OK")
+
+        # long prompt: chunked prefill (16 tokens/tick here) must report
+        # a first-token time strictly inside the total request latency
+        long_prompt = [(i * 7 + 1) % 512 for i in range(96)]
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+        payload = json.dumps({"prompt": long_prompt, "gen_len": GEN_LEN, "stream": False})
+        conn.request(
+            "POST", "/v1/generate", body=payload,
+            headers={"Content-Type": "application/json"},
+        )
+        resp = conn.getresponse()
+        body = resp.read().decode()
+        conn.close()
+        if resp.status != 200:
+            raise SystemExit(f"long-prompt request answered {resp.status}: {body}")
+        doc = json.loads(body)
+        ttft, latency = doc["ttft_ms"], doc["latency_ms"]
+        if not 0.0 < ttft < latency:
+            raise SystemExit(f"TTFT {ttft}ms must sit strictly inside latency {latency}ms")
+        if len(doc["tokens"]) != GEN_LEN:
+            raise SystemExit(f"long-prompt generation returned {len(doc['tokens'])} tokens")
+        log(f"long-prompt TTFT OK ({ttft:.3f} ms of {latency:.3f} ms)")
 
         # in-process twin on the same store must produce identical tokens
         twin = subprocess.run(
@@ -171,6 +195,11 @@ def main() -> None:
         metric_value(text, "rwkvquant_requests_shed_total")  # present even at 0
         metric_value(text, "rwkvquant_served_tokens_per_sec")
         metric_value(text, "rwkvquant_queue_depth")
+        prefill = metric_value(text, "rwkvquant_prefill_tokens_total")
+        if prefill < len(long_prompt):
+            raise SystemExit(f"prefill_tokens_total {prefill} < {len(long_prompt)}")
+        if metric_value(text, "rwkvquant_ttft_seconds_count") < 3:
+            raise SystemExit("ttft summary saw fewer requests than we sent")
         log("metrics OK")
 
         log("sending SIGTERM for a graceful drain …")

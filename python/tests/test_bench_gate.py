@@ -15,6 +15,7 @@ CURRENT = {
     "fp32": {"tokens_per_sec": 100.0},
     "quant": {"tokens_per_sec": 250.0},
     "quant_threaded": {"tokens_per_sec": 400.0},
+    "batch64": {"tokens_per_sec": 900.0, "ttft_ms": 12.0},
     "speedup": 2.5,
 }
 
@@ -65,6 +66,62 @@ def test_regression_beyond_threshold_fails(tmp_path):
     rc, out = run_gate(tmp_path, base, CURRENT, "--key", "speedup", "--threshold", "0.10")
     assert rc == 1
     assert "FAIL" in out
+
+
+def test_max_key_passes_when_latency_holds(tmp_path):
+    base = {"speedup": 2.4, "batch64": {"ttft_ms": 11.5}}
+    rc, out = run_gate(
+        tmp_path, base, CURRENT, "--key", "speedup",
+        "--max-key", "batch64.ttft_ms", "--threshold", "0.10",
+    )
+    assert rc == 0
+    assert "OK: batch64.ttft_ms" in out
+    # the trajectory table marks both gates, in opposite directions
+    assert "[gated -10%]" in out
+    assert "[gated +10%]" in out
+
+
+def test_max_key_fails_when_latency_grows_past_ceiling(tmp_path):
+    # current ttft 12.0 vs baseline 10.0 = +20% > the 10% ceiling
+    base = {"speedup": 2.4, "batch64": {"ttft_ms": 10.0}}
+    rc, out = run_gate(
+        tmp_path, base, CURRENT, "--key", "speedup",
+        "--max-key", "batch64.ttft_ms", "--threshold", "0.10",
+    )
+    assert rc == 1
+    assert "FAIL: batch64.ttft_ms grew" in out
+
+
+def test_max_key_skips_on_old_baseline_without_the_metric(tmp_path):
+    # baselines predating the batch64 section must not fail the gate
+    base = {"speedup": 2.4}
+    rc, out = run_gate(
+        tmp_path, base, CURRENT, "--key", "speedup",
+        "--max-key", "batch64.ttft_ms",
+    )
+    assert rc == 0
+    assert "upward gate skipped" in out
+
+
+def test_max_key_skips_on_placeholder_zero_baseline(tmp_path):
+    # a provisional-style 0 would make ANY measured ttft a failure
+    base = {"speedup": 2.4, "batch64": {"ttft_ms": 0}}
+    rc, out = run_gate(
+        tmp_path, base, CURRENT, "--key", "speedup",
+        "--max-key", "batch64.ttft_ms",
+    )
+    assert rc == 0
+    assert "upward gate skipped" in out
+
+
+def test_max_key_missing_in_current_run_hard_fails(tmp_path):
+    cur = {k: v for k, v in CURRENT.items() if k != "batch64"}
+    rc, out = run_gate(
+        tmp_path, {"speedup": 2.4, "batch64": {"ttft_ms": 10.0}}, cur,
+        "--key", "speedup", "--max-key", "batch64.ttft_ms",
+    )
+    assert rc == 2
+    assert "no 'batch64.ttft_ms' metric" in out
 
 
 def test_broken_current_run_hard_fails(tmp_path):

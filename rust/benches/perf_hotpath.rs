@@ -7,7 +7,8 @@
 use rwkvquant::config::{Method, ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    serve_collect_per_tick_spawn, serve_collect_pool, Request, RunnerDecoder,
+    serve_collect_per_tick_spawn, serve_collect_pool, serve_collect_pool_with, PoolOpts,
+    Request, RunnerDecoder, ServeOpts,
 };
 use rwkvquant::experiments::build_model;
 use rwkvquant::model::rwkv::{init_params, RwkvRunner};
@@ -91,6 +92,42 @@ fn main() {
             pool_tps / spawn_tps.max(1e-9),
             t_pool.as_secs_f64() * 1e3,
             t_spawn.as_secs_f64() * 1e3,
+        );
+    }
+
+    // chunked prefill vs legacy one-token-per-tick on a long prompt
+    // (same tokens by construction; the win is ticks and TTFT, not
+    // per-step work — see coordinator::serve::TickParams)
+    {
+        let m3 = build_model("rwkv6", "3B", 17);
+        let vocab = m3.config.vocab;
+        let requests = || -> Vec<Request> {
+            (0..4u64)
+                .map(|id| {
+                    let prompt: Vec<usize> =
+                        (0..128).map(|i| (id as usize * 29 + i * 3 + 1) % vocab).collect();
+                    Request::new(id, prompt, 8)
+                })
+                .collect()
+        };
+        let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(2, 4);
+        let mut decs: Vec<_> = (0..lanes).map(|_| RunnerDecoder::new(&m3)).collect();
+        let run = |decs: &mut Vec<_>, chunk: usize| {
+            let opts = ServeOpts::new(4, Duration::from_millis(1)).with_prefill_chunk(chunk);
+            serve_collect_pool_with(decs, requests(), &opts, PoolOpts::default()).unwrap().0
+        };
+        run(&mut decs, 32); // warm-up
+        let (one, t_one) =
+            b.once("prefill 128-tok prompt, chunk 1", || run(&mut decs, 1));
+        let (chunked, t_chunked) =
+            b.once("prefill 128-tok prompt, chunk 32", || run(&mut decs, 32));
+        println!(
+            "prefill chunk 32 vs 1 (128-tok prompts, {lanes} lanes): \
+             ttft p50 {:?} vs {:?} ({:.0} ms vs {:.0} ms wall)",
+            chunked.p50_ttft,
+            one.p50_ttft,
+            t_chunked.as_secs_f64() * 1e3,
+            t_one.as_secs_f64() * 1e3,
         );
     }
 

@@ -15,7 +15,8 @@
 
 use rwkvquant::config::Method;
 use rwkvquant::coordinator::serve::{
-    serve_collect_per_tick_spawn, serve_collect_pool, Request, RunnerDecoder, ServeStats,
+    serve_collect_per_tick_spawn, serve_collect_pool, serve_collect_pool_with, PoolOpts,
+    Request, RunnerDecoder, ServeOpts, ServeStats,
 };
 use rwkvquant::experiments::{bench_config, build_model, fast_mode};
 use rwkvquant::model::flops::{rwkv_step, CostModel};
@@ -186,6 +187,34 @@ fn main() {
     println!("threaded-tick speedup (×{tick_threads} pool vs sequential): {mt_speedup:.2}x");
     println!("persistent pool vs per-tick spawn (×{tick_threads}): {pool_vs_spawn:.2}x");
 
+    // ---- (e) batch-64 saturation: chunked prefill TTFT on the packed
+    //          path — the time-to-first-token a loaded deployment sees ----
+    let (b64_prompt, b64_gen) = if fast_mode() { (16usize, 2usize) } else { (64, 8) };
+    let b64_chunk = 32usize;
+    let b64_req = 64u64;
+    let mut b64_decoders: Vec<_> =
+        (0..tick_threads.max(1)).map(|_| RunnerDecoder::new(&qm)).collect();
+    let b64_requests: Vec<Request> = (0..b64_req)
+        .map(|id| {
+            let prompt: Vec<usize> =
+                (0..b64_prompt).map(|i| (id as usize * 13 + i * 5 + 1) % qm.config.vocab).collect();
+            Request::new(id, prompt, b64_gen)
+        })
+        .collect();
+    let b64_opts =
+        ServeOpts::new(64, Duration::from_millis(1)).with_prefill_chunk(b64_chunk);
+    let (b64_stats, _) =
+        serve_collect_pool_with(&mut b64_decoders, b64_requests, &b64_opts, PoolOpts::default())
+            .unwrap();
+    let b64_ttft_ms = b64_stats.p50_ttft.as_secs_f64() * 1e3;
+    println!(
+        "batch-64 (prompt {b64_prompt}, chunk {b64_chunk}): {:.1} tok/s gen, \
+         {:.1} tok/s prefill, ttft p50 {:?}",
+        b64_stats.tokens_per_sec(),
+        b64_stats.prefill_tokens_per_sec(),
+        b64_stats.p50_ttft,
+    );
+
     // perf-trajectory baseline for future PRs (the CI bench-baseline job
     // gates on `speedup`, with an absolute quant.tokens_per_sec backstop
     // — see python/check_bench_regression.py)
@@ -218,6 +247,17 @@ fn main() {
                 .set("spawn_tokens_per_sec", q_spawn_stats.tokens_per_sec()),
         )
         .set("pool_vs_spawn", pool_vs_spawn)
+        .set(
+            "batch64",
+            Json::obj()
+                .set("requests", b64_req as usize)
+                .set("prompt_len", b64_prompt)
+                .set("gen_len", b64_gen)
+                .set("prefill_chunk", b64_chunk)
+                .set("tokens_per_sec", b64_stats.tokens_per_sec())
+                .set("prefill_tokens_per_sec", b64_stats.prefill_tokens_per_sec())
+                .set("ttft_ms", b64_ttft_ms),
+        )
         .set("speedup", speedup);
     match std::fs::write("BENCH_serve.json", bench.render()) {
         Ok(()) => println!("wrote BENCH_serve.json"),

@@ -4,5 +4,6 @@
 pub mod batcher;
 pub mod pipeline;
 pub mod serve;
+pub mod statepool;
 
 pub use pipeline::{quantize_model, PipelineReport, QuantizedLayers};

@@ -3,12 +3,25 @@
 //!
 //! Clients submit [`Request`]s through a channel; the serving loop
 //! admits them via the [`super::batcher::DynamicBatcher`] and advances
-//! the whole active set one token per tick (round-robin continuous
+//! the whole active set once per tick (round-robin continuous
 //! batching — per-token fairness like vLLM's scheduler, at the
-//! granularity this single-stream CPU decoder supports). Completion,
-//! latency and throughput are reported per request. An idle server
-//! blocks on the request channel with a bounded timeout instead of
-//! spinning a core.
+//! granularity this single-stream CPU decoder supports). A sequence
+//! still consuming its prompt advances up to
+//! [`ServeOpts::prefill_chunk`] prompt tokens inside one tick, so a
+//! long prompt reaches its first generated token in
+//! `⌈prompt/chunk⌉ + 1` ticks instead of `prompt + 1`; generation stays
+//! one token per tick. Completion, latency, time-to-first-token and
+//! throughput are reported per request. An idle server blocks on the
+//! request channel with a bounded timeout instead of spinning a core.
+//!
+//! Sequence state lives in a slab arena ([`super::statepool`]): each
+//! admitted sequence checks a fixed-size slab out and tick workers
+//! read/write it in place, so a warmed-up tick allocates nothing. When
+//! [`ServeOpts::state_slots`] bounds the arena below the active set,
+//! each tick runs in waves of at most `slots` resident sequences and
+//! the loop parks/resumes the least-recently-ticked residents around
+//! each wave — pure `f32` snapshots, token-identical to unbounded
+//! allocation.
 //!
 //! The [`RunnerDecoder`] is generic over [`WeightProvider`], so the same
 //! server loop decodes from the dense fp32 store or straight from a
@@ -25,6 +38,7 @@
 //! the cold-scratch cost on every token.
 
 use super::batcher::DynamicBatcher;
+use super::statepool::StatePool;
 use crate::model::WeightProvider;
 use crate::tensor::stats;
 use crate::Result;
@@ -49,6 +63,38 @@ pub trait Decoder {
     /// sequence states in and out of the decoder between ticks)
     fn save_state(&self) -> Vec<Vec<f32>>;
     fn load_state(&mut self, state: &[Vec<f32>]);
+    /// Total floats in one state snapshot — the flat layout's length.
+    /// The default derives it from [`Decoder::save_state`] (allocates;
+    /// called once per serve session, so only decoders on the hot path
+    /// need to override).
+    fn state_len(&self) -> usize {
+        self.save_state().iter().map(|v| v.len()).sum()
+    }
+    /// [`Decoder::save_state`] flattened into a caller-owned slab of
+    /// exactly [`Decoder::state_len`] floats — the tick loop's
+    /// allocation-free form (the slab is a `StatePool` arena slot). The
+    /// flat layout is the nested layout concatenated in order; the
+    /// default bridges through `save_state` and decoders on the hot
+    /// path should override with straight `copy_from_slice`s.
+    fn save_state_into(&self, out: &mut [f32]) {
+        let mut off = 0usize;
+        for v in self.save_state() {
+            out[off..off + v.len()].copy_from_slice(&v);
+            off += v.len();
+        }
+    }
+    /// Restore from the flat layout written by
+    /// [`Decoder::save_state_into`]. Default bridges through the nested
+    /// form (allocates); hot-path decoders should override.
+    fn load_state_flat(&mut self, state: &[f32]) {
+        let mut nested = self.save_state();
+        let mut off = 0usize;
+        for v in nested.iter_mut() {
+            v.copy_from_slice(&state[off..off + v.len()]);
+            off += v.len();
+        }
+        self.load_state(&nested);
+    }
 }
 
 /// Resolve the `--tick-threads` knob: `0` means auto-detect one lane
@@ -79,8 +125,10 @@ pub enum StreamEvent {
     /// One generated (non-prompt) token, in generation order.
     Token(usize),
     /// Generation finished; the final [`Response`] carries the same
-    /// tokens. Sent before the per-request sender is dropped.
-    Done { latency: Duration },
+    /// tokens. Sent before the per-request sender is dropped. `ttft` is
+    /// the admission-to-first-generated-token delay (zero when
+    /// `gen_len` was 0).
+    Done { latency: Duration, ttft: Duration },
     /// Rejected at admission: the bounded queue ([`ServeOpts::max_queue`])
     /// was full. No other event follows (HTTP maps this to 429).
     Shed,
@@ -116,6 +164,11 @@ pub struct Response {
     pub tokens: Vec<usize>,
     pub queued: Duration,
     pub latency: Duration,
+    /// Time to first token: admission → first *generated* token (the
+    /// whole prompt must be consumed first, so this is the prefill cost
+    /// the client observes). Zero when `gen_len` was 0 or the request
+    /// was shed.
+    pub ttft: Duration,
     /// The request was shed at admission (bounded queue full) and never
     /// decoded; `tokens` is empty and the timings are zero.
     pub shed: bool,
@@ -140,11 +193,31 @@ pub struct ServeStats {
     pub p50_admission_wait: Duration,
     pub p95_admission_wait: Duration,
     pub p99_admission_wait: Duration,
+    /// Prompt tokens consumed across all completed-or-active sequences
+    /// (prefill work — `total_tokens` counts only generated tokens).
+    pub prompt_tokens: usize,
+    /// Ceil-rank percentiles of time-to-first-token (admission → first
+    /// generated token).
+    pub p50_ttft: Duration,
+    pub p95_ttft: Duration,
+    pub p99_ttft: Duration,
+    /// State-arena evictions: a live sequence's slab snapshot out to
+    /// heap because the bounded arena was needed for another wave.
+    pub state_parks: u64,
+    /// Parked snapshots copied back into an arena slab (every sequence
+    /// resumes at least once: its first residency).
+    pub state_resumes: u64,
 }
 
 impl ServeStats {
     pub fn tokens_per_sec(&self) -> f64 {
         self.total_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Prompt tokens consumed per wall-clock second (prefill
+    /// throughput; generated tokens are [`ServeStats::tokens_per_sec`]).
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        self.prompt_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 }
 
@@ -160,15 +233,35 @@ pub struct ServeOpts {
     /// already queued is shed ([`StreamEvent::Shed`] + a `shed`
     /// [`Response`]). `None` = unbounded (the in-process default).
     pub max_queue: Option<usize>,
+    /// Prompt tokens a sequence in prefill consumes per tick (≥ 1).
+    /// `1` reproduces the historical one-token-per-tick behaviour; the
+    /// CLI and gateway default to 32. Token-identical for any value:
+    /// greedy generation depends only on the post-prompt state.
+    pub prefill_chunk: usize,
+    /// State-arena slabs ([`StatePool`]). `None` = one per batch slot
+    /// (`max_batch`), which keeps every active sequence resident.
+    /// Smaller bounds the hot state footprint below the active set and
+    /// the loop parks/evicts/resumes around tick waves instead.
+    pub state_slots: Option<usize>,
 }
 
 impl ServeOpts {
     pub fn new(max_batch: usize, max_wait: Duration) -> ServeOpts {
-        ServeOpts { max_batch, max_wait, max_queue: None }
+        ServeOpts { max_batch, max_wait, max_queue: None, prefill_chunk: 1, state_slots: None }
     }
 
     pub fn with_max_queue(mut self, cap: usize) -> ServeOpts {
         self.max_queue = Some(cap);
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> ServeOpts {
+        self.prefill_chunk = chunk.max(1);
+        self
+    }
+
+    pub fn with_state_slots(mut self, slots: usize) -> ServeOpts {
+        self.state_slots = Some(slots.max(1));
         self
     }
 }
@@ -185,6 +278,11 @@ pub trait ServeObserver: Sync {
     fn on_admitted(&self, _wait: Duration) {}
     /// A tick produced `n` generated (non-prompt) tokens.
     fn on_tokens(&self, _n: usize) {}
+    /// A tick consumed `n` prompt tokens (prefill work).
+    fn on_prefill_tokens(&self, _n: usize) {}
+    /// A sequence produced its first generated token, `ttft` after
+    /// admission.
+    fn on_first_token(&self, _ttft: Duration) {}
     /// A request was shed at admission (bounded queue full).
     fn on_shed(&self) {}
     /// A request finished decoding.
@@ -212,7 +310,22 @@ struct Active {
     req: Request,
     arrived: Instant,
     started: Instant,
-    state: Vec<Vec<f32>>,
+    /// This sequence's resident state slab inside the serve session's
+    /// [`StatePool`] arena, or `None` while parked.
+    slab: Option<super::statepool::Slab>,
+    /// Raw pointer to the slab's floats, refreshed by the serve loop
+    /// right before each tick wave (slots move under park/resume and
+    /// `swap_remove`). Workers dereference it through [`tick_one`]; see
+    /// the safety notes on [`Chunk`] and [`StatePool::slab_ptr`].
+    state_ptr: *mut f32,
+    /// Heap snapshot of the state while parked; doubles as the staging
+    /// buffer holding the fresh init state before first residency. Its
+    /// capacity is reused across parks, so steady-state eviction
+    /// allocates nothing.
+    parked: Vec<f32>,
+    /// Wave serial of the last tick that advanced this sequence — the
+    /// LRU key for choosing park victims.
+    last_wave: u64,
     logits: Vec<f32>,
     generated: Vec<usize>,
     prompt_pos: usize,
@@ -220,27 +333,120 @@ struct Active {
     /// event stream (the serve thread flushes the delta after each
     /// tick, so workers never touch the sender).
     streamed: usize,
+    /// Admission → first generated token, set once by the serve thread.
+    ttft: Option<Duration>,
 }
 
-/// Advance one sequence by one token: swap its state in, feed the next
-/// prompt token or the greedy continuation, swap the state back out.
-/// Returns whether a generated (non-prompt) token was produced. The
-/// logits buffer is reused in place (`step_into`), so a warmed-up
-/// sequence ticks without allocating.
-fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active) -> bool {
-    decoder.load_state(&a.state);
-    let (tok, generated) = if a.prompt_pos < a.req.prompt.len() {
-        let t = a.req.prompt[a.prompt_pos];
-        a.prompt_pos += 1;
-        (t, false)
+// SAFETY: the raw `state_ptr` is what suppresses the auto impl. It names
+// this sequence's exclusive arena slab; `Active`s cross threads only as
+// disjoint tick chunks while the serve thread (which owns the arena) is
+// quiescent, so no two threads ever reach the same slab. See `Chunk` and
+// `StatePool::slab_ptr`.
+unsafe impl Send for Active {}
+
+/// Per-tick parameters every chunk job carries (workers have no other
+/// channel to the serve loop's options).
+#[derive(Debug, Clone, Copy)]
+struct TickParams {
+    prefill_chunk: usize,
+    state_len: usize,
+}
+
+/// What one tick (or one chunk of it) accomplished.
+#[derive(Debug, Clone, Copy, Default)]
+struct TickWork {
+    /// Generated (non-prompt) tokens produced.
+    generated: usize,
+    /// Prompt tokens consumed (prefill).
+    prefill: usize,
+}
+
+impl std::ops::AddAssign for TickWork {
+    fn add_assign(&mut self, rhs: TickWork) {
+        self.generated += rhs.generated;
+        self.prefill += rhs.prefill;
+    }
+}
+
+impl std::iter::Sum for TickWork {
+    fn sum<I: Iterator<Item = TickWork>>(iter: I) -> TickWork {
+        iter.fold(TickWork::default(), |mut acc, w| {
+            acc += w;
+            acc
+        })
+    }
+}
+
+/// Advance one sequence by one tick: load its state slab, feed up to
+/// `prefill_chunk` prompt tokens (while in prefill) or one greedy
+/// continuation token, write the state back into the slab in place.
+/// Greedy output depends only on the post-prompt state, so the chunk
+/// size cannot change the generated tokens — only how many ticks the
+/// prompt costs. With the slab resident and the logits buffer reused
+/// (`step_into`), a warmed-up sequence ticks without allocating.
+fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickParams) -> TickWork {
+    // SAFETY: `state_ptr` names this sequence's exclusive arena slab of
+    // `state_len` floats, refreshed for this tick by the serve loop; no
+    // other lane touches it (chunks are disjoint) and the serve thread
+    // is quiescent until every chunk is acked.
+    let state = unsafe { std::slice::from_raw_parts_mut(a.state_ptr, params.state_len) };
+    decoder.load_state_flat(state);
+    let mut work = TickWork::default();
+    if a.prompt_pos < a.req.prompt.len() {
+        let n = params.prefill_chunk.max(1).min(a.req.prompt.len() - a.prompt_pos);
+        for _ in 0..n {
+            let t = a.req.prompt[a.prompt_pos];
+            a.prompt_pos += 1;
+            decoder.step_into(t, &mut a.logits);
+        }
+        work.prefill = n;
     } else {
         let next = stats::argmax(&a.logits);
         a.generated.push(next);
-        (next, true)
-    };
-    decoder.step_into(tok, &mut a.logits);
-    a.state = decoder.save_state();
-    generated
+        decoder.step_into(next, &mut a.logits);
+        work.generated = 1;
+    }
+    decoder.save_state_into(state);
+    work
+}
+
+/// Estimated cost of one sequence's next tick, in decoder steps: a
+/// sequence mid-prefill consumes up to `prefill_chunk` prompt tokens, a
+/// decoding sequence exactly one.
+fn seq_cost(a: &Active, prefill_chunk: usize) -> usize {
+    let remaining = a.req.prompt.len().saturating_sub(a.prompt_pos);
+    if remaining > 0 {
+        remaining.min(prefill_chunk.max(1))
+    } else {
+        1
+    }
+}
+
+/// Split `costs` into at most `max_chunks` contiguous `(start, end)`
+/// ranges balanced by total cost: greedily close a range once it
+/// reaches `⌈total/max_chunks⌉`. With equal costs this reproduces the
+/// old equal-count split; with mixed prefill/decode ticks a heavy
+/// prefill sequence gets a range (near-)to itself instead of
+/// serializing a whole lane behind `chunk−1` cheap neighbours. Every
+/// closed range costs ≥ the target, so the range count never exceeds
+/// `max_chunks`.
+fn cost_balanced_bounds(costs: &[usize], max_chunks: usize) -> Vec<(usize, usize)> {
+    let total: usize = costs.iter().sum();
+    let target = total.div_ceil(max_chunks.max(1)).max(1);
+    let mut bounds = Vec::with_capacity(max_chunks.min(costs.len()));
+    let (mut start, mut acc) = (0usize, 0usize);
+    for (i, &c) in costs.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            bounds.push((start, i + 1));
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    if start < costs.len() {
+        bounds.push((start, costs.len()));
+    }
+    bounds
 }
 
 /// How one continuous-batching tick executes: sequentially on a single
@@ -248,11 +454,13 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active) -> bool {
 /// written once against this.
 trait TickEngine {
     fn vocab(&self) -> usize;
-    /// Fresh recurrent state for a newly-admitted sequence.
-    fn init_state(&mut self) -> Vec<Vec<f32>>;
-    /// Advance every active sequence one token; returns the number of
-    /// generated (non-prompt) tokens.
-    fn tick(&mut self, active: &mut [Active]) -> usize;
+    /// Floats per sequence-state slab (see [`Decoder::state_len`]).
+    fn state_len(&self) -> usize;
+    /// Write a fresh sequence's state into `out` (`state_len` floats).
+    fn init_state_into(&mut self, out: &mut [f32]);
+    /// Advance every active sequence one tick; every sequence must have
+    /// a live `state_ptr` (the serve loop guarantees residency).
+    fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork;
 }
 
 struct Sequential<'d, D: Decoder>(&'d mut D);
@@ -262,13 +470,17 @@ impl<D: Decoder> TickEngine for Sequential<'_, D> {
         self.0.vocab()
     }
 
-    fn init_state(&mut self) -> Vec<Vec<f32>> {
-        self.0.reset();
-        self.0.save_state()
+    fn state_len(&self) -> usize {
+        self.0.state_len()
     }
 
-    fn tick(&mut self, active: &mut [Active]) -> usize {
-        active.iter_mut().map(|a| usize::from(tick_one(self.0, a))).sum()
+    fn init_state_into(&mut self, out: &mut [f32]) {
+        self.0.reset();
+        self.0.save_state_into(out);
+    }
+
+    fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork {
+        active.iter_mut().map(|a| tick_one(self.0, a, params)).sum()
     }
 }
 
@@ -285,17 +497,23 @@ impl<D: Decoder + Send> TickEngine for SpawnPerTick<'_, D> {
         self.0[0].vocab()
     }
 
-    fn init_state(&mut self) -> Vec<Vec<f32>> {
-        self.0[0].reset();
-        self.0[0].save_state()
+    fn state_len(&self) -> usize {
+        self.0[0].state_len()
     }
 
-    fn tick(&mut self, active: &mut [Active]) -> usize {
+    fn init_state_into(&mut self, out: &mut [f32]) {
+        self.0[0].reset();
+        self.0[0].save_state_into(out);
+    }
+
+    fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork {
         let workers = self.0.len().min(active.len());
         if workers <= 1 {
             let dec = &mut self.0[0];
-            return active.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum();
+            return active.iter_mut().map(|a| tick_one(dec, a, params)).sum();
         }
+        // equal-count split kept on purpose: this engine is the measured
+        // baseline, including for the cost-weighted split above it
         let chunk = active.len().div_ceil(workers);
         std::thread::scope(|s| {
             let handles: Vec<_> = active
@@ -303,7 +521,7 @@ impl<D: Decoder + Send> TickEngine for SpawnPerTick<'_, D> {
                 .zip(self.0.iter_mut())
                 .map(|(slice, dec)| {
                     s.spawn(move || {
-                        slice.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum::<usize>()
+                        slice.iter_mut().map(|a| tick_one(dec, a, params)).sum::<TickWork>()
                     })
                 })
                 .collect();
@@ -330,6 +548,9 @@ const CHUNK_OVERSUB: usize = 4;
 struct Chunk {
     ptr: *mut Active,
     len: usize,
+    /// Tick options the worker needs (prefill chunk size, slab length);
+    /// chunks are a worker's only channel to the serve loop's policy.
+    params: TickParams,
 }
 
 // SAFETY: a Chunk is a uniquely-owned disjoint window of the active set,
@@ -340,9 +561,10 @@ unsafe impl Send for Chunk {}
 
 /// What a worker reports back after processing a chunk.
 enum Ack {
-    /// Number of generated (non-prompt) tokens in the chunk, plus the
-    /// worker's thread id (lifecycle tests assert thread reuse with it).
-    Done { generated: usize, worker: ThreadId },
+    /// Work accomplished in the chunk (generated + prefill tokens),
+    /// plus the worker's thread id (lifecycle tests assert thread reuse
+    /// with it).
+    Done { work: TickWork, worker: ThreadId },
     /// The decoder panicked mid-chunk; the pool re-raises on the serve
     /// thread so shutdown stays deterministic (drop → join).
     Panicked,
@@ -415,11 +637,12 @@ fn pool_worker<D: Decoder>(dec: &mut D, injector: &Injector, done: &mpsc::Sender
     while let Some(chunk) = injector.claim_blocking() {
         // SAFETY: see `Chunk` — disjoint window, alive until acked.
         let slice = unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.len) };
+        let params = chunk.params;
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            slice.iter_mut().map(|a| usize::from(tick_one(dec, a))).sum::<usize>()
+            slice.iter_mut().map(|a| tick_one(dec, a, params)).sum::<TickWork>()
         }));
         let ack = match outcome {
-            Ok(generated) => Ack::Done { generated, worker: std::thread::current().id() },
+            Ok(work) => Ack::Done { work, worker: std::thread::current().id() },
             Err(_) => Ack::Panicked,
         };
         let poisoned = matches!(ack, Ack::Panicked);
@@ -515,51 +738,65 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
         self.lead.vocab()
     }
 
-    fn init_state(&mut self) -> Vec<Vec<f32>> {
-        self.lead.reset();
-        self.lead.save_state()
+    fn state_len(&self) -> usize {
+        self.lead.state_len()
     }
 
-    fn tick(&mut self, active: &mut [Active]) -> usize {
+    fn init_state_into(&mut self, out: &mut [f32]) {
+        self.lead.reset();
+        self.lead.save_state_into(out);
+    }
+
+    fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork {
         self.ticks += 1;
         let (Some(injector), Some(done_rx)) = (self.injector, self.done_rx.as_ref()) else {
             // single-lane pool: tick sequentially on the lead decoder
-            return active.iter_mut().map(|a| usize::from(tick_one(&mut *self.lead, a))).sum();
+            return active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params)).sum();
         };
         if active.len() <= 1 {
-            return active.iter_mut().map(|a| usize::from(tick_one(&mut *self.lead, a))).sum();
+            return active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params)).sum();
         }
         let lanes = self.spawned + 1;
-        let n_chunks = active.len().min(lanes * CHUNK_OVERSUB);
-        let chunk = active.len().div_ceil(n_chunks);
-        let queued = injector.push_tick(
-            active
-                .chunks_mut(chunk)
-                .map(|slice| Chunk { ptr: slice.as_mut_ptr(), len: slice.len() }),
-        );
+        let max_chunks = active.len().min(lanes * CHUNK_OVERSUB);
+        // split by estimated token cost, not sequence count: a sequence
+        // mid-prefill weighs up to `prefill_chunk` decode steps this
+        // tick, so equal-count windows would park a whole lane behind it
+        let costs: Vec<usize> = active.iter().map(|a| seq_cost(a, params.prefill_chunk)).collect();
+        let bounds = cost_balanced_bounds(&costs, max_chunks);
+        let base = active.as_mut_ptr();
+        let queued = injector.push_tick(bounds.iter().map(|&(start, end)| Chunk {
+            // SAFETY: `cost_balanced_bounds` partitions 0..active.len()
+            // into disjoint in-bounds ranges.
+            ptr: unsafe { base.add(start) },
+            len: end - start,
+            params,
+        }));
         // The lead lane drains the queue alongside the workers (an empty
         // queue means every chunk has been claimed, not that work is
         // done). A lead-lane panic must not unwind past this frame yet:
         // workers may still hold chunk pointers into `active`, so any
         // failure is deferred until every dispatched chunk is accounted
         // for.
-        let mut generated = 0usize;
+        let mut work = TickWork::default();
         let claimed_by_lead = std::cell::Cell::new(0usize);
         let lead = &mut *self.lead;
         let lead_outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut n = 0usize;
+            let mut w = TickWork::default();
             while let Some(job) = injector.claim() {
                 claimed_by_lead.set(claimed_by_lead.get() + 1);
                 // SAFETY: see `Chunk` — disjoint window, alive until the
                 // ack accounting below completes.
                 let slice = unsafe { std::slice::from_raw_parts_mut(job.ptr, job.len) };
-                n += slice.iter_mut().map(|a| usize::from(tick_one(&mut *lead, a))).sum::<usize>();
+                w += slice
+                    .iter_mut()
+                    .map(|a| tick_one(&mut *lead, a, job.params))
+                    .sum::<TickWork>();
             }
-            n
+            w
         }));
         let mut faulted = match lead_outcome {
-            Ok(n) => {
-                generated += n;
+            Ok(w) => {
+                work += w;
                 false
             }
             Err(_) => true,
@@ -572,9 +809,9 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
         let outstanding = queued - claimed_by_lead.get();
         for _ in 0..outstanding {
             match done_rx.recv() {
-                Ok(Ack::Done { generated: n, worker }) => {
+                Ok(Ack::Done { work: w, worker }) => {
                     self.seen_workers.insert(worker);
-                    generated += n;
+                    work += w;
                 }
                 Ok(Ack::Panicked) => faulted = true,
                 Err(_) => {
@@ -590,7 +827,26 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
             while injector.claim().is_some() {}
             panic!("tick worker panicked");
         }
-        generated
+        work
+    }
+}
+
+/// Pool construction knobs beyond the decoder list itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolOpts {
+    /// Pin each worker lane to one CPU (`sched_setaffinity`, Linux
+    /// only; a no-op elsewhere — see [`crate::util::affinity`]). Worker
+    /// `i` pins to CPU `(i + 1) % n_cpus`; the lead lane (the caller's
+    /// thread) is never pinned. Opt-in: pinning helps once prefill
+    /// chunking makes ticks heavy, but fights the OS scheduler on
+    /// shared hosts.
+    pub pin_workers: bool,
+}
+
+impl PoolOpts {
+    pub fn with_pin_workers(mut self, pin: bool) -> PoolOpts {
+        self.pin_workers = pin;
+        self
     }
 }
 
@@ -602,6 +858,16 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
 /// `f` unwinds.
 pub fn with_tick_pool<D: Decoder + Send, R>(
     decoders: &mut [D],
+    f: impl FnOnce(&mut TickPool<'_, D>) -> R,
+) -> R {
+    with_tick_pool_opts(decoders, PoolOpts::default(), f)
+}
+
+/// [`with_tick_pool`] with construction knobs ([`PoolOpts`] — worker
+/// CPU pinning).
+pub fn with_tick_pool_opts<D: Decoder + Send, R>(
+    decoders: &mut [D],
+    popts: PoolOpts,
     f: impl FnOnce(&mut TickPool<'_, D>) -> R,
 ) -> R {
     let (lead, rest) = decoders.split_first_mut().expect("tick pool needs ≥ 1 decoder");
@@ -619,10 +885,15 @@ pub fn with_tick_pool<D: Decoder + Send, R>(
     let injector = Injector::new();
     let (done_tx, done_rx) = mpsc::channel::<Ack>();
     std::thread::scope(|s| {
-        for dec in rest.iter_mut() {
+        for (i, dec) in rest.iter_mut().enumerate() {
             let done = done_tx.clone();
             let injector = &injector;
-            s.spawn(move || pool_worker(dec, injector, &done));
+            s.spawn(move || {
+                if popts.pin_workers {
+                    crate::util::affinity::pin_current_thread(i + 1);
+                }
+                pool_worker(dec, injector, &done)
+            });
         }
         // workers hold the only Ack senders: a vanished worker surfaces
         // as a recv error in tick(), never as a silent hang
@@ -651,12 +922,14 @@ fn serve_loop(
     opts: &ServeOpts,
     obs: &dyn ServeObserver,
 ) -> Result<ServeStats> {
-    let ServeOpts { max_batch, max_wait, max_queue } = *opts;
+    let ServeOpts { max_batch, max_wait, max_queue, prefill_chunk, state_slots } = *opts;
     let mut batcher = DynamicBatcher::new(max_batch, max_wait);
     let mut active: Vec<Active> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
     let mut admission_waits: Vec<Duration> = Vec::new();
+    let mut ttfts: Vec<Duration> = Vec::new();
     let mut total_tokens = 0usize;
+    let mut prompt_tokens = 0usize;
     let mut completed = 0usize;
     let mut shed = 0usize;
     let t_start = Instant::now();
@@ -664,6 +937,18 @@ fn serve_loop(
     // bounded idle wait: long enough not to spin, short enough to honour
     // the batcher's max_wait admission deadline
     let idle_wait = max_wait.max(Duration::from_millis(1));
+    // the per-session state arena; every admitted sequence's recurrent
+    // state lives in one of its slabs (or in a parked heap snapshot
+    // while evicted). Default sizing keeps every batch slot resident.
+    let state_len = engine.state_len();
+    let params = TickParams { prefill_chunk: prefill_chunk.max(1), state_len };
+    let mut pool = StatePool::new(state_len, state_slots.unwrap_or(max_batch).max(1));
+    // the fresh-sequence state is identical for every admission —
+    // compute it once and copy it into each new sequence's staging
+    // buffer
+    let mut init_state = vec![0.0f32; state_len];
+    engine.init_state_into(&mut init_state);
+    let mut wave_serial = 0u64;
 
     // admission control: queue the arrival, or shed it on the spot when
     // the bounded queue is already full (never silently dropped — the
@@ -680,6 +965,7 @@ fn serve_loop(
                 tokens: Vec::new(),
                 queued: Duration::ZERO,
                 latency: Duration::ZERO,
+                ttft: Duration::ZERO,
                 shed: true,
             });
         } else {
@@ -718,11 +1004,15 @@ fn serve_loop(
                 req: pending.item,
                 arrived: pending.arrived,
                 started: now,
-                state: engine.init_state(),
+                slab: None,
+                state_ptr: std::ptr::null_mut(),
+                parked: init_state.clone(),
+                last_wave: 0,
                 logits: vec![0.0; engine.vocab()],
                 generated: Vec::new(),
                 prompt_pos: 0,
                 streamed: 0,
+                ttft: None,
             });
         }
 
@@ -751,14 +1041,65 @@ fn serve_loop(
             continue;
         }
 
-        // one continuous-batching tick: advance every active sequence
-        let produced = engine.tick(&mut active);
-        total_tokens += produced;
-        obs.on_tokens(produced);
+        // one continuous-batching tick: advance every active sequence.
+        // When the active set outnumbers the state arena's slots the
+        // tick runs in *waves* of at most `slots` sequences; before each
+        // wave, sequences without a resident slab evict the
+        // least-recently-ticked resident outside the wave (pure f32
+        // snapshot copies, so eviction never changes tokens).
+        let mut produced = TickWork::default();
+        let mut start = 0usize;
+        while start < active.len() {
+            let end = (start + pool.slots()).min(active.len());
+            for i in start..end {
+                if active[i].slab.is_some() {
+                    continue;
+                }
+                if pool.available() == 0 {
+                    // a wave member lacking a slab means at most
+                    // `slots - 1` slabs are held inside the wave, so a
+                    // resident victim outside it always exists
+                    let victim = active
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, a)| (*j < start || *j >= end) && a.slab.is_some())
+                        .min_by_key(|(_, a)| a.last_wave)
+                        .map(|(j, _)| j)
+                        .expect("full pool + unresident wave member => outside resident");
+                    let slab = active[victim].slab.take().expect("victim was filtered resident");
+                    let snapshot = &mut active[victim].parked;
+                    pool.park(slab, snapshot);
+                }
+                let slab = pool
+                    .resume(&active[i].parked)
+                    .expect("a slot was just freed or was already available");
+                active[i].slab = Some(slab);
+            }
+            wave_serial += 1;
+            for a in &mut active[start..end] {
+                let slab = a.slab.as_ref().expect("wave members are resident");
+                a.state_ptr = pool.slab_ptr(slab);
+                a.last_wave = wave_serial;
+            }
+            produced += engine.tick(&mut active[start..end], params);
+            start = end;
+        }
+        total_tokens += produced.generated;
+        prompt_tokens += produced.prefill;
+        obs.on_tokens(produced.generated);
+        if produced.prefill > 0 {
+            obs.on_prefill_tokens(produced.prefill);
+        }
 
         // flush newly generated tokens to each request's event stream
         // (serve thread only — workers never touch the senders)
         for a in active.iter_mut() {
+            if a.ttft.is_none() && !a.generated.is_empty() {
+                let t = a.started.elapsed();
+                a.ttft = Some(t);
+                ttfts.push(t);
+                obs.on_first_token(t);
+            }
             if let Some(s) = &a.req.stream {
                 for &t in &a.generated[a.streamed..] {
                     let _ = s.send(StreamEvent::Token(t));
@@ -774,19 +1115,24 @@ fn serve_loop(
                 i += 1;
                 continue;
             }
-            let a = active.swap_remove(i);
+            let mut a = active.swap_remove(i);
+            if let Some(slab) = a.slab.take() {
+                pool.release(slab);
+            }
             let latency = a.started.elapsed();
+            let ttft = a.ttft.unwrap_or(Duration::ZERO);
             latencies.push(latency);
             completed += 1;
             obs.on_completed(latency);
             if let Some(s) = &a.req.stream {
-                let _ = s.send(StreamEvent::Done { latency });
+                let _ = s.send(StreamEvent::Done { latency, ttft });
             }
             let _ = tx.send(Response {
                 id: a.req.id,
                 tokens: a.generated,
                 queued: a.started.duration_since(a.arrived),
                 latency,
+                ttft,
                 shed: false,
             });
         }
@@ -794,18 +1140,25 @@ fn serve_loop(
 
     latencies.sort();
     admission_waits.sort();
+    ttfts.sort();
     Ok(ServeStats {
         completed,
         total_tokens,
+        prompt_tokens,
         wall: t_start.elapsed(),
         p50_latency: percentile(&latencies, 0.50),
         p95_latency: percentile(&latencies, 0.95),
         p99_latency: percentile(&latencies, 0.99),
+        p50_ttft: percentile(&ttfts, 0.50),
+        p95_ttft: percentile(&ttfts, 0.95),
+        p99_ttft: percentile(&ttfts, 0.99),
         shed,
         queue_hwm: batcher.high_water_mark(),
         p50_admission_wait: percentile(&admission_waits, 0.50),
         p95_admission_wait: percentile(&admission_waits, 0.95),
         p99_admission_wait: percentile(&admission_waits, 0.99),
+        state_parks: pool.parks(),
+        state_resumes: pool.resumes(),
     })
 }
 
@@ -909,6 +1262,21 @@ pub fn serve_collect_pool<D: Decoder + Send>(
     collect_responses(requests, |rx, tx| serve_pool(decoders, rx, tx, max_batch, max_wait))
 }
 
+/// [`serve_collect_pool`] with full serve policy ([`ServeOpts`]) and
+/// pool placement ([`PoolOpts`]) knobs — the CLI/bench entry point for
+/// prefill chunking, bounded state arenas and pinned worker lanes.
+pub fn serve_collect_pool_with<D: Decoder + Send>(
+    decoders: &mut [D],
+    requests: Vec<Request>,
+    opts: &ServeOpts,
+    popts: PoolOpts,
+) -> Result<(ServeStats, Vec<Response>)> {
+    anyhow::ensure!(!decoders.is_empty(), "serve_pool needs at least one decoder");
+    collect_responses(requests, |rx, tx| {
+        with_tick_pool_opts(decoders, popts, |pool| pool.serve_with(rx, tx, opts, &NoopObserver))
+    })
+}
+
 /// [`serve_collect`] over the legacy per-tick-spawn engine: scoped
 /// worker threads created and joined **every tick**. Kept only so the
 /// persistent pool has a measured baseline (`perf_hotpath`, the table-4
@@ -985,6 +1353,38 @@ impl<W: WeightProvider> Decoder for RunnerDecoder<'_, W> {
             s.aa.copy_from_slice(&chunk[2]);
             s.bb.copy_from_slice(&chunk[3]);
             s.pp.copy_from_slice(&chunk[4]);
+        }
+    }
+
+    // Flat-state fast path: swap the runner's recurrent state directly
+    // against a state-pool slab with zero per-tick allocations (the
+    // defaulted trait methods would round-trip through nested Vecs).
+    fn state_len(&self) -> usize {
+        let cfg = self.runner.weights.config();
+        cfg.n_layer * 5 * cfg.d_model
+    }
+
+    fn save_state_into(&self, out: &mut [f32]) {
+        let d = self.runner.weights.config().d_model;
+        for (b, s) in self.runner.state.iter().enumerate() {
+            let base = b * 5 * d;
+            out[base..base + d].copy_from_slice(&s.x_att);
+            out[base + d..base + 2 * d].copy_from_slice(&s.x_ffn);
+            out[base + 2 * d..base + 3 * d].copy_from_slice(&s.aa);
+            out[base + 3 * d..base + 4 * d].copy_from_slice(&s.bb);
+            out[base + 4 * d..base + 5 * d].copy_from_slice(&s.pp);
+        }
+    }
+
+    fn load_state_flat(&mut self, state: &[f32]) {
+        let d = self.runner.weights.config().d_model;
+        for (b, s) in self.runner.state.iter_mut().enumerate() {
+            let base = b * 5 * d;
+            s.x_att.copy_from_slice(&state[base..base + d]);
+            s.x_ffn.copy_from_slice(&state[base + d..base + 2 * d]);
+            s.aa.copy_from_slice(&state[base + 2 * d..base + 3 * d]);
+            s.bb.copy_from_slice(&state[base + 3 * d..base + 4 * d]);
+            s.pp.copy_from_slice(&state[base + 4 * d..base + 5 * d]);
         }
     }
 }
@@ -1370,6 +1770,8 @@ mod tests {
         #[derive(Default)]
         struct Counting {
             tokens: AtomicUsize,
+            prefill: AtomicUsize,
+            first_tokens: AtomicUsize,
             admitted: AtomicUsize,
             completed: AtomicUsize,
             shed: AtomicUsize,
@@ -1384,6 +1786,12 @@ mod tests {
             }
             fn on_tokens(&self, n: usize) {
                 self.tokens.fetch_add(n, Ordering::Relaxed);
+            }
+            fn on_prefill_tokens(&self, n: usize) {
+                self.prefill.fetch_add(n, Ordering::Relaxed);
+            }
+            fn on_first_token(&self, _ttft: Duration) {
+                self.first_tokens.fetch_add(1, Ordering::Relaxed);
             }
             fn on_shed(&self) {
                 self.shed.fetch_add(1, Ordering::Relaxed);
@@ -1407,7 +1815,140 @@ mod tests {
         assert_eq!(obs.completed.load(Ordering::Relaxed), stats.completed);
         assert_eq!(obs.shed.load(Ordering::Relaxed), stats.shed);
         assert_eq!(obs.tokens.load(Ordering::Relaxed), stats.total_tokens);
+        assert_eq!(obs.prefill.load(Ordering::Relaxed), stats.prompt_tokens);
+        assert_eq!(obs.first_tokens.load(Ordering::Relaxed), stats.completed);
         assert_eq!(obs.admitted.load(Ordering::Relaxed), stats.completed);
         assert_eq!(obs.hwm.load(Ordering::Relaxed), stats.queue_hwm);
+    }
+
+    #[test]
+    fn cost_balanced_split_isolates_heavy_prefill() {
+        // one sequence mid-prefill (cost 8) among seven decoders (cost 1
+        // each), split 4 ways: the heavy sequence must get a range to
+        // itself instead of dragging neighbours behind it
+        let costs = [1usize, 1, 8, 1, 1, 1, 1, 1];
+        let bounds = cost_balanced_bounds(&costs, 4);
+        assert!(bounds.len() <= 4, "never more ranges than requested: {bounds:?}");
+        // the partition must be contiguous, disjoint and complete
+        let mut expect_start = 0usize;
+        for &(start, end) in &bounds {
+            assert_eq!(start, expect_start);
+            assert!(end > start);
+            expect_start = end;
+        }
+        assert_eq!(expect_start, costs.len());
+        // the range containing the heavy sequence closes right after it
+        let heavy = bounds.iter().find(|&&(s, e)| (s..e).contains(&2)).unwrap();
+        assert_eq!(heavy.1, 3, "a range reaching the target must close: {bounds:?}");
+        // equal costs reproduce the old equal-count split
+        let even = cost_balanced_bounds(&[1; 8], 4);
+        assert_eq!(even, vec![(0, 2), (2, 4), (4, 6), (6, 8)]);
+        // degenerate inputs stay sane
+        assert_eq!(cost_balanced_bounds(&[], 4), vec![]);
+        assert_eq!(cost_balanced_bounds(&[3], 4), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn prefill_chunking_is_token_identical_and_cuts_ticks() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(31));
+        let prompt: Vec<usize> = (0..40).map(|i| (i * 3 + 1) % 32).collect();
+        let requests = || vec![Request::new(0, prompt.clone(), 4)];
+        let mut run = |chunk: usize| {
+            let mut decs = [RunnerDecoder::new(&m)];
+            with_tick_pool(&mut decs, |pool| {
+                let opts = ServeOpts::new(2, Duration::from_millis(1)).with_prefill_chunk(chunk);
+                let out = collect_responses(requests(), |rx, tx| {
+                    pool.serve_with(rx, tx, &opts, &NoopObserver)
+                })
+                .unwrap();
+                (out, pool.ticks())
+            })
+        };
+        let ((stats1, resp1), ticks1) = run(1);
+        let ((stats8, resp8), ticks8) = run(8);
+        assert_eq!(resp1[0].tokens, resp8[0].tokens, "chunk size must not change tokens");
+        // 40-token prompt: chunk 1 needs 40 prefill ticks, chunk 8 five
+        assert_eq!(ticks1, 44, "40 prefill + 4 generation ticks");
+        assert_eq!(ticks8, 9, "5 prefill + 4 generation ticks");
+        assert!(ticks8 * 4 <= ticks1, "chunked prefill must cut ticks ≥ 4×");
+        for stats in [&stats1, &stats8] {
+            assert_eq!(stats.prompt_tokens, 40);
+            assert!(stats.prefill_tokens_per_sec() > 0.0);
+            assert!(stats.p50_ttft > Duration::ZERO);
+            assert!(stats.p50_ttft <= stats.p50_latency, "ttft cannot exceed latency");
+        }
+        assert!(resp8[0].ttft > Duration::ZERO);
+        assert!(resp8[0].ttft <= resp8[0].latency);
+    }
+
+    #[test]
+    fn bounded_state_arena_parks_and_stays_token_identical() {
+        // 8 concurrent sequences through a 3-slab arena: waves must
+        // park/evict/resume and the tokens must match the unbounded twin
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(33));
+        let requests = || -> Vec<Request> {
+            (0..8u64)
+                .map(|id| Request::new(id, vec![(id as usize * 5 + 1) % 32, 2, 7], 6))
+                .collect()
+        };
+        let mut dec = RunnerDecoder::new(&m);
+        let (free_stats, want) =
+            serve_collect(&mut dec, requests(), 8, Duration::from_millis(1)).unwrap();
+        assert_eq!(free_stats.state_parks, 0, "an unbounded arena never parks");
+        let mut decs = [RunnerDecoder::new(&m)];
+        let opts =
+            ServeOpts::new(8, Duration::from_millis(1)).with_state_slots(3).with_prefill_chunk(4);
+        let (stats, got) =
+            serve_collect_pool_with(&mut decs, requests(), &opts, PoolOpts::default()).unwrap();
+        assert_eq!(stats.completed, 8);
+        assert!(stats.state_parks > 0, "8 sequences over 3 slabs must evict");
+        assert!(stats.state_resumes >= stats.state_parks, "every park resumes (plus first entry)");
+        let a: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let b: Vec<_> = got.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, b, "eviction must be invisible in the tokens");
+    }
+
+    #[test]
+    fn pinned_workers_match_unpinned_tokens() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(35));
+        let requests = || -> Vec<Request> {
+            (0..6u64).map(|id| Request::new(id, vec![(id as usize * 7 + 3) % 32], 5)).collect()
+        };
+        let mut plain: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
+        let (_, want) =
+            serve_collect_pool(&mut plain, requests(), 4, Duration::from_millis(1)).unwrap();
+        let mut pinned: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
+        let opts = ServeOpts::new(4, Duration::from_millis(1)).with_prefill_chunk(2);
+        let popts = PoolOpts::default().with_pin_workers(true);
+        let (stats, got) = serve_collect_pool_with(&mut pinned, requests(), &opts, popts).unwrap();
+        assert_eq!(stats.completed, 6);
+        let a: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let b: Vec<_> = got.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, b, "pinning is placement-only — tokens must not change");
+    }
+
+    #[test]
+    fn flat_state_round_trip_matches_nested() {
+        let m = init_params(&ModelConfig::rwkv6(2, 16, 32), &mut Rng::new(37));
+        let mut dec = RunnerDecoder::new(&m);
+        dec.step(5);
+        dec.step(9);
+        let n = dec.state_len();
+        let cfg = ModelConfig::rwkv6(2, 16, 32);
+        assert_eq!(n, cfg.n_layer * 5 * cfg.d_model);
+        let mut flat = vec![0.0f32; n];
+        dec.save_state_into(&mut flat);
+        // the override and the trait default must agree on the layout
+        let mut default_flat = vec![0.0f32; n];
+        let mut off = 0;
+        for v in dec.save_state() {
+            default_flat[off..off + v.len()].copy_from_slice(&v);
+            off += v.len();
+        }
+        assert_eq!(flat, default_flat, "override must keep the default's flat layout");
+        let a = dec.step(3);
+        dec.load_state_flat(&flat);
+        let b = dec.step(3);
+        assert_eq!(a, b, "flat restore must reproduce the decode exactly");
     }
 }

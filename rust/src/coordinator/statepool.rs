@@ -1,0 +1,246 @@
+//! Slab-allocated RWKV state arena with park/evict/resume.
+//!
+//! RWKV's recurrent state is O(1) per sequence (five `d`-length vectors
+//! per block, no KV growth), so "paged" state management degenerates to
+//! the easy case: a pool of fixed-size slabs plus an LRU — no block
+//! tables, no fragmentation. The serve loop checks a [`Slab`] out per
+//! admitted sequence, tick workers read/write the slab **in place**
+//! (flat `[x_att, x_ffn, aa, bb, pp] × d` floats per layer, the layout
+//! of `Decoder::save_state_into`), and an idle or over-committed
+//! sequence is *parked*: its slab contents are snapshot into a
+//! per-sequence heap buffer and the slot is recycled. Resuming copies
+//! the snapshot back into a free slab — pure `f32` copies, so a parked
+//! and resumed sequence is bit-identical to one that never moved.
+//!
+//! The arena is allocated once and never grows or reallocates, which is
+//! what lets the serve loop hand raw slab pointers to tick workers (the
+//! same stable-address argument the pool's `Chunk` windows rely on) and
+//! what bounds the working set: 10k concurrent sessions share
+//! `slots × state_len` floats of hot state, everything else lives in
+//! cold parked snapshots.
+
+/// A checked-out slot in the arena. Deliberately neither `Clone` nor
+/// `Copy`: exactly one live token per slot, so a slab can't be released
+/// twice or aliased across two sequences.
+#[derive(Debug)]
+pub struct Slab {
+    slot: usize,
+}
+
+impl Slab {
+    /// Arena slot index (stable for the lifetime of the checkout).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
+/// Fixed-capacity arena of per-sequence state slabs.
+pub struct StatePool {
+    /// `slots × state_len` floats, boxed so the backing storage never
+    /// moves after construction (raw slab pointers stay valid).
+    arena: Box<[f32]>,
+    state_len: usize,
+    slots: usize,
+    free: Vec<usize>,
+    parks: u64,
+    resumes: u64,
+}
+
+impl StatePool {
+    /// An arena of `slots` slabs of `state_len` floats each, allocated
+    /// up front (zero-filled; a checkout's contents are whatever the
+    /// caller writes — fresh sequences copy an init snapshot in).
+    pub fn new(state_len: usize, slots: usize) -> StatePool {
+        assert!(slots > 0, "state pool needs at least one slot");
+        StatePool {
+            arena: vec![0.0; state_len * slots].into_boxed_slice(),
+            state_len,
+            slots,
+            // pop from the back → slot 0 is handed out first
+            free: (0..slots).rev().collect(),
+            parks: 0,
+            resumes: 0,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+
+    /// Free slots remaining.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Times a live sequence's state was snapshot out of the arena.
+    pub fn parks(&self) -> u64 {
+        self.parks
+    }
+
+    /// Times a parked snapshot was copied back into a slab.
+    pub fn resumes(&self) -> u64 {
+        self.resumes
+    }
+
+    /// Claim a free slab, or `None` when the arena is exhausted (the
+    /// caller parks an idle resident and retries, or sheds).
+    pub fn checkout(&mut self) -> Option<Slab> {
+        self.free.pop().map(|slot| Slab { slot })
+    }
+
+    /// Return a slab to the free list (sequence finished).
+    pub fn release(&mut self, slab: Slab) {
+        debug_assert!(!self.free.contains(&slab.slot), "double release of slot {}", slab.slot);
+        self.free.push(slab.slot);
+    }
+
+    /// The slab's state, read-only.
+    pub fn slab(&self, slab: &Slab) -> &[f32] {
+        &self.arena[slab.slot * self.state_len..(slab.slot + 1) * self.state_len]
+    }
+
+    /// The slab's state, writable (fresh-sequence init writes here).
+    pub fn slab_mut(&mut self, slab: &Slab) -> &mut [f32] {
+        &mut self.arena[slab.slot * self.state_len..(slab.slot + 1) * self.state_len]
+    }
+
+    /// Raw pointer to the slab's state, for tick workers that outlive
+    /// the `&mut self` borrow. Safety contract (the serve loop's): the
+    /// arena never moves, each slot is checked out by at most one
+    /// sequence, and the pointer is only dereferenced while no `&mut`
+    /// access to the pool's arena is live (the serve thread is quiescent
+    /// during a tick — same narrative as the tick pool's `Chunk`).
+    pub fn slab_ptr(&mut self, slab: &Slab) -> *mut f32 {
+        if self.state_len == 0 {
+            return std::ptr::NonNull::dangling().as_ptr();
+        }
+        // in-bounds by construction: slot < slots
+        unsafe { self.arena.as_mut_ptr().add(slab.slot * self.state_len) }
+    }
+
+    /// Park a sequence: snapshot its slab into `out` (reusing the
+    /// buffer's capacity — steady-state parking allocates nothing) and
+    /// recycle the slot.
+    pub fn park(&mut self, slab: Slab, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(self.slab(&slab));
+        self.free.push(slab.slot);
+        self.parks += 1;
+    }
+
+    /// Resume a parked sequence: claim a slab and copy the snapshot
+    /// back in. `None` when the arena is exhausted (park something
+    /// first).
+    pub fn resume(&mut self, snapshot: &[f32]) -> Option<Slab> {
+        let slab = self.checkout()?;
+        self.slab_mut(&slab).copy_from_slice(snapshot);
+        self.resumes += 1;
+        Some(slab)
+    }
+}
+
+impl std::fmt::Debug for StatePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StatePool")
+            .field("slots", &self.slots)
+            .field("state_len", &self.state_len)
+            .field("available", &self.available())
+            .field("parks", &self.parks)
+            .field("resumes", &self.resumes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_exhausts_and_release_recycles() {
+        let mut p = StatePool::new(4, 2);
+        assert_eq!(p.slots(), 2);
+        assert_eq!(p.available(), 2);
+        let a = p.checkout().unwrap();
+        let b = p.checkout().unwrap();
+        assert_ne!(a.slot(), b.slot());
+        assert!(p.checkout().is_none(), "exhaustion must be a clean None, not a panic");
+        assert_eq!(p.available(), 0);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let c = p.checkout().unwrap();
+        assert!(c.slot() < 2);
+    }
+
+    #[test]
+    fn park_resume_round_trip_is_bit_identical() {
+        let mut p = StatePool::new(6, 2);
+        let slab = p.checkout().unwrap();
+        // NaN-free but awkward values, incl. the pp init sentinel
+        let state = [1.5f32, -2.25, 0.0, -1e30, 3.4e38, 1e-45];
+        p.slab_mut(&slab).copy_from_slice(&state);
+        let mut snap = Vec::new();
+        p.park(slab, &mut snap);
+        assert_eq!(snap, state);
+        assert_eq!(p.parks(), 1);
+        // dirty the freed slot through another checkout
+        let other = p.checkout().unwrap();
+        p.slab_mut(&other).fill(9.0);
+        let resumed = p.resume(&snap).unwrap();
+        assert_eq!(p.resumes(), 1);
+        let got: Vec<u32> = p.slab(&resumed).iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = state.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "park/resume must round-trip exact bits");
+    }
+
+    #[test]
+    fn park_reuses_the_snapshot_buffer() {
+        let mut p = StatePool::new(8, 1);
+        let mut snap = Vec::with_capacity(8);
+        let cap_ptr = snap.as_ptr();
+        for round in 0..5 {
+            let slab = p.resume(&[round as f32; 8]).unwrap();
+            p.park(slab, &mut snap);
+            assert_eq!(snap, [round as f32; 8]);
+        }
+        assert_eq!(snap.as_ptr(), cap_ptr, "steady-state parking must not reallocate");
+    }
+
+    #[test]
+    fn resume_none_when_exhausted() {
+        let mut p = StatePool::new(2, 1);
+        let held = p.resume(&[1.0, 2.0]).unwrap();
+        assert!(p.resume(&[3.0, 4.0]).is_none());
+        p.release(held);
+        assert!(p.resume(&[3.0, 4.0]).is_some());
+    }
+
+    #[test]
+    fn slab_ptr_matches_slice_view() {
+        let mut p = StatePool::new(3, 2);
+        let a = p.checkout().unwrap();
+        let b = p.checkout().unwrap();
+        let pa = p.slab_ptr(&a);
+        // SAFETY: test-local exclusive access, in-bounds by pool layout.
+        unsafe {
+            std::slice::from_raw_parts_mut(pa, 3).copy_from_slice(&[7.0, 8.0, 9.0]);
+        }
+        assert_eq!(p.slab(&a), &[7.0, 8.0, 9.0]);
+        assert_eq!(p.slab(&b), &[0.0, 0.0, 0.0], "slabs must be disjoint");
+    }
+
+    #[test]
+    fn zero_length_state_is_harmless() {
+        // degenerate decoders (no recurrent state) still serve
+        let mut p = StatePool::new(0, 2);
+        let a = p.checkout().unwrap();
+        assert!(!p.slab_ptr(&a).is_null());
+        assert!(p.slab(&a).is_empty());
+        let mut snap = Vec::new();
+        p.park(a, &mut snap);
+        assert!(snap.is_empty());
+    }
+}

@@ -16,7 +16,8 @@ use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    resolve_tick_threads, serve_collect_pool, Request, RunnerDecoder, ServeStats,
+    resolve_tick_threads, serve_collect_pool_with, PoolOpts, Request, RunnerDecoder, ServeOpts,
+    ServeStats,
 };
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
@@ -50,6 +51,9 @@ fn help() -> String {
         .opt("prompt", "serve: comma-separated token ids used as every request's prompt")
         .opt("print-tokens", "serve: print each response's token ids (flag)")
         .opt("tick-threads", "serve: decode lanes per batch tick (0 = auto-detect, default 1)")
+        .opt("prefill-chunk", "serve: prompt tokens consumed per tick while prefilling (default 32)")
+        .opt("state-slots", "serve: bounded state-arena slabs (0 = one per batch slot)")
+        .opt("pin-workers", "serve: pin tick worker lanes to CPUs, Linux only (flag)")
         .opt("http", "serve: run the HTTP gateway on ADDR (bare flag = 127.0.0.1:8080)")
         .opt("max-queue", "serve --http: admission queue bound, overflow shed with 429 (default 64)")
         .opt("max-gen-len", "serve --http: per-request gen_len cap (default 512)")
@@ -214,9 +218,12 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
     let batch = args.get_usize("batch", 8);
     let requested_threads = args.get_usize("tick-threads", 1);
     let tick_threads = resolve_tick_threads(requested_threads, batch);
+    let prefill_chunk = args.get_usize("prefill-chunk", 32);
+    let state_slots = args.get_usize("state-slots", 0);
+    let pin_workers = args.flag("pin-workers");
     println!(
         "serving quantized model (avg {:.3} bpw packed, {} packed layers, {:.1} MB served, \
-         {} kernel, {} tick thread{}{})",
+         {} kernel, {} tick thread{}{}, prefill chunk {prefill_chunk}, state slots {}{})",
         qm.packed_bpw(),
         qm.n_packed(),
         qm.served_storage_bits() as f64 / 8e6,
@@ -224,6 +231,8 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         tick_threads,
         if tick_threads == 1 { "" } else { "s" },
         if requested_threads == 0 { " — auto-detected" } else { "" },
+        if state_slots == 0 { batch } else { state_slots },
+        if pin_workers { ", pinned workers" } else { "" },
     );
     let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
     let vocab = qm.config.vocab;
@@ -237,6 +246,9 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         gcfg.max_batch = batch;
         gcfg.max_queue = args.get_usize("max-queue", 64);
         gcfg.max_gen_len = args.get_usize("max-gen-len", 512);
+        gcfg.prefill_chunk = prefill_chunk;
+        gcfg.state_slots = state_slots;
+        gcfg.pin_workers = pin_workers;
         gcfg.heed_signals = heeding;
         let gateway = Gateway::bind(gcfg, vocab)?;
         println!(
@@ -274,8 +286,13 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
             Request::new(id, prompt, args.get_usize("gen-len", 12))
         })
         .collect();
-    let (stats, responses) =
-        serve_collect_pool(&mut decoders, requests, batch, Duration::from_millis(2))?;
+    let mut opts =
+        ServeOpts::new(batch, Duration::from_millis(2)).with_prefill_chunk(prefill_chunk);
+    if state_slots > 0 {
+        opts = opts.with_state_slots(state_slots);
+    }
+    let popts = PoolOpts::default().with_pin_workers(pin_workers);
+    let (stats, responses) = serve_collect_pool_with(&mut decoders, requests, &opts, popts)?;
     if args.flag("print-tokens") {
         for r in &responses {
             let list: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
@@ -288,17 +305,24 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
 
 fn print_serve_summary(stats: &ServeStats) {
     println!(
-        "{} requests ({} shed) | {:.1} tok/s | p50 {:?} p95 {:?} p99 {:?} | \
-         queue hwm {} | admission wait p50 {:?} p99 {:?}",
+        "{} requests ({} shed) | {:.1} tok/s gen, {:.1} tok/s prefill | \
+         p50 {:?} p95 {:?} p99 {:?} | ttft p50 {:?} p99 {:?} | \
+         queue hwm {} | admission wait p50 {:?} p99 {:?} | \
+         state parks {} resumes {}",
         stats.completed,
         stats.shed,
         stats.tokens_per_sec(),
+        stats.prefill_tokens_per_sec(),
         stats.p50_latency,
         stats.p95_latency,
         stats.p99_latency,
+        stats.p50_ttft,
+        stats.p99_ttft,
         stats.queue_hwm,
         stats.p50_admission_wait,
         stats.p99_admission_wait,
+        stats.state_parks,
+        stats.state_resumes,
     );
 }
 

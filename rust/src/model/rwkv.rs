@@ -58,6 +58,17 @@ impl BlockState {
             pp: vec![-1e30; d],
         }
     }
+
+    /// Restore the fresh-sequence values in place — the serve loop
+    /// resets between sequences on the hot path, so this must not
+    /// allocate.
+    pub fn reset(&mut self) {
+        self.x_att.fill(0.0);
+        self.x_ffn.fill(0.0);
+        self.aa.fill(0.0);
+        self.bb.fill(0.0);
+        self.pp.fill(-1e30);
+    }
 }
 
 /// Records the input activation rows feeding each quantizable layer
@@ -152,9 +163,8 @@ impl<'a, W: WeightProvider> RwkvRunner<'a, W> {
     }
 
     pub fn reset(&mut self) {
-        let d = self.weights.config().d_model;
         for s in &mut self.state {
-            *s = BlockState::new(d);
+            s.reset();
         }
     }
 

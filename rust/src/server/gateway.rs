@@ -28,7 +28,7 @@
 //! completion (events into a dropped channel are discarded).
 
 use crate::coordinator::serve::{
-    with_tick_pool, Decoder, Request, Response, ServeOpts, ServeStats, StreamEvent,
+    with_tick_pool_opts, Decoder, PoolOpts, Request, Response, ServeOpts, ServeStats, StreamEvent,
 };
 use crate::report::json::Json;
 use crate::server::http::{self, ChunkedWriter, HttpRequest, Limits};
@@ -71,6 +71,14 @@ pub struct GatewayConfig {
     pub max_gen_len: usize,
     /// Concurrent-connection cap (503 beyond it).
     pub max_connections: usize,
+    /// Prompt tokens a prefilling sequence consumes per tick
+    /// (`ServeOpts::prefill_chunk`; 1 = legacy one-per-tick).
+    pub prefill_chunk: usize,
+    /// State-arena slabs (`ServeOpts::state_slots`); `0` = one per
+    /// batch slot.
+    pub state_slots: usize,
+    /// Pin tick worker lanes to CPUs (`PoolOpts::pin_workers`).
+    pub pin_workers: bool,
     /// Also drain on SIGINT/SIGTERM (requires
     /// [`signal::install_shutdown_signals`]; the CLI sets this, tests
     /// use the explicit handle so a test-raised signal cannot leak into
@@ -87,6 +95,9 @@ impl GatewayConfig {
             max_queue: 64,
             max_gen_len: 512,
             max_connections: 128,
+            prefill_chunk: 32,
+            state_slots: 0,
+            pin_workers: false,
             heed_signals: false,
         }
     }
@@ -169,7 +180,13 @@ impl Gateway {
         // its own event stream — and the serve loop tolerates a closed
         // response channel, so drop the receiver up front
         drop(rx_resp);
-        let opts = ServeOpts::new(cfg.max_batch, cfg.max_wait).with_max_queue(cfg.max_queue);
+        let mut opts = ServeOpts::new(cfg.max_batch, cfg.max_wait)
+            .with_max_queue(cfg.max_queue)
+            .with_prefill_chunk(cfg.prefill_chunk);
+        if cfg.state_slots > 0 {
+            opts = opts.with_state_slots(cfg.state_slots);
+        }
+        let popts = PoolOpts::default().with_pin_workers(cfg.pin_workers);
         let next_id = AtomicU64::new(0);
         let metrics_ref: &Metrics = &metrics;
         let shutdown_ref: &AtomicBool = &shutdown;
@@ -179,7 +196,7 @@ impl Gateway {
 
         std::thread::scope(|s| {
             let engine = s.spawn(move || {
-                with_tick_pool(decoders, |pool| {
+                with_tick_pool_opts(decoders, popts, |pool| {
                     pool.serve_with(rx_req, tx_resp, opts_ref, metrics_ref)
                 })
             });
@@ -529,12 +546,14 @@ fn stream_sse(
                 tokens.push(t);
                 cw.chunk(format!("data: {{\"token\":{t}}}\n\n").as_bytes())?;
             }
-            StreamEvent::Done { latency } => {
+            StreamEvent::Done { latency, ttft } => {
                 cw.chunk(
                     format!(
                         "data: {{\"done\":true,\"id\":{id},\"tokens\":{},\
-                         \"queued_ms\":{queued_ms:.3},\"latency_ms\":{:.3}}}\n\n",
+                         \"queued_ms\":{queued_ms:.3},\"ttft_ms\":{:.3},\
+                         \"latency_ms\":{:.3}}}\n\n",
                         tokens_json(&tokens),
+                        ms(ttft),
                         ms(latency),
                     )
                     .as_bytes(),
@@ -560,6 +579,7 @@ fn collect_json(
 ) -> std::io::Result<()> {
     let mut tokens: Vec<usize> = Vec::new();
     let mut queued_ms = 0.0f64;
+    let mut ttft_ms = 0.0f64;
     let mut latency_ms = 0.0f64;
     let mut finished = false;
     let mut ev = Some(first);
@@ -574,8 +594,9 @@ fn collect_json(
         match e {
             StreamEvent::Admitted { queued } => queued_ms = ms(queued),
             StreamEvent::Token(t) => tokens.push(t),
-            StreamEvent::Done { latency } => {
+            StreamEvent::Done { latency, ttft } => {
                 latency_ms = ms(latency);
+                ttft_ms = ms(ttft);
                 finished = true;
                 break;
             }
@@ -591,7 +612,8 @@ fn collect_json(
         );
     }
     let body = format!(
-        "{{\"id\":{id},\"tokens\":{},\"queued_ms\":{queued_ms:.3},\"latency_ms\":{latency_ms:.3}}}",
+        "{{\"id\":{id},\"tokens\":{},\"queued_ms\":{queued_ms:.3},\
+         \"ttft_ms\":{ttft_ms:.3},\"latency_ms\":{latency_ms:.3}}}",
         tokens_json(&tokens)
     );
     http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
@@ -668,7 +690,8 @@ mod tests {
     fn sse_token_extraction_checks_consistency() {
         let body = "data: {\"admitted\":true,\"queued_ms\":0.1}\n\n\
                     data: {\"token\":5}\n\ndata: {\"token\":9}\n\n\
-                    data: {\"done\":true,\"id\":0,\"tokens\":[5,9],\"queued_ms\":0.1,\"latency_ms\":2.0}\n\n";
+                    data: {\"done\":true,\"id\":0,\"tokens\":[5,9],\"queued_ms\":0.1,\
+                    \"ttft_ms\":1.2,\"latency_ms\":2.0}\n\n";
         assert_eq!(sse_tokens(body).unwrap(), vec![5, 9]);
 
         let inconsistent = body.replace("[5,9]", "[5,8]");

@@ -62,6 +62,8 @@ pub struct Metrics {
     pub shed: AtomicU64,
     /// Generated (non-prompt) tokens served.
     pub tokens: AtomicU64,
+    /// Prompt tokens consumed by prefill ticks.
+    pub prefill_tokens: AtomicU64,
     /// Current admission-queue depth (gauge).
     pub queue_depth: AtomicU64,
     /// Deepest the admission queue has been.
@@ -70,6 +72,7 @@ pub struct Metrics {
     pub open_connections: AtomicU64,
     latencies: Mutex<Window>,
     admission_waits: Mutex<Window>,
+    ttfts: Mutex<Window>,
 }
 
 impl Default for Metrics {
@@ -82,11 +85,13 @@ impl Default for Metrics {
             completed: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             tokens: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             queue_hwm: AtomicU64::new(0),
             open_connections: AtomicU64::new(0),
             latencies: Mutex::new(Window::new()),
             admission_waits: Mutex::new(Window::new()),
+            ttfts: Mutex::new(Window::new()),
         }
     }
 }
@@ -139,6 +144,11 @@ impl Metrics {
             "rwkvquant_served_tokens_total",
             "Generated (non-prompt) tokens streamed to clients.",
             self.tokens.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_prefill_tokens_total",
+            "Prompt tokens consumed by prefill ticks.",
+            self.prefill_tokens.load(Ordering::Relaxed),
         );
         let mut gauge = |name: &str, help: &str, v: f64| {
             let _ = writeln!(out, "# HELP {name} {help}");
@@ -193,6 +203,11 @@ impl Metrics {
             "Arrival-to-admission wait (last 512 requests).",
             &self.admission_waits,
         );
+        quantiles(
+            "rwkvquant_ttft_seconds",
+            "Admission-to-first-generated-token delay (last 512 requests).",
+            &self.ttfts,
+        );
         out
     }
 }
@@ -209,6 +224,14 @@ impl ServeObserver for Metrics {
 
     fn on_tokens(&self, n: usize) {
         self.tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn on_prefill_tokens(&self, n: usize) {
+        self.prefill_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn on_first_token(&self, ttft: Duration) {
+        self.ttfts.lock().unwrap_or_else(|e| e.into_inner()).push(ttft);
     }
 
     fn on_shed(&self) {
@@ -233,11 +256,15 @@ mod tests {
         m.on_admitted(Duration::from_millis(4));
         m.on_tokens(7);
         m.on_tokens(5);
+        m.on_prefill_tokens(32);
+        m.on_prefill_tokens(9);
+        m.on_first_token(Duration::from_millis(6));
         m.on_shed();
         m.on_completed(Duration::from_millis(20));
         m.http_requests.fetch_add(2, Ordering::Relaxed);
         let text = m.render_prometheus();
         assert!(text.contains("rwkvquant_served_tokens_total 12"), "{text}");
+        assert!(text.contains("rwkvquant_prefill_tokens_total 41"));
         assert!(text.contains("rwkvquant_requests_shed_total 1"));
         assert!(text.contains("rwkvquant_requests_completed_total 1"));
         assert!(text.contains("rwkvquant_queue_depth 1"));
@@ -246,6 +273,8 @@ mod tests {
         assert!(text.contains("rwkvquant_request_latency_seconds{quantile=\"0.99\"} 0.02"));
         assert!(text.contains("rwkvquant_request_latency_seconds_count 1"));
         assert!(text.contains("rwkvquant_admission_wait_seconds{quantile=\"0.5\"} 0.004"));
+        assert!(text.contains("rwkvquant_ttft_seconds{quantile=\"0.5\"} 0.006"));
+        assert!(text.contains("rwkvquant_ttft_seconds_count 1"));
     }
 
     #[test]

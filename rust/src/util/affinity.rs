@@ -1,0 +1,85 @@
+//! Opt-in CPU affinity for tick worker lanes — raw `sched_setaffinity`
+//! on Linux (the offline vendor set has no `libc`/`core_affinity`
+//! crate, so the syscall is declared here like `util::mmap` declares
+//! `mmap`), a no-op everywhere else.
+//!
+//! Pinning matters once prefill chunking makes per-tick work heavy
+//! enough for a lane migration to cost real cache state: a pinned lane
+//! keeps its warmed matvec scratch and the weight pages it has faulted
+//! in on one core's caches. It stays opt-in (`--pin-workers`) because
+//! on a shared host pinning can fight the OS scheduler.
+
+/// Pin the calling thread to one CPU, chosen as `lane % n_cpus`.
+/// Returns whether an affinity mask was actually installed — `false`
+/// on non-Linux hosts and when the syscall is refused (e.g. a cpuset
+/// that excludes the chosen CPU); callers treat that as "run unpinned",
+/// never as an error.
+pub fn pin_current_thread(lane: usize) -> bool {
+    let n_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    pin_to_cpu(lane % n_cpus)
+}
+
+#[cfg(target_os = "linux")]
+fn pin_to_cpu(cpu: usize) -> bool {
+    // cpu_set_t is a fixed 1024-bit mask on Linux (128 bytes); model it
+    // as [u64; 16] — same size, same bit order on little-endian, and
+    // the kernel only reads `cpusetsize` bytes.
+    const CPU_SET_WORDS: usize = 16;
+    if cpu >= CPU_SET_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; CPU_SET_WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: pid 0 = calling thread; the mask pointer is valid for the
+    // `cpusetsize` bytes the kernel reads and is not retained after the
+    // call returns.
+    let rc = unsafe { sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    rc == 0
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_cpu(_cpu: usize) -> bool {
+    false
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::c_int;
+
+    extern "C" {
+        // pid_t is c_int on Linux; cpusetsize is size_t = usize.
+        pub fn sched_setaffinity(pid: c_int, cpusetsize: usize, mask: *const u64) -> c_int;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinning_succeeds_on_linux_and_noops_elsewhere() {
+        let pinned = pin_current_thread(0);
+        if cfg!(target_os = "linux") {
+            assert!(pinned, "sched_setaffinity to CPU 0 must succeed");
+        } else {
+            assert!(!pinned, "non-Linux hosts must report unpinned");
+        }
+    }
+
+    #[test]
+    fn lane_indices_wrap_over_available_cpus() {
+        // a lane index far past the CPU count must still resolve to a
+        // valid CPU (wrap, not fail) — the pool pins lane i blindly
+        let pinned = pin_current_thread(10_007);
+        assert_eq!(pinned, cfg!(target_os = "linux"));
+    }
+
+    #[test]
+    fn pinned_thread_still_computes() {
+        let h = std::thread::spawn(|| {
+            pin_current_thread(1);
+            (0..1000u64).sum::<u64>()
+        });
+        assert_eq!(h.join().unwrap(), 499_500);
+    }
+}

@@ -2,6 +2,7 @@
 //! (rand, clap, criterion, proptest) — rebuilt here because the offline
 //! vendor set only contains the `xla` dependency closure.
 
+pub mod affinity;
 pub mod benchkit;
 pub mod cli;
 pub mod mmap;

@@ -262,6 +262,102 @@ fn overflow_is_shed_with_429_and_counted_in_metrics() {
     });
 }
 
+#[test]
+fn bounded_state_pool_under_flood_answers_correct_or_429() {
+    let qm = packed_store("pool", 53);
+    let prompts: Vec<Vec<usize>> = (0..10usize)
+        .map(|i| (0..8).map(|j| (i * 7 + j * 3 + 1) % 32).collect())
+        .collect();
+    let gen_len = 4usize;
+    let twins: Vec<Vec<usize>> =
+        prompts.iter().map(|p| twin_tokens(&qm, p, gen_len)).collect();
+
+    // four batch slots but only TWO state slabs: any tick with ≥ 3
+    // resident sequences must park/evict through the bounded arena,
+    // while admission overflow beyond queue=2 sheds with a 429
+    let mut cfg = GatewayConfig::new("127.0.0.1:0");
+    cfg.max_batch = 4;
+    cfg.max_queue = 2;
+    cfg.state_slots = 2;
+    cfg.prefill_chunk = 4;
+    let gateway = Gateway::bind(cfg, qm.config.vocab).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let mut decoders = vec![
+        Throttled { inner: RunnerDecoder::new(&qm), delay: Duration::from_millis(2) },
+        Throttled { inner: RunnerDecoder::new(&qm), delay: Duration::from_millis(2) },
+    ];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve(&mut decoders));
+        let _drain = ShutdownOnDrop(handle.clone());
+        let barrier = Barrier::new(prompts.len());
+        let outcomes: Vec<(u16, Option<Vec<usize>>)> = std::thread::scope(|cs| {
+            let clients: Vec<_> = prompts
+                .iter()
+                .map(|p| {
+                    let barrier = &barrier;
+                    cs.spawn(move || {
+                        barrier.wait();
+                        let body =
+                            format!("{{\"prompt\":{},\"gen_len\":{gen_len}}}", tokens_json(p));
+                        let resp =
+                            http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+                        match resp.status {
+                            200 => (200u16, Some(sse_tokens(&resp.body_str()).unwrap())),
+                            other => (other, None),
+                        }
+                    })
+                })
+                .collect();
+            clients.into_iter().map(|c| c.join().unwrap()).collect()
+        });
+
+        // exhaustion is CLEAN: every outcome is a finished stream with
+        // the twin's exact tokens or an explicit 429 — never a panic,
+        // a hang or a truncated stream
+        for (i, (status, tokens)) in outcomes.iter().enumerate() {
+            match status {
+                200 => assert_eq!(tokens.as_ref().unwrap(), &twins[i], "request {i} diverged"),
+                429 => {}
+                other => panic!("request {i}: unexpected status {other}"),
+            }
+        }
+        let n_200 = outcomes.iter().filter(|(s, _)| *s == 200).count();
+        assert!(n_200 >= 1, "at least the first admitted request must complete");
+
+        // a follow-up non-streamed request reports its TTFT, which can
+        // never exceed the full request latency
+        let body = format!(
+            "{{\"prompt\":{},\"gen_len\":{gen_len},\"stream\":false}}",
+            tokens_json(&prompts[0])
+        );
+        let resp = http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        let ttft_ms = parsed
+            .get("ttft_ms")
+            .and_then(rwkvquant::report::json::Json::as_f64)
+            .unwrap();
+        let latency_ms = parsed
+            .get("latency_ms")
+            .and_then(rwkvquant::report::json::Json::as_f64)
+            .unwrap();
+        assert!(
+            ttft_ms > 0.0 && ttft_ms <= latency_ms,
+            "ttft {ttft_ms}ms vs latency {latency_ms}ms"
+        );
+
+        handle.shutdown();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.completed, n_200 + 1);
+        assert_eq!(stats.shed, prompts.len() - n_200);
+        // park/resume accounting stays internally consistent even when
+        // the flood happened to never exceed the resident slabs
+        assert!(stats.state_resumes >= stats.state_parks);
+    });
+}
+
 #[cfg(unix)]
 extern "C" {
     fn raise(sig: std::os::raw::c_int) -> std::os::raw::c_int;

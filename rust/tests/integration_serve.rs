@@ -6,8 +6,9 @@
 use rwkvquant::config::{ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
-    serve, serve_collect, serve_collect_per_tick_spawn, serve_collect_pool, with_tick_pool,
-    Decoder, Request, Response, RunnerDecoder,
+    serve, serve_collect, serve_collect_per_tick_spawn, serve_collect_pool,
+    serve_collect_pool_with, with_tick_pool, Decoder, PoolOpts, Request, Response, RunnerDecoder,
+    ServeOpts,
 };
 use rwkvquant::eval::dequantized_model;
 use rwkvquant::model::synthetic::{generate_rwkv, Family};
@@ -195,4 +196,97 @@ fn packed_decoder_completes_with_same_tokens_as_dequantized_twin() {
         "packed serving must produce the dequantized twin's greedy tokens"
     );
     assert!(qm.n_packed() > 0, "the packed decoder must actually serve packed layers");
+}
+
+/// Quantize a tiny synthetic model, round-trip it through an RWKVQ2
+/// checkpoint, and serve from the reopened (packed) store — the prefill
+/// and state-pool acceptance tests below run on the real packed path.
+fn packed_store(tag: &str, seed: u64) -> QuantizedModel {
+    use rwkvquant::model::rwkv::init_params;
+    use rwkvquant::util::rng::Rng;
+    let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(seed));
+    let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 2);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    let path = std::env::temp_dir().join(format!("serve_{tag}.rwkvq2"));
+    qm.save(&path).unwrap();
+    let opened = QuantizedModel::open(&path).unwrap();
+    std::fs::remove_file(path).ok();
+    opened
+}
+
+#[test]
+fn long_prompt_prefill_reaches_first_token_in_a_quarter_of_the_ticks() {
+    // the tentpole acceptance criterion: a 512-token prompt must reach
+    // its first generated token in ≤ 1/4 the ticks of one-token-per-tick
+    // prefill, with identical tokens, on a packed RWKVQ2 store
+    let qm = packed_store("prefill", 51);
+    assert!(qm.n_packed() > 0);
+    let prompt: Vec<usize> = (0..512).map(|i| (i * 7 + 3) % 32).collect();
+    let gen_len = 8usize;
+    let mut run = |chunk: usize| -> (Vec<usize>, u64) {
+        let mut decs = [RunnerDecoder::new(&qm)];
+        with_tick_pool(&mut decs, |pool| {
+            let (tx_req, rx_req) = mpsc::channel();
+            let (tx_resp, rx_resp) = mpsc::channel();
+            tx_req.send(Request::new(0, prompt.clone(), gen_len)).unwrap();
+            drop(tx_req);
+            let opts = ServeOpts::new(1, Duration::from_millis(1)).with_prefill_chunk(chunk);
+            let stats = pool
+                .serve_with(rx_req, tx_resp, &opts, &rwkvquant::coordinator::serve::NoopObserver)
+                .unwrap();
+            assert_eq!(stats.completed, 1);
+            assert_eq!(stats.prompt_tokens, 512);
+            assert!(stats.p50_ttft > Duration::ZERO);
+            assert!(stats.p50_ttft <= stats.p50_latency);
+            let resp: Vec<Response> = rx_resp.iter().collect();
+            (resp[0].tokens.clone(), pool.ticks())
+        })
+    };
+    let (tokens_one, ticks_one) = run(1);
+    let (tokens_chunked, ticks_chunked) = run(64);
+    assert_eq!(tokens_one, tokens_chunked, "prefill chunking changed the generated tokens");
+    assert_eq!(tokens_one.len(), gen_len);
+    // 512 one-token prefill ticks + 8 generation vs ⌈512/64⌉ + 8
+    assert_eq!(ticks_one, 520);
+    assert_eq!(ticks_chunked, 16);
+    assert!(
+        ticks_chunked * 4 <= ticks_one,
+        "chunked prefill took {ticks_chunked} ticks vs {ticks_one} — not a 4x cut"
+    );
+}
+
+#[test]
+fn bounded_state_pool_serves_more_sequences_than_slots_token_identically() {
+    // slab-arena acceptance: 12 concurrent sequences through 4 slabs
+    // must park/evict/resume and still match the unbounded twin exactly,
+    // on the packed RWKVQ2 path
+    let qm = packed_store("slabs", 53);
+    let requests = || -> Vec<Request> {
+        (0..12u64)
+            .map(|id| {
+                let prompt: Vec<usize> =
+                    (0..10).map(|i| (id as usize * 11 + i * 3 + 1) % 32).collect();
+                Request::new(id, prompt, 6)
+            })
+            .collect()
+    };
+    let mut free_dec = RunnerDecoder::new(&qm);
+    let (free_stats, want) =
+        serve_collect(&mut free_dec, requests(), 12, Duration::from_millis(1)).unwrap();
+    assert_eq!(free_stats.state_parks, 0);
+
+    let mut decs: Vec<_> = (0..2).map(|_| RunnerDecoder::new(&qm)).collect();
+    let opts = ServeOpts::new(12, Duration::from_millis(1))
+        .with_state_slots(4)
+        .with_prefill_chunk(8);
+    let (stats, got) =
+        serve_collect_pool_with(&mut decs, requests(), &opts, PoolOpts::default()).unwrap();
+    assert_eq!(stats.completed, 12);
+    assert!(stats.state_parks > 0, "12 sequences over 4 slabs must evict");
+    assert!(stats.state_resumes > stats.state_parks);
+    let a: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    let b: Vec<_> = got.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    assert_eq!(a, b, "bounded state arena changed the served tokens");
 }
