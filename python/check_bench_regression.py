@@ -203,7 +203,13 @@ def require_armed(baseline_path, key):
         and try_lookup(base, key) is not None
     )
     if measured:
-        print(f"OK: committed baseline is measured ({key} = {lookup(base, key):.2f}) — gate armed")
+        armed_line = (
+            f"OK: committed baseline is measured ({key} = {lookup(base, key):.2f}) — gate armed"
+        )
+        print(armed_line)
+        # the step summary must say so explicitly: an armed gate that is
+        # only visible in the job log reads the same as an unarmed one
+        append_step_summary([armed_line])
         return 0
     reason = base_err or (
         "baseline is provisional" if base is not None and base.get("provisional")

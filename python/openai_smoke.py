@@ -1,0 +1,353 @@
+#!/usr/bin/env python3
+"""End-to-end smoke of the OpenAI-compatible text API (CI `openai-api-smoke` job).
+
+Stdlib only. The script:
+
+  1. packs a tiny synthetic model into an RWKVQ2 checkpoint,
+  2. starts `rwkvquant serve --http` on it and waits for /healthz,
+  3. sends a greedy (temperature=0) `/v1/completions` request and gates
+     it **token-identical** against the raw `/v1/generate` path on the
+     same prompt (decoded through the synthetic `w{i} ` vocab),
+  4. sends the same *seeded sampling* request twice and requires the
+     parsed `choices` + `usage` to be byte-identical (the JSON emitter
+     renders keys sorted, so equal objects mean equal bytes),
+  5. streams a `/v1/chat/completions` request and checks the OpenAI
+     delta protocol: opening role chunk, per-token content deltas, a
+     final chunk carrying `finish_reason`, and the `data: [DONE]`
+     terminator — and that the accumulated deltas equal the
+     non-streaming `message.content` for the same greedy request,
+  6. opens a raw socket, starts a long streaming completion, drops the
+     connection mid-generation, and asserts /metrics records the
+     cancellation (`rwkvquant_requests_cancelled_total`) and the queue
+     drains back to zero,
+  7. sends SIGTERM and requires a graceful exit with code 0.
+
+Usage: python3 python/openai_smoke.py --bin target/release/rwkvquant
+"""
+
+import argparse
+import http.client
+import json
+import re
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+MAX_TOKENS = 8
+PROMPT_TEXT = "w3 w1 w2 "
+PROMPT_IDS = [3, 1, 2]
+
+
+def log(msg: str) -> None:
+    print(f"[openai-smoke] {msg}", flush=True)
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def wait_healthy(port: int, proc: subprocess.Popen, timeout: float = 120.0) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise SystemExit(f"server exited early with code {proc.returncode}")
+        try:
+            conn = http.client.HTTPConnection("127.0.0.1", port, timeout=2)
+            conn.request("GET", "/healthz")
+            resp = conn.getresponse()
+            body = resp.read()
+            conn.close()
+            if resp.status == 200 and body.strip() == b"ok":
+                return
+        except OSError:
+            pass
+        time.sleep(0.2)
+    raise SystemExit("server never became healthy")
+
+
+def post(port: int, path: str, payload: dict, timeout: float = 60.0):
+    """POST JSON, return (status, headers, decoded body)."""
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    conn.request(
+        "POST", path, body=json.dumps(payload),
+        headers={"Content-Type": "application/json"},
+    )
+    resp = conn.getresponse()
+    body = resp.read().decode()
+    headers = {k.lower(): v for k, v in resp.getheaders()}
+    conn.close()
+    return resp.status, headers, body
+
+
+def post_json(port: int, path: str, payload: dict) -> dict:
+    status, _, body = post(port, path, payload)
+    if status != 200:
+        raise SystemExit(f"{path} answered {status}: {body}")
+    return json.loads(body)
+
+
+def sse_payloads(body: str) -> list[str]:
+    return [line[len("data: "):] for line in body.splitlines() if line.startswith("data: ")]
+
+
+def decode_ids(tokens: list[int]) -> str:
+    """The synthetic vocab the server builds for a packed 0.1B store:
+    id 0 is `<unk>`, id i is the literal text `w{i} `."""
+    return "".join("<unk>" if t == 0 else f"w{t} " for t in tokens)
+
+
+def scrape_metrics(port: int) -> str:
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    conn.request("GET", "/metrics")
+    resp = conn.getresponse()
+    text = resp.read().decode()
+    conn.close()
+    if resp.status != 200:
+        raise SystemExit(f"/metrics answered {resp.status}")
+    return text
+
+
+def metric_value(text: str, name: str) -> float:
+    m = re.search(rf"^{re.escape(name)} (\S+)$", text, re.MULTILINE)
+    if not m:
+        raise SystemExit(f"metric {name} missing from /metrics:\n{text}")
+    return float(m.group(1))
+
+
+def check_greedy_twin(port: int) -> list[int]:
+    """temperature=0 through /v1/completions must be token-identical to
+    the raw /v1/generate greedy path on the same store."""
+    raw = post_json(port, "/v1/generate", {"prompt": PROMPT_IDS, "gen_len": MAX_TOKENS})
+    expected_text = decode_ids(raw["tokens"])
+
+    doc = post_json(
+        port, "/v1/completions",
+        {"prompt": PROMPT_TEXT, "max_tokens": MAX_TOKENS, "temperature": 0},
+    )
+    if doc.get("object") != "text_completion":
+        raise SystemExit(f"wrong object: {doc.get('object')}")
+    choice = doc["choices"][0]
+    if choice["finish_reason"] != "length":
+        raise SystemExit(f"greedy finish_reason {choice['finish_reason']!r}, want 'length'")
+    if choice["text"] != expected_text:
+        raise SystemExit(
+            f"GREEDY TWIN MISMATCH:\n  /v1/completions: {choice['text']!r}\n"
+            f"  /v1/generate:    {expected_text!r}"
+        )
+    usage = doc["usage"]
+    if usage != {
+        "completion_tokens": MAX_TOKENS,
+        "prompt_tokens": len(PROMPT_IDS),
+        "total_tokens": MAX_TOKENS + len(PROMPT_IDS),
+    }:
+        raise SystemExit(f"unexpected usage block: {usage}")
+    return raw["tokens"]
+
+
+def check_seeded_determinism(port: int) -> None:
+    """The same seeded sampling request twice must yield byte-identical
+    choices + usage (ids/created legitimately differ between requests)."""
+    payload = {
+        "prompt": PROMPT_TEXT, "max_tokens": MAX_TOKENS,
+        "temperature": 0.9, "top_k": 8, "top_p": 0.95, "seed": 7,
+    }
+    a = post_json(port, "/v1/completions", payload)
+    b = post_json(port, "/v1/completions", payload)
+    for field in ("choices", "usage"):
+        ra = json.dumps(a[field], sort_keys=True)
+        rb = json.dumps(b[field], sort_keys=True)
+        if ra != rb:
+            raise SystemExit(f"NONDETERMINISTIC seeded sampling ({field}):\n  {ra}\n  {rb}")
+    text = a["choices"][0]["text"]
+    if not text:
+        raise SystemExit("seeded sampling produced empty text")
+    log(f"seeded text: {text!r}")
+
+
+def check_chat_stream(port: int) -> None:
+    """Streaming chat must speak the OpenAI delta protocol and agree
+    with the non-streaming flavour of the same greedy request."""
+    payload = {
+        "messages": [{"role": "user", "content": PROMPT_TEXT}],
+        "max_tokens": 4, "temperature": 0,
+    }
+    status, headers, body = post(port, "/v1/chat/completions", {**payload, "stream": True})
+    if status != 200:
+        raise SystemExit(f"streaming chat answered {status}: {body}")
+    if "text/event-stream" not in headers.get("content-type", ""):
+        raise SystemExit(f"streamed chat has wrong content type: {headers.get('content-type')}")
+    payloads = sse_payloads(body)
+    if not payloads or payloads[-1] != "[DONE]":
+        raise SystemExit(f"stream did not end with data: [DONE]: {payloads[-3:]}")
+    chunks = [json.loads(p) for p in payloads[:-1]]
+    if len(chunks) < 3:
+        raise SystemExit(f"expected role + content + finish chunks, got {len(chunks)}")
+    content = ""
+    finish = None
+    for i, chunk in enumerate(chunks):
+        if chunk.get("object") != "chat.completion.chunk":
+            raise SystemExit(f"chunk {i} has object {chunk.get('object')!r}")
+        delta = chunk["choices"][0]["delta"]
+        if i == 0 and delta.get("role") != "assistant":
+            raise SystemExit(f"first chunk must carry the assistant role: {delta}")
+        content += delta.get("content", "")
+        finish = chunk["choices"][0]["finish_reason"] or finish
+    if finish != "length":
+        raise SystemExit(f"streamed chat finish_reason {finish!r}, want 'length'")
+    if not content:
+        raise SystemExit("streamed chat produced no content deltas")
+
+    doc = post_json(port, "/v1/chat/completions", payload)
+    if doc.get("object") != "chat.completion":
+        raise SystemExit(f"wrong chat object: {doc.get('object')}")
+    message = doc["choices"][0]["message"]
+    if message["role"] != "assistant" or message["content"] != content:
+        raise SystemExit(
+            f"stream/non-stream chat disagreement: {content!r} vs {message['content']!r}"
+        )
+    log(f"chat content: {content!r}")
+
+
+def check_stop_sequence(port: int, greedy_tokens: list[int]) -> None:
+    """A stop string equal to the first greedy token must end generation
+    after exactly one token with finish_reason 'stop' (matched text is
+    included in the output)."""
+    stop = decode_ids(greedy_tokens[:1])
+    doc = post_json(
+        port, "/v1/completions",
+        {"prompt": PROMPT_TEXT, "max_tokens": MAX_TOKENS, "temperature": 0, "stop": stop},
+    )
+    choice = doc["choices"][0]
+    if choice["finish_reason"] != "stop":
+        raise SystemExit(f"stop finish_reason {choice['finish_reason']!r}, want 'stop'")
+    if choice["text"] != stop:
+        raise SystemExit(f"stop text {choice['text']!r}, want {stop!r}")
+    if doc["usage"]["completion_tokens"] != 1:
+        raise SystemExit(f"stop should halt after 1 token: {doc['usage']}")
+
+
+def check_cancellation(port: int) -> None:
+    """Drop the socket mid-stream; the serve loop must notice the dead
+    client on its next chunk write, retire the sequence, free the slab,
+    and count the cancellation in /metrics."""
+    payload = json.dumps(
+        {"prompt": PROMPT_TEXT, "max_tokens": 400, "temperature": 0, "stream": True}
+    ).encode()
+    request = (
+        b"POST /v1/completions HTTP/1.1\r\n"
+        b"Host: 127.0.0.1\r\n"
+        b"Content-Type: application/json\r\n"
+        b"Content-Length: " + str(len(payload)).encode() + b"\r\n"
+        b"\r\n" + payload
+    )
+    sock = socket.create_connection(("127.0.0.1", port), timeout=30)
+    sock.sendall(request)
+    seen = b""
+    deadline = time.monotonic() + 30
+    while b'"content"' not in seen and b'"text"' not in seen:
+        if time.monotonic() > deadline:
+            raise SystemExit(f"no streamed delta before disconnect: {seen!r}")
+        chunk = sock.recv(4096)
+        if not chunk:
+            raise SystemExit("stream closed before the first delta")
+        seen += chunk
+    sock.close()
+    log("socket dropped mid-generation, waiting for the cancel sweep …")
+
+    deadline = time.monotonic() + 30
+    while True:
+        text = scrape_metrics(port)
+        if metric_value(text, "rwkvquant_requests_cancelled_total") >= 1.0:
+            break
+        if time.monotonic() > deadline:
+            raise SystemExit("cancellation never reached rwkvquant_requests_cancelled_total")
+        time.sleep(0.2)
+
+    # the orphaned sequence must have released its state-pool slab: the
+    # queue drains to zero and a follow-up request is admitted normally
+    deadline = time.monotonic() + 30
+    while metric_value(scrape_metrics(port), "rwkvquant_queue_depth") != 0.0:
+        if time.monotonic() > deadline:
+            raise SystemExit("queue depth never returned to zero after the cancel")
+        time.sleep(0.2)
+    doc = post_json(
+        port, "/v1/completions", {"prompt": "w5 ", "max_tokens": 2, "temperature": 0}
+    )
+    if doc["choices"][0]["finish_reason"] != "length":
+        raise SystemExit("follow-up request after the cancel did not complete")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", required=True, help="path to the rwkvquant binary")
+    args = ap.parse_args()
+    binary = str(Path(args.bin).resolve())
+
+    tmp = Path(tempfile.mkdtemp(prefix="rwkvq_openai_smoke_"))
+    store = tmp / "smoke.rwkvq2"
+    log("packing tiny model …")
+    subprocess.run(
+        [binary, "pack", "--size", "0.1B", "--seed", "7", "--out", str(store)],
+        check=True,
+    )
+
+    port = free_port()
+    log(f"starting gateway on 127.0.0.1:{port} …")
+    server = subprocess.Popen(
+        [
+            binary, "serve", "--store", str(store),
+            "--http", f"127.0.0.1:{port}",
+            "--max-queue", "8", "--batch", "4", "--tick-threads", "2",
+            "--prefill-chunk", "16",
+        ]
+    )
+    try:
+        wait_healthy(port, server)
+        log("healthz OK")
+
+        greedy_tokens = check_greedy_twin(port)
+        log(f"greedy /v1/completions token-identical to /v1/generate OK ({greedy_tokens})")
+
+        check_seeded_determinism(port)
+        log("same-seed sampling reproducible OK")
+
+        check_chat_stream(port)
+        log("chat SSE delta protocol + [DONE] OK")
+
+        check_stop_sequence(port, greedy_tokens)
+        log("stop sequence honoured (finish_reason=stop) OK")
+
+        check_cancellation(port)
+        log("disconnect cancellation OK")
+
+        text = scrape_metrics(port)
+        if metric_value(text, "rwkvquant_text_requests_total") < 7:
+            raise SystemExit("text_requests_total saw fewer requests than we sent")
+        if metric_value(text, "rwkvquant_requests_cancelled_total") != 1.0:
+            raise SystemExit("expected exactly one cancelled request")
+        if metric_value(text, "rwkvquant_sampled_tokens_total") < 2 * MAX_TOKENS:
+            raise SystemExit("sampled_tokens_total did not count the seeded runs")
+        log("metrics OK")
+
+        log("sending SIGTERM for a graceful drain …")
+        server.send_signal(signal.SIGTERM)
+        code = server.wait(timeout=60)
+        if code != 0:
+            raise SystemExit(f"server exited {code} after SIGTERM (want 0)")
+        log("graceful drain OK (exit 0)")
+    finally:
+        if server.poll() is None:
+            server.kill()
+            server.wait(timeout=10)
+
+    log("PASS")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,7 @@
 
 pub mod batcher;
 pub mod pipeline;
+pub mod sampler;
 pub mod serve;
 pub mod statepool;
 

@@ -1,0 +1,360 @@
+//! Per-request token sampling: temperature / top-k / top-p / repetition
+//! penalty over the repo's seeded xoshiro256** PRNG (`util::rng::Rng`).
+//!
+//! Every draw is bit-reproducible: a `(seed, params, logits, history)`
+//! tuple always yields the same token, on every platform, because the
+//! filtering pipeline is pure f32/f64 arithmetic with a total order
+//! (`f32::total_cmp`) and the PRNG is dependency-free. `temperature == 0`
+//! degenerates to exactly `stats::argmax` — same first-max-wins
+//! tie-breaking — so greedy requests through the sampler are
+//! token-identical to the pre-sampler serve path.
+//!
+//! The pipeline, in order (matching the conventional HF/vLLM semantics):
+//!
+//! 1. **repetition penalty** — each *distinct* token in the history has
+//!    its logit divided by the penalty when positive, multiplied when
+//!    negative (a token is penalised once, not once per occurrence),
+//! 2. **temperature** — logits are divided by the temperature,
+//! 3. **softmax** (max-subtracted for stability),
+//! 4. **top-k** — keep the k most probable candidates (0 = off),
+//! 5. **top-p** — keep the smallest prefix of the probability-sorted
+//!    candidates whose cumulative mass reaches `top_p` (1.0 = off; at
+//!    least one candidate always survives),
+//! 6. renormalise and draw via one uniform from the seeded stream.
+
+use crate::tensor::stats;
+use crate::util::rng::Rng;
+
+/// Per-request sampling configuration. `SampleParams::greedy()` (the
+/// default) reproduces the argmax path bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleParams {
+    /// Softmax temperature; `0.0` means greedy (argmax, no randomness).
+    pub temperature: f32,
+    /// Keep only the `top_k` most probable candidates; `0` disables.
+    pub top_k: usize,
+    /// Nucleus mass threshold in `(0, 1]`; `1.0` disables.
+    pub top_p: f32,
+    /// Divide (positive) / multiply (negative) logits of already
+    /// generated tokens by this factor; `1.0` disables.
+    pub repetition_penalty: f32,
+    /// PRNG seed — same seed, same params, same prompt ⇒ same tokens.
+    pub seed: u64,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SampleParams {
+    /// Greedy decoding: argmax every step, no randomness consumed.
+    pub fn greedy() -> Self {
+        SampleParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: 0,
+        }
+    }
+
+    /// True when this configuration cannot introduce randomness.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Validate ranges; returns a client-displayable message on error.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!("temperature must be finite and >= 0, got {}", self.temperature));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!("top_p must be in (0, 1], got {}", self.top_p));
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            return Err(format!(
+                "repetition_penalty must be finite and > 0, got {}",
+                self.repetition_penalty
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Stateful per-sequence sampler: params plus the seeded PRNG stream.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SampleParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SampleParams) -> Self {
+        Sampler { params, rng: Rng::new(params.seed) }
+    }
+
+    pub fn params(&self) -> &SampleParams {
+        &self.params
+    }
+
+    /// Draw the next token. `history` is the tokens generated so far for
+    /// this sequence (used by the repetition penalty). Greedy params take
+    /// the exact `stats::argmax` path and consume no randomness.
+    pub fn sample(&mut self, logits: &[f32], history: &[usize]) -> usize {
+        if self.params.is_greedy() {
+            return stats::argmax(logits);
+        }
+        let dist = distribution(&self.params, logits, history);
+        let r = self.rng.f64();
+        let mut acc = 0.0f64;
+        for &(idx, p) in &dist {
+            acc += f64::from(p);
+            if r < acc {
+                return idx;
+            }
+        }
+        // float round-off can leave acc a hair under 1.0 — the last
+        // (least probable surviving) candidate absorbs the remainder
+        dist.last().map_or(0, |&(idx, _)| idx)
+    }
+}
+
+/// Full post-penalty, post-temperature softmax distribution over the
+/// vocab (no truncation). Exposed for the property tests.
+pub fn adjusted_probs(params: &SampleParams, logits: &[f32], history: &[usize]) -> Vec<f32> {
+    let mut adj: Vec<f32> = logits.to_vec();
+    if params.repetition_penalty != 1.0 {
+        let mut seen = vec![false; adj.len()];
+        for &t in history {
+            if t < adj.len() && !seen[t] {
+                seen[t] = true;
+                adj[t] = if adj[t] > 0.0 {
+                    adj[t] / params.repetition_penalty
+                } else {
+                    adj[t] * params.repetition_penalty
+                };
+            }
+        }
+    }
+    let inv_t = 1.0 / params.temperature;
+    for v in adj.iter_mut() {
+        *v *= inv_t;
+    }
+    let max = adj.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut total = 0.0f32;
+    for v in adj.iter_mut() {
+        *v = (*v - max).exp();
+        total += *v;
+    }
+    for v in adj.iter_mut() {
+        *v /= total;
+    }
+    adj
+}
+
+/// The truncated, renormalised sampling distribution: candidates sorted
+/// by descending probability (ascending index on exact ties), filtered
+/// through top-k then top-p, probabilities summing to 1. This is what
+/// `Sampler::sample` draws from; exposed so tests can assert the mass
+/// invariants without statistical sampling.
+pub fn distribution(params: &SampleParams, logits: &[f32], history: &[usize]) -> Vec<(usize, f32)> {
+    let probs = adjusted_probs(params, logits, history);
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
+    if params.top_k > 0 && params.top_k < order.len() {
+        order.truncate(params.top_k);
+    }
+    if params.top_p < 1.0 {
+        let mut mass = 0.0f32;
+        let mut keep = order.len();
+        for (i, &idx) in order.iter().enumerate() {
+            mass += probs[idx];
+            if mass >= params.top_p {
+                keep = i + 1;
+                break;
+            }
+        }
+        order.truncate(keep);
+    }
+    let total: f32 = order.iter().map(|&i| probs[i]).sum();
+    order.into_iter().map(|i| (i, probs[i] / total)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_logits(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect()
+    }
+
+    #[test]
+    fn temperature_zero_is_exactly_argmax() {
+        let mut rng = Rng::new(101);
+        let mut s = Sampler::new(SampleParams::greedy());
+        for _ in 0..200 {
+            let logits = random_logits(&mut rng, 64);
+            assert_eq!(s.sample(&logits, &[]), stats::argmax(&logits));
+        }
+        // ties break first-max-wins, same as stats::argmax
+        let tied = vec![1.0f32, 5.0, 5.0, 0.0, 5.0];
+        assert_eq!(s.sample(&tied, &[]), 1);
+        assert_eq!(stats::argmax(&tied), 1);
+    }
+
+    #[test]
+    fn same_seed_same_stream_across_instances() {
+        let params = SampleParams {
+            temperature: 0.9,
+            top_k: 20,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            seed: 1234,
+        };
+        let mut a = Sampler::new(params);
+        let mut b = Sampler::new(params);
+        let mut rng = Rng::new(77);
+        let mut history = Vec::new();
+        for _ in 0..100 {
+            let logits = random_logits(&mut rng, 128);
+            let ta = a.sample(&logits, &history);
+            let tb = b.sample(&logits, &history);
+            assert_eq!(ta, tb);
+            history.push(ta);
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut p = SampleParams { temperature: 1.5, ..SampleParams::greedy() };
+        p.seed = 1;
+        let mut a = Sampler::new(p);
+        p.seed = 2;
+        let mut b = Sampler::new(p);
+        let mut rng = Rng::new(5);
+        let mut same = 0;
+        for _ in 0..64 {
+            let logits = random_logits(&mut rng, 512);
+            if a.sample(&logits, &[]) == b.sample(&logits, &[]) {
+                same += 1;
+            }
+        }
+        assert!(same < 32, "seeds 1 and 2 agreed on {same}/64 draws");
+    }
+
+    #[test]
+    fn top_k_keeps_exactly_the_k_largest() {
+        let mut rng = Rng::new(19);
+        for _ in 0..50 {
+            let logits = random_logits(&mut rng, 40);
+            let k = 1 + rng.below(10);
+            let params =
+                SampleParams { temperature: 1.0, top_k: k, ..SampleParams::greedy() };
+            let dist = distribution(&params, &logits, &[]);
+            assert_eq!(dist.len(), k);
+            // every kept candidate beats (or ties) every dropped one
+            let kept: Vec<usize> = dist.iter().map(|&(i, _)| i).collect();
+            let floor =
+                kept.iter().map(|&i| logits[i]).fold(f32::INFINITY, f32::min);
+            for (i, &l) in logits.iter().enumerate() {
+                if !kept.contains(&i) {
+                    assert!(l <= floor, "dropped logit {l} beats kept floor {floor}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_the_minimal_prefix_reaching_the_mass() {
+        let mut rng = Rng::new(23);
+        for _ in 0..50 {
+            let logits = random_logits(&mut rng, 64);
+            let top_p = 0.5 + 0.4 * rng.f32();
+            let params =
+                SampleParams { temperature: 1.0, top_p, ..SampleParams::greedy() };
+            let full = adjusted_probs(&params, &logits, &[]);
+            let dist = distribution(&params, &logits, &[]);
+            assert!(!dist.is_empty());
+            // renormalised distribution sums to 1
+            let sum: f32 = dist.iter().map(|&(_, p)| p).sum();
+            assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+            // kept raw mass reaches top_p …
+            let kept_mass: f32 = dist.iter().map(|&(i, _)| full[i]).sum();
+            assert!(kept_mass >= top_p - 1e-5, "mass {kept_mass} < top_p {top_p}");
+            // … and was not reached before the last kept candidate
+            // (minimal prefix), unless everything survived
+            if dist.len() < full.len() {
+                let before: f32 =
+                    dist[..dist.len() - 1].iter().map(|&(i, _)| full[i]).sum();
+                assert!(before < top_p, "prefix mass {before} already ≥ {top_p}");
+            }
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_monotonically_suppresses_history() {
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let mut logits = random_logits(&mut rng, 32);
+            let t = rng.below(32);
+            logits[t] = logits[t].abs() + 0.5; // positive so ÷penalty applies
+            let history = vec![t];
+            let mut last = f32::INFINITY;
+            for penalty in [1.0f32, 1.2, 1.5, 2.0] {
+                let params = SampleParams {
+                    temperature: 1.0,
+                    repetition_penalty: penalty,
+                    ..SampleParams::greedy()
+                };
+                let p = adjusted_probs(&params, &logits, &history)[t];
+                assert!(p < last, "penalty {penalty} did not lower p({t}): {p} vs {last}");
+                last = p;
+            }
+        }
+    }
+
+    #[test]
+    fn history_tokens_are_penalised_once_not_per_occurrence() {
+        let logits = vec![2.0f32, 1.0, 0.5];
+        let params = SampleParams {
+            temperature: 1.0,
+            repetition_penalty: 1.5,
+            ..SampleParams::greedy()
+        };
+        let once = adjusted_probs(&params, &logits, &[0]);
+        let thrice = adjusted_probs(&params, &logits, &[0, 0, 0]);
+        assert_eq!(once, thrice);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let mut p = SampleParams::greedy();
+        assert!(p.validate().is_ok());
+        p.temperature = -1.0;
+        assert!(p.validate().is_err());
+        p = SampleParams::greedy();
+        p.top_p = 0.0;
+        assert!(p.validate().is_err());
+        p = SampleParams::greedy();
+        p.top_p = 1.5;
+        assert!(p.validate().is_err());
+        p = SampleParams::greedy();
+        p.repetition_penalty = 0.0;
+        assert!(p.validate().is_err());
+        p = SampleParams::greedy();
+        p.temperature = f32::NAN;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn sampling_respects_the_distribution() {
+        // a heavily skewed distribution must mostly sample its mode
+        let logits = vec![0.0f32, 6.0, 0.0, 0.0];
+        let params = SampleParams { temperature: 1.0, seed: 9, ..SampleParams::greedy() };
+        let mut s = Sampler::new(params);
+        let hits = (0..2000).filter(|_| s.sample(&logits, &[]) == 1).count();
+        assert!(hits > 1800, "mode sampled only {hits}/2000 times");
+    }
+}

@@ -14,6 +14,17 @@
 //! throughput are reported per request. An idle server blocks on the
 //! request channel with a bounded timeout instead of spinning a core.
 //!
+//! Each continuation token is drawn through the request's seeded
+//! [`Sampler`] when sampling params are attached ([`Request::sample`]),
+//! argmax otherwise — greedy params reduce to exactly the argmax path,
+//! so the historical twin-identity guarantees hold. Sequences retire on
+//! their `gen_len` budget ([`FinishReason::Length`]), on a per-request
+//! stop sequence ([`FinishReason::Stop`]), or cooperatively when the
+//! request's cancel flag is raised by a vanished client
+//! ([`FinishReason::Cancelled`] — checked every tick *before* decoding,
+//! so an orphaned sequence frees its state slab and tick budget at
+//! once).
+//!
 //! Sequence state lives in a slab arena ([`super::statepool`]): each
 //! admitted sequence checks a fixed-size slab out and tick workers
 //! read/write it in place, so a warmed-up tick allocates nothing. When
@@ -38,12 +49,14 @@
 //! the cold-scratch cost on every token.
 
 use super::batcher::DynamicBatcher;
+use super::sampler::{SampleParams, Sampler};
 use super::statepool::StatePool;
 use crate::model::WeightProvider;
 use crate::tensor::stats;
 use crate::Result;
 use std::collections::HashSet;
-use std::sync::{mpsc, Mutex};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::ThreadId;
 use std::time::{Duration, Instant};
 
@@ -113,6 +126,33 @@ pub fn resolve_tick_threads(requested: usize, max_batch: usize) -> usize {
     }
 }
 
+/// Why a sequence stopped decoding. Mirrors the OpenAI `finish_reason`
+/// values the gateway reports (`"length"` / `"stop"` / `"cancelled"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The per-request `gen_len` (`max_tokens`) budget was exhausted.
+    Length,
+    /// A per-request stop sequence ([`Request::stop`]) matched. The
+    /// matched tokens are **included** in the output (the stream has
+    /// already delivered them when the match is detected).
+    Stop,
+    /// The request's cancel flag ([`Request::cancel`]) was raised — the
+    /// client went away; the sequence was retired mid-decode and its
+    /// state slab released. `tokens` holds whatever was generated.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// The OpenAI wire spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
 /// Per-request lifecycle events, delivered live on [`Request::stream`]
 /// while the sequence is being served. The HTTP gateway turns these into
 /// SSE chunks; in-process callers that only need the final tokens can
@@ -127,8 +167,8 @@ pub enum StreamEvent {
     /// Generation finished; the final [`Response`] carries the same
     /// tokens. Sent before the per-request sender is dropped. `ttft` is
     /// the admission-to-first-generated-token delay (zero when
-    /// `gen_len` was 0).
-    Done { latency: Duration, ttft: Duration },
+    /// `gen_len` was 0). `finish` says why decoding stopped.
+    Done { latency: Duration, ttft: Duration, finish: FinishReason },
     /// Rejected at admission: the bounded queue ([`ServeOpts::max_queue`])
     /// was full. No other event follows (HTTP maps this to 429).
     Shed,
@@ -139,15 +179,39 @@ pub enum StreamEvent {
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
+    /// Per-request generation budget (`max_tokens`): decoding stops with
+    /// [`FinishReason::Length`] once this many tokens were generated.
     pub gen_len: usize,
     /// Optional live event stream (see [`StreamEvent`]). Send errors are
     /// ignored — a vanished listener never stalls the serve loop.
     pub stream: Option<mpsc::Sender<StreamEvent>>,
+    /// Per-request sampling parameters. `None` (and any greedy params)
+    /// takes the exact argmax path of the pre-sampler engine — token
+    /// identity with the historical greedy twin is preserved.
+    pub sample: Option<SampleParams>,
+    /// Stop sequences, already tokenized. When the generated tail equals
+    /// any of them the sequence retires with [`FinishReason::Stop`]
+    /// (matched tokens included in the output). Empty sequences are
+    /// ignored.
+    pub stop: Vec<Vec<usize>>,
+    /// Cooperative cancel flag, checked by the serve loop every tick
+    /// *before* decoding. Raise it (client disconnect) and the sequence
+    /// is retired with [`FinishReason::Cancelled`], releasing its state
+    /// slab and tick budget instead of decoding to completion.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<usize>, gen_len: usize) -> Request {
-        Request { id, prompt, gen_len, stream: None }
+        Request {
+            id,
+            prompt,
+            gen_len,
+            stream: None,
+            sample: None,
+            stop: Vec::new(),
+            cancel: None,
+        }
     }
 
     /// Attach a live event stream to this request.
@@ -155,6 +219,37 @@ impl Request {
         self.stream = Some(tx);
         self
     }
+
+    /// Attach per-request sampling parameters (see [`SampleParams`]).
+    pub fn with_sampling(mut self, params: SampleParams) -> Request {
+        self.sample = Some(params);
+        self
+    }
+
+    /// Attach tokenized stop sequences.
+    pub fn with_stop(mut self, stop: Vec<Vec<usize>>) -> Request {
+        self.stop = stop;
+        self
+    }
+
+    /// Attach a cooperative cancel flag.
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> Request {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// True when the cancel flag is raised.
+    fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(std::sync::atomic::Ordering::Relaxed))
+    }
+}
+
+/// Does the generated tail match any (non-empty) stop sequence? Checked
+/// after every generated token, so a match is always a suffix.
+fn stop_hit(generated: &[usize], stops: &[Vec<usize>]) -> bool {
+    stops.iter().any(|s| !s.is_empty() && generated.ends_with(s))
 }
 
 /// The server's answer.
@@ -172,6 +267,8 @@ pub struct Response {
     /// The request was shed at admission (bounded queue full) and never
     /// decoded; `tokens` is empty and the timings are zero.
     pub shed: bool,
+    /// Why decoding stopped (`None` only for shed requests).
+    pub finish: Option<FinishReason>,
 }
 
 /// Aggregate serving metrics.
@@ -207,6 +304,9 @@ pub struct ServeStats {
     /// Parked snapshots copied back into an arena slab (every sequence
     /// resumes at least once: its first residency).
     pub state_resumes: u64,
+    /// Requests retired mid-decode because their cancel flag was raised
+    /// (client disconnect). Not counted in `completed`.
+    pub cancelled: usize,
 }
 
 impl ServeStats {
@@ -287,6 +387,11 @@ pub trait ServeObserver: Sync {
     fn on_shed(&self) {}
     /// A request finished decoding.
     fn on_completed(&self, _latency: Duration) {}
+    /// A request was cancelled mid-decode (cancel flag raised).
+    fn on_cancelled(&self) {}
+    /// A tick produced `n` tokens through the stochastic sampler (the
+    /// greedy/argmax path does not count).
+    fn on_sampled_tokens(&self, _n: usize) {}
 }
 
 /// The do-nothing [`ServeObserver`].
@@ -335,6 +440,9 @@ struct Active {
     streamed: usize,
     /// Admission → first generated token, set once by the serve thread.
     ttft: Option<Duration>,
+    /// Stochastic sampler for this sequence, built at admission from
+    /// [`Request::sample`]; `None` means the historical argmax path.
+    sampler: Option<Sampler>,
 }
 
 // SAFETY: the raw `state_ptr` is what suppresses the auto impl. It names
@@ -359,12 +467,15 @@ struct TickWork {
     generated: usize,
     /// Prompt tokens consumed (prefill).
     prefill: usize,
+    /// Of `generated`, tokens drawn through a stochastic sampler.
+    sampled: usize,
 }
 
 impl std::ops::AddAssign for TickWork {
     fn add_assign(&mut self, rhs: TickWork) {
         self.generated += rhs.generated;
         self.prefill += rhs.prefill;
+        self.sampled += rhs.sampled;
     }
 }
 
@@ -378,12 +489,14 @@ impl std::iter::Sum for TickWork {
 }
 
 /// Advance one sequence by one tick: load its state slab, feed up to
-/// `prefill_chunk` prompt tokens (while in prefill) or one greedy
-/// continuation token, write the state back into the slab in place.
-/// Greedy output depends only on the post-prompt state, so the chunk
-/// size cannot change the generated tokens — only how many ticks the
-/// prompt costs. With the slab resident and the logits buffer reused
-/// (`step_into`), a warmed-up sequence ticks without allocating.
+/// `prefill_chunk` prompt tokens (while in prefill) or one continuation
+/// token — drawn through the request's [`Sampler`] when it has one,
+/// argmax otherwise (and a greedy sampler reduces to exactly argmax).
+/// Output depends only on the post-prompt state plus the sequence's own
+/// sampler stream, so neither the chunk size nor lane placement can
+/// change the generated tokens — only how many ticks the prompt costs.
+/// With the slab resident and the logits buffer reused (`step_into`), a
+/// warmed-up sequence ticks without allocating.
 fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickParams) -> TickWork {
     // SAFETY: `state_ptr` names this sequence's exclusive arena slab of
     // `state_len` floats, refreshed for this tick by the serve loop; no
@@ -401,7 +514,13 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickPa
         }
         work.prefill = n;
     } else {
-        let next = stats::argmax(&a.logits);
+        let next = match a.sampler.as_mut() {
+            Some(s) if !s.params().is_greedy() => {
+                work.sampled = 1;
+                s.sample(&a.logits, &a.generated)
+            }
+            _ => stats::argmax(&a.logits),
+        };
         a.generated.push(next);
         decoder.step_into(next, &mut a.logits);
         work.generated = 1;
@@ -932,6 +1051,7 @@ fn serve_loop(
     let mut prompt_tokens = 0usize;
     let mut completed = 0usize;
     let mut shed = 0usize;
+    let mut cancelled = 0usize;
     let t_start = Instant::now();
     let mut channel_open = true;
     // bounded idle wait: long enough not to spin, short enough to honour
@@ -967,6 +1087,7 @@ fn serve_loop(
                 latency: Duration::ZERO,
                 ttft: Duration::ZERO,
                 shed: true,
+                finish: None,
             });
         } else {
             batcher.push(req, Instant::now());
@@ -1000,6 +1121,7 @@ fn serve_loop(
             if let Some(s) = &pending.item.stream {
                 let _ = s.send(StreamEvent::Admitted { queued: wait });
             }
+            let sampler = pending.item.sample.map(Sampler::new);
             active.push(Active {
                 req: pending.item,
                 arrived: pending.arrived,
@@ -1013,6 +1135,42 @@ fn serve_loop(
                 prompt_pos: 0,
                 streamed: 0,
                 ttft: None,
+                sampler,
+            });
+        }
+
+        // cancel sweep — BEFORE the tick, so a disconnected client's
+        // sequence never consumes another decode step: release the state
+        // slab back to the arena and retire with `cancelled`
+        let mut i = 0usize;
+        while i < active.len() {
+            if !active[i].req.cancelled() {
+                i += 1;
+                continue;
+            }
+            let mut a = active.swap_remove(i);
+            if let Some(slab) = a.slab.take() {
+                pool.release(slab);
+            }
+            cancelled += 1;
+            obs.on_cancelled();
+            let latency = a.started.elapsed();
+            let ttft = a.ttft.unwrap_or(Duration::ZERO);
+            if let Some(s) = &a.req.stream {
+                let _ = s.send(StreamEvent::Done {
+                    latency,
+                    ttft,
+                    finish: FinishReason::Cancelled,
+                });
+            }
+            let _ = tx.send(Response {
+                id: a.req.id,
+                tokens: a.generated,
+                queued: a.started.duration_since(a.arrived),
+                latency,
+                ttft,
+                shed: false,
+                finish: Some(FinishReason::Cancelled),
             });
         }
 
@@ -1090,6 +1248,9 @@ fn serve_loop(
         if produced.prefill > 0 {
             obs.on_prefill_tokens(produced.prefill);
         }
+        if produced.sampled > 0 {
+            obs.on_sampled_tokens(produced.sampled);
+        }
 
         // flush newly generated tokens to each request's event stream
         // (serve thread only — workers never touch the senders)
@@ -1108,13 +1269,20 @@ fn serve_loop(
             a.streamed = a.generated.len();
         }
 
-        // retire finished sequences
+        // retire finished sequences: a stop-sequence match wins over the
+        // length budget when both trigger on the same token
         let mut i = 0usize;
         while i < active.len() {
-            if active[i].generated.len() < active[i].req.gen_len {
+            let finish = if !active[i].generated.is_empty()
+                && stop_hit(&active[i].generated, &active[i].req.stop)
+            {
+                FinishReason::Stop
+            } else if active[i].generated.len() >= active[i].req.gen_len {
+                FinishReason::Length
+            } else {
                 i += 1;
                 continue;
-            }
+            };
             let mut a = active.swap_remove(i);
             if let Some(slab) = a.slab.take() {
                 pool.release(slab);
@@ -1125,7 +1293,7 @@ fn serve_loop(
             completed += 1;
             obs.on_completed(latency);
             if let Some(s) = &a.req.stream {
-                let _ = s.send(StreamEvent::Done { latency, ttft });
+                let _ = s.send(StreamEvent::Done { latency, ttft, finish });
             }
             let _ = tx.send(Response {
                 id: a.req.id,
@@ -1134,6 +1302,7 @@ fn serve_loop(
                 latency,
                 ttft,
                 shed: false,
+                finish: Some(finish),
             });
         }
     }
@@ -1159,6 +1328,7 @@ fn serve_loop(
         p99_admission_wait: percentile(&admission_waits, 0.99),
         state_parks: pool.parks(),
         state_resumes: pool.resumes(),
+        cancelled,
     })
 }
 
@@ -1950,5 +2120,216 @@ mod tests {
         dec.load_state_flat(&flat);
         let b = dec.step(3);
         assert_eq!(a, b, "flat restore must reproduce the decode exactly");
+    }
+
+    #[test]
+    fn greedy_sampler_requests_match_the_argmax_twin() {
+        // temperature 0 through the sampler must be token-identical to
+        // requests with no sampler at all (the pre-sampler path)
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(41));
+        let plain = || -> Vec<Request> {
+            (0..5u64).map(|id| Request::new(id, vec![(id as usize * 3 + 1) % 32, 2], 6)).collect()
+        };
+        let sampled = || -> Vec<Request> {
+            plain()
+                .into_iter()
+                .map(|r| {
+                    r.with_sampling(SampleParams { seed: 99, ..SampleParams::greedy() })
+                })
+                .collect()
+        };
+        let mut dec = RunnerDecoder::new(&m);
+        let (_, want) = serve_collect(&mut dec, plain(), 4, Duration::from_millis(1)).unwrap();
+        let mut dec2 = RunnerDecoder::new(&m);
+        let (_, got) = serve_collect(&mut dec2, sampled(), 4, Duration::from_millis(1)).unwrap();
+        let a: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let b: Vec<_> = got.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, b, "a greedy sampler must reduce to the argmax path");
+        assert!(got.iter().all(|r| r.finish == Some(FinishReason::Length)));
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible_and_batching_independent() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(43));
+        let params = SampleParams {
+            temperature: 1.2,
+            top_k: 12,
+            top_p: 0.9,
+            repetition_penalty: 1.1,
+            seed: 0, // per-request seed added below
+        };
+        let requests = || -> Vec<Request> {
+            (0..6u64)
+                .map(|id| {
+                    Request::new(id, vec![(id as usize * 5 + 1) % 32, 2], 8)
+                        .with_sampling(SampleParams { seed: 1000 + id, ..params })
+                })
+                .collect()
+        };
+        let mut dec = RunnerDecoder::new(&m);
+        let (_, run1) = serve_collect(&mut dec, requests(), 4, Duration::from_millis(1)).unwrap();
+        let mut dec2 = RunnerDecoder::new(&m);
+        let (_, run2) = serve_collect(&mut dec2, requests(), 4, Duration::from_millis(1)).unwrap();
+        let a: Vec<_> = run1.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let b: Vec<_> = run2.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, b, "same seeds must reproduce the same tokens");
+        // a pooled run with different lane placement must also agree:
+        // each sequence owns its sampler stream, so batching cannot leak
+        let mut decs: Vec<_> = (0..3).map(|_| RunnerDecoder::new(&m)).collect();
+        let (_, pooled) =
+            serve_collect_pool(&mut decs, requests(), 4, Duration::from_millis(1)).unwrap();
+        let c: Vec<_> = pooled.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(a, c, "lane placement must not change sampled tokens");
+        // distinct seeds on an identical prompt should diverge somewhere
+        let tokens: Vec<_> = run1.iter().map(|r| r.tokens.clone()).collect();
+        assert!(
+            tokens.windows(2).any(|w| w[0] != w[1]) || tokens.len() < 2,
+            "all six differently-seeded requests produced identical tokens"
+        );
+    }
+
+    #[test]
+    fn stop_sequence_retires_with_stop_reason_and_halts_decode() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(45));
+        let prompt = vec![3usize, 1, 4];
+        // learn the greedy continuation first
+        let mut dec = RunnerDecoder::new(&m);
+        let (_, free) = serve_collect(
+            &mut dec,
+            vec![Request::new(0, prompt.clone(), 6)],
+            1,
+            Duration::from_millis(0),
+        )
+        .unwrap();
+        assert_eq!(free[0].finish, Some(FinishReason::Length));
+        let full = free[0].tokens.clone();
+        assert_eq!(full.len(), 6);
+        // now stop on the two-token prefix: decoding must halt right
+        // after producing it, stop tokens included in the output
+        let stop = vec![full[..2].to_vec()];
+        let mut dec2 = RunnerDecoder::new(&m);
+        let (stats, stopped) = serve_collect(
+            &mut dec2,
+            vec![Request::new(0, prompt.clone(), 6).with_stop(stop)],
+            1,
+            Duration::from_millis(0),
+        )
+        .unwrap();
+        assert_eq!(stopped[0].finish, Some(FinishReason::Stop));
+        assert_eq!(stopped[0].tokens, full[..2].to_vec());
+        assert_eq!(stats.total_tokens, 2, "decode must stop at the match, not run on");
+        // an unmatched stop sequence changes nothing
+        let mut dec3 = RunnerDecoder::new(&m);
+        let (_, unmatched) = serve_collect(
+            &mut dec3,
+            vec![Request::new(0, prompt, 6).with_stop(vec![vec![31, 31, 31]])],
+            1,
+            Duration::from_millis(0),
+        )
+        .unwrap();
+        assert_eq!(unmatched[0].tokens, full);
+        assert_eq!(unmatched[0].finish, Some(FinishReason::Length));
+    }
+
+    /// Decoder wrapper that raises a request's cancel flag after a fixed
+    /// number of steps — deterministic mid-decode cancellation without
+    /// client threads.
+    struct CancelAfter<'a, W: WeightProvider> {
+        inner: RunnerDecoder<'a, W>,
+        fuse: std::sync::Arc<std::sync::atomic::AtomicIsize>,
+        flag: Arc<AtomicBool>,
+    }
+
+    impl<W: WeightProvider> Decoder for CancelAfter<'_, W> {
+        fn reset(&mut self) {
+            self.inner.reset();
+        }
+
+        fn step(&mut self, token: usize) -> Vec<f32> {
+            use std::sync::atomic::Ordering;
+            if self.fuse.fetch_sub(1, Ordering::SeqCst) <= 0 {
+                self.flag.store(true, Ordering::Relaxed);
+            }
+            self.inner.step(token)
+        }
+
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn save_state(&self) -> Vec<Vec<f32>> {
+            self.inner.save_state()
+        }
+
+        fn load_state(&mut self, state: &[Vec<f32>]) {
+            self.inner.load_state(state);
+        }
+    }
+
+    #[test]
+    fn raised_cancel_flag_retires_the_sequence_mid_decode() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(47));
+        let flag = Arc::new(AtomicBool::new(false));
+        // 3 prompt steps + 4 generation steps, then the flag goes up:
+        // the sweep before the next tick must retire the sequence well
+        // short of its 64-token budget
+        let fuse = std::sync::Arc::new(std::sync::atomic::AtomicIsize::new(7));
+        let mut dec =
+            CancelAfter { inner: RunnerDecoder::new(&m), fuse, flag: flag.clone() };
+        let (tx_req, rx_req) = mpsc::channel();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        let (tx_ev, rx_ev) = mpsc::channel();
+        tx_req
+            .send(
+                Request::new(0, vec![3, 1, 4], 64)
+                    .with_cancel(flag)
+                    .with_stream(tx_ev),
+            )
+            .unwrap();
+        drop(tx_req);
+        let stats = serve(&mut dec, rx_req, tx_resp, 2, Duration::from_millis(0)).unwrap();
+        assert_eq!(stats.cancelled, 1, "the request must be counted as cancelled");
+        assert_eq!(stats.completed, 0, "a cancelled request is not a completion");
+        let resp: Vec<Response> = rx_resp.iter().collect();
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].finish, Some(FinishReason::Cancelled));
+        assert!(
+            !resp[0].tokens.is_empty() && resp[0].tokens.len() < 64,
+            "cancel must land mid-decode, got {} tokens",
+            resp[0].tokens.len()
+        );
+        let events: Vec<StreamEvent> = rx_ev.iter().collect();
+        assert!(
+            matches!(
+                events.last(),
+                Some(StreamEvent::Done { finish: FinishReason::Cancelled, .. })
+            ),
+            "last event must be a cancelled Done, got {:?}",
+            events.last()
+        );
+    }
+
+    #[test]
+    fn pre_raised_cancel_flag_never_decodes() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(49));
+        let mut dec = RunnerDecoder::new(&m);
+        let flag = Arc::new(AtomicBool::new(true));
+        let (stats, resp) = serve_collect(
+            &mut dec,
+            vec![
+                Request::new(0, vec![5, 2], 8).with_cancel(flag),
+                Request::new(1, vec![5, 2], 8),
+            ],
+            2,
+            Duration::from_millis(0),
+        )
+        .unwrap();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.completed, 1);
+        let r0 = resp.iter().find(|r| r.id == 0).unwrap();
+        assert!(r0.tokens.is_empty(), "a pre-cancelled request must not decode");
+        assert_eq!(r0.finish, Some(FinishReason::Cancelled));
+        let r1 = resp.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.tokens.len(), 8, "the live request must be unaffected");
     }
 }

@@ -7,6 +7,8 @@
 //! it), a held-out split for perplexity, and generators for the nine
 //! synthetic zero-shot choice tasks used by [`crate::eval::zeroshot`].
 
+pub mod tokenizer;
+
 use crate::util::rng::Rng;
 
 /// Sparse order-2 Markov grammar over `vocab` tokens.

@@ -1,0 +1,276 @@
+//! Self-contained greedy longest-match tokenizer over a JSON vocab.
+//!
+//! Dependency-free text ↔ token-id mapping for the OpenAI-compatible
+//! endpoints. The algorithm is greedy longest-match ("greedy BPE over a
+//! flattened merge table"): at each position the longest vocab entry
+//! that prefixes the remaining text wins. That makes encoding a pure
+//! function of `(vocab, text)` — no merge ranks, no regex pre-splits —
+//! which keeps the determinism story of the serving stack intact.
+//!
+//! Vocab files are parsed with the existing [`crate::server::json`]
+//! parser and accept two shapes:
+//!
+//! * an array of strings — index is the token id:
+//!   `["<unk>", "hello", " world"]`
+//! * an object mapping token → id: `{"<unk>": 0, "hello": 1}`
+//!
+//! Characters no vocab entry covers fall back to the `<unk>` entry when
+//! the vocab defines one (the whole char is consumed, so encoding always
+//! terminates) and are dropped otherwise. Decoding an out-of-range id
+//! likewise produces the `<unk>` string (or nothing). Both behaviours
+//! are deliberately lossy-but-total: the serve path must never reject a
+//! request because of an exotic byte.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Conventional unknown-token string; a vocab entry with exactly this
+/// text becomes the fallback for uncovered characters.
+pub const UNK_TOKEN: &str = "<unk>";
+
+/// Greedy longest-match tokenizer. Construction is O(vocab), encoding
+/// is O(text · max_token_len) with `BTreeMap` lookups.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// id → token text (empty string for ids the vocab never named)
+    tokens: Vec<String>,
+    /// token text → id (first id wins on duplicate strings)
+    index: BTreeMap<String, usize>,
+    /// longest vocab entry, in bytes — bounds the match window
+    max_len: usize,
+    /// id of the `<unk>` entry, when the vocab has one
+    unk: Option<usize>,
+}
+
+impl Tokenizer {
+    /// Build from an id-ordered token list.
+    pub fn from_tokens(tokens: Vec<String>) -> Tokenizer {
+        let mut index = BTreeMap::new();
+        let mut max_len = 0;
+        let mut unk = None;
+        for (id, t) in tokens.iter().enumerate() {
+            if t.is_empty() {
+                continue; // unnamed id — decodable as nothing, never encoded
+            }
+            max_len = max_len.max(t.len());
+            if t == UNK_TOKEN && unk.is_none() {
+                unk = Some(id);
+            }
+            index.entry(t.clone()).or_insert(id);
+        }
+        Tokenizer { tokens, index, max_len, unk }
+    }
+
+    /// The built-in vocab for synthetic models: id 0 is `<unk>`, id `i`
+    /// is the word `"w{i} "` (trailing space included, so decoded text
+    /// is naturally word-separated and greedy matching is unambiguous:
+    /// `"w12 "` always beats the shorter `"w1"` prefix candidates).
+    pub fn synthetic(vocab: usize) -> Tokenizer {
+        let tokens: Vec<String> = (0..vocab)
+            .map(|i| if i == 0 { UNK_TOKEN.to_string() } else { format!("w{i} ") })
+            .collect();
+        Tokenizer::from_tokens(tokens)
+    }
+
+    /// Parse a vocab document (array-of-strings or token→id object).
+    pub fn from_json_str(s: &str) -> Result<Tokenizer, String> {
+        use crate::report::json::Json;
+        let doc = crate::server::json::parse(s)?;
+        match &doc {
+            Json::Arr(items) => {
+                let mut tokens = Vec::with_capacity(items.len());
+                for (i, item) in items.iter().enumerate() {
+                    match item.as_str() {
+                        Some(t) => tokens.push(t.to_string()),
+                        None => return Err(format!("vocab[{i}] is not a string")),
+                    }
+                }
+                Ok(Tokenizer::from_tokens(tokens))
+            }
+            Json::Obj(map) => {
+                let mut pairs = Vec::with_capacity(map.len());
+                let mut max_id = 0usize;
+                for (tok, id) in map {
+                    let id = id
+                        .as_usize()
+                        .ok_or_else(|| format!("vocab id for {tok:?} is not a non-negative integer"))?;
+                    max_id = max_id.max(id);
+                    pairs.push((tok.clone(), id));
+                }
+                if max_id >= pairs.len().saturating_mul(16).max(1024 * 1024) {
+                    return Err(format!("vocab id {max_id} is implausibly sparse"));
+                }
+                let mut tokens = vec![String::new(); max_id + 1];
+                for (tok, id) in pairs {
+                    if !tokens[id].is_empty() && tokens[id] != tok {
+                        return Err(format!("vocab ids collide at {id}"));
+                    }
+                    tokens[id] = tok;
+                }
+                Ok(Tokenizer::from_tokens(tokens))
+            }
+            _ => Err("vocab must be a JSON array of strings or a token→id object".into()),
+        }
+    }
+
+    /// Load a vocab file from disk.
+    pub fn load(path: &Path) -> Result<Tokenizer, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read vocab {}: {e}", path.display()))?;
+        Tokenizer::from_json_str(&text)
+    }
+
+    /// Number of ids (dense; includes unnamed gap ids for object vocabs).
+    pub fn vocab(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Token text for an id, if the id is in range and named.
+    pub fn token(&self, id: usize) -> Option<&str> {
+        self.tokens.get(id).map(String::as_str).filter(|t| !t.is_empty())
+    }
+
+    /// The `<unk>` id, when the vocab defines one.
+    pub fn unk_id(&self) -> Option<usize> {
+        self.unk
+    }
+
+    /// Greedy longest-match encode. Total: every input char is consumed,
+    /// either by a vocab entry or by the `<unk>` fallback (dropped when
+    /// the vocab has no `<unk>`).
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let bytes = text.len();
+        let mut i = 0;
+        while i < bytes {
+            let window = self.max_len.min(bytes - i);
+            let mut matched = 0;
+            for l in (1..=window).rev() {
+                if !text.is_char_boundary(i + l) {
+                    continue;
+                }
+                if let Some(&id) = self.index.get(&text[i..i + l]) {
+                    out.push(id);
+                    matched = l;
+                    break;
+                }
+            }
+            if matched == 0 {
+                if let Some(unk) = self.unk {
+                    out.push(unk);
+                }
+                // skip one whole char (i is always a boundary here)
+                let ch = text[i..].chars().next().expect("non-empty remainder");
+                matched = ch.len_utf8();
+            }
+            i += matched;
+        }
+        out
+    }
+
+    /// Concatenate the token strings for a sequence of ids. Out-of-range
+    /// or unnamed ids decode as `<unk>` (or nothing without one).
+    pub fn decode(&self, ids: &[usize]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match self.token(id) {
+                Some(t) => out.push_str(t),
+                None => {
+                    if self.unk.is_some() {
+                        out.push_str(UNK_TOKEN);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_vocab_entry_round_trips() {
+        let tok = Tokenizer::synthetic(512);
+        assert_eq!(tok.vocab(), 512);
+        for id in 0..tok.vocab() {
+            let text = tok.token(id).unwrap().to_string();
+            assert_eq!(tok.encode(&text), vec![id], "entry {id} ({text:?})");
+            assert_eq!(tok.decode(&[id]), text);
+        }
+    }
+
+    #[test]
+    fn greedy_longest_match_beats_prefixes() {
+        // "w51 " and "w511 " share a prefix; longest must win
+        let tok = Tokenizer::synthetic(512);
+        assert_eq!(tok.encode("w511 w51 w5 "), vec![511, 51, 5]);
+        let ids = tok.encode("w3 w1 w2 ");
+        assert_eq!(ids, vec![3, 1, 2]);
+        assert_eq!(tok.decode(&ids), "w3 w1 w2 ");
+    }
+
+    #[test]
+    fn unknown_chars_fall_back_to_unk() {
+        let tok = Tokenizer::synthetic(16);
+        // 'x', 'y' are uncovered; each char maps to one <unk>
+        assert_eq!(tok.encode("xy"), vec![0, 0]);
+        // multi-byte uncovered chars consume the whole char, not one byte
+        assert_eq!(tok.encode("日本"), vec![0, 0]);
+        assert_eq!(tok.decode(&[0]), "<unk>");
+        // out-of-range ids decode as <unk> too
+        assert_eq!(tok.decode(&[9999]), "<unk>");
+    }
+
+    #[test]
+    fn utf8_vocab_round_trips() {
+        let tok = Tokenizer::from_tokens(
+            ["<unk>", "héllo", " wörld", "日本語", "é", "🦀"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        for id in 0..tok.vocab() {
+            let text = tok.token(id).unwrap().to_string();
+            assert_eq!(tok.encode(&text), vec![id], "entry {id} ({text:?})");
+        }
+        let text = "héllo wörld日本語é🦀";
+        let ids = tok.encode(text);
+        assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn array_vocab_parses() {
+        let tok = Tokenizer::from_json_str(r#"["<unk>", "ab", "abc", "b"]"#).unwrap();
+        assert_eq!(tok.vocab(), 4);
+        assert_eq!(tok.encode("abcab"), vec![2, 1]);
+        assert_eq!(tok.unk_id(), Some(0));
+    }
+
+    #[test]
+    fn object_vocab_parses_with_gaps() {
+        let tok =
+            Tokenizer::from_json_str(r#"{"<unk>": 0, "hi": 3, " there": 1}"#).unwrap();
+        assert_eq!(tok.vocab(), 4);
+        assert_eq!(tok.encode("hi there"), vec![3, 1]);
+        assert_eq!(tok.token(2), None); // gap id decodes as <unk>
+        assert_eq!(tok.decode(&[3, 2]), "hi<unk>");
+    }
+
+    #[test]
+    fn malformed_vocabs_are_rejected() {
+        assert!(Tokenizer::from_json_str("42").is_err());
+        assert!(Tokenizer::from_json_str(r#"[1, 2]"#).is_err());
+        assert!(Tokenizer::from_json_str(r#"{"a": -1}"#).is_err());
+        assert!(Tokenizer::from_json_str(r#"{"a": 0, "b": 0}"#).is_err());
+    }
+
+    #[test]
+    fn vocab_without_unk_drops_unknown_chars() {
+        let tok = Tokenizer::from_tokens(vec!["ab".into(), "c".into()]);
+        assert_eq!(tok.encode("abzc"), vec![0, 1]);
+        assert_eq!(tok.decode(&[0, 7]), "ab"); // out-of-range id: nothing
+    }
+}

@@ -7,8 +7,10 @@
 //!   serve      batched generation over a store (RWKVQ1 quantized on the
 //!              fly, or an RWKVQ2 checkpoint opened zero-copy via mmap);
 //!              with --http it becomes the streaming HTTP gateway
-//!              (SSE tokens, /healthz, /metrics, 429 shedding, graceful
-//!              SIGINT/SIGTERM drain)
+//!              (SSE tokens, OpenAI-compatible /v1/completions and
+//!              /v1/chat/completions with seeded sampling and
+//!              disconnect cancellation, /healthz, /metrics, 429
+//!              shedding, graceful SIGINT/SIGTERM drain)
 //!   proxy      proxy-scan a model (SQ/VQ classification per layer)
 //!   info       print artifact / environment status
 
@@ -57,6 +59,12 @@ fn help() -> String {
         .opt("http", "serve: run the HTTP gateway on ADDR (bare flag = 127.0.0.1:8080)")
         .opt("max-queue", "serve --http: admission queue bound, overflow shed with 429 (default 64)")
         .opt("max-gen-len", "serve --http: per-request gen_len cap (default 512)")
+        .opt("vocab", "serve --http: tokenizer vocab JSON for the text endpoints (default synthetic)")
+        .opt("temperature", "serve: sampling temperature, 0 = greedy (default 0)")
+        .opt("top-k", "serve: keep only the k most likely tokens, 0 = off (default 0)")
+        .opt("top-p", "serve: nucleus sampling mass in (0,1] (default 1)")
+        .opt("rep-penalty", "serve: repetition penalty, 1 = off (default 1)")
+        .opt("sample-seed", "serve: base sampler seed; request i draws from seed+i (default 42)")
         .opt("seed", "rng seed (default 42)")
         .render()
 }
@@ -239,6 +247,7 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
 
     // ---- HTTP gateway mode: serve real sockets until drained ----
     if let Some(addr) = args.flag_value("http", "127.0.0.1:8080") {
+        use rwkvquant::data::tokenizer::Tokenizer;
         use rwkvquant::server::{signal, Gateway, GatewayConfig};
         let heeding = signal::install_shutdown_signals();
         signal::clear_shutdown_signal();
@@ -250,9 +259,24 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         gcfg.state_slots = state_slots;
         gcfg.pin_workers = pin_workers;
         gcfg.heed_signals = heeding;
-        let gateway = Gateway::bind(gcfg, vocab)?;
+        let mut gateway = Gateway::bind(gcfg, vocab)?;
+        let vocab_note = match args.get("vocab") {
+            Some(path) => {
+                let tok = Tokenizer::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow::anyhow!("--vocab: {e}"))?;
+                anyhow::ensure!(
+                    tok.vocab() <= vocab,
+                    "--vocab names {} ids but the model's vocab is {vocab}",
+                    tok.vocab()
+                );
+                gateway = gateway.with_tokenizer(tok);
+                format!("vocab {path}")
+            }
+            None => format!("synthetic vocab ({vocab} ids)"),
+        };
         println!(
-            "HTTP gateway on http://{} — POST /v1/generate (SSE), GET /healthz, GET /metrics; \
+            "HTTP gateway on http://{} — POST /v1/generate (SSE), POST /v1/completions, \
+             POST /v1/chat/completions ({vocab_note}), GET /healthz, GET /metrics; \
              max-queue {} (overflow → 429); {} to drain and exit",
             gateway.local_addr(),
             args.get_usize("max-queue", 64),
@@ -278,12 +302,30 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
             })
             .collect()
     });
+    let sample = rwkvquant::coordinator::sampler::SampleParams {
+        temperature: args.get_f64("temperature", 0.0) as f32,
+        top_k: args.get_usize("top-k", 0),
+        top_p: args.get_f64("top-p", 1.0) as f32,
+        repetition_penalty: args.get_f64("rep-penalty", 1.0) as f32,
+        seed: 0, // per-request seed assigned below
+    };
+    sample.validate().map_err(|e| anyhow::anyhow!("sampling flags: {e}"))?;
+    let sample_seed = args.get_u64("sample-seed", 42);
     let requests: Vec<Request> = (0..n as u64)
         .map(|id| {
             let prompt = prompt_override
                 .clone()
                 .unwrap_or_else(|| vec![(id as usize * 7) % vocab, 1, 2]);
-            Request::new(id, prompt, args.get_usize("gen-len", 12))
+            let req = Request::new(id, prompt, args.get_usize("gen-len", 12));
+            if sample.is_greedy() {
+                req
+            } else {
+                // independent but reproducible streams per request
+                req.with_sampling(rwkvquant::coordinator::sampler::SampleParams {
+                    seed: sample_seed.wrapping_add(id),
+                    ..sample
+                })
+            }
         })
         .collect();
     let mut opts =
@@ -305,12 +347,13 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
 
 fn print_serve_summary(stats: &ServeStats) {
     println!(
-        "{} requests ({} shed) | {:.1} tok/s gen, {:.1} tok/s prefill | \
+        "{} requests ({} shed, {} cancelled) | {:.1} tok/s gen, {:.1} tok/s prefill | \
          p50 {:?} p95 {:?} p99 {:?} | ttft p50 {:?} p99 {:?} | \
          queue hwm {} | admission wait p50 {:?} p99 {:?} | \
          state parks {} resumes {}",
         stats.completed,
         stats.shed,
+        stats.cancelled,
         stats.tokens_per_sec(),
         stats.prefill_tokens_per_sec(),
         stats.p50_latency,

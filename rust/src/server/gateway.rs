@@ -23,13 +23,31 @@
 //!   decode to completion through the tick pool, then returns the
 //!   session's [`ServeStats`]. The process exits 0 — never mid-tick.
 //!
-//! There is no request cancellation: a client that disconnects
-//! mid-stream stops receiving tokens, but its sequence decodes to
-//! completion (events into a dropped channel are discarded).
+//! Beyond the raw token-id endpoint (`POST /v1/generate`) the gateway
+//! speaks the OpenAI text protocol: `POST /v1/completions` and `POST
+//! /v1/chat/completions` accept text, tokenize it with the gateway's
+//! [`Tokenizer`], decode under per-request [`SampleParams`] (seeded, so
+//! identical requests produce identical bytes), honour `max_tokens` and
+//! `stop` sequences with the matching `finish_reason`, and answer
+//! either one JSON document or OpenAI-style SSE delta chunks terminated
+//! by `data: [DONE]`. Stop sequences are matched on token boundaries
+//! and the matched text is **included** in the output.
+//!
+//! Request cancellation is cooperative: when a streaming write fails
+//! (the client hung up mid-response) the handler raises the request's
+//! cancel flag, and the serve loop retires the sequence on its next
+//! tick — the state-pool slab and tick budget are released instead of
+//! decoding an orphan to completion. Cancelled requests are counted in
+//! `/metrics` and finish with reason `cancelled`. A non-streaming
+//! request writes nothing until it completes, so a disconnect there is
+//! only discovered (and the response discarded) at the final write.
 
+use crate::coordinator::sampler::SampleParams;
 use crate::coordinator::serve::{
-    with_tick_pool_opts, Decoder, PoolOpts, Request, Response, ServeOpts, ServeStats, StreamEvent,
+    with_tick_pool_opts, Decoder, FinishReason, PoolOpts, Request, Response, ServeOpts,
+    ServeStats, StreamEvent,
 };
+use crate::data::tokenizer::Tokenizer;
 use crate::report::json::Json;
 use crate::server::http::{self, ChunkedWriter, HttpRequest, Limits};
 use crate::server::metrics::Metrics;
@@ -110,6 +128,7 @@ pub struct Gateway {
     listener: TcpListener,
     cfg: GatewayConfig,
     vocab: usize,
+    tokenizer: Tokenizer,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
 }
@@ -139,7 +158,9 @@ impl GatewayHandle {
 }
 
 impl Gateway {
-    /// Bind the listener; serving starts with [`Gateway::serve`].
+    /// Bind the listener; serving starts with [`Gateway::serve`]. The
+    /// text endpoints start out on the synthetic `w{i} ` vocab —
+    /// override with [`Gateway::with_tokenizer`] for real models.
     pub fn bind(cfg: GatewayConfig, vocab: usize) -> Result<Gateway> {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
@@ -147,9 +168,17 @@ impl Gateway {
             listener,
             cfg,
             vocab,
+            tokenizer: Tokenizer::synthetic(vocab),
             shutdown: Arc::new(AtomicBool::new(false)),
             metrics: Arc::new(Metrics::new()),
         })
+    }
+
+    /// Replace the tokenizer backing the text endpoints (e.g. one
+    /// loaded from a `--vocab` JSON file).
+    pub fn with_tokenizer(mut self, tokenizer: Tokenizer) -> Gateway {
+        self.tokenizer = tokenizer;
+        self
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -172,7 +201,7 @@ impl Gateway {
     /// has decoded to completion.
     pub fn serve<D: Decoder + Send>(self, decoders: &mut [D]) -> Result<ServeStats> {
         anyhow::ensure!(!decoders.is_empty(), "the gateway needs at least one decoder");
-        let Gateway { listener, cfg, vocab, shutdown, metrics } = self;
+        let Gateway { listener, cfg, vocab, tokenizer, shutdown, metrics } = self;
         listener.set_nonblocking(true).context("set listener non-blocking")?;
         let (tx_req, rx_req) = mpsc::channel::<Request>();
         let (tx_resp, rx_resp) = mpsc::channel::<Response>();
@@ -189,10 +218,16 @@ impl Gateway {
         let popts = PoolOpts::default().with_pin_workers(cfg.pin_workers);
         let next_id = AtomicU64::new(0);
         let metrics_ref: &Metrics = &metrics;
-        let shutdown_ref: &AtomicBool = &shutdown;
-        let cfg_ref = &cfg;
-        let next_id_ref = &next_id;
         let opts_ref = &opts;
+        let shared = Shared {
+            vocab,
+            tokenizer: &tokenizer,
+            cfg: &cfg,
+            next_id: &next_id,
+            metrics: metrics_ref,
+            shutdown: &shutdown,
+        };
+        let sh = &shared;
 
         std::thread::scope(|s| {
             let engine = s.spawn(move || {
@@ -202,7 +237,7 @@ impl Gateway {
             });
 
             loop {
-                if draining(cfg_ref, shutdown_ref) {
+                if sh.draining() {
                     break;
                 }
                 if engine.is_finished() {
@@ -212,9 +247,9 @@ impl Gateway {
                 }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
-                        let open = metrics_ref.open_connections.load(Ordering::Relaxed);
-                        if open >= cfg_ref.max_connections as u64 {
-                            metrics_ref.http_errors.fetch_add(1, Ordering::Relaxed);
+                        let open = sh.metrics.open_connections.load(Ordering::Relaxed);
+                        if open >= sh.cfg.max_connections as u64 {
+                            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
                             let mut w = stream;
                             w.set_nonblocking(false).ok();
                             w.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).ok();
@@ -226,23 +261,15 @@ impl Gateway {
                             );
                             continue;
                         }
-                        metrics_ref.open_connections.fetch_add(1, Ordering::Relaxed);
+                        sh.metrics.open_connections.fetch_add(1, Ordering::Relaxed);
                         let tx = tx_req.clone();
                         s.spawn(move || {
                             // a handler panic must not tear down the
                             // whole gateway at scope join
                             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                handle_connection(
-                                    stream,
-                                    vocab,
-                                    cfg_ref,
-                                    tx,
-                                    next_id_ref,
-                                    metrics_ref,
-                                    shutdown_ref,
-                                );
+                                handle_connection(stream, sh, tx);
                             }));
-                            metrics_ref.open_connections.fetch_sub(1, Ordering::Relaxed);
+                            sh.metrics.open_connections.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -266,19 +293,25 @@ impl Gateway {
     }
 }
 
-fn draining(cfg: &GatewayConfig, shutdown: &AtomicBool) -> bool {
-    shutdown.load(Ordering::SeqCst) || (cfg.heed_signals && signal::shutdown_signalled())
+/// Everything a connection handler needs besides its socket: gateway
+/// policy plus the references shared by every handler thread.
+struct Shared<'a> {
+    vocab: usize,
+    tokenizer: &'a Tokenizer,
+    cfg: &'a GatewayConfig,
+    next_id: &'a AtomicU64,
+    metrics: &'a Metrics,
+    shutdown: &'a AtomicBool,
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    vocab: usize,
-    cfg: &GatewayConfig,
-    tx_req: mpsc::Sender<Request>,
-    next_id: &AtomicU64,
-    metrics: &Metrics,
-    shutdown: &AtomicBool,
-) {
+impl Shared<'_> {
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+            || (self.cfg.heed_signals && signal::shutdown_signalled())
+    }
+}
+
+fn handle_connection(stream: TcpStream, sh: &Shared<'_>, tx_req: mpsc::Sender<Request>) {
     // the listener is non-blocking and BSD-family kernels (macOS) let
     // accepted sockets inherit O_NONBLOCK — undo it explicitly, the
     // handler wants blocking reads bounded by the timeouts below
@@ -291,20 +324,20 @@ fn handle_connection(
     let mut writer = stream;
     let limits = Limits::default();
     loop {
-        if draining(cfg, shutdown) {
+        if sh.draining() {
             break;
         }
         match http::read_request(&mut reader, &limits) {
             Ok(None) => break, // clean keep-alive close
             Ok(Some(req)) => {
-                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                sh.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
                 let close_requested = req
                     .header("connection")
                     .is_some_and(|v| v.eq_ignore_ascii_case("close"));
-                if route(&mut writer, &req, vocab, cfg, &tx_req, next_id, metrics).is_err() {
+                if route(&mut writer, &req, sh, &tx_req).is_err() {
                     break; // client hung up mid-response
                 }
-                if close_requested || draining(cfg, shutdown) {
+                if close_requested || sh.draining() {
                     break;
                 }
             }
@@ -312,7 +345,7 @@ fn handle_connection(
                 // a timed-out idle keep-alive read lands here too
                 // (Io → no status → just close)
                 if let Some(status) = e.status() {
-                    metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+                    sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
                     let _ = http::write_response(
                         &mut writer,
                         status,
@@ -333,11 +366,8 @@ fn error_body(msg: &str) -> String {
 fn route(
     w: &mut TcpStream,
     req: &HttpRequest,
-    vocab: usize,
-    cfg: &GatewayConfig,
+    sh: &Shared<'_>,
     tx_req: &mpsc::Sender<Request>,
-    next_id: &AtomicU64,
-    metrics: &Metrics,
 ) -> std::io::Result<()> {
     const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
     match (req.method.as_str(), req.path()) {
@@ -345,7 +375,7 @@ fn route(
             http::write_response(w, 200, &[("Content-Type", "text/plain")], b"ok\n")
         }
         ("GET", "/metrics") => {
-            let text = metrics.render_prometheus();
+            let text = sh.metrics.render_prometheus();
             http::write_response(
                 w,
                 200,
@@ -353,9 +383,11 @@ fn route(
                 text.as_bytes(),
             )
         }
-        ("POST", "/v1/generate") => generate(w, req, vocab, cfg, tx_req, next_id, metrics),
+        ("POST", "/v1/generate") => generate(w, req, sh, tx_req),
+        ("POST", "/v1/completions") => completions(w, req, false, sh, tx_req),
+        ("POST", "/v1/chat/completions") => completions(w, req, true, sh, tx_req),
         (_, "/healthz" | "/metrics") => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             http::write_response(
                 w,
                 405,
@@ -363,8 +395,8 @@ fn route(
                 error_body("method not allowed").as_bytes(),
             )
         }
-        (_, "/v1/generate") => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        (_, "/v1/generate" | "/v1/completions" | "/v1/chat/completions") => {
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             http::write_response(
                 w,
                 405,
@@ -373,7 +405,7 @@ fn route(
             )
         }
         _ => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             http::write_response(w, 404, &[JSON_CT], error_body("no such endpoint").as_bytes())
         }
     }
@@ -446,26 +478,23 @@ fn ms(d: Duration) -> f64 {
 fn generate(
     w: &mut TcpStream,
     req: &HttpRequest,
-    vocab: usize,
-    cfg: &GatewayConfig,
+    sh: &Shared<'_>,
     tx_req: &mpsc::Sender<Request>,
-    next_id: &AtomicU64,
-    metrics: &Metrics,
 ) -> std::io::Result<()> {
     const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
-    let gen = match parse_generate_body(&req.body, vocab, cfg.max_gen_len) {
+    let gen = match parse_generate_body(&req.body, sh.vocab, sh.cfg.max_gen_len) {
         Ok(g) => g,
         Err(msg) => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             return http::write_response(w, 400, &[JSON_CT], error_body(&msg).as_bytes());
         }
     };
-    metrics.generate_requests.fetch_add(1, Ordering::Relaxed);
+    sh.metrics.generate_requests.fetch_add(1, Ordering::Relaxed);
     let (tx_ev, rx_ev) = mpsc::channel();
-    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
     let request = Request::new(id, gen.prompt, gen.gen_len).with_stream(tx_ev);
     if tx_req.send(request).is_err() {
-        metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
         return http::write_response(
             w,
             503,
@@ -477,7 +506,7 @@ fn generate(
     // body byte, Admitted → 200 and the stream begins
     match rx_ev.recv() {
         Err(_) => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             http::write_response(
                 w,
                 500,
@@ -486,7 +515,7 @@ fn generate(
             )
         }
         Ok(StreamEvent::Shed) => {
-            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
             http::write_response(
                 w,
                 429,
@@ -502,6 +531,401 @@ fn generate(
             }
         }
     }
+}
+
+/// A validated OpenAI-style body (`/v1/completions` accepts a string
+/// `prompt`, `/v1/chat/completions` a `messages` array rendered through
+/// the plain `"{role}: {content}\n"` template plus an `assistant:`
+/// generation cue).
+struct TextRequest {
+    prompt: Vec<usize>,
+    max_tokens: usize,
+    stream: bool,
+    sample: SampleParams,
+    stop: Vec<Vec<usize>>,
+    model: String,
+}
+
+fn text_num(v: &Json, key: &str, default: f32) -> std::result::Result<f32, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .map(|n| n as f32)
+            .ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn parse_text_body(
+    body: &[u8],
+    chat: bool,
+    tokenizer: &Tokenizer,
+    max_gen_len: usize,
+) -> std::result::Result<TextRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let prompt_text = if chat {
+        let msgs = v
+            .get("messages")
+            .and_then(Json::as_array)
+            .ok_or_else(|| "missing 'messages' (array of {role, content})".to_string())?;
+        if msgs.is_empty() {
+            return Err("'messages' must not be empty".to_string());
+        }
+        let mut s = String::new();
+        for (i, m) in msgs.iter().enumerate() {
+            let role = m
+                .get("role")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("messages[{i}] is missing a string 'role'"))?;
+            let content = m
+                .get("content")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("messages[{i}] is missing a string 'content'"))?;
+            s.push_str(role);
+            s.push_str(": ");
+            s.push_str(content);
+            s.push('\n');
+        }
+        s.push_str("assistant:");
+        s
+    } else {
+        v.get("prompt")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing 'prompt' (string)".to_string())?
+            .to_string()
+    };
+    let prompt = tokenizer.encode(&prompt_text);
+    if prompt.is_empty() {
+        return Err("prompt encodes to zero tokens".to_string());
+    }
+    if prompt.len() > MAX_PROMPT {
+        return Err(format!("prompt longer than {MAX_PROMPT} tokens"));
+    }
+    let max_tokens = match v.get("max_tokens") {
+        None | Some(Json::Null) => 16,
+        Some(g) => g
+            .as_usize()
+            .filter(|&n| (1..=max_gen_len).contains(&n))
+            .ok_or_else(|| format!("'max_tokens' must be an integer in 1..={max_gen_len}"))?,
+    };
+    let top_k = match v.get("top_k") {
+        None | Some(Json::Null) => 0,
+        Some(k) => k
+            .as_usize()
+            .ok_or_else(|| "'top_k' must be a non-negative integer".to_string())?,
+    };
+    let seed = match v.get("seed") {
+        None | Some(Json::Null) => 0,
+        Some(s) => s
+            .as_usize()
+            .ok_or_else(|| "'seed' must be a non-negative integer".to_string())?
+            as u64,
+    };
+    let sample = SampleParams {
+        temperature: text_num(&v, "temperature", 1.0)?,
+        top_k,
+        top_p: text_num(&v, "top_p", 1.0)?,
+        repetition_penalty: text_num(&v, "repetition_penalty", 1.0)?,
+        seed,
+    };
+    sample.validate()?;
+    let stop_strings: Vec<String> = match v.get("stop") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Str(s)) => vec![s.clone()],
+        Some(Json::Arr(xs)) => xs
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "'stop' entries must be strings".to_string())
+            })
+            .collect::<std::result::Result<_, _>>()?,
+        Some(_) => return Err("'stop' must be a string or an array of strings".to_string()),
+    };
+    if stop_strings.len() > 4 {
+        return Err("'stop' allows at most 4 sequences".to_string());
+    }
+    let mut stop = Vec::with_capacity(stop_strings.len());
+    for s in &stop_strings {
+        let ids = tokenizer.encode(s);
+        if ids.is_empty() {
+            return Err(format!("stop sequence {s:?} encodes to zero tokens"));
+        }
+        stop.push(ids);
+    }
+    let stream = match v.get("stream") {
+        None | Some(Json::Null) => false, // OpenAI defaults to non-streaming
+        Some(s) => s.as_bool().ok_or_else(|| "'stream' must be a boolean".to_string())?,
+    };
+    let model = v.get("model").and_then(Json::as_str).unwrap_or("rwkvquant").to_string();
+    Ok(TextRequest { prompt, max_tokens, stream, sample, stop, model })
+}
+
+/// Labels the OpenAI response writers stamp onto every chunk/body.
+struct TextReply<'a> {
+    id: u64,
+    chat: bool,
+    model: &'a str,
+    tokenizer: &'a Tokenizer,
+    prompt_tokens: usize,
+    created: u64,
+}
+
+impl TextReply<'_> {
+    fn reply_id(&self) -> String {
+        format!("{}-{}", if self.chat { "chatcmpl" } else { "cmpl" }, self.id)
+    }
+
+    fn object(&self, streamed: bool) -> &'static str {
+        match (self.chat, streamed) {
+            (true, true) => "chat.completion.chunk",
+            (true, false) => "chat.completion",
+            // OpenAI uses the same object name for streamed and whole
+            // text completions
+            (false, _) => "text_completion",
+        }
+    }
+
+    /// One streamed SSE chunk: `choices[0]` carries either a chat
+    /// `delta` or a completion `text` fragment.
+    fn chunk_json(&self, delta: &str, role: bool, finish: Option<FinishReason>) -> String {
+        let finish_val = match finish {
+            Some(f) => Json::Str(f.as_str().to_string()),
+            None => Json::Null,
+        };
+        let choice = if self.chat {
+            let mut d = Json::obj();
+            if role {
+                d = d.set("role", "assistant");
+            }
+            if !delta.is_empty() {
+                d = d.set("content", delta);
+            }
+            Json::obj().set("delta", d).set("finish_reason", finish_val).set("index", 0usize)
+        } else {
+            Json::obj().set("finish_reason", finish_val).set("index", 0usize).set("text", delta)
+        };
+        Json::obj()
+            .set("choices", Json::Arr(vec![choice]))
+            .set("created", self.created as f64)
+            .set("id", self.reply_id())
+            .set("model", self.model)
+            .set("object", self.object(true))
+            .render()
+    }
+
+    /// The whole-document (non-streaming) response body.
+    fn body_json(&self, text: &str, completion_tokens: usize, finish: FinishReason) -> String {
+        let choice = if self.chat {
+            Json::obj()
+                .set("finish_reason", finish.as_str())
+                .set("index", 0usize)
+                .set("message", Json::obj().set("content", text).set("role", "assistant"))
+        } else {
+            Json::obj().set("finish_reason", finish.as_str()).set("index", 0usize).set("text", text)
+        };
+        Json::obj()
+            .set("choices", Json::Arr(vec![choice]))
+            .set("created", self.created as f64)
+            .set("id", self.reply_id())
+            .set("model", self.model)
+            .set("object", self.object(false))
+            .set(
+                "usage",
+                Json::obj()
+                    .set("completion_tokens", completion_tokens)
+                    .set("prompt_tokens", self.prompt_tokens)
+                    .set("total_tokens", self.prompt_tokens + completion_tokens),
+            )
+            .render()
+    }
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+fn completions(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    chat: bool,
+    sh: &Shared<'_>,
+    tx_req: &mpsc::Sender<Request>,
+) -> std::io::Result<()> {
+    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
+    let t = match parse_text_body(&req.body, chat, sh.tokenizer, sh.cfg.max_gen_len) {
+        Ok(t) => t,
+        Err(msg) => {
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            return http::write_response(w, 400, &[JSON_CT], error_body(&msg).as_bytes());
+        }
+    };
+    sh.metrics.text_requests.fetch_add(1, Ordering::Relaxed);
+    let (tx_ev, rx_ev) = mpsc::channel();
+    let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
+    let cancel = Arc::new(AtomicBool::new(false));
+    let reply = TextReply {
+        id,
+        chat,
+        model: &t.model,
+        tokenizer: sh.tokenizer,
+        prompt_tokens: t.prompt.len(),
+        created: unix_now(),
+    };
+    let request = Request::new(id, t.prompt, t.max_tokens)
+        .with_stream(tx_ev)
+        .with_sampling(t.sample)
+        .with_stop(t.stop)
+        .with_cancel(cancel.clone());
+    if tx_req.send(request).is_err() {
+        sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        return http::write_response(
+            w,
+            503,
+            &[JSON_CT, ("Connection", "close")],
+            error_body("server is draining").as_bytes(),
+        );
+    }
+    match rx_ev.recv() {
+        Err(_) => {
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                500,
+                &[JSON_CT],
+                error_body("serve loop dropped the request").as_bytes(),
+            )
+        }
+        Ok(StreamEvent::Shed) => {
+            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+            http::write_response(
+                w,
+                429,
+                &[JSON_CT, ("Retry-After", "1")],
+                error_body("admission queue full").as_bytes(),
+            )
+        }
+        Ok(first) => {
+            let r = if t.stream {
+                stream_openai(w, &reply, first, rx_ev)
+            } else {
+                collect_openai(w, &reply, first, rx_ev)
+            };
+            if r.is_err() {
+                // client hung up mid-response: raise the cancel flag so
+                // the serve loop frees the slab instead of decoding an
+                // orphan to completion
+                cancel.store(true, Ordering::Relaxed);
+            }
+            r
+        }
+    }
+}
+
+/// Stream an OpenAI completion as SSE delta chunks: one chunk per
+/// decoded token, a final chunk carrying the `finish_reason`, then the
+/// protocol's `data: [DONE]` terminator.
+fn stream_openai(
+    w: &mut TcpStream,
+    r: &TextReply<'_>,
+    first: StreamEvent,
+    rx: mpsc::Receiver<StreamEvent>,
+) -> std::io::Result<()> {
+    let id_text = r.id.to_string();
+    let mut cw = ChunkedWriter::begin(
+        &mut *w,
+        200,
+        &[
+            ("Content-Type", "text/event-stream"),
+            ("Cache-Control", "no-cache"),
+            ("X-Request-Id", &id_text),
+        ],
+    )?;
+    if r.chat {
+        // the opening chunk announces the assistant role, per protocol
+        cw.chunk(format!("data: {}\n\n", r.chunk_json("", true, None)).as_bytes())?;
+    }
+    let mut finished: Option<FinishReason> = None;
+    let mut ev = Some(first);
+    loop {
+        let e = match ev.take() {
+            Some(e) => e,
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => break, // serve loop gone; truncate the stream
+            },
+        };
+        match e {
+            StreamEvent::Admitted { .. } => {} // no OpenAI analogue
+            StreamEvent::Token(t) => {
+                let piece = r.tokenizer.decode(&[t]);
+                cw.chunk(format!("data: {}\n\n", r.chunk_json(&piece, false, None)).as_bytes())?;
+            }
+            StreamEvent::Done { finish, .. } => {
+                finished = Some(finish);
+                break;
+            }
+            StreamEvent::Shed => break,
+        }
+    }
+    if let Some(finish) = finished {
+        cw.chunk(format!("data: {}\n\n", r.chunk_json("", false, Some(finish))).as_bytes())?;
+        cw.chunk(b"data: [DONE]\n\n")?;
+    }
+    cw.finish()
+}
+
+/// `"stream": false` — wait for completion, answer one OpenAI
+/// completion object (with `usage` accounting). As with
+/// [`collect_json`], a missing `Done` is a 500, never a truncated body.
+fn collect_openai(
+    w: &mut TcpStream,
+    r: &TextReply<'_>,
+    first: StreamEvent,
+    rx: mpsc::Receiver<StreamEvent>,
+) -> std::io::Result<()> {
+    let mut tokens: Vec<usize> = Vec::new();
+    let mut finished: Option<FinishReason> = None;
+    let mut ev = Some(first);
+    loop {
+        let e = match ev.take() {
+            Some(e) => e,
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => break,
+            },
+        };
+        match e {
+            StreamEvent::Admitted { .. } => {}
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Done { finish, .. } => {
+                finished = Some(finish);
+                break;
+            }
+            StreamEvent::Shed => break,
+        }
+    }
+    let Some(finish) = finished else {
+        return http::write_response(
+            w,
+            500,
+            &[("Content-Type", "application/json")],
+            error_body("generation aborted before completion").as_bytes(),
+        );
+    };
+    let text = r.tokenizer.decode(&tokens);
+    let body = r.body_json(&text, tokens.len(), finish);
+    let id_text = r.id.to_string();
+    http::write_response(
+        w,
+        200,
+        &[("Content-Type", "application/json"), ("X-Request-Id", &id_text)],
+        body.as_bytes(),
+    )
 }
 
 /// Stream one request's events as SSE over chunked transfer: one
@@ -546,12 +970,13 @@ fn stream_sse(
                 tokens.push(t);
                 cw.chunk(format!("data: {{\"token\":{t}}}\n\n").as_bytes())?;
             }
-            StreamEvent::Done { latency, ttft } => {
+            StreamEvent::Done { latency, ttft, finish } => {
                 cw.chunk(
                     format!(
-                        "data: {{\"done\":true,\"id\":{id},\"tokens\":{},\
-                         \"queued_ms\":{queued_ms:.3},\"ttft_ms\":{:.3},\
+                        "data: {{\"done\":true,\"finish_reason\":\"{}\",\"id\":{id},\
+                         \"tokens\":{},\"queued_ms\":{queued_ms:.3},\"ttft_ms\":{:.3},\
                          \"latency_ms\":{:.3}}}\n\n",
+                        finish.as_str(),
                         tokens_json(&tokens),
                         ms(ttft),
                         ms(latency),
@@ -581,7 +1006,7 @@ fn collect_json(
     let mut queued_ms = 0.0f64;
     let mut ttft_ms = 0.0f64;
     let mut latency_ms = 0.0f64;
-    let mut finished = false;
+    let mut finished: Option<FinishReason> = None;
     let mut ev = Some(first);
     loop {
         let e = match ev.take() {
@@ -594,26 +1019,28 @@ fn collect_json(
         match e {
             StreamEvent::Admitted { queued } => queued_ms = ms(queued),
             StreamEvent::Token(t) => tokens.push(t),
-            StreamEvent::Done { latency, ttft } => {
+            StreamEvent::Done { latency, ttft, finish } => {
                 latency_ms = ms(latency);
                 ttft_ms = ms(ttft);
-                finished = true;
+                finished = Some(finish);
                 break;
             }
             StreamEvent::Shed => break,
         }
     }
-    if !finished {
+    let Some(finish) = finished else {
         return http::write_response(
             w,
             500,
             &[("Content-Type", "application/json")],
             error_body("generation aborted before completion").as_bytes(),
         );
-    }
+    };
     let body = format!(
-        "{{\"id\":{id},\"tokens\":{},\"queued_ms\":{queued_ms:.3},\
-         \"ttft_ms\":{ttft_ms:.3},\"latency_ms\":{latency_ms:.3}}}",
+        "{{\"finish_reason\":\"{}\",\"id\":{id},\"tokens\":{},\
+         \"queued_ms\":{queued_ms:.3},\"ttft_ms\":{ttft_ms:.3},\
+         \"latency_ms\":{latency_ms:.3}}}",
+        finish.as_str(),
         tokens_json(&tokens)
     );
     http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
@@ -690,7 +1117,8 @@ mod tests {
     fn sse_token_extraction_checks_consistency() {
         let body = "data: {\"admitted\":true,\"queued_ms\":0.1}\n\n\
                     data: {\"token\":5}\n\ndata: {\"token\":9}\n\n\
-                    data: {\"done\":true,\"id\":0,\"tokens\":[5,9],\"queued_ms\":0.1,\
+                    data: {\"done\":true,\"finish_reason\":\"length\",\"id\":0,\
+                    \"tokens\":[5,9],\"queued_ms\":0.1,\
                     \"ttft_ms\":1.2,\"latency_ms\":2.0}\n\n";
         assert_eq!(sse_tokens(body).unwrap(), vec![5, 9]);
 
@@ -704,5 +1132,126 @@ mod tests {
         assert_eq!(tokens_json(&[]), "[]");
         assert_eq!(tokens_json(&[7]), "[7]");
         assert_eq!(tokens_json(&[1, 2, 30]), "[1,2,30]");
+    }
+
+    #[test]
+    fn text_body_validation() {
+        let tok = Tokenizer::synthetic(512);
+
+        let ok = parse_text_body(br#"{"prompt":"w3 w1 w2 "}"#, false, &tok, 64).unwrap();
+        assert_eq!(ok.prompt, vec![3, 1, 2]);
+        assert_eq!(ok.max_tokens, 16, "max_tokens defaults to 16");
+        assert!(!ok.stream, "OpenAI requests default to non-streaming");
+        assert_eq!(ok.sample.temperature, 1.0);
+        assert_eq!(ok.sample.seed, 0, "unseeded requests are still deterministic");
+        assert!(ok.stop.is_empty());
+        assert_eq!(ok.model, "rwkvquant");
+
+        let ok = parse_text_body(
+            br#"{"prompt":"w7 ","max_tokens":4,"temperature":0,"stream":true,
+                 "stop":"w9 ","model":"m","seed":42}"#,
+            false,
+            &tok,
+            64,
+        )
+        .unwrap();
+        assert!(ok.sample.is_greedy());
+        assert_eq!(ok.max_tokens, 4);
+        assert!(ok.stream);
+        assert_eq!(ok.stop, vec![vec![9]]);
+        assert_eq!(ok.sample.seed, 42);
+        assert_eq!(ok.model, "m");
+
+        let ok = parse_text_body(
+            br#"{"prompt":"w7 ","stop":["w9 ","w10 w11 "]}"#,
+            false,
+            &tok,
+            64,
+        )
+        .unwrap();
+        assert_eq!(ok.stop, vec![vec![9], vec![10, 11]]);
+
+        // the chat template renders "user: w3 w1 \nassistant:" — the
+        // covered words survive, everything else tokenizes to <unk>
+        let ok = parse_text_body(
+            br#"{"messages":[{"role":"user","content":"w3 w1 "}]}"#,
+            true,
+            &tok,
+            64,
+        )
+        .unwrap();
+        assert!(ok.prompt.contains(&3) && ok.prompt.contains(&1));
+
+        for (bad, why) in [
+            (&br#"{"max_tokens":4}"#[..], "missing prompt"),
+            (br#"{"prompt":""}"#, "empty prompt"),
+            (br#"{"prompt":[1,2]}"#, "token-id prompt on the text endpoint"),
+            (br#"{"prompt":"w1 ","max_tokens":0}"#, "max_tokens 0"),
+            (br#"{"prompt":"w1 ","max_tokens":65}"#, "max_tokens beyond cap"),
+            (br#"{"prompt":"w1 ","temperature":-1}"#, "negative temperature"),
+            (br#"{"prompt":"w1 ","top_p":0}"#, "top_p out of (0,1]"),
+            (br#"{"prompt":"w1 ","repetition_penalty":0}"#, "zero repetition penalty"),
+            (br#"{"prompt":"w1 ","stop":7}"#, "non-string stop"),
+            (br#"{"prompt":"w1 ","stop":[7]}"#, "non-string stop entry"),
+            (br#"{"prompt":"w1 ","stop":["a","b","c","d","e"]}"#, "more than 4 stops"),
+            (br#"{"prompt":"w1 ","seed":-4}"#, "negative seed"),
+            (br#"{"prompt":"w1 ","stream":"yes"}"#, "non-bool stream"),
+            (b"not json", "not json"),
+        ] {
+            assert!(parse_text_body(bad, false, &tok, 64).is_err(), "{why} must be rejected");
+        }
+        assert!(
+            parse_text_body(br#"{"messages":[]}"#, true, &tok, 64).is_err(),
+            "empty messages must be rejected"
+        );
+        assert!(
+            parse_text_body(br#"{"messages":[{"role":"user"}]}"#, true, &tok, 64).is_err(),
+            "message without content must be rejected"
+        );
+    }
+
+    #[test]
+    fn openai_bodies_render_to_protocol_shape() {
+        let tok = Tokenizer::synthetic(16);
+        let r = TextReply {
+            id: 3,
+            chat: false,
+            model: "m",
+            tokenizer: &tok,
+            prompt_tokens: 2,
+            created: 1700000000,
+        };
+        assert_eq!(
+            r.body_json("w5 ", 1, FinishReason::Stop),
+            "{\"choices\":[{\"finish_reason\":\"stop\",\"index\":0,\"text\":\"w5 \"}],\
+             \"created\":1700000000,\"id\":\"cmpl-3\",\"model\":\"m\",\
+             \"object\":\"text_completion\",\"usage\":{\"completion_tokens\":1,\
+             \"prompt_tokens\":2,\"total_tokens\":3}}"
+        );
+        assert_eq!(
+            r.chunk_json("w5 ", false, None),
+            "{\"choices\":[{\"finish_reason\":null,\"index\":0,\"text\":\"w5 \"}],\
+             \"created\":1700000000,\"id\":\"cmpl-3\",\"model\":\"m\",\
+             \"object\":\"text_completion\"}"
+        );
+
+        let r = TextReply { chat: true, ..r };
+        let body = r.body_json("hi", 1, FinishReason::Length);
+        assert!(body.contains("\"object\":\"chat.completion\""), "{body}");
+        assert!(body.contains("\"id\":\"chatcmpl-3\""), "{body}");
+        assert!(
+            body.contains("\"message\":{\"content\":\"hi\",\"role\":\"assistant\"}"),
+            "{body}"
+        );
+        let role = r.chunk_json("", true, None);
+        assert!(role.contains("\"delta\":{\"role\":\"assistant\"}"), "{role}");
+        assert!(role.contains("\"object\":\"chat.completion.chunk\""), "{role}");
+        let delta = r.chunk_json("hi", false, None);
+        assert!(delta.contains("\"delta\":{\"content\":\"hi\"}"), "{delta}");
+        let last = r.chunk_json("", false, Some(FinishReason::Cancelled));
+        assert!(
+            last.contains("\"delta\":{},\"finish_reason\":\"cancelled\""),
+            "{last}"
+        );
     }
 }

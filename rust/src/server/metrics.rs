@@ -56,10 +56,16 @@ pub struct Metrics {
     pub http_errors: AtomicU64,
     /// Generation requests forwarded into the serve loop.
     pub generate_requests: AtomicU64,
+    /// OpenAI-style text requests (`/v1/completions`, `/v1/chat/…`).
+    pub text_requests: AtomicU64,
     /// Generation requests decoded to completion.
     pub completed: AtomicU64,
     /// Generation requests shed at admission (answered 429).
     pub shed: AtomicU64,
+    /// Requests cancelled mid-decode (client disconnect).
+    pub cancelled: AtomicU64,
+    /// Tokens chosen by the stochastic sampler (greedy picks excluded).
+    pub sampled_tokens: AtomicU64,
     /// Generated (non-prompt) tokens served.
     pub tokens: AtomicU64,
     /// Prompt tokens consumed by prefill ticks.
@@ -82,8 +88,11 @@ impl Default for Metrics {
             http_requests: AtomicU64::new(0),
             http_errors: AtomicU64::new(0),
             generate_requests: AtomicU64::new(0),
+            text_requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            sampled_tokens: AtomicU64::new(0),
             tokens: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
@@ -131,6 +140,11 @@ impl Metrics {
             self.generate_requests.load(Ordering::Relaxed),
         );
         counter(
+            "rwkvquant_text_requests_total",
+            "OpenAI-style text requests forwarded to the serve loop.",
+            self.text_requests.load(Ordering::Relaxed),
+        );
+        counter(
             "rwkvquant_requests_completed_total",
             "Generation requests decoded to completion.",
             self.completed.load(Ordering::Relaxed),
@@ -139,6 +153,16 @@ impl Metrics {
             "rwkvquant_requests_shed_total",
             "Generation requests shed at admission (HTTP 429).",
             self.shed.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_requests_cancelled_total",
+            "Requests cancelled mid-decode (client disconnect).",
+            self.cancelled.load(Ordering::Relaxed),
+        );
+        counter(
+            "rwkvquant_sampled_tokens_total",
+            "Tokens chosen by the stochastic sampler (greedy excluded).",
+            self.sampled_tokens.load(Ordering::Relaxed),
         );
         counter(
             "rwkvquant_served_tokens_total",
@@ -242,6 +266,14 @@ impl ServeObserver for Metrics {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies.lock().unwrap_or_else(|e| e.into_inner()).push(latency);
     }
+
+    fn on_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn on_sampled_tokens(&self, n: usize) {
+        self.sampled_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -261,12 +293,19 @@ mod tests {
         m.on_first_token(Duration::from_millis(6));
         m.on_shed();
         m.on_completed(Duration::from_millis(20));
+        m.on_cancelled();
+        m.on_sampled_tokens(4);
+        m.on_sampled_tokens(2);
         m.http_requests.fetch_add(2, Ordering::Relaxed);
+        m.text_requests.fetch_add(1, Ordering::Relaxed);
         let text = m.render_prometheus();
         assert!(text.contains("rwkvquant_served_tokens_total 12"), "{text}");
         assert!(text.contains("rwkvquant_prefill_tokens_total 41"));
         assert!(text.contains("rwkvquant_requests_shed_total 1"));
         assert!(text.contains("rwkvquant_requests_completed_total 1"));
+        assert!(text.contains("rwkvquant_requests_cancelled_total 1"));
+        assert!(text.contains("rwkvquant_sampled_tokens_total 6"));
+        assert!(text.contains("rwkvquant_text_requests_total 1"));
         assert!(text.contains("rwkvquant_queue_depth 1"));
         assert!(text.contains("rwkvquant_queue_depth_high_water_mark 3"));
         assert!(text.contains("rwkvquant_http_requests_total 2"));

@@ -12,7 +12,10 @@
 //!   no `signal_hook` in the offline vendor set).
 //! * [`gateway`] — the connection loop tying it together: JSON requests
 //!   in, SSE token streams out, bounded admission with 429 shedding,
-//!   `/healthz` + `/metrics`, drain-to-completion shutdown.
+//!   `/healthz` + `/metrics`, drain-to-completion shutdown, plus the
+//!   OpenAI-compatible text endpoints (`/v1/completions`,
+//!   `/v1/chat/completions`) with seeded sampling, stop sequences and
+//!   disconnect cancellation over [`crate::data::tokenizer`].
 //!
 //! The gateway and the CLI's in-process mode share one engine: both run
 //! `coordinator::serve` over a persistent `TickPool`, so HTTP serving is

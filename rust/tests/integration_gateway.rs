@@ -7,14 +7,21 @@
 //! 2. requests beyond `max_queue` are shed with a 429 and counted in
 //!    `/metrics`,
 //! 3. SIGTERM drains in-flight requests to completion (exit path
-//!    returns cleanly, nothing is cut off mid-stream).
+//!    returns cleanly, nothing is cut off mid-stream),
+//! 4. the OpenAI text endpoints (`/v1/completions`,
+//!    `/v1/chat/completions`) are token-identical to `/v1/generate` at
+//!    temperature 0, byte-reproducible under a fixed sampling seed,
+//!    honour `stop`/`max_tokens` with the right `finish_reason`, and
+//!    cancel mid-decode when the client disconnects.
 
 use rwkvquant::config::{ModelConfig, QuantConfig};
 use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{serve_collect, Decoder, Request, RunnerDecoder};
+use rwkvquant::data::tokenizer::Tokenizer;
 use rwkvquant::model::rwkv::init_params;
 use rwkvquant::model::QuantizedModel;
-use rwkvquant::server::gateway::{sse_tokens, tokens_json};
+use rwkvquant::report::json::Json;
+use rwkvquant::server::gateway::{sse_data, sse_tokens, tokens_json};
 use rwkvquant::server::http::http_request;
 use rwkvquant::server::{Gateway, GatewayConfig};
 use rwkvquant::util::rng::Rng;
@@ -355,6 +362,248 @@ fn bounded_state_pool_under_flood_answers_correct_or_429() {
         // park/resume accounting stays internally consistent even when
         // the flood happened to never exceed the resident slabs
         assert!(stats.state_resumes >= stats.state_parks);
+    });
+}
+
+#[test]
+fn openai_completions_match_the_generate_twin_and_are_reproducible() {
+    let qm = packed_store("openai", 61);
+    let tok = Tokenizer::synthetic(qm.config.vocab);
+    let prompt_ids = vec![3usize, 1, 2]; // the text "w3 w1 w2 "
+    let gen_len = 6usize;
+    let twin = twin_tokens(&qm, &prompt_ids, gen_len);
+    let expected_text = tok.decode(&twin);
+
+    let cfg = GatewayConfig::new("127.0.0.1:0");
+    let gateway = Gateway::bind(cfg, qm.config.vocab).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let mut decoders = vec![RunnerDecoder::new(&qm)];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve(&mut decoders));
+        let _drain = ShutdownOnDrop(handle.clone());
+
+        // greedy /v1/completions ≡ the /v1/generate twin (acceptance
+        // criterion), with OpenAI response shape and usage accounting
+        let body = format!(
+            "{{\"prompt\":\"w3 w1 w2 \",\"max_tokens\":{gen_len},\"temperature\":0}}"
+        );
+        let resp = http_request(addr, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("object").and_then(Json::as_str), Some("text_completion"));
+        let choice = &parsed.get("choices").and_then(Json::as_array).unwrap()[0];
+        assert_eq!(choice.get("finish_reason").and_then(Json::as_str), Some("length"));
+        assert_eq!(choice.get("text").and_then(Json::as_str), Some(expected_text.as_str()));
+        let usage = parsed.get("usage").unwrap();
+        assert_eq!(usage.get("prompt_tokens").and_then(Json::as_usize), Some(3));
+        assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(gen_len));
+        assert_eq!(usage.get("total_tokens").and_then(Json::as_usize), Some(3 + gen_len));
+
+        // the streamed variant delivers the same text as delta chunks,
+        // a final finish_reason chunk and the [DONE] terminator
+        let body = format!(
+            "{{\"prompt\":\"w3 w1 w2 \",\"max_tokens\":{gen_len},\"temperature\":0,\
+             \"stream\":true}}"
+        );
+        let resp = http_request(addr, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+        let body_text = resp.body_str().into_owned();
+        let payloads = sse_data(&body_text);
+        assert_eq!(payloads.last(), Some(&"[DONE]"), "stream must end with [DONE]");
+        let mut text = String::new();
+        let mut finish = None;
+        for p in &payloads[..payloads.len() - 1] {
+            let v = rwkvquant::server::json::parse(p).unwrap();
+            assert_eq!(v.get("object").and_then(Json::as_str), Some("text_completion"));
+            let c = &v.get("choices").and_then(Json::as_array).unwrap()[0];
+            if let Some(t) = c.get("text").and_then(Json::as_str) {
+                text.push_str(t);
+            }
+            if let Some(f) = c.get("finish_reason").and_then(Json::as_str) {
+                finish = Some(f.to_string());
+            }
+        }
+        assert_eq!(text, expected_text, "streamed deltas diverged from the whole document");
+        assert_eq!(finish.as_deref(), Some("length"));
+
+        // a seeded sampling request is byte-reproducible: identical
+        // choices and usage on a second identical request (only the
+        // request id / created stamp may differ)
+        let body = "{\"prompt\":\"w3 w1 w2 \",\"max_tokens\":8,\"temperature\":0.9,\
+                    \"top_k\":8,\"top_p\":0.95,\"seed\":7}";
+        let a = http_request(addr, "POST", "/v1/completions", Some(body)).unwrap();
+        let b = http_request(addr, "POST", "/v1/completions", Some(body)).unwrap();
+        assert_eq!(a.status, 200);
+        assert_eq!(b.status, 200);
+        let pa = rwkvquant::server::json::parse(&a.body_str()).unwrap();
+        let pb = rwkvquant::server::json::parse(&b.body_str()).unwrap();
+        assert_eq!(
+            pa.get("choices").unwrap().render(),
+            pb.get("choices").unwrap().render(),
+            "same seed must reproduce the same tokens"
+        );
+        assert_eq!(pa.get("usage").unwrap().render(), pb.get("usage").unwrap().render());
+
+        // a stop sequence set to the first greedy token retires the
+        // request with finish_reason "stop" after exactly that token
+        let stop_text = tok.decode(&twin[..1]);
+        let body = format!(
+            "{{\"prompt\":\"w3 w1 w2 \",\"max_tokens\":{gen_len},\"temperature\":0,\
+             \"stop\":{}}}",
+            Json::Str(stop_text.clone()).render()
+        );
+        let resp = http_request(addr, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        let choice = &parsed.get("choices").and_then(Json::as_array).unwrap()[0];
+        assert_eq!(choice.get("finish_reason").and_then(Json::as_str), Some("stop"));
+        assert_eq!(choice.get("text").and_then(Json::as_str), Some(stop_text.as_str()));
+        let usage = parsed.get("usage").unwrap();
+        assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(1));
+
+        handle.shutdown();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.cancelled, 0);
+    });
+}
+
+#[test]
+fn chat_completions_stream_the_openai_delta_protocol() {
+    let qm = packed_store("chat", 67);
+    let cfg = GatewayConfig::new("127.0.0.1:0");
+    let gateway = Gateway::bind(cfg, qm.config.vocab).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let mut decoders = vec![RunnerDecoder::new(&qm)];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve(&mut decoders));
+        let _drain = ShutdownOnDrop(handle.clone());
+
+        let body = "{\"messages\":[{\"role\":\"user\",\"content\":\"w3 w1 \"}],\
+                    \"max_tokens\":3,\"temperature\":0,\"stream\":true}";
+        let resp = http_request(addr, "POST", "/v1/chat/completions", Some(body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let text = resp.body_str().into_owned();
+        let payloads = sse_data(&text);
+        assert_eq!(payloads.last(), Some(&"[DONE]"));
+        let chunks: Vec<Json> = payloads[..payloads.len() - 1]
+            .iter()
+            .map(|p| rwkvquant::server::json::parse(p).unwrap())
+            .collect();
+        assert!(chunks.len() >= 3, "role chunk + ≥1 delta + finish chunk, got {payloads:?}");
+        for c in &chunks {
+            assert_eq!(c.get("object").and_then(Json::as_str), Some("chat.completion.chunk"));
+        }
+        let first = &chunks[0].get("choices").and_then(Json::as_array).unwrap()[0];
+        assert_eq!(
+            first.get("delta").and_then(|d| d.get("role")).and_then(Json::as_str),
+            Some("assistant"),
+            "the opening chunk must announce the role"
+        );
+        let mut content = String::new();
+        for c in &chunks {
+            let choice = &c.get("choices").and_then(Json::as_array).unwrap()[0];
+            if let Some(t) = choice.get("delta").and_then(|d| d.get("content")).and_then(Json::as_str)
+            {
+                content.push_str(t);
+            }
+        }
+        assert!(!content.is_empty(), "no content deltas in {payloads:?}");
+        let last = &chunks[chunks.len() - 1].get("choices").and_then(Json::as_array).unwrap()[0];
+        assert_eq!(last.get("finish_reason").and_then(Json::as_str), Some("length"));
+
+        // the non-streamed flavour agrees on the generated text
+        let body = "{\"messages\":[{\"role\":\"user\",\"content\":\"w3 w1 \"}],\
+                    \"max_tokens\":3,\"temperature\":0}";
+        let resp = http_request(addr, "POST", "/v1/chat/completions", Some(body)).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("object").and_then(Json::as_str), Some("chat.completion"));
+        let choice = &parsed.get("choices").and_then(Json::as_array).unwrap()[0];
+        assert_eq!(
+            choice.get("message").and_then(|m| m.get("content")).and_then(Json::as_str),
+            Some(content.as_str()),
+            "streamed and whole-document chat content diverged"
+        );
+
+        handle.shutdown();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.completed, 2);
+    });
+}
+
+#[test]
+fn client_disconnect_cancels_the_in_flight_sequence() {
+    use std::io::{Read, Write};
+
+    let qm = packed_store("cancel", 71);
+    let cfg = GatewayConfig::new("127.0.0.1:0");
+    let gateway = Gateway::bind(cfg, qm.config.vocab).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let metrics = handle.metrics();
+    // slowed decoder: a 400-token budget runs ≳ 1.2 s, leaving ample
+    // time to disconnect mid-decode
+    let mut decoders =
+        vec![Throttled { inner: RunnerDecoder::new(&qm), delay: Duration::from_millis(3) }];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve(&mut decoders));
+        let _drain = ShutdownOnDrop(handle.clone());
+
+        // raw socket: stream a long completion, read until the first
+        // token delta arrives, then hang up without warning
+        let body = r#"{"prompt":"w3 w1 w2 ","max_tokens":400,"temperature":0,"stream":true}"#;
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(
+            sock,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let mut seen = Vec::new();
+        let mut buf = [0u8; 1024];
+        while !String::from_utf8_lossy(&seen).contains("\"text\":") {
+            let n = sock.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed the stream before the first token");
+            seen.extend_from_slice(&buf[..n]);
+        }
+        drop(sock);
+
+        // the serve loop must notice (next chunk write fails → cancel
+        // flag → sweep) and release the sequence well before its
+        // 400-token budget would elapse
+        let t0 = Instant::now();
+        while metrics.cancelled.load(Ordering::Relaxed) == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "disconnect was never detected as a cancellation"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // the lane is healthy again: a follow-up request completes, and
+        // the cancellation shows up in the Prometheus exposition with
+        // the queue drained
+        let body = r#"{"prompt":"w5 ","max_tokens":2,"temperature":0}"#;
+        let resp = http_request(addr, "POST", "/v1/completions", Some(body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let text = http_request(addr, "GET", "/metrics", None).unwrap().body_str().into_owned();
+        assert_eq!(metric_value(&text, "rwkvquant_requests_cancelled_total"), Some(1.0));
+        assert_eq!(metric_value(&text, "rwkvquant_queue_depth"), Some(0.0));
+
+        handle.shutdown();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.cancelled, 1, "the orphaned sequence must retire as cancelled");
+        assert_eq!(stats.completed, 1, "only the follow-up request completed");
     });
 }
 
