@@ -13,7 +13,15 @@ Stdlib only. The script:
   5. runs the in-process twin (`serve --prompt ... --print-tokens`) on
      the same store and **gates on token-identical output**,
   6. scrapes /metrics and checks the serving counters,
-  7. sends SIGTERM and requires a graceful exit with code 0.
+  7. sends SIGTERM and requires a graceful exit with code 0,
+  8. then re-serves as a two-model fleet (`--model a=… --model b=…`):
+     requests route by their `"model"` field (model `a` must reproduce
+     the single-model tokens from step 3 on the same store),
+     `GET /v1/models` lists both, `/metrics` carries `model="…"` labels,
+     a hot swap (`POST /admin/models/a`) lands mid-flight without
+     losing the in-flight request, post-swap output serves the new
+     store's bytes, and an unknown model is a 404 with
+     `code: model_not_found`.
 
 Usage: python3 python/http_smoke.py --bin target/release/rwkvquant
 """
@@ -27,6 +35,7 @@ import socket
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 from pathlib import Path
 
@@ -106,6 +115,126 @@ def metric_value(text: str, name: str) -> float:
     if not m:
         raise SystemExit(f"metric {name} missing from /metrics:\n{text}")
     return float(m.group(1))
+
+
+def labeled_metric(text: str, name: str, model: str) -> float:
+    series = f'{name}{{model="{model}"}}'
+    m = re.search(rf"^{re.escape(series)} (\S+)$", text, re.MULTILINE)
+    if not m:
+        raise SystemExit(f"metric {series} missing from /metrics:\n{text}")
+    return float(m.group(1))
+
+
+def api(port: int, method: str, path: str, payload: dict | None = None, timeout: float = 60):
+    """One JSON request; returns (status, parsed-or-raw body)."""
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    body = json.dumps(payload) if payload is not None else None
+    conn.request(method, path, body=body, headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    text = resp.read().decode()
+    conn.close()
+    try:
+        return resp.status, json.loads(text)
+    except ValueError:
+        return resp.status, text
+
+
+def fleet_generate(port: int, model: str, gen_len: int = GEN_LEN) -> list[int]:
+    status, doc = api(
+        port, "POST", "/v1/generate",
+        {"model": model, "prompt": PROMPT, "gen_len": gen_len, "stream": False},
+    )
+    if status != 200:
+        raise SystemExit(f"/v1/generate (model={model}) answered {status}: {doc}")
+    return doc["tokens"]
+
+
+def fleet_smoke(binary: str, store_a: Path, store_b: Path, single_tokens: list[int]) -> None:
+    """Step 8: two-model fleet serving with a hot swap under load."""
+    port = free_port()
+    log(f"starting fleet gateway on 127.0.0.1:{port} (models a, b) …")
+    server = subprocess.Popen(
+        [
+            binary, "serve",
+            "--model", f"a={store_a}", "--model", f"b={store_b}",
+            "--http", f"127.0.0.1:{port}",
+            "--max-queue", "8", "--batch", "4",
+        ]
+    )
+    try:
+        wait_healthy(port, server)
+
+        status, doc = api(port, "GET", "/v1/models")
+        ids = sorted(m["id"] for m in doc["data"])
+        if status != 200 or ids != ["a", "b"]:
+            raise SystemExit(f"/v1/models answered {status} with ids {ids}")
+        log("/v1/models lists both models OK")
+
+        tokens_a = fleet_generate(port, "a")
+        tokens_b = fleet_generate(port, "b")
+        if tokens_a != single_tokens:
+            raise SystemExit(
+                f"model 'a' (same store as single-model phase) diverged: "
+                f"{tokens_a} != {single_tokens}"
+            )
+        log("fleet routing is token-identical to the single-model serve OK")
+
+        status, doc = api(
+            port, "POST", "/v1/generate",
+            {"model": "nope", "prompt": PROMPT, "gen_len": 2, "stream": False},
+        )
+        if status != 404 or doc.get("error", {}).get("code") != "model_not_found":
+            raise SystemExit(f"unknown model answered {status}: {doc}")
+        log("unknown model 404s with model_not_found OK")
+
+        # hot swap under load: keep a long request in flight on 'a',
+        # then point 'a' at store_b mid-decode — the in-flight request
+        # must still complete in full
+        long_gen = 64
+        inflight: dict = {}
+
+        def long_request():
+            inflight["tokens"] = fleet_generate(port, "a", gen_len=long_gen)
+
+        t = threading.Thread(target=long_request)
+        t.start()
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            text = scrape_metrics(port)
+            if labeled_metric(text, "rwkvquant_served_tokens_total", "a") > len(single_tokens):
+                break
+            time.sleep(0.005)
+        status, doc = api(port, "POST", "/admin/models/a", {"path": str(store_b)})
+        if status != 200:
+            raise SystemExit(f"hot swap answered {status}: {doc}")
+        t.join(timeout=120)
+        if t.is_alive() or len(inflight.get("tokens", [])) != long_gen:
+            raise SystemExit(f"in-flight request lost across the swap: {inflight}")
+        log(f"hot swap landed (version {doc['version']}), in-flight request survived OK")
+
+        # post-swap, 'a' serves store_b's bytes: identical to model 'b'
+        if fleet_generate(port, "a") != tokens_b:
+            raise SystemExit("post-swap model 'a' does not serve the new store's output")
+        log("post-swap output matches the new store OK")
+
+        text = scrape_metrics(port)
+        for model in ("a", "b"):
+            labeled_metric(text, "rwkvquant_generate_requests_total", model)
+            labeled_metric(text, "rwkvquant_served_tokens_total", model)
+            labeled_metric(text, "rwkvquant_queue_depth", model)
+        metric_value(text, "rwkvquant_http_requests_total")  # gateway-level, unlabeled
+        log("per-model /metrics labels OK")
+
+        log("sending SIGTERM for a graceful fleet drain …")
+        server.send_signal(signal.SIGTERM)
+        code = server.wait(timeout=60)
+        if code != 0:
+            raise SystemExit(f"fleet server exited {code} after SIGTERM (want 0)")
+        log("graceful fleet drain OK (exit 0)")
+    finally:
+        if server.poll() is None:
+            server.kill()
+            server.wait(timeout=10)
 
 
 def main() -> None:
@@ -212,6 +341,14 @@ def main() -> None:
         if server.poll() is None:
             server.kill()
             server.wait(timeout=10)
+
+    store_b = tmp / "smoke_b.rwkvq2"
+    log("packing second tiny model for the fleet phase …")
+    subprocess.run(
+        [binary, "pack", "--size", "0.1B", "--seed", "11", "--out", str(store_b)],
+        check=True,
+    )
+    fleet_smoke(binary, store, store_b, streamed)
 
     log("PASS")
 

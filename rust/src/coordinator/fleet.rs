@@ -1,0 +1,502 @@
+//! Multi-model fleet registry: name → running serve engine, with
+//! zero-downtime hot swap.
+//!
+//! Each registered model gets its **own** engine thread that mmap-opens
+//! the packed RWKVQ2 store, builds one [`RunnerDecoder`] lane per
+//! configured tick thread, and runs the ordinary
+//! `TickPool::serve_with` loop against a per-model request channel and
+//! a per-model [`Metrics`] registry. The fleet itself is only a routing
+//! table: `name → Arc<ModelEntry>` behind a mutex, where an entry holds
+//! the engine's request sender (and join handle) but **not** the model
+//! weights — those live on the engine thread's stack, so the store
+//! unmaps exactly when that thread returns.
+//!
+//! Hot swap is an atomic map insert: loading a new store under an
+//! existing name validates and opens the new file, spawns its engine,
+//! swaps the `Arc` in the table, and *retires* the old entry by
+//! dropping its request sender. In-flight sequences keep decoding on
+//! the old mmap (the serve loop drains its admitted work after the
+//! channel closes), new admissions land on the new engine, and the old
+//! store unmaps when its last sequence finishes and the engine thread
+//! exits. A submit that raced the swap — it resolved the old entry and
+//! hit the closed channel — gets its request back from the channel and
+//! retries through the table, so no request is lost to a swap.
+
+use crate::coordinator::serve::{
+    with_tick_pool_opts, Decoder, PoolOpts, Request, Response, RunnerDecoder, ServeOpts,
+    ServeStats,
+};
+use crate::model::store::LoadMode;
+use crate::model::QuantizedModel;
+use crate::server::metrics::Metrics;
+use crate::Result;
+use anyhow::Context;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Per-model engine sizing, shared by every entry in one fleet.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Decoder lanes per model (1 = sequential; n = one lead + n-1
+    /// tick worker threads, see `with_tick_pool`).
+    pub lanes: usize,
+    /// Serve-loop policy for every model's session (queue bound,
+    /// prefill chunk, state slots …).
+    pub opts: ServeOpts,
+    /// Tick-pool placement knobs (worker pinning).
+    pub popts: PoolOpts,
+    /// How engines acquire the store bytes (mmap vs buffered).
+    pub load_mode: LoadMode,
+    /// Test-only throttle: sleep this long per decode step so tiny
+    /// models keep requests in flight long enough to swap under them.
+    /// Zero (the default) adds no overhead.
+    pub step_delay: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            lanes: 1,
+            opts: ServeOpts::new(8, Duration::from_millis(2))
+                .with_max_queue(64)
+                .with_prefill_chunk(32),
+            popts: PoolOpts::default(),
+            load_mode: LoadMode::Auto,
+            step_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// One registered model: routing metadata plus the live engine's
+/// request sender and join handle. The weights themselves are owned by
+/// the engine thread.
+pub struct ModelEntry {
+    name: String,
+    path: PathBuf,
+    /// Monotonic load serial within this fleet — a swap visibly bumps
+    /// it even though the name stays the same.
+    version: u64,
+    /// Store mtime as unix seconds (the `created` stamp `/v1/models`
+    /// reports).
+    created: u64,
+    vocab: usize,
+    metrics: Arc<Metrics>,
+    /// `Some` while the entry accepts admissions; retiring takes the
+    /// sender, which closes the engine's request channel and starts its
+    /// drain.
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    thread: Mutex<Option<std::thread::JoinHandle<Result<ServeStats>>>>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn created(&self) -> u64 {
+        self.created
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    fn retire(&self) {
+        // dropping the sender closes the channel; the engine drains its
+        // admitted sequences and exits, unmapping the store
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+    }
+
+    fn join(&self) -> Result<ServeStats> {
+        let handle = self.thread.lock().unwrap_or_else(|e| e.into_inner()).take();
+        match handle {
+            None => anyhow::bail!("engine for '{}' was already joined", self.name),
+            Some(h) => match h.join() {
+                Ok(stats) => stats,
+                Err(_) => anyhow::bail!("engine thread for '{}' panicked", self.name),
+            },
+        }
+    }
+}
+
+/// Why [`Fleet::submit`] refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No model of that name is registered → HTTP 404 `model_not_found`.
+    UnknownModel,
+    /// The engine is gone and retries through the table kept failing
+    /// (fleet draining, or the engine faulted) → HTTP 503.
+    Closed,
+}
+
+/// [`RunnerDecoder`] lane with the fleet's optional test throttle.
+struct Lane<'a> {
+    inner: RunnerDecoder<'a, QuantizedModel>,
+    step_delay: Duration,
+}
+
+impl Decoder for Lane<'_> {
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+
+    fn step(&mut self, token: usize) -> Vec<f32> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        self.inner.step(token)
+    }
+
+    fn step_into(&mut self, token: usize, out: &mut Vec<f32>) {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        self.inner.step_into(token, out);
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        self.inner.save_state()
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) {
+        self.inner.load_state(state);
+    }
+
+    fn state_len(&self) -> usize {
+        self.inner.state_len()
+    }
+
+    fn save_state_into(&self, out: &mut [f32]) {
+        self.inner.save_state_into(out);
+    }
+
+    fn load_state_flat(&mut self, state: &[f32]) {
+        self.inner.load_state_flat(state);
+    }
+}
+
+/// The model registry: every live engine plus the retired ones still
+/// draining. Shared (`&Fleet` / `Arc<Fleet>`) between the gateway's
+/// connection handlers and whoever drives admin swaps.
+pub struct Fleet {
+    cfg: FleetConfig,
+    models: Mutex<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Entries swapped out or deleted but whose engines may still be
+    /// draining in-flight sequences. Joined at [`Fleet::drain`];
+    /// finished ones are reaped opportunistically on each load/remove.
+    retired: Mutex<Vec<Arc<ModelEntry>>>,
+    versions: AtomicU64,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Fleet {
+        Fleet {
+            cfg,
+            models: Mutex::new(BTreeMap::new()),
+            retired: Mutex::new(Vec::new()),
+            versions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Load (or hot-swap) `name` from a packed RWKVQ2 store. The file
+    /// is opened and validated on the caller's thread — a bad path or
+    /// corrupt store errors here and leaves the registry untouched. On
+    /// a swap the previous engine is retired: in-flight sequences
+    /// finish on the old mmap while new admissions land on the new one.
+    pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        anyhow::ensure!(!name.is_empty(), "model name must not be empty");
+        let model = QuantizedModel::open_with(path, self.cfg.load_mode)
+            .with_context(|| format!("load model '{name}' from {path:?}"))?;
+        let vocab = model.config.vocab;
+        let created = std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let metrics = Arc::new(Metrics::new());
+        let (tx_req, rx_req) = mpsc::channel::<Request>();
+        let (tx_resp, rx_resp) = mpsc::channel::<Response>();
+        // handlers consume their own event streams; the serve loop
+        // tolerates a closed response channel
+        drop(rx_resp);
+        let FleetConfig { lanes, opts, popts, step_delay, .. } = self.cfg;
+        let obs = metrics.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("fleet-{name}"))
+            .spawn(move || -> Result<ServeStats> {
+                // the engine thread owns the mmap'd model for its whole
+                // life; decoder lanes borrow it on this stack frame
+                let mut lanes: Vec<Lane<'_>> = (0..lanes.max(1))
+                    .map(|_| Lane { inner: RunnerDecoder::new(&model), step_delay })
+                    .collect();
+                with_tick_pool_opts(&mut lanes, popts, |pool| {
+                    pool.serve_with(rx_req, tx_resp, &opts, &*obs)
+                })
+            })
+            .context("spawn fleet engine thread")?;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            version: self.versions.fetch_add(1, Ordering::Relaxed),
+            created,
+            vocab,
+            metrics,
+            tx: Mutex::new(Some(tx_req)),
+            thread: Mutex::new(Some(thread)),
+        });
+        let old = self
+            .models
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.to_string(), entry.clone());
+        if let Some(old) = old {
+            old.retire();
+            self.retired.lock().unwrap_or_else(|e| e.into_inner()).push(old);
+        }
+        self.reap();
+        Ok(entry)
+    }
+
+    /// Drop `name` from the registry: new requests 404 immediately,
+    /// in-flight sequences drain on the (now retired) engine. Returns
+    /// the removed entry, or `None` when the name was never registered.
+    pub fn remove(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let removed = self.models.lock().unwrap_or_else(|e| e.into_inner()).remove(name);
+        if let Some(e) = &removed {
+            e.retire();
+            self.retired.lock().unwrap_or_else(|e| e.into_inner()).push(e.clone());
+        }
+        self.reap();
+        removed
+    }
+
+    /// The live entry for `name`, if registered.
+    pub fn resolve(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.lock().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
+    }
+
+    /// Every live entry, sorted by name.
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.lock().unwrap_or_else(|e| e.into_inner()).values().cloned().collect()
+    }
+
+    /// Live models' metrics registries, sorted by name — the `/metrics`
+    /// exposition's per-model series.
+    pub fn model_metrics(&self) -> Vec<(String, Arc<Metrics>)> {
+        self.models
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(n, e)| (n.clone(), e.metrics.clone()))
+            .collect()
+    }
+
+    /// Route one request to `model`'s engine. A submit that races a hot
+    /// swap recovers the request from the closed channel and retries
+    /// through the table, so a swap never loses an accepted request.
+    pub fn submit(&self, model: &str, mut req: Request) -> std::result::Result<(), SubmitError> {
+        for _ in 0..4 {
+            let Some(entry) = self.resolve(model) else {
+                return Err(SubmitError::UnknownModel);
+            };
+            let tx = entry.tx.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            let Some(tx) = tx else {
+                // retired between resolve and lock — the table may
+                // already hold the replacement
+                continue;
+            };
+            match tx.send(req) {
+                Ok(()) => return Ok(()),
+                // engine exited (swap drain finished first): take the
+                // request back and re-resolve
+                Err(mpsc::SendError(r)) => req = r,
+            }
+        }
+        Err(SubmitError::Closed)
+    }
+
+    /// Retire every model and join every engine (including previously
+    /// swapped-out ones), returning each engine's final [`ServeStats`]
+    /// in retirement order. In-flight sequences decode to completion
+    /// first — this is the gateway's graceful-drain tail.
+    pub fn drain(&self) -> Vec<(String, Result<ServeStats>)> {
+        let live: Vec<Arc<ModelEntry>> = {
+            let mut m = self.models.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *m).into_values().collect()
+        };
+        let mut all = {
+            let mut r = self.retired.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *r)
+        };
+        for e in live {
+            e.retire();
+            all.push(e);
+        }
+        all.into_iter().map(|e| (e.name.clone(), e.join())).collect()
+    }
+
+    /// Join retired engines that already finished draining, so a
+    /// long-lived fleet under repeated swaps doesn't accumulate zombie
+    /// threads. Non-blocking: still-draining engines stay listed.
+    fn reap(&self) {
+        let mut retired = self.retired.lock().unwrap_or_else(|e| e.into_inner());
+        retired.retain(|e| {
+            let mut h = e.thread.lock().unwrap_or_else(|p| p.into_inner());
+            match h.take() {
+                None => false,
+                Some(handle) if handle.is_finished() => {
+                    let _ = handle.join();
+                    false
+                }
+                Some(handle) => {
+                    *h = Some(handle);
+                    true
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, QuantConfig};
+    use crate::coordinator::pipeline::quantize_model;
+    use crate::coordinator::serve::StreamEvent;
+    use crate::model::rwkv::init_params;
+    use crate::util::rng::Rng;
+
+    fn pack_store(tag: &str, seed: u64) -> PathBuf {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(seed));
+        let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &qc, 2);
+        let mut qm = QuantizedModel::from_parts(&m, &q);
+        qm.dense_to_f16();
+        let path = std::env::temp_dir().join(format!("fleet_{tag}.rwkvq2"));
+        qm.save(&path).unwrap();
+        path
+    }
+
+    fn run_once(fleet: &Fleet, model: &str, prompt: Vec<usize>, gen_len: usize) -> Vec<usize> {
+        let (tx, rx) = mpsc::channel();
+        fleet
+            .submit(model, Request::new(0, prompt, gen_len).with_stream(tx))
+            .unwrap();
+        let mut tokens = Vec::new();
+        for ev in rx {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done { .. } => break,
+                StreamEvent::Shed => panic!("unexpected shed"),
+                StreamEvent::Admitted { .. } => {}
+            }
+        }
+        tokens
+    }
+
+    #[test]
+    fn load_route_swap_and_drain() {
+        let pa = pack_store("a", 11);
+        let pb = pack_store("b", 23);
+        let fleet = Fleet::new(FleetConfig::default());
+        let a = fleet.load("a", &pa).unwrap();
+        fleet.load("b", &pb).unwrap();
+        assert_eq!(a.vocab(), 32);
+        assert_eq!(
+            fleet.list().iter().map(|e| e.name().to_string()).collect::<Vec<_>>(),
+            vec!["a", "b"]
+        );
+
+        let ta1 = run_once(&fleet, "a", vec![3, 1, 4], 5);
+        let tb = run_once(&fleet, "b", vec![3, 1, 4], 5);
+        assert_eq!(ta1.len(), 5);
+        assert_eq!(tb.len(), 5);
+        // distinct weights must diverge on a 5-token greedy rollout
+        assert_ne!(ta1, tb, "two different stores served identical tokens");
+
+        // unknown model is an immediate routing error
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            fleet.submit("nope", Request::new(9, vec![1], 1).with_stream(tx)),
+            Err(SubmitError::UnknownModel)
+        );
+
+        // hot swap a ← b's store: same name, new weights, new version
+        let v_before = fleet.resolve("a").unwrap().version();
+        fleet.load("a", &pb).unwrap();
+        assert!(fleet.resolve("a").unwrap().version() > v_before);
+        let ta2 = run_once(&fleet, "a", vec![3, 1, 4], 5);
+        assert_eq!(ta2, tb, "post-swap 'a' must serve the new store's tokens");
+
+        // delete: the name 404s, the engine drains
+        assert!(fleet.remove("b").is_some());
+        assert!(fleet.remove("b").is_none(), "double delete is a clean None");
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            fleet.submit("b", Request::new(10, vec![1], 1).with_stream(tx)),
+            Err(SubmitError::UnknownModel)
+        );
+
+        let stats = fleet.drain();
+        // engines: swapped-out a(v0), removed b, live a(v1)
+        assert_eq!(stats.len(), 3);
+        for (name, s) in &stats {
+            assert!(s.is_ok(), "engine '{name}' failed: {s:?}");
+        }
+        let per_model_metrics: Vec<String> =
+            fleet.model_metrics().into_iter().map(|(n, _)| n).collect();
+        assert!(per_model_metrics.is_empty(), "drain empties the registry");
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn submit_after_drain_is_closed_not_hung() {
+        let p = pack_store("closed", 31);
+        let fleet = Fleet::new(FleetConfig::default());
+        fleet.load("m", &p).unwrap();
+        // retire without removing from the table: submit must retry and
+        // give up with Closed, never hang
+        fleet.resolve("m").unwrap().retire();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            fleet.submit("m", Request::new(0, vec![1], 1).with_stream(tx)),
+            Err(SubmitError::Closed)
+        );
+        fleet.drain();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bad_store_path_leaves_registry_untouched() {
+        let fleet = Fleet::new(FleetConfig::default());
+        assert!(fleet.load("m", Path::new("/nonexistent/model.rwkvq2")).is_err());
+        assert!(fleet.load("", Path::new("/tmp/x")).is_err(), "empty name rejected");
+        assert!(fleet.list().is_empty());
+        assert!(fleet.drain().is_empty());
+    }
+}

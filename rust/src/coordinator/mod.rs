@@ -2,9 +2,11 @@
 //! and the batched generation server used for end-to-end evaluation.
 
 pub mod batcher;
+pub mod fleet;
 pub mod pipeline;
 pub mod sampler;
 pub mod serve;
 pub mod statepool;
 
-pub use pipeline::{quantize_model, PipelineReport, QuantizedLayers};
+pub use fleet::{Fleet, FleetConfig, ModelEntry};
+pub use pipeline::{quantize_model, quantize_store_streaming, PipelineReport, QuantizedLayers, StreamReport};

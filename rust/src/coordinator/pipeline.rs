@@ -15,11 +15,14 @@
 
 use crate::calib::CalibSet;
 use crate::config::{Method, QuantConfig};
+use crate::model::qmodel::ServedParam;
+use crate::model::store::{EntryDecl, EntryKind, ParamClass, Rwkvq1Reader, Rwkvq2Writer};
 use crate::model::ModelWeights;
 use crate::quant::hybrid::{self, Choice, TauCalibration};
 use crate::quant::proxy::{self, ProxyPair};
 use crate::quant::QuantizedLayer;
 use crate::util::rng::Rng;
+use crate::Result;
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -191,6 +194,181 @@ pub fn quantize_model(
     (quantized, report)
 }
 
+/// Report of a [`quantize_store_streaming`] run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub method: Method,
+    /// Entries written to the RWKVQ2 output.
+    pub entries: usize,
+    /// Of those, entries that serve from a packed payload.
+    pub packed: usize,
+    pub taus: Option<TauCalibration>,
+    /// Average bits per quantized weight (same accounting as
+    /// [`PipelineReport::avg_bpw`]).
+    pub avg_bpw: f64,
+    /// SQ fraction of the Eq. 18 decisions (NaN for baselines).
+    pub sq_share: f64,
+    pub wall_secs: f64,
+}
+
+/// Which RWKVQ2 entry kind a layer will serialize as, predicted from
+/// its class and the quantizer that will run — **before** the payload
+/// exists, so the streaming packer can declare the TOC up front.
+/// Mirrors `ServedParam::from_quantized` + `EntryDecl::of`; a wrong
+/// prediction is caught by `Rwkvq2Writer::write_entry`'s decl check.
+fn predict_kind(class: ParamClass, method: Method, choice: Option<Choice>) -> EntryKind {
+    if class != ParamClass::MatMul {
+        // vectors/embeddings stay dense; quantized element-wise layers
+        // are dequantized once at assembly (§3.2 — O(d), read per token)
+        return EntryKind::DenseF16;
+    }
+    match (method, choice) {
+        (Method::RwkvQuant, Some(Choice::Sq)) => EntryKind::Sq,
+        (Method::RwkvQuant, _) => EntryKind::Vq,
+        (Method::Rtn | Method::Gptq | Method::Awq, _) => EntryKind::Sq,
+        // QuaRot rotations are non-fusable — served as a dense fallback
+        (Method::QuaRot, _) => EntryKind::DenseF16,
+        (Method::KMeans | Method::Gptvq | Method::Vptq, _) => EntryKind::Vq,
+    }
+}
+
+/// Quantize an RWKVQ1 dense store straight into an RWKVQ2 packed
+/// checkpoint in **two layer-by-layer passes**, so peak RSS is O(one
+/// layer) and models larger than RAM can be packed on the serving host:
+///
+/// 1. stream every entry once, computing `(P_c, P_f)` for the
+///    quantizable layers (hybrid only) and recording shapes/classes,
+///    then calibrate `(τ_c, τ_f)` and declare the output TOC;
+/// 2. stream again, quantizing each layer with the **same per-layer RNG
+///    seeding as [`quantize_model`]** (`seed ^ (entry_index << 8)`) and
+///    feeding it to the streaming [`Rwkvq2Writer`].
+///
+/// On a model that fits in RAM the output is **byte-identical** to the
+/// in-memory `quantize_model` → `from_parts` → `dense_to_f16` → `save`
+/// path (asserted in the tests): dense f32 and resident-f16 entries
+/// serialize to the same bytes, and the per-layer seeds match. The
+/// streaming path is weight-only — activation calibration would need
+/// the whole model resident to run the capture forward pass.
+pub fn quantize_store_streaming(
+    src: &std::path::Path,
+    out: &std::path::Path,
+    cfg: &QuantConfig,
+) -> Result<StreamReport> {
+    let t0 = Instant::now();
+
+    // ---- pass 1: proxy scan + TOC declaration ----
+    let mut reader = Rwkvq1Reader::open(src)?;
+    let config = reader.config().clone();
+    let mut classes: Vec<ParamClass> = Vec::with_capacity(reader.count());
+    let mut names: Vec<String> = Vec::with_capacity(reader.count());
+    let mut proxies: Vec<ProxyPair> = Vec::new();
+    while let Some((desc, m)) = reader.next_entry()? {
+        if cfg.method == Method::RwkvQuant && desc.class.quantizable() {
+            proxies.push(proxy::compute(&m.data, cfg.proxy_order));
+        }
+        classes.push(desc.class);
+        names.push(desc.name);
+    }
+    let (choices, taus) = if cfg.method == Method::RwkvQuant {
+        anyhow::ensure!(!proxies.is_empty(), "{src:?} has no quantizable layers");
+        let taus = match (cfg.tau_c, cfg.tau_f) {
+            (Some(tc), Some(tf)) => {
+                let share = proxies
+                    .iter()
+                    .filter(|&&p| hybrid::decide(p, tc, tf) == Choice::Sq)
+                    .count() as f64
+                    / proxies.len() as f64;
+                TauCalibration { tau_c: tc, tau_f: tf, sq_share: share }
+            }
+            _ => hybrid::calibrate_taus(&proxies, cfg.sq_fraction),
+        };
+        let choices: Vec<Choice> = proxies
+            .iter()
+            .map(|&p| hybrid::decide(p, taus.tau_c, taus.tau_f))
+            .collect();
+        (Some(choices), Some(taus))
+    } else {
+        (None, None)
+    };
+    let mut pos = 0usize;
+    let decls: Vec<EntryDecl> = classes
+        .iter()
+        .zip(&names)
+        .map(|(&class, name)| {
+            let choice = if class.quantizable() {
+                let c = choices.as_ref().map(|ch| ch[pos]);
+                pos += 1;
+                c
+            } else {
+                None
+            };
+            EntryDecl {
+                name: name.clone(),
+                class,
+                kind: predict_kind(class, cfg.method, choice),
+            }
+        })
+        .collect();
+
+    // ---- pass 2: quantize + pack, one layer resident at a time ----
+    let mut reader = Rwkvq1Reader::open(src)?;
+    let mut writer = Rwkvq2Writer::create(out, &config, decls)?;
+    let mut bits = 0usize;
+    let mut numel = 0usize;
+    let mut packed = 0usize;
+    let mut entry_idx = 0usize;
+    let mut pos = 0usize;
+    while let Some((desc, m)) = reader.next_entry()? {
+        let served = if desc.class.quantizable() {
+            // the exact per-layer seeding of `quantize_model`: the seed
+            // depends only on the entry's position in the store, so the
+            // streaming and in-memory paths quantize identically
+            let mut rng = Rng::new(cfg.seed ^ ((entry_idx as u64) << 8));
+            let q = match &choices {
+                Some(ch) => {
+                    hybrid::quantize_hybrid(&m, desc.class.kind(), ch[pos], None, cfg, &mut rng)
+                }
+                None => hybrid::quantize_with_method(
+                    &m,
+                    desc.class.kind(),
+                    cfg.method,
+                    None,
+                    cfg,
+                    &mut rng,
+                ),
+            };
+            pos += 1;
+            bits += q.storage_bits();
+            numel += q.numel();
+            ServedParam::from_quantized(&desc, q)
+        } else {
+            ServedParam::Dense(m)
+        };
+        if served.is_packed() {
+            packed += 1;
+        }
+        writer.write_entry(&desc, &served)?;
+        entry_idx += 1;
+    }
+    writer.finish()?;
+
+    let sq_share = match &choices {
+        Some(ch) if !ch.is_empty() => {
+            ch.iter().filter(|&&c| c == Choice::Sq).count() as f64 / ch.len() as f64
+        }
+        _ => f64::NAN,
+    };
+    Ok(StreamReport {
+        method: cfg.method,
+        entries: entry_idx,
+        packed,
+        taus,
+        avg_bpw: bits as f64 / numel.max(1) as f64,
+        sq_share,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
 /// Simple indexed parallel map over a slice (order-preserving).
 fn parallel_map<T: Sync, R: Send>(
     items: &[T],
@@ -280,6 +458,81 @@ mod tests {
         };
         let (_, rep) = quantize_model(&m, None, &cfg, 2);
         assert!((rep.sq_share() - 1.0).abs() < 1e-12);
+    }
+
+    fn in_memory_pack(m: &ModelWeights, cfg: &QuantConfig, path: &std::path::Path) {
+        let (q, _) = quantize_model(m, None, cfg, 2);
+        let mut qm = crate::model::QuantizedModel::from_parts(m, &q);
+        qm.dense_to_f16();
+        qm.save(path).unwrap();
+    }
+
+    #[test]
+    fn streaming_quantize_bytes_identical_to_in_memory_pack() {
+        let m = small_model();
+        let src = std::env::temp_dir().join("pipeline_stream_src.bin");
+        m.save(&src).unwrap();
+        for (tag, cfg) in [
+            ("hybrid", QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() }),
+            (
+                "kmeans",
+                QuantConfig {
+                    method: Method::KMeans,
+                    kmeans_iters: 4,
+                    vq_bits: 6,
+                    ..QuantConfig::default()
+                },
+            ),
+            ("rtn", QuantConfig { method: Method::Rtn, ..QuantConfig::default() }),
+        ] {
+            let via_mem = std::env::temp_dir().join(format!("pipeline_stream_mem_{tag}.rwkvq2"));
+            let via_stream = std::env::temp_dir().join(format!("pipeline_stream_str_{tag}.rwkvq2"));
+            in_memory_pack(&m, &cfg, &via_mem);
+            let rep = quantize_store_streaming(&src, &via_stream, &cfg).unwrap();
+            assert_eq!(rep.entries, m.layers.len(), "{tag}");
+            let a = std::fs::read(&via_mem).unwrap();
+            let b = std::fs::read(&via_stream).unwrap();
+            assert_eq!(a, b, "{tag}: streaming output must be byte-identical");
+            std::fs::remove_file(via_mem).ok();
+            std::fs::remove_file(via_stream).ok();
+        }
+        std::fs::remove_file(src).ok();
+    }
+
+    #[test]
+    fn streaming_quantize_report_matches_pipeline() {
+        let m = small_model();
+        let src = std::env::temp_dir().join("pipeline_stream_rep_src.bin");
+        m.save(&src).unwrap();
+        let out = std::env::temp_dir().join("pipeline_stream_rep.rwkvq2");
+        let cfg = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (_, want) = quantize_model(&m, None, &cfg, 2);
+        let rep = quantize_store_streaming(&src, &out, &cfg).unwrap();
+        assert!((rep.avg_bpw - want.avg_bpw).abs() < 1e-12);
+        assert!((rep.sq_share - want.sq_share()).abs() < 1e-12);
+        let (wt, rt) = (want.taus.unwrap(), rep.taus.unwrap());
+        assert_eq!((wt.tau_c, wt.tau_f), (rt.tau_c, rt.tau_f));
+        assert!(rep.packed > 0);
+        // and the file actually serves
+        let qm = crate::model::QuantizedModel::open(&out).unwrap();
+        assert_eq!(qm.n_packed(), rep.packed);
+        std::fs::remove_file(src).ok();
+        std::fs::remove_file(out).ok();
+    }
+
+    #[test]
+    fn quarot_streaming_predicts_dense_fallback() {
+        let m = small_model();
+        let src = std::env::temp_dir().join("pipeline_stream_quarot_src.bin");
+        m.save(&src).unwrap();
+        let out = std::env::temp_dir().join("pipeline_stream_quarot.rwkvq2");
+        let cfg = QuantConfig { method: Method::QuaRot, ..QuantConfig::default() };
+        let rep = quantize_store_streaming(&src, &out, &cfg).unwrap();
+        // rotations are non-fusable: nothing serves packed
+        assert_eq!(rep.packed, 0);
+        assert!(crate::model::QuantizedModel::open(&out).is_ok());
+        std::fs::remove_file(src).ok();
+        std::fs::remove_file(out).ok();
     }
 
     #[test]

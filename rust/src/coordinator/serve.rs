@@ -304,6 +304,11 @@ pub struct ServeStats {
     /// Parked snapshots copied back into an arena slab (every sequence
     /// resumes at least once: its first residency).
     pub state_resumes: u64,
+    /// Most state-arena slabs ever simultaneously checked out
+    /// ([`StatePool::occupancy_hwm`]) — the `--state-slots` sizing
+    /// signal: well under the arena size means over-provisioned, equal
+    /// means sequences parked or shed on its account.
+    pub state_occupancy_hwm: usize,
     /// Requests retired mid-decode because their cancel flag was raised
     /// (client disconnect). Not counted in `completed`.
     pub cancelled: usize,
@@ -1328,6 +1333,7 @@ fn serve_loop(
         p99_admission_wait: percentile(&admission_waits, 0.99),
         state_parks: pool.parks(),
         state_resumes: pool.resumes(),
+        state_occupancy_hwm: pool.occupancy_hwm(),
         cancelled,
     })
 }
@@ -2073,6 +2079,8 @@ mod tests {
         assert_eq!(stats.completed, 8);
         assert!(stats.state_parks > 0, "8 sequences over 3 slabs must evict");
         assert!(stats.state_resumes >= stats.state_parks, "every park resumes (plus first entry)");
+        assert_eq!(stats.state_occupancy_hwm, 3, "a parking arena peaked at full occupancy");
+        assert!(free_stats.state_occupancy_hwm <= 8);
         let a: Vec<_> = want.iter().map(|r| (r.id, r.tokens.clone())).collect();
         let b: Vec<_> = got.iter().map(|r| (r.id, r.tokens.clone())).collect();
         assert_eq!(a, b, "eviction must be invisible in the tokens");

@@ -44,6 +44,7 @@ pub struct StatePool {
     free: Vec<usize>,
     parks: u64,
     resumes: u64,
+    occupancy_hwm: usize,
 }
 
 impl StatePool {
@@ -60,6 +61,7 @@ impl StatePool {
             free: (0..slots).rev().collect(),
             parks: 0,
             resumes: 0,
+            occupancy_hwm: 0,
         }
     }
 
@@ -86,10 +88,23 @@ impl StatePool {
         self.resumes
     }
 
+    /// Most slabs ever simultaneously checked out — how close the
+    /// arena came to exhaustion over its lifetime. Sizing signal for
+    /// `--state-slots` (an HWM well under `slots` means the arena is
+    /// over-provisioned; HWM == slots means sequences were parked or
+    /// shed on its account).
+    pub fn occupancy_hwm(&self) -> usize {
+        self.occupancy_hwm
+    }
+
     /// Claim a free slab, or `None` when the arena is exhausted (the
     /// caller parks an idle resident and retries, or sheds).
     pub fn checkout(&mut self) -> Option<Slab> {
-        self.free.pop().map(|slot| Slab { slot })
+        let slab = self.free.pop().map(|slot| Slab { slot });
+        if slab.is_some() {
+            self.occupancy_hwm = self.occupancy_hwm.max(self.slots - self.free.len());
+        }
+        slab
     }
 
     /// Return a slab to the free list (sequence finished).
@@ -151,6 +166,7 @@ impl std::fmt::Debug for StatePool {
             .field("available", &self.available())
             .field("parks", &self.parks)
             .field("resumes", &self.resumes)
+            .field("occupancy_hwm", &self.occupancy_hwm)
             .finish()
     }
 }
@@ -230,6 +246,28 @@ mod tests {
         }
         assert_eq!(p.slab(&a), &[7.0, 8.0, 9.0]);
         assert_eq!(p.slab(&b), &[0.0, 0.0, 0.0], "slabs must be disjoint");
+    }
+
+    #[test]
+    fn occupancy_high_water_mark_tracks_peak_not_current() {
+        let mut p = StatePool::new(2, 3);
+        assert_eq!(p.occupancy_hwm(), 0);
+        let a = p.checkout().unwrap();
+        let b = p.checkout().unwrap();
+        assert_eq!(p.occupancy_hwm(), 2);
+        p.release(a);
+        p.release(b);
+        // draining doesn't lower the mark
+        assert_eq!(p.occupancy_hwm(), 2);
+        let c = p.checkout().unwrap();
+        assert_eq!(p.occupancy_hwm(), 2, "re-reaching a lower peak keeps the old mark");
+        // resume goes through checkout, so it moves the mark too
+        let d = p.resume(&[0.0, 0.0]).unwrap();
+        let e = p.checkout().unwrap();
+        assert_eq!(p.occupancy_hwm(), 3);
+        p.release(c);
+        p.release(d);
+        p.release(e);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! `rwkvquant` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   quantize   quantize a weight store (or a synthetic model) and report
+//!   quantize   quantize a weight store (or a synthetic model) and report;
+//!              with --streaming, two layer-by-layer passes over an
+//!              RWKVQ1 store write a packed RWKVQ2 checkpoint with
+//!              O(one layer) peak memory
 //!   pack       quantize and serialize to an RWKVQ2 packed checkpoint
 //!   eval       perplexity + zero-shot of a store on the corpus
 //!   serve      batched generation over a store (RWKVQ1 quantized on the
@@ -10,17 +13,22 @@
 //!              (SSE tokens, OpenAI-compatible /v1/completions and
 //!              /v1/chat/completions with seeded sampling and
 //!              disconnect cancellation, /healthz, /metrics, 429
-//!              shedding, graceful SIGINT/SIGTERM drain)
+//!              shedding, graceful SIGINT/SIGTERM drain); repeated
+//!              --model name=path.rwkvq2 flags serve a whole fleet —
+//!              the request's "model" field routes to a per-model
+//!              engine, GET /v1/models lists the registry, and
+//!              POST/DELETE /admin/models/{name} hot-swap models with
+//!              zero downtime
 //!   proxy      proxy-scan a model (SQ/VQ classification per layer)
 //!   info       print artifact / environment status
 
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
-use rwkvquant::coordinator::quantize_model;
 use rwkvquant::coordinator::serve::{
     resolve_tick_threads, serve_collect_pool_with, PoolOpts, Request, RunnerDecoder, ServeOpts,
     ServeStats,
 };
+use rwkvquant::coordinator::{quantize_model, quantize_store_streaming, Fleet, FleetConfig};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
@@ -40,7 +48,17 @@ fn help() -> String {
         .sub("proxy", "per-layer proxy scan (P_c, P_f, Eq.18 decision)")
         .sub("info", "artifact & environment status")
         .opt("store", "path to a RWKVQ1/RWKVQ2 store (default artifacts/tiny_rwkv.bin)")
-        .opt("out", "pack: output path (default artifacts/model.rwkvq2)")
+        .opt("out", "pack/quantize --streaming: output path (default artifacts/model.rwkvq2)")
+        .opt(
+            "streaming",
+            "quantize: stream an RWKVQ1 store to a packed RWKVQ2 checkpoint layer by \
+             layer, O(one layer) peak memory (flag; requires --store)",
+        )
+        .opt(
+            "model",
+            "serve --http: register NAME=PATH.rwkvq2 in the fleet (repeatable); requests \
+             route by their \"model\" field, /admin/models/{name} hot-swaps",
+        )
         .opt("mmap", "serve: force memory-mapped RWKVQ2 loading (flag)")
         .opt("buffered", "serve: force buffered RWKVQ2 loading (flag)")
         .opt("method", "rtn|gptq|awq|quarot|kmeans|gptvq|vptq|rwkvquant (default rwkvquant)")
@@ -103,6 +121,9 @@ fn quant_config(args: &Args) -> rwkvquant::Result<QuantConfig> {
 }
 
 fn cmd_quantize(args: &Args) -> rwkvquant::Result<()> {
+    if args.flag("streaming") {
+        return cmd_quantize_streaming(args);
+    }
     let model = load_model(args)?;
     let cfg = quant_config(args)?;
     let corpus_path = artifacts_dir().join("corpus.bin");
@@ -140,6 +161,50 @@ fn cmd_quantize(args: &Args) -> rwkvquant::Result<()> {
         rep.n_workers,
         q.values().map(|l| l.storage_bits()).sum::<usize>(),
     );
+    Ok(())
+}
+
+/// `quantize --streaming`: two layer-by-layer passes over an on-disk
+/// RWKVQ1 store (proxy scan, then quantize+pack) straight into an
+/// RWKVQ2 writer — peak memory is one layer plus the scan's proxy
+/// pairs, never the whole model. Byte-identical to `pack` of the same
+/// store and config.
+fn cmd_quantize_streaming(args: &Args) -> rwkvquant::Result<()> {
+    let src = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("--streaming reads from disk; pass --store <model.bin>"))?;
+    let cfg = quant_config(args)?;
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => artifacts_dir().join("model.rwkvq2"),
+    };
+    if let Some(parent) = out.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    let rep = quantize_store_streaming(std::path::Path::new(src), &out, &cfg)?;
+    let bytes = std::fs::metadata(&out)?.len();
+    if let Some(taus) = &rep.taus {
+        println!(
+            "τ_c = {:.3}, τ_f = {:.2} (calibrated from the streaming proxy scan)",
+            taus.tau_c, taus.tau_f
+        );
+    }
+    println!(
+        "streamed {} entries ({} packed payloads, avg {:.3} bpw{}) -> {} ({:.2} MB) \
+         in {:.2}s — peak RSS stayed O(one layer)",
+        rep.entries,
+        rep.packed,
+        rep.avg_bpw,
+        if rep.sq_share.is_nan() {
+            String::new()
+        } else {
+            format!(", SQ share {:.0}%", rep.sq_share * 100.0)
+        },
+        out.display(),
+        bytes as f64 / 1e6,
+        rep.wall_secs,
+    );
+    println!("serve it with: rwkvquant serve --store {} --mmap", out.display());
     Ok(())
 }
 
@@ -188,6 +253,10 @@ fn cmd_pack(args: &Args) -> rwkvquant::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
+    let model_specs = args.get_all("model");
+    if !model_specs.is_empty() {
+        return cmd_serve_fleet(args, &model_specs);
+    }
     let mode = if args.flag("mmap") {
         LoadMode::Mmap
     } else if args.flag("buffered") {
@@ -342,6 +411,114 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         }
     }
     print_serve_summary(&stats);
+    Ok(())
+}
+
+/// `serve --http --model a=a.rwkvq2 --model b=b.rwkvq2 …`: multi-model
+/// fleet serving. Every model gets its own mmap'd store, serve engine
+/// and metrics registry; requests route by their `model` field and the
+/// admin API hot-swaps stores under live traffic. A `--store` given
+/// alongside `--model` registers as the default model name.
+fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
+    use rwkvquant::data::tokenizer::Tokenizer;
+    use rwkvquant::server::gateway::DEFAULT_MODEL;
+    use rwkvquant::server::{signal, Gateway, GatewayConfig};
+
+    let addr = args
+        .flag_value("http", "127.0.0.1:8080")
+        .ok_or_else(|| anyhow::anyhow!("--model fleet serving is an HTTP feature; pass --http"))?;
+    let mode = if args.flag("mmap") {
+        LoadMode::Mmap
+    } else if args.flag("buffered") {
+        LoadMode::Buffered
+    } else {
+        LoadMode::Auto
+    };
+    let batch = args.get_usize("batch", 8);
+    let tick_threads = resolve_tick_threads(args.get_usize("tick-threads", 1), batch);
+    let prefill_chunk = args.get_usize("prefill-chunk", 32);
+    let state_slots = args.get_usize("state-slots", 0);
+    let pin_workers = args.flag("pin-workers");
+    let max_queue = args.get_usize("max-queue", 64);
+    let mut opts = ServeOpts::new(batch, Duration::from_millis(2))
+        .with_max_queue(max_queue)
+        .with_prefill_chunk(prefill_chunk);
+    if state_slots > 0 {
+        opts = opts.with_state_slots(state_slots);
+    }
+    let fleet = Fleet::new(FleetConfig {
+        lanes: tick_threads,
+        opts,
+        popts: PoolOpts::default().with_pin_workers(pin_workers),
+        load_mode: mode,
+        step_delay: Duration::ZERO,
+    });
+
+    let mut named: Vec<(String, std::path::PathBuf)> = Vec::new();
+    if let Some(store) = args.get("store") {
+        named.push((DEFAULT_MODEL.to_string(), std::path::PathBuf::from(store)));
+    }
+    for spec in specs {
+        let (name, path) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--model expects NAME=PATH.rwkvq2, got '{spec}'")
+        })?;
+        anyhow::ensure!(!name.is_empty(), "--model: empty model name in '{spec}'");
+        named.push((name.to_string(), std::path::PathBuf::from(path)));
+    }
+    let mut vocab = 0usize;
+    for (name, path) in &named {
+        anyhow::ensure!(
+            detect_format(path)? == StoreFormat::V2Packed,
+            "model '{name}': {} is not a packed RWKVQ2 checkpoint (run `rwkvquant pack` \
+             or `rwkvquant quantize --streaming` first)",
+            path.display(),
+        );
+        let entry = fleet.load(name, path)?;
+        vocab = vocab.max(entry.vocab());
+        println!(
+            "loaded model '{name}' from {} (vocab {}, version {})",
+            path.display(),
+            entry.vocab(),
+            entry.version(),
+        );
+    }
+
+    let heeding = signal::install_shutdown_signals();
+    signal::clear_shutdown_signal();
+    let mut gcfg = GatewayConfig::new(addr);
+    gcfg.max_batch = batch;
+    gcfg.max_queue = max_queue;
+    gcfg.max_gen_len = args.get_usize("max-gen-len", 512);
+    gcfg.prefill_chunk = prefill_chunk;
+    gcfg.state_slots = state_slots;
+    gcfg.pin_workers = pin_workers;
+    gcfg.heed_signals = heeding;
+    let mut gateway = Gateway::bind(gcfg, vocab)?;
+    if let Some(path) = args.get("vocab") {
+        let tok = Tokenizer::load(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("--vocab: {e}"))?;
+        gateway = gateway.with_tokenizer(tok);
+    }
+    println!(
+        "HTTP fleet gateway on http://{} — {} model{} (route with the \"model\" field); \
+         GET /v1/models, POST/DELETE /admin/models/{{name}} to hot-swap; \
+         max-queue {max_queue} (overflow → 429); {} to drain and exit",
+        gateway.local_addr(),
+        named.len(),
+        if named.len() == 1 { "" } else { "s" },
+        if heeding { "Ctrl-C / SIGTERM" } else { "no signal handler — kill to stop" },
+    );
+    gateway.serve_fleet(&fleet)?;
+    for (name, stats) in fleet.drain() {
+        match stats {
+            Ok(s) => {
+                print!("model '{name}': ");
+                print_serve_summary(&s);
+            }
+            Err(e) => eprintln!("model '{name}': engine error: {e:#}"),
+        }
+    }
+    println!("drained cleanly — all in-flight requests completed");
     Ok(())
 }
 

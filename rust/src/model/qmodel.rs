@@ -156,6 +156,20 @@ impl ServedParam {
             ServedParam::DenseF16(t) => t,
         }
     }
+
+    /// How the assembly path serves one quantized layer: packed iff it
+    /// is a matmul whose payload the fused kernels accept
+    /// ([`servable_packed`]), a one-time dequantized dense copy
+    /// otherwise. Shared by [`QuantizedModel::from_parts`] and the
+    /// streaming packer (`coordinator::pipeline::quantize_store_streaming`)
+    /// so the two can never disagree on what ends up packed.
+    pub fn from_quantized(desc: &LayerDesc, q: QuantizedLayer) -> ServedParam {
+        if desc.class == ParamClass::MatMul && servable_packed(&q) {
+            ServedParam::Packed(q)
+        } else {
+            ServedParam::Dense(q.dequantize())
+        }
+    }
 }
 
 /// Can this quantized layer run through the fused matvec kernels?
@@ -196,10 +210,7 @@ impl QuantizedModel {
         let mut entries = Vec::with_capacity(fp.layers.len());
         for (desc, m) in &fp.layers {
             let served = match quantized.get(&desc.name) {
-                Some(q) if desc.class == ParamClass::MatMul && servable_packed(q) => {
-                    ServedParam::Packed(q.clone())
-                }
-                Some(q) => ServedParam::Dense(q.dequantize()),
+                Some(q) => ServedParam::from_quantized(desc, q.clone()),
                 None => ServedParam::Dense(m.clone()),
             };
             entries.push((desc.clone(), served));

@@ -191,37 +191,105 @@ impl ModelWeights {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
         );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != b"RWKVQ1\0\0" {
-            bail!("bad magic in {path:?}");
-        }
-        let arch = read_str(&mut f)?;
-        let n_layer = read_u32(&mut f)? as usize;
-        let d_model = read_u32(&mut f)? as usize;
-        let vocab = read_u32(&mut f)? as usize;
-        let head_dim = read_u32(&mut f)? as usize;
-        let mut fr = [0u8; 8];
-        f.read_exact(&mut fr)?;
-        let ffn_ratio = f64::from_le_bytes(fr);
-        let config = ModelConfig { arch, n_layer, d_model, vocab, head_dim, ffn_ratio };
-        let count = read_u32(&mut f)? as usize;
+        let (config, count) = read_v1_header(&mut f).with_context(|| format!("in {path:?}"))?;
         let mut layers = Vec::with_capacity(count);
         for _ in 0..count {
-            let name = read_str(&mut f)?;
-            let mut tag = [0u8; 1];
-            f.read_exact(&mut tag)?;
-            let class = ParamClass::from_u8(tag[0])?;
-            let rows = read_u64(&mut f)? as usize;
-            let cols = read_u64(&mut f)? as usize;
-            let mut data = vec![0f32; rows * cols];
-            let bytes: &mut [u8] = unsafe {
-                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
-            };
-            f.read_exact(bytes)?;
-            layers.push((LayerDesc { name, class }, Matrix { rows, cols, data }));
+            layers.push(read_v1_entry(&mut f)?);
         }
         Ok(ModelWeights { config, layers })
+    }
+}
+
+/// Parse the RWKVQ1 header (magic + config + entry count), leaving the
+/// reader positioned at the first entry.
+fn read_v1_header<R: Read>(f: &mut R) -> Result<(ModelConfig, usize)> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC_V1 {
+        bail!("bad RWKVQ1 magic");
+    }
+    let arch = read_str(f)?;
+    let n_layer = read_u32(f)? as usize;
+    let d_model = read_u32(f)? as usize;
+    let vocab = read_u32(f)? as usize;
+    let head_dim = read_u32(f)? as usize;
+    let mut fr = [0u8; 8];
+    f.read_exact(&mut fr)?;
+    let ffn_ratio = f64::from_le_bytes(fr);
+    let config = ModelConfig { arch, n_layer, d_model, vocab, head_dim, ffn_ratio };
+    let count = read_u32(f)? as usize;
+    if count > 1 << 20 {
+        bail!("entry count {count} implausible");
+    }
+    Ok((config, count))
+}
+
+/// Parse one RWKVQ1 entry (name/class/shape + fp32 data) at the reader's
+/// current position.
+fn read_v1_entry<R: Read>(f: &mut R) -> Result<(LayerDesc, Matrix)> {
+    let name = read_str(f)?;
+    let mut tag = [0u8; 1];
+    f.read_exact(&mut tag)?;
+    let class = ParamClass::from_u8(tag[0])?;
+    let rows = read_u64(f)? as usize;
+    let cols = read_u64(f)? as usize;
+    let numel = rows
+        .checked_mul(cols)
+        .with_context(|| format!("'{name}': numel overflow"))?;
+    if numel > 1 << 31 {
+        bail!("'{name}': shape {rows}x{cols} implausible");
+    }
+    let mut data = vec![0f32; numel];
+    let bytes: &mut [u8] = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
+    };
+    f.read_exact(bytes)?;
+    Ok((LayerDesc { name, class }, Matrix { rows, cols, data }))
+}
+
+/// Streaming entry-by-entry reader over an RWKVQ1 dense store.
+///
+/// `ModelWeights::load` materialises the whole model; this reader holds
+/// **one layer's** fp32 data resident at a time — the O(one-layer) RSS
+/// bound that lets `rwkvquant quantize --streaming` pack models larger
+/// than RAM. The v1 layout (name/class/shape then data, entry after
+/// entry) makes this trivial: each `next_entry` call reads exactly one
+/// record. Multi-pass drivers (proxy scan, then quantize+write) simply
+/// open the file once per pass.
+pub struct Rwkvq1Reader {
+    f: std::io::BufReader<std::fs::File>,
+    config: ModelConfig,
+    count: usize,
+    next: usize,
+}
+
+impl Rwkvq1Reader {
+    /// Open a v1 store and parse its header; no tensor data is read yet.
+    pub fn open(path: &std::path::Path) -> Result<Rwkvq1Reader> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let (config, count) = read_v1_header(&mut f).with_context(|| format!("in {path:?}"))?;
+        Ok(Rwkvq1Reader { f, config, count, next: 0 })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    /// Total entries declared in the header.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Read the next entry, or `None` once every declared entry was
+    /// consumed. The returned matrix is the only tensor resident.
+    pub fn next_entry(&mut self) -> Result<Option<(LayerDesc, Matrix)>> {
+        if self.next >= self.count {
+            return Ok(None);
+        }
+        self.next += 1;
+        read_v1_entry(&mut self.f).map(Some)
     }
 }
 
@@ -985,6 +1053,29 @@ mod tests {
             assert_eq!(da.class, db.class);
             assert_eq!(ma, mb);
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn streaming_v1_reader_matches_bulk_load() {
+        let m = demo_model();
+        let path = std::env::temp_dir().join("rwkvq_stream_reader.bin");
+        m.save(&path).unwrap();
+        let bulk = ModelWeights::load(&path).unwrap();
+        let mut r = Rwkvq1Reader::open(&path).unwrap();
+        assert_eq!(r.config(), &m.config);
+        assert_eq!(r.count(), m.layers.len());
+        let mut seen = 0usize;
+        while let Some((desc, mat)) = r.next_entry().unwrap() {
+            let (want_desc, want_mat) = &bulk.layers[seen];
+            assert_eq!(desc.name, want_desc.name);
+            assert_eq!(desc.class, want_desc.class);
+            assert_eq!(&mat, want_mat);
+            seen += 1;
+        }
+        assert_eq!(seen, m.layers.len());
+        // exhausted reader keeps returning None
+        assert!(r.next_entry().unwrap().is_none());
         std::fs::remove_file(path).ok();
     }
 

@@ -41,7 +41,23 @@
 //! `/metrics` and finish with reason `cancelled`. A non-streaming
 //! request writes nothing until it completes, so a disconnect there is
 //! only discovered (and the response discarded) at the final write.
+//!
+//! Dispatch is table-driven: [`ROUTES`] declares the whole HTTP
+//! surface (method, path pattern with `{param}` segments, handler) and
+//! `match_route` derives uniform `404`s and `405 Allow: …` responses
+//! from it. Every error answers the OpenAI error schema
+//! `{"error":{"code","message","type"}}`.
+//!
+//! The gateway serves either a single engine ([`Gateway::serve`], the
+//! legacy `--store` path: one serve loop, the request's `model` field
+//! must be absent or [`DEFAULT_MODEL`]) or a whole
+//! [`Fleet`] ([`Gateway::serve_fleet`]): the `model` field routes each
+//! request to its per-model engine, `GET /v1/models` lists the
+//! registry, `POST`/`DELETE /admin/models/{name}` hot-swap and retire
+//! models with zero downtime, and `/metrics` carries a `model` label
+//! on every serve-level family.
 
+use crate::coordinator::fleet::{Fleet, SubmitError};
 use crate::coordinator::sampler::SampleParams;
 use crate::coordinator::serve::{
     with_tick_pool_opts, Decoder, FinishReason, PoolOpts, Request, Response, ServeOpts,
@@ -50,7 +66,7 @@ use crate::coordinator::serve::{
 use crate::data::tokenizer::Tokenizer;
 use crate::report::json::Json;
 use crate::server::http::{self, ChunkedWriter, HttpRequest, Limits};
-use crate::server::metrics::Metrics;
+use crate::server::metrics::{render_exposition, Metrics};
 use crate::server::{json, signal};
 use crate::Result;
 use anyhow::Context;
@@ -224,8 +240,9 @@ impl Gateway {
             tokenizer: &tokenizer,
             cfg: &cfg,
             next_id: &next_id,
-            metrics: metrics_ref,
+            metrics: &metrics,
             shutdown: &shutdown,
+            started_unix: unix_now(),
         };
         let sh = &shared;
 
@@ -249,16 +266,7 @@ impl Gateway {
                     Ok((stream, _peer)) => {
                         let open = sh.metrics.open_connections.load(Ordering::Relaxed);
                         if open >= sh.cfg.max_connections as u64 {
-                            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-                            let mut w = stream;
-                            w.set_nonblocking(false).ok();
-                            w.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).ok();
-                            let _ = http::write_response(
-                                &mut w,
-                                503,
-                                &[("Content-Type", "application/json"), ("Connection", "close")],
-                                br#"{"error":"too many connections"}"#,
-                            );
+                            refuse_connection(stream, sh);
                             continue;
                         }
                         sh.metrics.open_connections.fetch_add(1, Ordering::Relaxed);
@@ -267,7 +275,7 @@ impl Gateway {
                             // a handler panic must not tear down the
                             // whole gateway at scope join
                             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                handle_connection(stream, sh, tx);
+                                handle_connection(stream, sh, Conn::Single(tx));
                             }));
                             sh.metrics.open_connections.fetch_sub(1, Ordering::Relaxed);
                         });
@@ -291,7 +299,85 @@ impl Gateway {
             engine.join().expect("serve engine thread panicked")
         })
     }
+
+    /// Run the gateway over a [`Fleet`] registry until a drain is
+    /// requested. Unlike [`Gateway::serve`] the engines live inside
+    /// the fleet (one per model, spawned by `Fleet::load` — including
+    /// loads that arrive later over the admin API), so this call only
+    /// runs the accept loop; call [`Fleet::drain`] afterwards to
+    /// retire the engines and collect per-model stats. Each request's
+    /// `model` field picks the engine; an unknown model answers `404`
+    /// with code `model_not_found`.
+    pub fn serve_fleet(self, fleet: &Fleet) -> Result<()> {
+        let Gateway { listener, cfg, vocab, tokenizer, shutdown, metrics } = self;
+        listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let next_id = AtomicU64::new(0);
+        let shared = Shared {
+            vocab,
+            tokenizer: &tokenizer,
+            cfg: &cfg,
+            next_id: &next_id,
+            metrics: &metrics,
+            shutdown: &shutdown,
+            started_unix: unix_now(),
+        };
+        let sh = &shared;
+
+        std::thread::scope(|s| {
+            loop {
+                if sh.draining() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let open = sh.metrics.open_connections.load(Ordering::Relaxed);
+                        if open >= sh.cfg.max_connections as u64 {
+                            refuse_connection(stream, sh);
+                            continue;
+                        }
+                        sh.metrics.open_connections.fetch_add(1, Ordering::Relaxed);
+                        s.spawn(move || {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                handle_connection(stream, sh, Conn::Fleet(fleet));
+                            }));
+                            sh.metrics.open_connections.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        eprintln!("gateway: accept error: {e}");
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                }
+            }
+            // stop accepting; in-flight handlers finish against the
+            // still-running fleet engines before the scope joins them
+            drop(listener);
+        });
+        Ok(())
+    }
 }
+
+/// Answer `503` on a socket accepted past the connection cap.
+fn refuse_connection(stream: TcpStream, sh: &Shared<'_>) {
+    sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+    let mut w = stream;
+    w.set_nonblocking(false).ok();
+    w.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).ok();
+    let _ = http::write_response(
+        &mut w,
+        503,
+        &[("Content-Type", "application/json"), ("Connection", "close")],
+        error_json(503, "too many connections", None).as_bytes(),
+    );
+}
+
+/// The default model name: what a single-engine gateway serves under
+/// and what requests without a `model` field route to.
+pub const DEFAULT_MODEL: &str = "rwkvquant";
 
 /// Everything a connection handler needs besides its socket: gateway
 /// policy plus the references shared by every handler thread.
@@ -300,8 +386,9 @@ struct Shared<'a> {
     tokenizer: &'a Tokenizer,
     cfg: &'a GatewayConfig,
     next_id: &'a AtomicU64,
-    metrics: &'a Metrics,
+    metrics: &'a Arc<Metrics>,
     shutdown: &'a AtomicBool,
+    started_unix: u64,
 }
 
 impl Shared<'_> {
@@ -311,7 +398,71 @@ impl Shared<'_> {
     }
 }
 
-fn handle_connection(stream: TcpStream, sh: &Shared<'_>, tx_req: mpsc::Sender<Request>) {
+/// Where a connection's requests are submitted: the single shared
+/// serve engine (legacy `--store` mode; one clone of the admission
+/// sender per connection, so a drain observes handler hang-ups), or
+/// the fleet registry (per-model engines resolved per request).
+enum Conn<'a> {
+    Single(mpsc::Sender<Request>),
+    Fleet(&'a Fleet),
+}
+
+/// A per-request routing decision: the model, its vocab for prompt
+/// validation, and whose metrics registry the request counts against.
+struct Target {
+    model: String,
+    vocab: usize,
+    metrics: Arc<Metrics>,
+}
+
+/// HTTP-shaped failure: status, message, optional machine-readable
+/// code (`model_not_found`).
+type ApiError = (u16, String, Option<&'static str>);
+
+fn model_not_found(model: &str) -> ApiError {
+    (404, format!("model '{model}' not found"), Some("model_not_found"))
+}
+
+fn resolve_target(
+    sh: &Shared<'_>,
+    conn: &Conn<'_>,
+    model: String,
+) -> std::result::Result<Target, ApiError> {
+    match conn {
+        Conn::Single(_) => {
+            if model != DEFAULT_MODEL {
+                return Err(model_not_found(&model));
+            }
+            Ok(Target { model, vocab: sh.vocab, metrics: sh.metrics.clone() })
+        }
+        Conn::Fleet(fleet) => match fleet.resolve(&model) {
+            Some(entry) => Ok(Target { model, vocab: entry.vocab(), metrics: entry.metrics() }),
+            None => Err(model_not_found(&model)),
+        },
+    }
+}
+
+/// Hand a request to the target's engine. In fleet mode the engine may
+/// have been hot-swapped since `resolve_target` — the fleet
+/// re-resolves on submit, so a swap never loses the request and a
+/// raced delete answers `404`.
+fn submit_request(
+    conn: &Conn<'_>,
+    model: &str,
+    request: Request,
+) -> std::result::Result<(), ApiError> {
+    match conn {
+        Conn::Single(tx) => {
+            tx.send(request).map_err(|_| (503, "server is draining".to_string(), None))
+        }
+        Conn::Fleet(fleet) => fleet.submit(model, request).map_err(|e| match e {
+            SubmitError::UnknownModel => model_not_found(model),
+            SubmitError::Closed => (503, "model engine is draining".to_string(), None),
+        }),
+    }
+}
+
+fn handle_connection(stream: TcpStream, sh: &Shared<'_>, conn: Conn<'_>) {
     // the listener is non-blocking and BSD-family kernels (macOS) let
     // accepted sockets inherit O_NONBLOCK — undo it explicitly, the
     // handler wants blocking reads bounded by the timeouts below
@@ -334,7 +485,7 @@ fn handle_connection(stream: TcpStream, sh: &Shared<'_>, tx_req: mpsc::Sender<Re
                 let close_requested = req
                     .header("connection")
                     .is_some_and(|v| v.eq_ignore_ascii_case("close"));
-                if route(&mut writer, &req, sh, &tx_req).is_err() {
+                if route(&mut writer, &req, sh, &conn).is_err() {
                     break; // client hung up mid-response
                 }
                 if close_requested || sh.draining() {
@@ -350,7 +501,7 @@ fn handle_connection(stream: TcpStream, sh: &Shared<'_>, tx_req: mpsc::Sender<Re
                         &mut writer,
                         status,
                         &[("Content-Type", "application/json"), ("Connection", "close")],
-                        error_body(&e.message()).as_bytes(),
+                        error_json(status, &e.message(), None).as_bytes(),
                     );
                 }
                 break;
@@ -359,54 +510,314 @@ fn handle_connection(stream: TcpStream, sh: &Shared<'_>, tx_req: mpsc::Sender<Re
     }
 }
 
-fn error_body(msg: &str) -> String {
-    Json::obj().set("error", msg).render()
+/// The OpenAI error `type` for a status code.
+fn error_type(status: u16) -> &'static str {
+    match status {
+        429 => "rate_limit_error",
+        500..=599 => "server_error",
+        _ => "invalid_request_error",
+    }
+}
+
+/// Every error response speaks the OpenAI error schema:
+/// `{"error":{"code":…,"message":…,"type":…}}`. `code` is `null`
+/// unless a machine-readable discriminator applies.
+fn error_json(status: u16, msg: &str, code: Option<&str>) -> String {
+    let code_val = match code {
+        Some(c) => Json::Str(c.to_string()),
+        None => Json::Null,
+    };
+    Json::obj()
+        .set(
+            "error",
+            Json::obj().set("code", code_val).set("message", msg).set("type", error_type(status)),
+        )
+        .render()
+}
+
+/// Count and write an error response. `extra` carries per-status
+/// headers (`Retry-After`, `Allow`, `Connection: close`).
+fn write_error(
+    w: &mut TcpStream,
+    sh: &Shared<'_>,
+    status: u16,
+    msg: &str,
+    code: Option<&str>,
+    extra: &[(&str, &str)],
+) -> std::io::Result<()> {
+    sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+    let mut headers = vec![("Content-Type", "application/json")];
+    headers.extend_from_slice(extra);
+    http::write_response(w, status, &headers, error_json(status, msg, code).as_bytes())
+}
+
+fn write_api_error(w: &mut TcpStream, sh: &Shared<'_>, err: ApiError) -> std::io::Result<()> {
+    let (status, msg, code) = err;
+    let extra: &[(&str, &str)] = match status {
+        429 => &[("Retry-After", "1")],
+        503 => &[("Connection", "close")],
+        _ => &[],
+    };
+    write_error(w, sh, status, &msg, code, extra)
+}
+
+/// Handlers the route table can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HandlerId {
+    Healthz,
+    MetricsScrape,
+    Generate,
+    Completions,
+    ChatCompletions,
+    ModelsList,
+    AdminLoadModel,
+    AdminDeleteModel,
+}
+
+/// The gateway's entire HTTP surface, declaratively: method + path
+/// pattern (`{param}` segments match any single non-empty segment) +
+/// handler. `match_route` derives uniform `404`s and `405 Allow: …`
+/// responses from this table, so adding an endpoint is one row plus a
+/// `HandlerId` arm in `route`.
+const ROUTES: &[(&str, &str, HandlerId)] = &[
+    ("GET", "/healthz", HandlerId::Healthz),
+    ("GET", "/metrics", HandlerId::MetricsScrape),
+    ("POST", "/v1/generate", HandlerId::Generate),
+    ("POST", "/v1/completions", HandlerId::Completions),
+    ("POST", "/v1/chat/completions", HandlerId::ChatCompletions),
+    ("GET", "/v1/models", HandlerId::ModelsList),
+    ("POST", "/admin/models/{name}", HandlerId::AdminLoadModel),
+    ("DELETE", "/admin/models/{name}", HandlerId::AdminDeleteModel),
+];
+
+enum RouteMatch {
+    Matched { handler: HandlerId, params: Vec<(&'static str, String)> },
+    /// The path exists but not under this method; `allow` is the
+    /// comma-joined method list for the `Allow` header.
+    WrongMethod { allow: String },
+    NotFound,
+}
+
+/// Match `path` against one route pattern, extracting `{param}`
+/// segments. A parameter never matches an empty segment, so
+/// `/admin/models/` is a 404 rather than an empty name.
+fn path_params(pattern: &'static str, path: &str) -> Option<Vec<(&'static str, String)>> {
+    let mut params = Vec::new();
+    let mut pat = pattern.split('/');
+    let mut got = path.split('/');
+    loop {
+        match (pat.next(), got.next()) {
+            (None, None) => return Some(params),
+            (Some(p), Some(g)) => {
+                if let Some(name) = p.strip_prefix('{').and_then(|n| n.strip_suffix('}')) {
+                    if g.is_empty() {
+                        return None;
+                    }
+                    params.push((name, g.to_string()));
+                } else if p != g {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+}
+
+fn match_route(method: &str, path: &str) -> RouteMatch {
+    let mut allow: Vec<&'static str> = Vec::new();
+    for (m, pattern, handler) in ROUTES {
+        if let Some(params) = path_params(pattern, path) {
+            if *m == method {
+                return RouteMatch::Matched { handler: *handler, params };
+            }
+            if !allow.contains(m) {
+                allow.push(m);
+            }
+        }
+    }
+    if allow.is_empty() {
+        RouteMatch::NotFound
+    } else {
+        RouteMatch::WrongMethod { allow: allow.join(", ") }
+    }
 }
 
 fn route(
     w: &mut TcpStream,
     req: &HttpRequest,
     sh: &Shared<'_>,
-    tx_req: &mpsc::Sender<Request>,
+    conn: &Conn<'_>,
 ) -> std::io::Result<()> {
-    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
-    match (req.method.as_str(), req.path()) {
-        ("GET", "/healthz") => {
-            http::write_response(w, 200, &[("Content-Type", "text/plain")], b"ok\n")
+    match match_route(&req.method, req.path()) {
+        RouteMatch::NotFound => write_error(w, sh, 404, "no such endpoint", None, &[]),
+        RouteMatch::WrongMethod { allow } => {
+            write_error(w, sh, 405, "method not allowed", None, &[("Allow", &allow)])
         }
-        ("GET", "/metrics") => {
-            let text = sh.metrics.render_prometheus();
-            http::write_response(
-                w,
-                200,
-                &[("Content-Type", "text/plain; version=0.0.4")],
-                text.as_bytes(),
-            )
+        RouteMatch::Matched { handler, params } => {
+            let param = |name: &str| {
+                params.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str()).unwrap_or("")
+            };
+            match handler {
+                HandlerId::Healthz => {
+                    http::write_response(w, 200, &[("Content-Type", "text/plain")], b"ok\n")
+                }
+                HandlerId::MetricsScrape => {
+                    let text = match conn {
+                        Conn::Single(_) => sh.metrics.render_prometheus(),
+                        Conn::Fleet(fleet) => {
+                            let models = fleet.model_metrics();
+                            let refs: Vec<(&str, &Metrics)> =
+                                models.iter().map(|(n, m)| (n.as_str(), &**m)).collect();
+                            render_exposition(sh.metrics, &refs)
+                        }
+                    };
+                    http::write_response(
+                        w,
+                        200,
+                        &[("Content-Type", "text/plain; version=0.0.4")],
+                        text.as_bytes(),
+                    )
+                }
+                HandlerId::Generate => generate(w, req, sh, conn),
+                HandlerId::Completions => completions(w, req, false, sh, conn),
+                HandlerId::ChatCompletions => completions(w, req, true, sh, conn),
+                HandlerId::ModelsList => models_list(w, sh, conn),
+                HandlerId::AdminLoadModel => admin_load(w, req, sh, conn, param("name")),
+                HandlerId::AdminDeleteModel => admin_delete(w, sh, conn, param("name")),
+            }
         }
-        ("POST", "/v1/generate") => generate(w, req, sh, tx_req),
-        ("POST", "/v1/completions") => completions(w, req, false, sh, tx_req),
-        ("POST", "/v1/chat/completions") => completions(w, req, true, sh, tx_req),
-        (_, "/healthz" | "/metrics") => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                405,
-                &[JSON_CT, ("Allow", "GET")],
-                error_body("method not allowed").as_bytes(),
-            )
+    }
+}
+
+/// `GET /v1/models` — the OpenAI model listing. A single-engine
+/// gateway reports the one default model (`created` = gateway start);
+/// a fleet gateway lists the registry (`created` = store file mtime).
+fn models_list(w: &mut TcpStream, sh: &Shared<'_>, conn: &Conn<'_>) -> std::io::Result<()> {
+    let data: Vec<Json> = match conn {
+        Conn::Single(_) => vec![model_json(DEFAULT_MODEL, sh.started_unix)],
+        Conn::Fleet(fleet) => {
+            fleet.list().iter().map(|e| model_json(e.name(), e.created())).collect()
         }
-        (_, "/v1/generate" | "/v1/completions" | "/v1/chat/completions") => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                405,
-                &[JSON_CT, ("Allow", "POST")],
-                error_body("method not allowed").as_bytes(),
-            )
+    };
+    let body = Json::obj().set("data", Json::Arr(data)).set("object", "list").render();
+    http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
+}
+
+fn model_json(id: &str, created: u64) -> Json {
+    Json::obj()
+        .set("created", created as f64)
+        .set("id", id)
+        .set("object", "model")
+        .set("owned_by", "rwkvquant")
+}
+
+/// Model names admissible over the admin API: path-safe, no traversal.
+fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && !name.contains("..")
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | ':'))
+}
+
+fn admin_body_path(body: &[u8]) -> std::result::Result<String, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    v.get("path")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| "missing 'path' (string path to a packed .rwkvq2 store)".to_string())
+}
+
+/// `POST /admin/models/{name}` with body `{"path": "store.rwkvq2"}` —
+/// load a new model, or hot-swap an existing name with zero downtime
+/// (in-flight sequences finish on the old engine, new admissions land
+/// on the new one). Fleet mode only.
+fn admin_load(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    sh: &Shared<'_>,
+    conn: &Conn<'_>,
+    name: &str,
+) -> std::io::Result<()> {
+    let Conn::Fleet(fleet) = conn else {
+        return write_error(
+            w,
+            sh,
+            400,
+            "model registry is not enabled (start the gateway with --model)",
+            None,
+            &[],
+        );
+    };
+    if !valid_model_name(name) {
+        return write_error(w, sh, 400, "invalid model name", None, &[]);
+    }
+    let path = match admin_body_path(&req.body) {
+        Ok(p) => p,
+        Err(msg) => return write_error(w, sh, 400, &msg, None, &[]),
+    };
+    match fleet.load(name, std::path::Path::new(&path)) {
+        Ok(entry) => {
+            let body = model_json(entry.name(), entry.created())
+                .set("version", entry.version() as f64)
+                .render();
+            http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
         }
-        _ => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(w, 404, &[JSON_CT], error_body("no such endpoint").as_bytes())
+        Err(e) => write_error(w, sh, 400, &format!("cannot load '{name}': {e:#}"), None, &[]),
+    }
+}
+
+/// `DELETE /admin/models/{name}` — drain-then-drop: the name stops
+/// resolving immediately, in-flight sequences decode to completion on
+/// the retired engine, and the store unmaps when it exits. Fleet mode
+/// only.
+fn admin_delete(
+    w: &mut TcpStream,
+    sh: &Shared<'_>,
+    conn: &Conn<'_>,
+    name: &str,
+) -> std::io::Result<()> {
+    let Conn::Fleet(fleet) = conn else {
+        return write_error(
+            w,
+            sh,
+            400,
+            "model registry is not enabled (start the gateway with --model)",
+            None,
+            &[],
+        );
+    };
+    if !valid_model_name(name) {
+        return write_error(w, sh, 400, "invalid model name", None, &[]);
+    }
+    match fleet.remove(name) {
+        Some(entry) => {
+            let body = Json::obj()
+                .set("deleted", true)
+                .set("id", entry.name())
+                .set("object", "model")
+                .render();
+            http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
+        }
+        None => write_api_error(w, sh, model_not_found(name)),
+    }
+}
+
+/// Pre-parse pass for the `model` field alone (the raw-token endpoint
+/// has no other use for the field). A body that is not JSON resolves
+/// to the default model so the endpoint's own parser produces the real
+/// 400; a present non-string `model` is rejected here.
+fn extract_model(body: &[u8]) -> std::result::Result<String, String> {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Ok(DEFAULT_MODEL.to_string());
+    };
+    let Ok(v) = json::parse(text) else {
+        return Ok(DEFAULT_MODEL.to_string());
+    };
+    match v.get("model") {
+        None | Some(Json::Null) => Ok(DEFAULT_MODEL.to_string()),
+        Some(m) => {
+            m.as_str().map(str::to_string).ok_or_else(|| "'model' must be a string".to_string())
         }
     }
 }
@@ -479,49 +890,33 @@ fn generate(
     w: &mut TcpStream,
     req: &HttpRequest,
     sh: &Shared<'_>,
-    tx_req: &mpsc::Sender<Request>,
+    conn: &Conn<'_>,
 ) -> std::io::Result<()> {
-    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
-    let gen = match parse_generate_body(&req.body, sh.vocab, sh.cfg.max_gen_len) {
-        Ok(g) => g,
-        Err(msg) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            return http::write_response(w, 400, &[JSON_CT], error_body(&msg).as_bytes());
-        }
+    let model = match extract_model(&req.body) {
+        Ok(m) => m,
+        Err(msg) => return write_error(w, sh, 400, &msg, None, &[]),
     };
-    sh.metrics.generate_requests.fetch_add(1, Ordering::Relaxed);
+    let target = match resolve_target(sh, conn, model) {
+        Ok(t) => t,
+        Err(e) => return write_api_error(w, sh, e),
+    };
+    let gen = match parse_generate_body(&req.body, target.vocab, sh.cfg.max_gen_len) {
+        Ok(g) => g,
+        Err(msg) => return write_error(w, sh, 400, &msg, None, &[]),
+    };
+    target.metrics.generate_requests.fetch_add(1, Ordering::Relaxed);
     let (tx_ev, rx_ev) = mpsc::channel();
     let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
     let request = Request::new(id, gen.prompt, gen.gen_len).with_stream(tx_ev);
-    if tx_req.send(request).is_err() {
-        sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-        return http::write_response(
-            w,
-            503,
-            &[JSON_CT, ("Connection", "close")],
-            error_body("server is draining").as_bytes(),
-        );
+    if let Err(e) = submit_request(conn, &target.model, request) {
+        return write_api_error(w, sh, e);
     }
     // the first event decides the status line: Shed → 429 before any
     // body byte, Admitted → 200 and the stream begins
     match rx_ev.recv() {
-        Err(_) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                500,
-                &[JSON_CT],
-                error_body("serve loop dropped the request").as_bytes(),
-            )
-        }
+        Err(_) => write_error(w, sh, 500, "serve loop dropped the request", None, &[]),
         Ok(StreamEvent::Shed) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                429,
-                &[JSON_CT, ("Retry-After", "1")],
-                error_body("admission queue full").as_bytes(),
-            )
+            write_error(w, sh, 429, "admission queue full", None, &[("Retry-After", "1")])
         }
         Ok(first) => {
             if gen.stream {
@@ -658,7 +1053,13 @@ fn parse_text_body(
         None | Some(Json::Null) => false, // OpenAI defaults to non-streaming
         Some(s) => s.as_bool().ok_or_else(|| "'stream' must be a boolean".to_string())?,
     };
-    let model = v.get("model").and_then(Json::as_str).unwrap_or("rwkvquant").to_string();
+    let model = match v.get("model") {
+        None | Some(Json::Null) => DEFAULT_MODEL.to_string(),
+        Some(m) => m
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| "'model' must be a string".to_string())?,
+    };
     Ok(TextRequest { prompt, max_tokens, stream, sample, stop, model })
 }
 
@@ -754,17 +1155,26 @@ fn completions(
     req: &HttpRequest,
     chat: bool,
     sh: &Shared<'_>,
-    tx_req: &mpsc::Sender<Request>,
+    conn: &Conn<'_>,
 ) -> std::io::Result<()> {
-    const JSON_CT: (&str, &str) = ("Content-Type", "application/json");
     let t = match parse_text_body(&req.body, chat, sh.tokenizer, sh.cfg.max_gen_len) {
         Ok(t) => t,
-        Err(msg) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            return http::write_response(w, 400, &[JSON_CT], error_body(&msg).as_bytes());
-        }
+        Err(msg) => return write_error(w, sh, 400, &msg, None, &[]),
     };
-    sh.metrics.text_requests.fetch_add(1, Ordering::Relaxed);
+    let target = match resolve_target(sh, conn, t.model.clone()) {
+        Ok(tg) => tg,
+        Err(e) => return write_api_error(w, sh, e),
+    };
+    // the tokenizer is gateway-wide but vocabs are per-model: a prompt
+    // that encodes past this model's vocab must bounce, not index OOB
+    if let Some(&bad) = t.prompt.iter().find(|&&tok| tok >= target.vocab) {
+        let msg = format!(
+            "prompt token {bad} is outside model '{}' vocab ({})",
+            target.model, target.vocab
+        );
+        return write_error(w, sh, 400, &msg, None, &[]);
+    }
+    target.metrics.text_requests.fetch_add(1, Ordering::Relaxed);
     let (tx_ev, rx_ev) = mpsc::channel();
     let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
     let cancel = Arc::new(AtomicBool::new(false));
@@ -781,33 +1191,13 @@ fn completions(
         .with_sampling(t.sample)
         .with_stop(t.stop)
         .with_cancel(cancel.clone());
-    if tx_req.send(request).is_err() {
-        sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-        return http::write_response(
-            w,
-            503,
-            &[JSON_CT, ("Connection", "close")],
-            error_body("server is draining").as_bytes(),
-        );
+    if let Err(e) = submit_request(conn, &target.model, request) {
+        return write_api_error(w, sh, e);
     }
     match rx_ev.recv() {
-        Err(_) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                500,
-                &[JSON_CT],
-                error_body("serve loop dropped the request").as_bytes(),
-            )
-        }
+        Err(_) => write_error(w, sh, 500, "serve loop dropped the request", None, &[]),
         Ok(StreamEvent::Shed) => {
-            sh.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-            http::write_response(
-                w,
-                429,
-                &[JSON_CT, ("Retry-After", "1")],
-                error_body("admission queue full").as_bytes(),
-            )
+            write_error(w, sh, 429, "admission queue full", None, &[("Retry-After", "1")])
         }
         Ok(first) => {
             let r = if t.stream {
@@ -914,7 +1304,7 @@ fn collect_openai(
             w,
             500,
             &[("Content-Type", "application/json")],
-            error_body("generation aborted before completion").as_bytes(),
+            error_json(500, "generation aborted before completion", None).as_bytes(),
         );
     };
     let text = r.tokenizer.decode(&tokens);
@@ -1033,7 +1423,7 @@ fn collect_json(
             w,
             500,
             &[("Content-Type", "application/json")],
-            error_body("generation aborted before completion").as_bytes(),
+            error_json(500, "generation aborted before completion", None).as_bytes(),
         );
     };
     let body = format!(
@@ -1196,6 +1586,8 @@ mod tests {
             (br#"{"prompt":"w1 ","stop":["a","b","c","d","e"]}"#, "more than 4 stops"),
             (br#"{"prompt":"w1 ","seed":-4}"#, "negative seed"),
             (br#"{"prompt":"w1 ","stream":"yes"}"#, "non-bool stream"),
+            (br#"{"prompt":"w1 ","model":7}"#, "non-string model"),
+            (br#"{"prompt":"w1 ","model":["a"]}"#, "array model"),
             (b"not json", "not json"),
         ] {
             assert!(parse_text_body(bad, false, &tok, 64).is_err(), "{why} must be rejected");
@@ -1252,6 +1644,103 @@ mod tests {
         assert!(
             last.contains("\"delta\":{},\"finish_reason\":\"cancelled\""),
             "{last}"
+        );
+    }
+
+    #[test]
+    fn route_table_matches_methods_paths_and_params() {
+        match match_route("GET", "/healthz") {
+            RouteMatch::Matched { handler, params } => {
+                assert_eq!(handler, HandlerId::Healthz);
+                assert!(params.is_empty());
+            }
+            _ => panic!("GET /healthz must match"),
+        }
+        match match_route("POST", "/admin/models/rwkv-6b") {
+            RouteMatch::Matched { handler, params } => {
+                assert_eq!(handler, HandlerId::AdminLoadModel);
+                assert_eq!(params, vec![("name", "rwkv-6b".to_string())]);
+            }
+            _ => panic!("admin load must match and bind {{name}}"),
+        }
+        match match_route("DELETE", "/admin/models/a") {
+            RouteMatch::Matched { handler, .. } => {
+                assert_eq!(handler, HandlerId::AdminDeleteModel)
+            }
+            _ => panic!("admin delete must match"),
+        }
+
+        // wrong method on an existing path lists the allowed methods
+        match match_route("GET", "/v1/generate") {
+            RouteMatch::WrongMethod { allow } => assert_eq!(allow, "POST"),
+            _ => panic!("GET on a POST route must be WrongMethod"),
+        }
+        match match_route("PUT", "/admin/models/x") {
+            RouteMatch::WrongMethod { allow } => assert_eq!(allow, "POST, DELETE"),
+            _ => panic!("PUT on the admin path must be WrongMethod"),
+        }
+
+        // unknown paths — including an empty {name} segment — are 404s
+        for (method, path) in [
+            ("GET", "/nope"),
+            ("POST", "/admin/models"),
+            ("POST", "/admin/models/"),
+            ("POST", "/admin/models/a/b"),
+            ("GET", "/v1/models/extra"),
+            ("GET", ""),
+        ] {
+            assert!(
+                matches!(match_route(method, path), RouteMatch::NotFound),
+                "{method} {path} must be NotFound"
+            );
+        }
+    }
+
+    #[test]
+    fn error_schema_is_openai_shaped() {
+        assert_eq!(
+            error_json(404, "model 'x' not found", Some("model_not_found")),
+            "{\"error\":{\"code\":\"model_not_found\",\
+             \"message\":\"model 'x' not found\",\"type\":\"invalid_request_error\"}}"
+        );
+        assert_eq!(
+            error_json(429, "admission queue full", None),
+            "{\"error\":{\"code\":null,\"message\":\"admission queue full\",\
+             \"type\":\"rate_limit_error\"}}"
+        );
+        assert!(error_json(503, "draining", None).contains("\"type\":\"server_error\""));
+        assert!(error_json(400, "bad", None).contains("\"type\":\"invalid_request_error\""));
+    }
+
+    #[test]
+    fn model_extraction_and_name_validation() {
+        assert_eq!(extract_model(br#"{"prompt":[1],"model":"m"}"#).unwrap(), "m");
+        assert_eq!(extract_model(br#"{"prompt":[1]}"#).unwrap(), DEFAULT_MODEL);
+        assert_eq!(extract_model(br#"{"model":null}"#).unwrap(), DEFAULT_MODEL);
+        // a non-JSON body defers to the endpoint parser's own 400
+        assert_eq!(extract_model(b"not json").unwrap(), DEFAULT_MODEL);
+        assert_eq!(extract_model(&[0xff, 0xfe]).unwrap(), DEFAULT_MODEL);
+        assert!(extract_model(br#"{"model":7}"#).is_err(), "non-string model must error");
+
+        assert!(valid_model_name("rwkv-6b_v1.2:q4"));
+        assert!(!valid_model_name(""));
+        assert!(!valid_model_name(".."));
+        assert!(!valid_model_name("a..b"));
+        assert!(!valid_model_name("a/b"));
+        assert!(!valid_model_name("a b"));
+        assert!(!valid_model_name(&"x".repeat(129)));
+    }
+
+    #[test]
+    fn model_listing_renders_openai_shape() {
+        let body = Json::obj()
+            .set("data", Json::Arr(vec![model_json("m", 1700000000)]))
+            .set("object", "list")
+            .render();
+        assert_eq!(
+            body,
+            "{\"data\":[{\"created\":1700000000,\"id\":\"m\",\"object\":\"model\",\
+             \"owned_by\":\"rwkvquant\"}],\"object\":\"list\"}"
         );
     }
 }

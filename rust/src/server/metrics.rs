@@ -115,125 +115,181 @@ impl Metrics {
         self.tokens.load(Ordering::Relaxed) as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }
 
-    /// Render the Prometheus text exposition format (version 0.0.4).
+    /// Render the Prometheus text exposition format (version 0.0.4) for
+    /// a single-model gateway: every family sourced from this registry,
+    /// no labels (this output shape is asserted line-by-line in tests
+    /// and scraped by `python/http_smoke.py`, so it must stay stable).
     pub fn render_prometheus(&self) -> String {
-        use std::fmt::Write as _;
-        let mut out = String::with_capacity(2048);
-        let mut counter = |name: &str, help: &str, v: u64| {
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} counter");
-            let _ = writeln!(out, "{name} {v}");
-        };
-        counter(
-            "rwkvquant_http_requests_total",
-            "HTTP requests parsed off a socket (any route).",
-            self.http_requests.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_http_errors_total",
-            "HTTP requests answered with an error status.",
-            self.http_errors.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_generate_requests_total",
-            "Generation requests forwarded to the serve loop.",
-            self.generate_requests.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_text_requests_total",
-            "OpenAI-style text requests forwarded to the serve loop.",
-            self.text_requests.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_requests_completed_total",
-            "Generation requests decoded to completion.",
-            self.completed.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_requests_shed_total",
-            "Generation requests shed at admission (HTTP 429).",
-            self.shed.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_requests_cancelled_total",
-            "Requests cancelled mid-decode (client disconnect).",
-            self.cancelled.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_sampled_tokens_total",
-            "Tokens chosen by the stochastic sampler (greedy excluded).",
-            self.sampled_tokens.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_served_tokens_total",
-            "Generated (non-prompt) tokens streamed to clients.",
-            self.tokens.load(Ordering::Relaxed),
-        );
-        counter(
-            "rwkvquant_prefill_tokens_total",
-            "Prompt tokens consumed by prefill ticks.",
-            self.prefill_tokens.load(Ordering::Relaxed),
-        );
-        let mut gauge = |name: &str, help: &str, v: f64| {
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} gauge");
-            let _ = writeln!(out, "{name} {v}");
-        };
-        gauge(
-            "rwkvquant_served_tokens_per_sec",
-            "Lifetime-average served tokens per second.",
-            self.tokens_per_sec(),
-        );
-        gauge(
-            "rwkvquant_queue_depth",
-            "Current admission-queue depth.",
-            self.queue_depth.load(Ordering::Relaxed) as f64,
-        );
-        gauge(
-            "rwkvquant_queue_depth_high_water_mark",
-            "Deepest the admission queue has been.",
-            self.queue_hwm.load(Ordering::Relaxed) as f64,
-        );
-        gauge(
-            "rwkvquant_open_connections",
-            "Currently open client connections.",
-            self.open_connections.load(Ordering::Relaxed) as f64,
-        );
-        gauge(
-            "rwkvquant_uptime_seconds",
-            "Seconds since the gateway started.",
-            self.start.elapsed().as_secs_f64(),
-        );
-        let mut quantiles = |name: &str, help: &str, w: &Mutex<Window>| {
-            let sorted = w.lock().unwrap_or_else(|e| e.into_inner()).sorted();
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} summary");
-            for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
-                let _ = writeln!(
-                    out,
-                    "{name}{{quantile=\"{label}\"}} {}",
-                    percentile(&sorted, q).as_secs_f64()
-                );
-            }
-            let _ = writeln!(out, "{name}_count {}", sorted.len());
-        };
-        quantiles(
-            "rwkvquant_request_latency_seconds",
-            "Admission-to-completion latency (last 512 requests).",
-            &self.latencies,
-        );
-        quantiles(
-            "rwkvquant_admission_wait_seconds",
-            "Arrival-to-admission wait (last 512 requests).",
-            &self.admission_waits,
-        );
-        quantiles(
-            "rwkvquant_ttft_seconds",
-            "Admission-to-first-generated-token delay (last 512 requests).",
-            &self.ttfts,
-        );
-        out
+        render_exposition(self, &[("", self)])
     }
+}
+
+/// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
+/// `\n`).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{model="name"}` for a named series, empty for the anonymous
+/// single-model gateway (keeps that exposition byte-identical to the
+/// pre-fleet output).
+fn model_label(name: &str) -> String {
+    if name.is_empty() {
+        String::new()
+    } else {
+        format!("{{model=\"{}\"}}", escape_label(name))
+    }
+}
+
+/// Family-grouped Prometheus exposition for a fleet: process-level
+/// families (HTTP traffic, connections, uptime) come from the gateway's
+/// own registry unlabeled, serve-loop families emit one sample per model
+/// with a `model="name"` label. Each family's `# HELP`/`# TYPE` header
+/// appears exactly once regardless of model count, which is what the
+/// exposition format requires. `render_prometheus` is the degenerate
+/// single-model call — gateway and the sole (unlabeled) model are the
+/// same registry.
+pub fn render_exposition(gateway: &Metrics, models: &[(&str, &Metrics)]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(2048 * models.len().max(1));
+    let mut counter = |name: &str, help: &str, rows: &[(&str, u64)]| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (model, v) in rows {
+            let _ = writeln!(out, "{name}{} {v}", model_label(model));
+        }
+    };
+    let per_model = |f: &dyn Fn(&Metrics) -> u64| -> Vec<(&str, u64)> {
+        models.iter().map(|(n, m)| (*n, f(m))).collect()
+    };
+    counter(
+        "rwkvquant_http_requests_total",
+        "HTTP requests parsed off a socket (any route).",
+        &[("", gateway.http_requests.load(Ordering::Relaxed))],
+    );
+    counter(
+        "rwkvquant_http_errors_total",
+        "HTTP requests answered with an error status.",
+        &[("", gateway.http_errors.load(Ordering::Relaxed))],
+    );
+    counter(
+        "rwkvquant_generate_requests_total",
+        "Generation requests forwarded to the serve loop.",
+        &per_model(&|m| m.generate_requests.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_text_requests_total",
+        "OpenAI-style text requests forwarded to the serve loop.",
+        &per_model(&|m| m.text_requests.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_requests_completed_total",
+        "Generation requests decoded to completion.",
+        &per_model(&|m| m.completed.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_requests_shed_total",
+        "Generation requests shed at admission (HTTP 429).",
+        &per_model(&|m| m.shed.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_requests_cancelled_total",
+        "Requests cancelled mid-decode (client disconnect).",
+        &per_model(&|m| m.cancelled.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_sampled_tokens_total",
+        "Tokens chosen by the stochastic sampler (greedy excluded).",
+        &per_model(&|m| m.sampled_tokens.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_served_tokens_total",
+        "Generated (non-prompt) tokens streamed to clients.",
+        &per_model(&|m| m.tokens.load(Ordering::Relaxed)),
+    );
+    counter(
+        "rwkvquant_prefill_tokens_total",
+        "Prompt tokens consumed by prefill ticks.",
+        &per_model(&|m| m.prefill_tokens.load(Ordering::Relaxed)),
+    );
+    let mut gauge = |name: &str, help: &str, rows: &[(&str, f64)]| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for (model, v) in rows {
+            let _ = writeln!(out, "{name}{} {v}", model_label(model));
+        }
+    };
+    let per_model_f = |f: &dyn Fn(&Metrics) -> f64| -> Vec<(&str, f64)> {
+        models.iter().map(|(n, m)| (*n, f(m))).collect()
+    };
+    gauge(
+        "rwkvquant_served_tokens_per_sec",
+        "Lifetime-average served tokens per second.",
+        &per_model_f(&|m| m.tokens_per_sec()),
+    );
+    gauge(
+        "rwkvquant_queue_depth",
+        "Current admission-queue depth.",
+        &per_model_f(&|m| m.queue_depth.load(Ordering::Relaxed) as f64),
+    );
+    gauge(
+        "rwkvquant_queue_depth_high_water_mark",
+        "Deepest the admission queue has been.",
+        &per_model_f(&|m| m.queue_hwm.load(Ordering::Relaxed) as f64),
+    );
+    gauge(
+        "rwkvquant_open_connections",
+        "Currently open client connections.",
+        &[("", gateway.open_connections.load(Ordering::Relaxed) as f64)],
+    );
+    gauge(
+        "rwkvquant_uptime_seconds",
+        "Seconds since the gateway started.",
+        &[("", gateway.start.elapsed().as_secs_f64())],
+    );
+    let mut quantiles = |name: &str, help: &str, pick: &dyn Fn(&Metrics) -> &Mutex<Window>| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} summary");
+        for (model, m) in models {
+            let sorted = pick(m).lock().unwrap_or_else(|e| e.into_inner()).sorted();
+            for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                // the quantile label joins the model label inside one
+                // brace set: {model="a",quantile="0.5"}
+                let series = if model.is_empty() {
+                    format!("{{quantile=\"{label}\"}}")
+                } else {
+                    format!("{{model=\"{}\",quantile=\"{label}\"}}", escape_label(model))
+                };
+                let _ = writeln!(out, "{name}{series} {}", percentile(&sorted, q).as_secs_f64());
+            }
+            let _ = writeln!(out, "{name}_count{} {}", model_label(model), sorted.len());
+        }
+    };
+    quantiles(
+        "rwkvquant_request_latency_seconds",
+        "Admission-to-completion latency (last 512 requests).",
+        &|m| &m.latencies,
+    );
+    quantiles(
+        "rwkvquant_admission_wait_seconds",
+        "Arrival-to-admission wait (last 512 requests).",
+        &|m| &m.admission_waits,
+    );
+    quantiles(
+        "rwkvquant_ttft_seconds",
+        "Admission-to-first-generated-token delay (last 512 requests).",
+        &|m| &m.ttfts,
+    );
+    out
 }
 
 impl ServeObserver for Metrics {
@@ -314,6 +370,49 @@ mod tests {
         assert!(text.contains("rwkvquant_admission_wait_seconds{quantile=\"0.5\"} 0.004"));
         assert!(text.contains("rwkvquant_ttft_seconds{quantile=\"0.5\"} 0.006"));
         assert!(text.contains("rwkvquant_ttft_seconds_count 1"));
+    }
+
+    #[test]
+    fn fleet_exposition_labels_serve_families_per_model() {
+        let gw = Metrics::new();
+        gw.http_requests.fetch_add(9, Ordering::Relaxed);
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.on_tokens(11);
+        a.on_completed(Duration::from_millis(8));
+        b.on_tokens(3);
+        let text = render_exposition(&gw, &[("alpha", &a), ("beta", &b)]);
+        // process-level families stay unlabeled, sourced from the gateway
+        assert!(text.contains("rwkvquant_http_requests_total 9"), "{text}");
+        assert!(!text.contains("rwkvquant_http_requests_total{"));
+        // serve families: one labeled sample per model under one header
+        assert!(text.contains("rwkvquant_served_tokens_total{model=\"alpha\"} 11"));
+        assert!(text.contains("rwkvquant_served_tokens_total{model=\"beta\"} 3"));
+        assert_eq!(text.matches("# TYPE rwkvquant_served_tokens_total counter").count(), 1);
+        // summaries carry both labels in one brace set, counts labeled too
+        assert!(text.contains("rwkvquant_request_latency_seconds{model=\"alpha\",quantile=\"0.99\"} 0.008"));
+        assert!(text.contains("rwkvquant_request_latency_seconds_count{model=\"alpha\"} 1"));
+        assert!(text.contains("rwkvquant_request_latency_seconds_count{model=\"beta\"} 0"));
+        // uptime from the gateway, once
+        assert_eq!(text.matches("rwkvquant_uptime_seconds ").count(), 1);
+    }
+
+    #[test]
+    fn single_model_render_carries_no_model_labels() {
+        let m = Metrics::new();
+        m.on_tokens(5);
+        m.on_completed(Duration::from_millis(2));
+        m.http_requests.fetch_add(1, Ordering::Relaxed);
+        let text = m.render_prometheus();
+        assert!(!text.contains("model="), "anonymous gateway must stay label-free: {text}");
+        assert!(text.contains("rwkvquant_served_tokens_total 5"));
+        assert!(text.contains("rwkvquant_request_latency_seconds{quantile=\"0.5\"} 0.002"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(model_label("a\"b\\c"), "{model=\"a\\\"b\\\\c\"}");
+        assert_eq!(model_label(""), "");
     }
 
     #[test]

@@ -11,6 +11,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub flags: Vec<String>,
     pub opts: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in argv order. `opts` keeps only
+    /// the last value per key; repeatable options (`--model name=path`)
+    /// read all of them via [`Args::get_all`].
+    pub pairs: Vec<(String, String)>,
     pub positional: Vec<String>,
 }
 
@@ -22,13 +26,16 @@ impl Args {
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some(eq) = body.find('=') {
-                    out.opts.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                    let (k, v) = (body[..eq].to_string(), body[eq + 1..].to_string());
+                    out.pairs.push((k.clone(), v.clone()));
+                    out.opts.insert(k, v);
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let val = it.next().unwrap();
+                    out.pairs.push((body.to_string(), val.clone()));
                     out.opts.insert(body.to_string(), val);
                 } else {
                     out.flags.push(body.to_string());
@@ -55,6 +62,16 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
+    }
+
+    /// Every value a repeatable option was given, in argv order
+    /// (`--model a=1 --model b=2` → `["a=1", "b=2"]`).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     /// Option that may also be passed as a bare flag: `--name value`
@@ -172,6 +189,16 @@ mod tests {
         // absent → None
         let a = args(&["serve"]);
         assert_eq!(a.flag_value("http", "127.0.0.1:8080"), None);
+    }
+
+    #[test]
+    fn repeated_options_all_retained_in_order() {
+        let a = args(&["serve", "--model", "a=1.rwkvq2", "--model=b=2.rwkvq2", "--batch", "4"]);
+        assert_eq!(a.get_all("model"), vec!["a=1.rwkvq2", "b=2.rwkvq2"]);
+        // `opts` keeps the historical last-wins view
+        assert_eq!(a.get("model"), Some("b=2.rwkvq2"));
+        assert_eq!(a.get_all("batch"), vec!["4"]);
+        assert!(a.get_all("nope").is_empty());
     }
 
     #[test]

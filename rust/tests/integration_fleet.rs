@@ -1,0 +1,344 @@
+//! Socket-level integration tests for multi-model fleet serving — the
+//! acceptance criteria of the fleet PR:
+//!
+//! 1. two models served concurrently are each token-identical to their
+//!    own single-model in-process twin,
+//! 2. a hot swap under active traffic loses zero in-flight requests —
+//!    admitted sequences finish on the old engine, new admissions land
+//!    on the new one, and post-swap output matches a fresh serve of the
+//!    new store,
+//! 3. `GET /v1/models` lists the registry in OpenAI shape, unknown
+//!    models 404 with code `model_not_found`, and the admin routes
+//!    validate their path parameter,
+//! 4. `/metrics` carries a `model` label on every serve-level family.
+
+use rwkvquant::config::{ModelConfig, QuantConfig};
+use rwkvquant::coordinator::fleet::{Fleet, FleetConfig};
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::coordinator::serve::{serve_collect, Request, RunnerDecoder};
+use rwkvquant::model::rwkv::init_params;
+use rwkvquant::model::QuantizedModel;
+use rwkvquant::report::json::Json;
+use rwkvquant::server::gateway::{sse_tokens, tokens_json};
+use rwkvquant::server::http::http_request;
+use rwkvquant::server::{Gateway, GatewayConfig};
+use rwkvquant::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// Quantize a tiny synthetic model and leave the packed checkpoint on
+/// disk (the fleet loads by path; callers clean up).
+fn pack_store(tag: &str, seed: u64) -> PathBuf {
+    let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(seed));
+    let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 2);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    let path = std::env::temp_dir().join(format!("fleet_it_{tag}.rwkvq2"));
+    qm.save(&path).unwrap();
+    path
+}
+
+/// Greedy twin for one prompt against a store file — what every HTTP
+/// response routed to that store must reproduce exactly.
+fn twin_tokens(path: &PathBuf, prompt: &[usize], gen_len: usize) -> Vec<usize> {
+    let qm = QuantizedModel::open(path).unwrap();
+    let mut dec = RunnerDecoder::new(&qm);
+    let (_, resp) = serve_collect(
+        &mut dec,
+        vec![Request::new(0, prompt.to_vec(), gen_len)],
+        1,
+        Duration::from_millis(0),
+    )
+    .unwrap();
+    resp[0].tokens.clone()
+}
+
+struct ShutdownOnDrop(rwkvquant::server::GatewayHandle);
+
+impl Drop for ShutdownOnDrop {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+/// One labeled sample from the fleet exposition:
+/// `name{model="…"} value`.
+fn labeled_metric(text: &str, name: &str, model: &str) -> Option<f64> {
+    let prefix = format!("{name}{{model=\"{model}\"}} ");
+    text.lines().find_map(|l| l.strip_prefix(&prefix).and_then(|v| v.trim().parse().ok()))
+}
+
+fn error_code(body: &str) -> Option<String> {
+    let v = rwkvquant::server::json::parse(body).ok()?;
+    v.get("error")?.get("code").and_then(Json::as_str).map(str::to_string)
+}
+
+#[test]
+fn two_models_route_by_name_and_match_their_twins() {
+    let pa = pack_store("alpha", 101);
+    let pb = pack_store("beta", 203);
+    let prompt = vec![3usize, 1, 4];
+    let gen_len = 6usize;
+    let twin_a = twin_tokens(&pa, &prompt, gen_len);
+    let twin_b = twin_tokens(&pb, &prompt, gen_len);
+    assert_ne!(twin_a, twin_b, "the two stores must be distinguishable");
+
+    let fleet = Fleet::new(FleetConfig::default());
+    fleet.load("alpha", &pa).unwrap();
+    fleet.load("beta", &pb).unwrap();
+    let gateway = Gateway::bind(GatewayConfig::new("127.0.0.1:0"), 32).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let jobs: [&str; 3] = ["alpha", "beta", "alpha"];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve_fleet(&fleet));
+        let _drain = ShutdownOnDrop(handle.clone());
+
+        // both models stream concurrently, each matching its own twin
+        let got: Vec<(&str, Vec<usize>)> = std::thread::scope(|cs| {
+            let clients: Vec<_> = jobs
+                .iter()
+                .map(|&model| {
+                    let prompt = &prompt;
+                    cs.spawn(move || {
+                        let body = format!(
+                            "{{\"model\":\"{model}\",\"prompt\":{},\"gen_len\":{gen_len}}}",
+                            tokens_json(prompt)
+                        );
+                        let resp =
+                            http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+                        assert_eq!(resp.status, 200, "{}", resp.body_str());
+                        (model, sse_tokens(&resp.body_str()).unwrap())
+                    })
+                })
+                .collect();
+            clients.into_iter().map(|c| c.join().unwrap()).collect()
+        });
+        for &(model, ref tokens) in &got {
+            let want = if model == "alpha" { &twin_a } else { &twin_b };
+            assert_eq!(tokens, want, "model '{model}' diverged from its twin");
+        }
+
+        // the OpenAI text endpoint routes by the same field and stamps
+        // the model name on the reply
+        let body = format!(
+            "{{\"model\":\"beta\",\"prompt\":\"w3 w1 w4 \",\"max_tokens\":{gen_len},\
+             \"temperature\":0}}"
+        );
+        let resp = http_request(addr, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("model").and_then(Json::as_str), Some("beta"));
+
+        // /v1/models lists the registry in OpenAI shape, sorted by name
+        let resp = http_request(addr, "GET", "/v1/models", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("object").and_then(Json::as_str), Some("list"));
+        let data = parsed.get("data").and_then(Json::as_array).unwrap();
+        let ids: Vec<&str> =
+            data.iter().map(|m| m.get("id").and_then(Json::as_str).unwrap()).collect();
+        assert_eq!(ids, vec!["alpha", "beta"]);
+        for m in data {
+            assert_eq!(m.get("object").and_then(Json::as_str), Some("model"));
+            assert_eq!(m.get("owned_by").and_then(Json::as_str), Some("rwkvquant"));
+            assert!(m.get("created").and_then(Json::as_usize).unwrap() > 0);
+        }
+
+        // unknown model (and the unregistered default) 404 with the
+        // machine-readable code; a non-string model is a 400
+        for body in [
+            format!("{{\"model\":\"nope\",\"prompt\":{},\"gen_len\":2}}", tokens_json(&prompt)),
+            format!("{{\"prompt\":{},\"gen_len\":2}}", tokens_json(&prompt)),
+        ] {
+            let resp = http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+            assert_eq!(resp.status, 404, "{}", resp.body_str());
+            assert_eq!(
+                error_code(&resp.body_str()).as_deref(),
+                Some("model_not_found"),
+                "{}",
+                resp.body_str()
+            );
+        }
+        let bad = format!("{{\"model\":7,\"prompt\":{},\"gen_len\":2}}", tokens_json(&prompt));
+        let resp = http_request(addr, "POST", "/v1/generate", Some(&bad)).unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body_str());
+
+        // every serve-level family carries one labeled sample per model
+        let text = http_request(addr, "GET", "/metrics", None).unwrap().body_str().into_owned();
+        assert_eq!(
+            labeled_metric(&text, "rwkvquant_generate_requests_total", "alpha"),
+            Some(2.0),
+            "metrics:\n{text}"
+        );
+        assert_eq!(labeled_metric(&text, "rwkvquant_generate_requests_total", "beta"), Some(1.0));
+        assert_eq!(labeled_metric(&text, "rwkvquant_text_requests_total", "beta"), Some(1.0));
+        assert_eq!(labeled_metric(&text, "rwkvquant_requests_completed_total", "alpha"), Some(2.0));
+        for family in [
+            "rwkvquant_served_tokens_total",
+            "rwkvquant_served_tokens_per_sec",
+            "rwkvquant_queue_depth",
+        ] {
+            for model in ["alpha", "beta"] {
+                assert!(
+                    labeled_metric(&text, family, model).is_some(),
+                    "missing {family}{{model=\"{model}\"}} in:\n{text}"
+                );
+            }
+        }
+        // gateway-level families stay unlabeled
+        assert!(text.lines().any(|l| l.starts_with("rwkvquant_http_requests_total ")));
+
+        handle.shutdown();
+        server.join().unwrap().unwrap();
+    });
+
+    let stats = fleet.drain();
+    assert_eq!(stats.len(), 2);
+    let completed: usize = stats
+        .iter()
+        .map(|(name, s)| s.as_ref().unwrap_or_else(|e| panic!("engine '{name}': {e:#}")).completed)
+        .sum();
+    assert_eq!(completed, 4, "three generates + one completion decoded to completion");
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}
+
+#[test]
+fn hot_swap_under_traffic_loses_no_in_flight_requests() {
+    let pa = pack_store("swap_old", 307);
+    let pb = pack_store("swap_new", 409);
+    let prompt = vec![5usize, 2, 1];
+    let gen_len = 24usize;
+    let twin_a = twin_tokens(&pa, &prompt, gen_len);
+    let twin_b = twin_tokens(&pb, &prompt, gen_len);
+    assert_ne!(twin_a, twin_b);
+
+    // throttled decode (~2ms/token) keeps the first wave in flight
+    // long enough to swap the store underneath it
+    let fleet = Fleet::new(FleetConfig {
+        step_delay: Duration::from_millis(2),
+        ..FleetConfig::default()
+    });
+    let first = fleet.load("m", &pa).unwrap();
+    let old_metrics = first.metrics();
+    let v0 = first.version();
+    let gateway = Gateway::bind(GatewayConfig::new("127.0.0.1:0"), 32).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+
+    let n_clients = 6usize;
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve_fleet(&fleet));
+        let _drain = ShutdownOnDrop(handle.clone());
+        let barrier = Barrier::new(n_clients + 1);
+
+        let results: Vec<Vec<usize>> = std::thread::scope(|cs| {
+            let clients: Vec<_> = (0..n_clients)
+                .map(|_| {
+                    let barrier = &barrier;
+                    let prompt = &prompt;
+                    cs.spawn(move || {
+                        barrier.wait();
+                        let body = format!(
+                            "{{\"model\":\"m\",\"prompt\":{},\"gen_len\":{gen_len}}}",
+                            tokens_json(prompt)
+                        );
+                        let resp =
+                            http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+                        assert_eq!(
+                            resp.status,
+                            200,
+                            "in-flight request lost: {}",
+                            resp.body_str()
+                        );
+                        sse_tokens(&resp.body_str()).unwrap()
+                    })
+                })
+                .collect();
+            barrier.wait();
+
+            // wait until the old engine is demonstrably mid-decode…
+            let t0 = Instant::now();
+            while old_metrics.tokens.load(Ordering::Relaxed) == 0 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "traffic never started");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+
+            // …then hot-swap the name to the new store over the admin API
+            let body =
+                format!("{{\"path\":{}}}", Json::Str(pb.display().to_string()).render());
+            let resp = http_request(addr, "POST", "/admin/models/m", Some(&body)).unwrap();
+            assert_eq!(resp.status, 200, "{}", resp.body_str());
+            let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+            assert_eq!(parsed.get("id").and_then(Json::as_str), Some("m"));
+            let v1 = parsed.get("version").and_then(Json::as_usize).unwrap() as u64;
+            assert!(v1 > v0, "a swap must bump the version ({v0} -> {v1})");
+
+            clients.into_iter().map(|c| c.join().unwrap()).collect()
+        });
+
+        // zero in-flight requests lost: every client completes with a
+        // full stream matching one of the two stores' twins
+        assert_eq!(results.len(), n_clients);
+        for (i, tokens) in results.iter().enumerate() {
+            assert_eq!(tokens.len(), gen_len, "request {i} was truncated by the swap");
+            assert!(
+                tokens == &twin_a || tokens == &twin_b,
+                "request {i} matches neither store: {tokens:?}"
+            );
+        }
+
+        // post-swap admissions serve the NEW store, exactly as a fresh
+        // single-model serve of it would
+        let body = format!(
+            "{{\"model\":\"m\",\"prompt\":{},\"gen_len\":{gen_len}}}",
+            tokens_json(&prompt)
+        );
+        let resp = http_request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            sse_tokens(&resp.body_str()).unwrap(),
+            twin_b,
+            "post-swap output must match a fresh serve of the new store"
+        );
+
+        // admin path-parameter validation: traversal is a 400, an empty
+        // name segment falls off the route table as a 404, and single
+        // deletes are idempotent-clean
+        let resp = http_request(addr, "POST", "/admin/models/..", Some("{\"path\":\"x\"}")).unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body_str());
+        let resp = http_request(addr, "DELETE", "/admin/models/", None).unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = http_request(addr, "DELETE", "/admin/models/m", None).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("deleted").and_then(Json::as_bool), Some(true));
+        let resp = http_request(addr, "DELETE", "/admin/models/m", None).unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(error_code(&resp.body_str()).as_deref(), Some("model_not_found"));
+        let resp = http_request(addr, "GET", "/v1/models", None).unwrap();
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert!(parsed.get("data").and_then(Json::as_array).unwrap().is_empty());
+
+        handle.shutdown();
+        server.join().unwrap().unwrap();
+    });
+
+    let stats = fleet.drain();
+    // both engines (swapped-out old + deleted new) retire cleanly with
+    // every admitted request decoded to completion
+    let mut completed = 0usize;
+    for (name, s) in &stats {
+        let s = s.as_ref().unwrap_or_else(|e| panic!("engine '{name}': {e:#}"));
+        assert_eq!(s.shed, 0, "engine '{name}' shed under the default queue bound");
+        completed += s.completed;
+    }
+    assert_eq!(completed, 7, "6 in-flight + 1 post-swap, none lost");
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}

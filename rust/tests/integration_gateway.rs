@@ -675,3 +675,85 @@ fn sigterm_drains_in_flight_requests_to_completion() {
     // would be flaky — the drain itself is proven by the join above)
     signal::clear_shutdown_signal();
 }
+
+#[test]
+fn single_mode_models_listing_admin_guard_and_error_schema() {
+    let qm = packed_store("surface", 53);
+    let gateway = Gateway::bind(GatewayConfig::new("127.0.0.1:0"), qm.config.vocab).unwrap();
+    let addr = gateway.local_addr();
+    let handle = gateway.handle();
+    let mut decoders = vec![RunnerDecoder::new(&qm)];
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| gateway.serve(&mut decoders));
+        let _drain = ShutdownOnDrop(handle.clone());
+
+        // /v1/models lists exactly the anonymous default model
+        let resp = http_request(addr, "GET", "/v1/models", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+        assert_eq!(parsed.get("object").and_then(Json::as_str), Some("list"));
+        let data = parsed.get("data").and_then(Json::as_array).unwrap();
+        assert_eq!(data.len(), 1);
+        assert_eq!(data[0].get("id").and_then(Json::as_str), Some("rwkvquant"));
+        assert_eq!(data[0].get("object").and_then(Json::as_str), Some("model"));
+        assert_eq!(data[0].get("owned_by").and_then(Json::as_str), Some("rwkvquant"));
+
+        // the default name routes; any other model 404s with the
+        // machine-readable code, inside the OpenAI error envelope
+        let ok = http_request(
+            addr,
+            "POST",
+            "/v1/generate",
+            Some(r#"{"model":"rwkvquant","prompt":[1,2],"gen_len":2}"#),
+        )
+        .unwrap();
+        assert_eq!(ok.status, 200, "{}", ok.body_str());
+        let miss = http_request(
+            addr,
+            "POST",
+            "/v1/generate",
+            Some(r#"{"model":"other","prompt":[1,2],"gen_len":2}"#),
+        )
+        .unwrap();
+        assert_eq!(miss.status, 404, "{}", miss.body_str());
+        let err = rwkvquant::server::json::parse(&miss.body_str()).unwrap();
+        let err = err.get("error").expect("errors are wrapped in an 'error' object");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("model_not_found"));
+        assert_eq!(err.get("type").and_then(Json::as_str), Some("invalid_request_error"));
+        assert!(err.get("message").and_then(Json::as_str).unwrap().contains("other"));
+
+        // a non-string model is a 400 from both body parsers
+        for (path, body) in [
+            ("/v1/generate", r#"{"model":7,"prompt":[1],"gen_len":1}"#),
+            ("/v1/completions", r#"{"model":7,"prompt":"w1 ","max_tokens":1}"#),
+        ] {
+            let resp = http_request(addr, "POST", path, Some(body)).unwrap();
+            assert_eq!(resp.status, 400, "{path}: {}", resp.body_str());
+            let err = rwkvquant::server::json::parse(&resp.body_str()).unwrap();
+            assert_eq!(
+                err.get("error").and_then(|e| e.get("type")).and_then(Json::as_str),
+                Some("invalid_request_error"),
+            );
+        }
+
+        // admin routes sit in the table (404/405 come from it) but are
+        // disabled without a registry; empty and traversal params bounce
+        let resp =
+            http_request(addr, "POST", "/admin/models/x", Some(r#"{"path":"x"}"#)).unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body_str());
+        assert!(resp.body_str().contains("--model"), "{}", resp.body_str());
+        let resp =
+            http_request(addr, "POST", "/admin/models/", Some(r#"{"path":"x"}"#)).unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = http_request(addr, "PUT", "/admin/models/x", None).unwrap();
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("Allow"), Some("POST, DELETE"));
+        let resp = http_request(addr, "GET", "/v1/generate", None).unwrap();
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("Allow"), Some("POST"));
+
+        handle.shutdown();
+        server.join().unwrap().unwrap();
+    });
+}
