@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in markdown files.
+
+Usage:
+    python3 python/check_doc_links.py README.md docs [more files or dirs...]
+
+Walks every argument (directories are scanned recursively for *.md),
+extracts inline markdown links and images (``[text](target)``), and
+checks that each *relative* target exists on disk, resolved against the
+linking file's directory. Skipped targets:
+
+  * absolute URLs (``http://``, ``https://``, ``mailto:`` or any
+    ``scheme:`` prefix),
+  * pure in-page anchors (``#section``),
+  * absolute paths (deliberate: docs should link relatively so they work
+    on GitHub and in checkouts alike — an absolute path is reported).
+
+A ``target#anchor`` suffix is stripped before the existence check (the
+file must exist; anchors inside it are not validated).
+
+Exit status: 0 when every link resolves, 1 otherwise (each broken link
+is printed as ``file:line: broken link -> target``).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) / ![alt](target), target ends at
+# the first unescaped ')' — titles ("...") after the target are dropped
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def markdown_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"warning: {a} does not exist, skipping", file=sys.stderr)
+    return files
+
+
+def strip_code(text: str) -> str:
+    """Blank out fenced code blocks and inline code spans.
+
+    Links inside code are examples, not navigation — `](` sequences in
+    shell snippets must not be flagged. Line structure is preserved so
+    reported line numbers stay correct.
+    """
+    out: list[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        stripped = line.lstrip()
+        if stripped.startswith("```") or stripped.startswith("~~~"):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        if in_fence:
+            out.append("")
+        else:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def check_file(md: Path) -> list[str]:
+    errors: list[str] = []
+    text = strip_code(md.read_text(encoding="utf-8"))
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if SCHEME_RE.match(target) or target.startswith("#"):
+                continue
+            if target.startswith("/"):
+                errors.append(
+                    f"{md}:{lineno}: absolute path (use a relative link) -> {target}"
+                )
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    files = markdown_files(argv)
+    if not files:
+        print("error: no markdown files found", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    checked = 0
+    for md in files:
+        errors.extend(check_file(md))
+        checked += 1
+    for e in errors:
+        print(e)
+    print(f"checked {checked} markdown file(s): {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,10 +1,15 @@
 //! Table 3/8: Vision-RWKV classification / detection / segmentation
 //! under quantization (VRWKV-shaped synthetic model, fidelity-mapped
 //! divergence on patch probes — DESIGN.md §Substitutions).
+//!
+//! Divergence is measured against the **packed** [`QuantizedModel`] —
+//! the artifact that actually serves — not a dense dequantized copy, so
+//! the scores include bitstream round-trip and f16 dense narrowing.
 
 use rwkvquant::config::Method;
-use rwkvquant::eval::{dequantized_model, vision};
+use rwkvquant::eval::vision;
 use rwkvquant::experiments::{bench_config, build_model};
+use rwkvquant::model::QuantizedModel;
 use rwkvquant::report::{Cell, Table};
 
 fn main() {
@@ -34,8 +39,9 @@ fn main() {
         for (method, bpw) in methods {
             let cfg = bench_config(method, bpw, 5);
             let (q, _) = rwkvquant::coordinator::quantize_model(&m, None, &cfg, 0);
-            let dq = dequantized_model(&m, &q);
-            let s = vision::evaluate(&m, &dq, variant, 31);
+            let mut qm = QuantizedModel::from_parts(&m, &q);
+            qm.dense_to_f16();
+            let s = vision::evaluate(&m, &qm, variant, 31);
             t.row(vec![
                 Cell::f(bpw, 3),
                 Cell::s(method.name()),

@@ -1,0 +1,102 @@
+//! Minimal single-sequence decode core for constrained hosts.
+//!
+//! [`EdgeSession`] is the serving stack with everything platform-bound
+//! stripped away: no threads ([`crate::coordinator::serve::TickPool`]),
+//! no sockets, no signals, no clocks, no filesystem. It drives the same
+//! architecture-dispatched decoder ([`crate::coordinator::serve::decoder_for`])
+//! and the same greedy rule (`tensor::stats::argmax`) as the native
+//! tick loop, so a packed store produces **identical** greedy tokens on
+//! a `wasm32-unknown-unknown` build and a native server — that identity
+//! is what `examples/edge_decode.rs` and the wasm CI check pin down.
+//!
+//! On filesystem-less hosts the caller supplies the checkpoint bytes
+//! ([`crate::model::QuantizedModel::open_bytes`]); see
+//! [`crate::util::caps`] for the capability flags that decide which
+//! loader path a build takes.
+
+use crate::model::WeightProvider;
+use crate::tensor::stats;
+
+use super::serve::{decoder_for, Decoder, ModelDecoder};
+
+/// One greedy decode session over any [`WeightProvider`], with no
+/// platform dependencies beyond `alloc`.
+pub struct EdgeSession<'a, W: WeightProvider> {
+    dec: ModelDecoder<'a, W>,
+    logits: Vec<f32>,
+}
+
+impl<'a, W: WeightProvider> EdgeSession<'a, W> {
+    /// Build a session for the provider's architecture. Errors on archs
+    /// without a serving forward pass (same contract as `decoder_for`).
+    pub fn new(weights: &'a W) -> crate::Result<Self> {
+        let dec = decoder_for(weights)?;
+        let vocab = dec.vocab();
+        Ok(EdgeSession { dec, logits: Vec::with_capacity(vocab) })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.dec.vocab()
+    }
+
+    /// Reset the recurrent state so the session can decode a fresh
+    /// prompt.
+    pub fn reset(&mut self) {
+        self.dec.reset();
+    }
+
+    /// Feed the prompt, then greedily decode `gen_len` tokens — the
+    /// exact argmax rule the native serve loop applies at temperature 0.
+    /// Returns only the generated tokens. Empty prompts yield nothing:
+    /// there are no logits to extend.
+    pub fn generate(&mut self, prompt: &[usize], gen_len: usize) -> Vec<usize> {
+        if prompt.is_empty() {
+            return Vec::new();
+        }
+        for &t in prompt {
+            self.dec.step_into(t, &mut self.logits);
+        }
+        let mut out = Vec::with_capacity(gen_len);
+        for _ in 0..gen_len {
+            let next = stats::argmax(&self.logits);
+            out.push(next);
+            self.dec.step_into(next, &mut self.logits);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::rwkv::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_prompt_generates_nothing() {
+        let m = init_params(&ModelConfig::rwkv6(1, 16, 32), &mut Rng::new(5));
+        let mut s = EdgeSession::new(&m).unwrap();
+        assert!(s.generate(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn reset_makes_generation_deterministic() {
+        let m = init_params(&ModelConfig::rwkv6(2, 16, 48), &mut Rng::new(7));
+        let mut s = EdgeSession::new(&m).unwrap();
+        let a = s.generate(&[1, 2, 3], 6);
+        s.reset();
+        let b = s.generate(&[1, 2, 3], 6);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&t| t < s.vocab()));
+    }
+
+    #[test]
+    fn llama_arch_dispatches_too() {
+        let m = crate::model::llama::init_params(&ModelConfig::llama(1, 16, 32), &mut Rng::new(9));
+        let mut s = EdgeSession::new(&m).unwrap();
+        let toks = s.generate(&[0, 1], 4);
+        assert_eq!(toks.len(), 4);
+    }
+}

@@ -2,8 +2,8 @@
 //! zero-downtime hot swap.
 //!
 //! Each registered model gets its **own** engine thread that mmap-opens
-//! the packed RWKVQ2 store, builds one [`RunnerDecoder`] lane per
-//! configured tick thread, and runs the ordinary
+//! the packed RWKVQ2 store, builds one arch-dispatched [`ModelDecoder`]
+//! lane per configured tick thread, and runs the ordinary
 //! `TickPool::serve_with` loop against a per-model request channel and
 //! a per-model [`Metrics`] registry. The fleet itself is only a routing
 //! table: `name → Arc<ModelEntry>` behind a mutex, where an entry holds
@@ -23,8 +23,8 @@
 //! retries through the table, so no request is lost to a swap.
 
 use crate::coordinator::serve::{
-    with_tick_pool_opts, Decoder, PoolOpts, Request, Response, RunnerDecoder, ServeOpts,
-    ServeStats,
+    decoder_for, with_tick_pool_opts, Decoder, ModelDecoder, PoolOpts, Request, Response,
+    ServeOpts, ServeStats,
 };
 use crate::model::store::LoadMode;
 use crate::model::QuantizedModel;
@@ -144,9 +144,19 @@ pub enum SubmitError {
     Closed,
 }
 
-/// [`RunnerDecoder`] lane with the fleet's optional test throttle.
+/// Per-model knobs that override the fleet-wide [`FleetConfig`] for one
+/// engine (`--model NAME=PATH,max_queue=N` on the CLI). `None` fields
+/// inherit the fleet default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModelOverrides {
+    /// Admission-queue bound for this engine only — a small model can
+    /// keep a deep queue while a big one sheds early.
+    pub max_queue: Option<usize>,
+}
+
+/// Arch-dispatched decoder lane with the fleet's optional test throttle.
 struct Lane<'a> {
-    inner: RunnerDecoder<'a, QuantizedModel>,
+    inner: ModelDecoder<'a, QuantizedModel>,
     step_delay: Duration,
 }
 
@@ -227,9 +237,26 @@ impl Fleet {
     /// a swap the previous engine is retired: in-flight sequences
     /// finish on the old mmap while new admissions land on the new one.
     pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        self.load_with(name, path, ModelOverrides::default())
+    }
+
+    /// [`Fleet::load`] with per-model overrides applied on top of the
+    /// fleet-wide config.
+    pub fn load_with(
+        &self,
+        name: &str,
+        path: &Path,
+        ov: ModelOverrides,
+    ) -> Result<Arc<ModelEntry>> {
         anyhow::ensure!(!name.is_empty(), "model name must not be empty");
         let model = QuantizedModel::open_with(path, self.cfg.load_mode)
             .with_context(|| format!("load model '{name}' from {path:?}"))?;
+        // arch validation happens here, on the caller's thread, so an
+        // unsupported architecture errors at load time instead of
+        // panicking the engine thread
+        decoder_for(&model)
+            .with_context(|| format!("model '{name}' from {path:?}"))
+            .map(drop)?;
         let vocab = model.config.vocab;
         let created = std::fs::metadata(path)
             .and_then(|m| m.modified())
@@ -243,7 +270,10 @@ impl Fleet {
         // handlers consume their own event streams; the serve loop
         // tolerates a closed response channel
         drop(rx_resp);
-        let FleetConfig { lanes, opts, popts, step_delay, .. } = self.cfg;
+        let FleetConfig { lanes, mut opts, popts, step_delay, .. } = self.cfg;
+        if let Some(cap) = ov.max_queue {
+            opts = opts.with_max_queue(cap);
+        }
         let obs = metrics.clone();
         let thread = std::thread::Builder::new()
             .name(format!("fleet-{name}"))
@@ -251,7 +281,11 @@ impl Fleet {
                 // the engine thread owns the mmap'd model for its whole
                 // life; decoder lanes borrow it on this stack frame
                 let mut lanes: Vec<Lane<'_>> = (0..lanes.max(1))
-                    .map(|_| Lane { inner: RunnerDecoder::new(&model), step_delay })
+                    .map(|_| Lane {
+                        // infallible: the arch was validated before spawn
+                        inner: decoder_for(&model).expect("arch validated at load"),
+                        step_delay,
+                    })
                     .collect();
                 with_tick_pool_opts(&mut lanes, popts, |pool| {
                     pool.serve_with(rx_req, tx_resp, &opts, &*obs)
@@ -472,6 +506,27 @@ mod tests {
         assert!(per_model_metrics.is_empty(), "drain empties the registry");
         std::fs::remove_file(pa).ok();
         std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn llama_store_serves_with_per_model_queue_override() {
+        let m = crate::model::llama::init_params(&ModelConfig::llama(1, 16, 32), &mut Rng::new(41));
+        let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+        let (q, _) = quantize_model(&m, None, &qc, 2);
+        let mut qm = QuantizedModel::from_parts(&m, &q);
+        qm.dense_to_f16();
+        let p = std::env::temp_dir().join("fleet_llama.rwkvq2");
+        qm.save(&p).unwrap();
+
+        let fleet = Fleet::new(FleetConfig::default());
+        let e = fleet
+            .load_with("lm", &p, ModelOverrides { max_queue: Some(2) })
+            .unwrap();
+        assert_eq!(e.vocab(), 32);
+        let toks = run_once(&fleet, "lm", vec![1, 2, 3], 4);
+        assert_eq!(toks.len(), 4);
+        fleet.drain();
+        std::fs::remove_file(p).ok();
     }
 
     #[test]

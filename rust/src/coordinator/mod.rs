@@ -2,11 +2,13 @@
 //! and the batched generation server used for end-to-end evaluation.
 
 pub mod batcher;
+pub mod edge;
 pub mod fleet;
 pub mod pipeline;
 pub mod sampler;
 pub mod serve;
 pub mod statepool;
 
-pub use fleet::{Fleet, FleetConfig, ModelEntry};
+pub use edge::EdgeSession;
+pub use fleet::{Fleet, FleetConfig, ModelEntry, ModelOverrides};
 pub use pipeline::{quantize_model, quantize_store_streaming, PipelineReport, QuantizedLayers, StreamReport};

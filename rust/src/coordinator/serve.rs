@@ -114,9 +114,13 @@ pub trait Decoder {
 /// per available hardware thread, capped at `max_batch` — a tick never
 /// has more than `max_batch` sequences, so lanes beyond it could never
 /// receive work yet would each cost a decoder and a parked thread. An
-/// explicit (non-zero) request is honoured as given.
+/// explicit (non-zero) request is honoured as given — except on targets
+/// without OS threads ([`crate::util::caps::HAS_THREADS`], e.g. wasm32),
+/// where every request collapses to the sequential single lane.
 pub fn resolve_tick_threads(requested: usize, max_batch: usize) -> usize {
-    if requested > 0 {
+    if !crate::util::caps::HAS_THREADS {
+        1
+    } else if requested > 0 {
         requested
     } else {
         std::thread::available_parallelism()
@@ -1561,6 +1565,174 @@ impl<W: WeightProvider> Decoder for RunnerDecoder<'_, W> {
             s.aa.copy_from_slice(&state[base + 2 * d..base + 3 * d]);
             s.bb.copy_from_slice(&state[base + 3 * d..base + 4 * d]);
             s.pp.copy_from_slice(&state[base + 4 * d..base + 5 * d]);
+        }
+    }
+}
+
+/// [`Decoder`] over the LLaMA sliding-window runner, generic over the
+/// weight provider: dense fp32 or packed quantized. The flat state is
+/// the per-layer KV rings concatenated, plus one trailing float carrying
+/// the absolute position (see `model/llama.rs`).
+pub struct LlamaDecoder<'a, W: WeightProvider = crate::model::ModelWeights> {
+    pub runner: crate::model::llama::LlamaRunner<'a, W>,
+}
+
+impl<'a, W: WeightProvider> LlamaDecoder<'a, W> {
+    pub fn new(weights: &'a W) -> Self {
+        LlamaDecoder { runner: crate::model::llama::LlamaRunner::new(weights) }
+    }
+}
+
+impl<W: WeightProvider> Decoder for LlamaDecoder<'_, W> {
+    fn reset(&mut self) {
+        self.runner.reset();
+    }
+
+    fn step(&mut self, token: usize) -> Vec<f32> {
+        self.runner.forward_token(token)
+    }
+
+    fn step_into(&mut self, token: usize, out: &mut Vec<f32>) {
+        self.runner.forward_token_into(token, out);
+    }
+
+    fn vocab(&self) -> usize {
+        self.runner.weights.config().vocab
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = self
+            .runner
+            .cache
+            .iter()
+            .flat_map(|c| [c.k.clone(), c.v.clone()])
+            .collect();
+        out.push(vec![self.runner.pos as f32]);
+        out
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) {
+        for (b, chunk) in state[..state.len() - 1].chunks(2).enumerate() {
+            let c = &mut self.runner.cache[b];
+            c.k.copy_from_slice(&chunk[0]);
+            c.v.copy_from_slice(&chunk[1]);
+        }
+        self.runner.pos = state[state.len() - 1][0] as usize;
+    }
+
+    // Flat-state fast path: the serve loop swaps sequences against
+    // state-pool slabs with zero per-tick allocations.
+    fn state_len(&self) -> usize {
+        let cfg = self.runner.weights.config();
+        cfg.n_layer * 2 * self.runner.window() * cfg.d_model + 1
+    }
+
+    fn save_state_into(&self, out: &mut [f32]) {
+        let ring = self.runner.window() * self.runner.weights.config().d_model;
+        for (b, c) in self.runner.cache.iter().enumerate() {
+            let base = b * 2 * ring;
+            out[base..base + ring].copy_from_slice(&c.k);
+            out[base + ring..base + 2 * ring].copy_from_slice(&c.v);
+        }
+        out[self.runner.cache.len() * 2 * ring] = self.runner.pos as f32;
+    }
+
+    fn load_state_flat(&mut self, state: &[f32]) {
+        let ring = self.runner.window() * self.runner.weights.config().d_model;
+        for (b, c) in self.runner.cache.iter_mut().enumerate() {
+            let base = b * 2 * ring;
+            c.k.copy_from_slice(&state[base..base + ring]);
+            c.v.copy_from_slice(&state[base + ring..base + 2 * ring]);
+        }
+        self.runner.pos = state[self.runner.cache.len() * 2 * ring] as usize;
+    }
+}
+
+/// Architecture-dispatching [`Decoder`]: the serve stack's one seam
+/// between "a weight provider was opened" and "tokens come out". Every
+/// call site that used to hard-code [`RunnerDecoder`] (the CLI, the
+/// gateway, the fleet, the edge core) builds lanes through
+/// [`decoder_for`] instead, so a packed store of any supported
+/// architecture serves through the identical tick machinery.
+pub enum ModelDecoder<'a, W: WeightProvider> {
+    Rwkv(RunnerDecoder<'a, W>),
+    Llama(LlamaDecoder<'a, W>),
+}
+
+/// Build the right decoder for a provider's `config().arch`. Errors on
+/// architectures without a serving forward pass — at open time, not
+/// first-token time.
+pub fn decoder_for<W: WeightProvider>(weights: &W) -> Result<ModelDecoder<'_, W>> {
+    match weights.config().arch.as_str() {
+        "rwkv6" | "rwkv7" | "vrwkv" => Ok(ModelDecoder::Rwkv(RunnerDecoder::new(weights))),
+        "llama" => Ok(ModelDecoder::Llama(LlamaDecoder::new(weights))),
+        other => anyhow::bail!(
+            "no serving decoder for arch '{other}' (supported: rwkv6, rwkv7, vrwkv, llama)"
+        ),
+    }
+}
+
+impl<W: WeightProvider> Decoder for ModelDecoder<'_, W> {
+    fn reset(&mut self) {
+        match self {
+            ModelDecoder::Rwkv(d) => d.reset(),
+            ModelDecoder::Llama(d) => d.reset(),
+        }
+    }
+
+    fn step(&mut self, token: usize) -> Vec<f32> {
+        match self {
+            ModelDecoder::Rwkv(d) => d.step(token),
+            ModelDecoder::Llama(d) => d.step(token),
+        }
+    }
+
+    fn step_into(&mut self, token: usize, out: &mut Vec<f32>) {
+        match self {
+            ModelDecoder::Rwkv(d) => d.step_into(token, out),
+            ModelDecoder::Llama(d) => d.step_into(token, out),
+        }
+    }
+
+    fn vocab(&self) -> usize {
+        match self {
+            ModelDecoder::Rwkv(d) => d.vocab(),
+            ModelDecoder::Llama(d) => d.vocab(),
+        }
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        match self {
+            ModelDecoder::Rwkv(d) => d.save_state(),
+            ModelDecoder::Llama(d) => d.save_state(),
+        }
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) {
+        match self {
+            ModelDecoder::Rwkv(d) => d.load_state(state),
+            ModelDecoder::Llama(d) => d.load_state(state),
+        }
+    }
+
+    fn state_len(&self) -> usize {
+        match self {
+            ModelDecoder::Rwkv(d) => d.state_len(),
+            ModelDecoder::Llama(d) => d.state_len(),
+        }
+    }
+
+    fn save_state_into(&self, out: &mut [f32]) {
+        match self {
+            ModelDecoder::Rwkv(d) => d.save_state_into(out),
+            ModelDecoder::Llama(d) => d.save_state_into(out),
+        }
+    }
+
+    fn load_state_flat(&mut self, state: &[f32]) {
+        match self {
+            ModelDecoder::Rwkv(d) => d.load_state_flat(state),
+            ModelDecoder::Llama(d) => d.load_state_flat(state),
         }
     }
 }

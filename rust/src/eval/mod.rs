@@ -16,20 +16,54 @@ pub mod ppl;
 pub mod vision;
 pub mod zeroshot;
 
+use crate::model::llama::LlamaRunner;
 use crate::model::rwkv::RwkvRunner;
 use crate::model::{ModelWeights, WeightProvider};
 use crate::tensor::stats;
 
+/// Architecture dispatch for the probe forward passes. Local to eval so
+/// the harnesses don't depend on the coordinator's serving decoders:
+/// probes only need `reset` + `forward_token`.
+enum ProbeRunner<'a, W: WeightProvider> {
+    Rwkv(RwkvRunner<'a, W>),
+    Llama(LlamaRunner<'a, W>),
+}
+
+impl<'a, W: WeightProvider> ProbeRunner<'a, W> {
+    fn new(weights: &'a W) -> Self {
+        match weights.config().arch.as_str() {
+            "llama" => ProbeRunner::Llama(LlamaRunner::new(weights)),
+            // every RWKV variant (rwkv6 / rwkv7 / vrwkv) shares one runner
+            _ => ProbeRunner::Rwkv(RwkvRunner::new(weights)),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            ProbeRunner::Rwkv(r) => r.reset(),
+            ProbeRunner::Llama(r) => r.reset(),
+        }
+    }
+
+    fn forward_token(&mut self, token: usize) -> Vec<f32> {
+        match self {
+            ProbeRunner::Rwkv(r) => r.forward_token(token),
+            ProbeRunner::Llama(r) => r.forward_token(token),
+        }
+    }
+}
+
 /// Mean symmetric KL divergence between next-token distributions of two
 /// models over probe sequences — the raw damage signal of a quantization.
-/// Either side may be a dense store or a packed [`crate::model::QuantizedModel`].
+/// Either side may be a dense store or a packed [`crate::model::QuantizedModel`],
+/// of any architecture with a probe forward pass (RWKV variants, LLaMA).
 pub fn output_divergence<A: WeightProvider, B: WeightProvider>(
     fp: &A,
     quant: &B,
     probes: &[Vec<usize>],
 ) -> f64 {
-    let mut run_fp = RwkvRunner::new(fp);
-    let mut run_q = RwkvRunner::new(quant);
+    let mut run_fp = ProbeRunner::new(fp);
+    let mut run_q = ProbeRunner::new(quant);
     let mut total = 0.0f64;
     let mut count = 0usize;
     for probe in probes {

@@ -12,7 +12,7 @@
 //! FloatingPoint row.
 
 use super::{output_divergence, FidelityMap};
-use crate::model::ModelWeights;
+use crate::model::WeightProvider;
 use crate::util::rng::Rng;
 
 /// Paper fp anchors for one VRWKV variant (Table 3's FloatingPoint row).
@@ -59,15 +59,17 @@ pub fn patch_probes(vocab: usize, n: usize, len: usize, seed: u64) -> Vec<Vec<us
 
 /// Evaluate the three vision proxies. Detection and segmentation decay
 /// faster than classification (dense tasks are more damage-sensitive, as
-/// in the paper where Seg drops hardest under AWQ).
-pub fn evaluate(
-    fp: &ModelWeights,
-    quant: &ModelWeights,
+/// in the paper where Seg drops hardest under AWQ). Either side may be a
+/// dense store or a packed [`crate::model::QuantizedModel`], so the
+/// scores measure what the *served* artifact actually emits.
+pub fn evaluate<A: WeightProvider, B: WeightProvider>(
+    fp: &A,
+    quant: &B,
     variant: &str,
     seed: u64,
 ) -> VisionScores {
     let a = anchors(variant);
-    let probes = patch_probes(fp.config.vocab, 6, 24, seed);
+    let probes = patch_probes(fp.config().vocab, 6, 24, seed);
     let d = output_divergence(fp, quant, &probes);
     let cls_map = FidelityMap { fp_acc: a.cls_top1, chance: 0.1, fp_ppl: 1.0, gain: 1.0 };
     let det_map = FidelityMap { fp_acc: a.det_ap, chance: 0.0, fp_ppl: 1.0, gain: 1.6 };

@@ -25,10 +25,12 @@
 use rwkvquant::calib::CalibSet;
 use rwkvquant::config::{Method, QuantConfig};
 use rwkvquant::coordinator::serve::{
-    resolve_tick_threads, serve_collect_pool_with, PoolOpts, Request, RunnerDecoder, ServeOpts,
+    decoder_for, resolve_tick_threads, serve_collect_pool_with, PoolOpts, Request, ServeOpts,
     ServeStats,
 };
-use rwkvquant::coordinator::{quantize_model, quantize_store_streaming, Fleet, FleetConfig};
+use rwkvquant::coordinator::{
+    quantize_model, quantize_store_streaming, Fleet, FleetConfig, ModelOverrides,
+};
 use rwkvquant::data::{make_task_from_corpus, BinCorpus};
 use rwkvquant::eval::{ppl, zeroshot};
 use rwkvquant::experiments::build_model;
@@ -56,8 +58,10 @@ fn help() -> String {
         )
         .opt(
             "model",
-            "serve --http: register NAME=PATH.rwkvq2 in the fleet (repeatable); requests \
-             route by their \"model\" field, /admin/models/{name} hot-swaps",
+            "serve --http: register NAME=PATH.rwkvq2[,max_queue=N] in the fleet \
+             (repeatable); requests route by their \"model\" field, \
+             /admin/models/{name} hot-swaps; per-model options override the \
+             fleet-wide flags",
         )
         .opt("mmap", "serve: force memory-mapped RWKVQ2 loading (flag)")
         .opt("buffered", "serve: force buffered RWKVQ2 loading (flag)")
@@ -311,7 +315,11 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         if state_slots == 0 { batch } else { state_slots },
         if pin_workers { ", pinned workers" } else { "" },
     );
-    let mut decoders: Vec<_> = (0..tick_threads).map(|_| RunnerDecoder::new(&qm)).collect();
+    // arch-dispatched: any architecture with a serving decoder (RWKV
+    // variants, LLaMA) drives the identical tick machinery
+    let mut decoders = (0..tick_threads)
+        .map(|_| decoder_for(&qm))
+        .collect::<rwkvquant::Result<Vec<_>>>()?;
     let vocab = qm.config.vocab;
 
     // ---- HTTP gateway mode: serve real sockets until drained ----
@@ -454,32 +462,61 @@ fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
         step_delay: Duration::ZERO,
     });
 
-    let mut named: Vec<(String, std::path::PathBuf)> = Vec::new();
+    let mut named: Vec<(String, std::path::PathBuf, ModelOverrides)> = Vec::new();
     if let Some(store) = args.get("store") {
-        named.push((DEFAULT_MODEL.to_string(), std::path::PathBuf::from(store)));
+        named.push((
+            DEFAULT_MODEL.to_string(),
+            std::path::PathBuf::from(store),
+            ModelOverrides::default(),
+        ));
     }
     for spec in specs {
-        let (name, path) = spec.split_once('=').ok_or_else(|| {
-            anyhow::anyhow!("--model expects NAME=PATH.rwkvq2, got '{spec}'")
+        let (name, rest) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--model expects NAME=PATH.rwkvq2[,max_queue=N], got '{spec}'")
         })?;
         anyhow::ensure!(!name.is_empty(), "--model: empty model name in '{spec}'");
-        named.push((name.to_string(), std::path::PathBuf::from(path)));
+        // first comma-part is the path; the rest are per-model key=value
+        // overrides on top of the fleet-wide flags
+        let mut parts = rest.split(',');
+        let path = parts.next().unwrap_or_default();
+        anyhow::ensure!(!path.is_empty(), "--model: empty path in '{spec}'");
+        let mut ov = ModelOverrides::default();
+        for kv in parts {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--model: expected key=value after the path, got '{kv}' in '{spec}'")
+            })?;
+            match k.trim() {
+                "max_queue" => {
+                    ov.max_queue = Some(v.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--model: max_queue expects an integer, got '{v}' in '{spec}'")
+                    })?);
+                }
+                other => anyhow::bail!(
+                    "--model: unknown per-model option '{other}' in '{spec}' (supported: max_queue)"
+                ),
+            }
+        }
+        named.push((name.to_string(), std::path::PathBuf::from(path), ov));
     }
     let mut vocab = 0usize;
-    for (name, path) in &named {
+    for (name, path, ov) in &named {
         anyhow::ensure!(
             detect_format(path)? == StoreFormat::V2Packed,
             "model '{name}': {} is not a packed RWKVQ2 checkpoint (run `rwkvquant pack` \
              or `rwkvquant quantize --streaming` first)",
             path.display(),
         );
-        let entry = fleet.load(name, path)?;
+        let entry = fleet.load_with(name, path, *ov)?;
         vocab = vocab.max(entry.vocab());
         println!(
-            "loaded model '{name}' from {} (vocab {}, version {})",
+            "loaded model '{name}' from {} (vocab {}, version {}{})",
             path.display(),
             entry.vocab(),
             entry.version(),
+            match ov.max_queue {
+                Some(n) => format!(", max_queue {n}"),
+                None => String::new(),
+            },
         );
     }
 
@@ -601,6 +638,7 @@ fn cmd_info() {
             "unsupported (buffered fallback)"
         }
     );
+    println!("platform capabilities: {}", rwkvquant::util::caps::summary());
 }
 
 fn main() {

@@ -1,15 +1,299 @@
-//! Minimal LLaMA-like comparator model.
+//! Minimal LLaMA-like comparator model — weights **and** a serving
+//! forward pass.
 //!
-//! Only what the paper's comparisons need: the layer inventory with
-//! realistic shapes (attention q/k/v/o + gated FFN), weight generation,
-//! and the op/byte accounting hooks. No Rust forward pass is required —
-//! the LLaMA family appears in Table 1 (cluster loss), Fig. 5 (SQ
-//! proportion), and Fig. 9 (compute-to-memory ratio) only.
+//! The layer inventory (attention q/k/v/o + gated FFN, RMSNorm gains)
+//! feeds the paper's comparisons (Table 1 cluster loss, Fig. 5 SQ
+//! proportion, Fig. 9 op/byte accounting), and [`LlamaRunner`] runs the
+//! same inventory end-to-end so a quantized-and-packed Llama store
+//! serves through the identical `WeightProvider` → `LinearOp` stack as
+//! RWKV — the cross-architecture parity leg of the serve path.
+//!
+//! **Fixed-size state.** The serve engine's slab state pool
+//! ([`crate::coordinator::statepool`]) requires every sequence's state
+//! to be a constant number of floats, so the runner uses a
+//! **sliding-window KV cache**: per layer, ring buffers holding the
+//! RoPE-rotated keys and values of the last [`ATTN_WINDOW`] positions.
+//! Attention is exact while a sequence is shorter than the window and
+//! windowed after (position information stays correct — RoPE is applied
+//! at absolute positions before caching, so cache slot order is
+//! irrelevant to the softmax). The flat state layout is
+//! `n_layer × (K ring ‖ V ring)` followed by one float carrying the
+//! absolute position (exact below 2^24, far beyond any window).
+//!
+//! Naming scheme (shared with [`init_params`] and the packed store):
+//! `emb`, `head`, `ln_out.g`, and per block `i`: `blocks.i.ln1.g`,
+//! `blocks.i.attn.{w_q,w_k,w_v,w_o}`, `blocks.i.ln2.g`,
+//! `blocks.i.mlp.{w_gate,w_up,w_down}`.
 
+use super::qmodel::WeightProvider;
 use super::store::{ModelWeights, ParamClass};
 use crate::config::ModelConfig;
+use crate::quant::exec::LinearOp;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Sliding-window length of the fixed-size KV cache (positions kept per
+/// layer). Every decoder lane and every state-pool slab of one model
+/// must agree on this, so it is a crate constant rather than a knob.
+pub const ATTN_WINDOW: usize = 64;
+
+/// Per-layer KV ring buffers (`window × d_model` floats each).
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl LayerKv {
+    fn new(window: usize, d: usize) -> Self {
+        LayerKv { k: vec![0.0; window * d], v: vec![0.0; window * d] }
+    }
+
+    pub fn reset(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+    }
+}
+
+/// Runs a LLaMA-shaped model from any [`WeightProvider`] (dense fp32
+/// store or packed quantized model), one token at a time with a
+/// fixed-size sliding-window KV cache.
+pub struct LlamaRunner<'a, W: WeightProvider = ModelWeights> {
+    pub weights: &'a W,
+    index: HashMap<&'a str, usize>,
+    /// KV rings, one per layer.
+    pub cache: Vec<LayerKv>,
+    /// Absolute position of the next token to be fed.
+    pub pos: usize,
+    n_heads: usize,
+    head_dim: usize,
+    window: usize,
+    // scratch buffers (hot path is allocation-free after construction)
+    buf_h: Vec<f32>,
+    buf_q: Vec<f32>,
+    buf_k: Vec<f32>,
+    buf_v: Vec<f32>,
+    buf_att: Vec<f32>,
+    buf_o: Vec<f32>,
+    buf_gate: Vec<f32>,
+    buf_up: Vec<f32>,
+    buf_x: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl<'a, W: WeightProvider> LlamaRunner<'a, W> {
+    pub fn new(weights: &'a W) -> Self {
+        Self::with_window(weights, ATTN_WINDOW)
+    }
+
+    /// Runner with an explicit window (tests shrink it to hit the
+    /// sliding edge cheaply; serving always uses [`ATTN_WINDOW`]).
+    pub fn with_window(weights: &'a W, window: usize) -> Self {
+        let index = (0..weights.n_entries())
+            .map(|i| (weights.entry_name(i), i))
+            .collect();
+        let cfg = weights.config();
+        let d = cfg.d_model;
+        let ffn = cfg.ffn_dim();
+        let n_heads = cfg.n_heads().max(1);
+        assert!(
+            d % n_heads == 0,
+            "d_model {d} must split evenly across {n_heads} heads"
+        );
+        assert!(window > 0, "attention window must be positive");
+        LlamaRunner {
+            weights,
+            index,
+            cache: (0..cfg.n_layer).map(|_| LayerKv::new(window, d)).collect(),
+            pos: 0,
+            n_heads,
+            head_dim: d / n_heads,
+            window,
+            buf_h: vec![0.0; d],
+            buf_q: vec![0.0; d],
+            buf_k: vec![0.0; d],
+            buf_v: vec![0.0; d],
+            buf_att: vec![0.0; d],
+            buf_o: vec![0.0; d],
+            buf_gate: vec![0.0; ffn],
+            buf_up: vec![0.0; ffn],
+            buf_x: vec![0.0; d],
+            scores: vec![0.0; window],
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.cache {
+            c.reset();
+        }
+        self.pos = 0;
+    }
+
+    fn pos_of(&self, name: &str) -> usize {
+        *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("missing parameter '{name}'"))
+    }
+
+    /// Matmul view of a parameter (lifetime tied to the provider, not to
+    /// `&self`, so ops can be held across state mutation).
+    fn op(&self, name: &str) -> &'a dyn LinearOp {
+        self.weights.linear_at(self.pos_of(name))
+    }
+
+    /// Dense row view of a 1-D parameter.
+    fn vrow(&self, name: &str) -> &'a [f32] {
+        self.weights.row_at(self.pos_of(name), 0)
+    }
+
+    /// Forward one token id; returns the next-token logits.
+    pub fn forward_token(&mut self, token: usize) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.forward_token_into(token, &mut logits);
+        logits
+    }
+
+    /// [`LlamaRunner::forward_token`] into a caller-owned logits buffer
+    /// (resized to `vocab`) — allocation-free after warm-up, matching
+    /// the RWKV runner's serve contract.
+    pub fn forward_token_into(&mut self, token: usize, logits: &mut Vec<f32>) {
+        let cfg = self.weights.config();
+        let (d, vocab, n_layer) = (cfg.d_model, cfg.vocab, cfg.n_layer);
+        assert!(token < vocab, "token {token} >= vocab {vocab}");
+        let emb_pos = self.pos_of("emb");
+        let mut x = std::mem::take(&mut self.buf_x);
+        // owned-row lookup: also serves f16-resident RWKVQ2 embeddings
+        self.weights.row_f32_into(emb_pos, token, &mut x);
+
+        let pos = self.pos;
+        let slot = pos % self.window;
+        let n_ctx = (pos + 1).min(self.window);
+        let (heads, hd) = (self.n_heads, self.head_dim);
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        for b in 0..n_layer {
+            let p = |suffix: &str| format!("blocks.{b}.{suffix}");
+            let w_q = self.op(&p("attn.w_q"));
+            let w_k = self.op(&p("attn.w_k"));
+            let w_v = self.op(&p("attn.w_v"));
+            let w_o = self.op(&p("attn.w_o"));
+            let w_gate = self.op(&p("mlp.w_gate"));
+            let w_up = self.op(&p("mlp.w_up"));
+            let w_down = self.op(&p("mlp.w_down"));
+
+            // ---- attention ----
+            rms_norm_into(&x, self.vrow(&p("ln1.g")), &mut self.buf_h);
+            w_q.matvec(&self.buf_h, &mut self.buf_q);
+            w_k.matvec(&self.buf_h, &mut self.buf_k);
+            w_v.matvec(&self.buf_h, &mut self.buf_v);
+            for h in 0..heads {
+                rope_rotate(&mut self.buf_q[h * hd..(h + 1) * hd], pos);
+                rope_rotate(&mut self.buf_k[h * hd..(h + 1) * hd], pos);
+            }
+            {
+                let c = &mut self.cache[b];
+                c.k[slot * d..(slot + 1) * d].copy_from_slice(&self.buf_k);
+                c.v[slot * d..(slot + 1) * d].copy_from_slice(&self.buf_v);
+            }
+            // softmax attention per head over the cached window; keys
+            // carry their absolute-position rotation, so ring order is
+            // irrelevant to the weighted sum
+            let c = &self.cache[b];
+            for h in 0..heads {
+                let off = h * hd;
+                let q = &self.buf_q[off..off + hd];
+                let mut max = f32::NEG_INFINITY;
+                for j in 0..n_ctx {
+                    let krow = &c.k[j * d + off..j * d + off + hd];
+                    let mut s = 0.0f32;
+                    for i in 0..hd {
+                        s += q[i] * krow[i];
+                    }
+                    let s = s * scale;
+                    self.scores[j] = s;
+                    if s > max {
+                        max = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for j in 0..n_ctx {
+                    self.scores[j] = (self.scores[j] - max).exp();
+                    denom += self.scores[j];
+                }
+                let inv = 1.0 / denom.max(1e-30);
+                self.buf_att[off..off + hd].fill(0.0);
+                for j in 0..n_ctx {
+                    let a = self.scores[j] * inv;
+                    let vrow = &c.v[j * d + off..j * d + off + hd];
+                    for i in 0..hd {
+                        self.buf_att[off + i] += a * vrow[i];
+                    }
+                }
+            }
+            w_o.matvec(&self.buf_att, &mut self.buf_o);
+            for i in 0..d {
+                x[i] += self.buf_o[i];
+            }
+
+            // ---- gated FFN: w_down · (SiLU(w_gate·h) ⊙ (w_up·h)) ----
+            rms_norm_into(&x, self.vrow(&p("ln2.g")), &mut self.buf_h);
+            w_gate.matvec(&self.buf_h, &mut self.buf_gate);
+            w_up.matvec(&self.buf_h, &mut self.buf_up);
+            for i in 0..self.buf_gate.len() {
+                let g = self.buf_gate[i];
+                self.buf_gate[i] = g / (1.0 + (-g).exp()) * self.buf_up[i];
+            }
+            w_down.matvec(&self.buf_gate, &mut self.buf_o);
+            for i in 0..d {
+                x[i] += self.buf_o[i];
+            }
+        }
+
+        rms_norm_into(&x, self.vrow("ln_out.g"), &mut self.buf_h);
+        logits.clear();
+        logits.resize(vocab, 0.0);
+        self.op("head").matvec(&self.buf_h, logits);
+        self.buf_x = x;
+        self.pos = pos + 1;
+    }
+
+    /// Forward a token sequence, returning logits at every position.
+    pub fn forward_sequence(&mut self, tokens: &[usize]) -> Vec<Vec<f32>> {
+        tokens.iter().map(|&t| self.forward_token(t)).collect()
+    }
+}
+
+/// RMSNorm with gain: `x_i / sqrt(mean(x²) + ε) · g_i` (LLaMA has no
+/// bias or mean-centering).
+pub fn rms_norm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let n = x.len() as f64;
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = ((x[i] as f64 * inv) as f32) * g[i];
+    }
+}
+
+/// Rotary position embedding over one head's slice: pair `(i, i+half)`
+/// rotates by `pos · 10000^(-2i/hd)`. Angles go through f64 so every
+/// platform (including wasm) computes bit-identical rotations.
+fn rope_rotate(v: &mut [f32], pos: usize) {
+    let hd = v.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let theta = (pos as f64) * 10000f64.powf(-2.0 * i as f64 / hd as f64);
+        let (sin, cos) = (theta.sin() as f32, theta.cos() as f32);
+        let (a, b) = (v[i], v[i + half]);
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
 
 /// Initialise a LLaMA-shaped parameter set (Gaussian init; the synthetic
 /// family generator overwrites the matmul weights with archetypes).
@@ -46,6 +330,119 @@ pub fn init_params(cfg: &ModelConfig, rng: &mut Rng) -> ModelWeights {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tiny() -> ModelWeights {
+        init_params(&ModelConfig::llama(2, 16, 32), &mut Rng::new(7))
+    }
+
+    #[test]
+    fn forward_produces_finite_logits() {
+        let m = tiny();
+        let mut run = LlamaRunner::new(&m);
+        for t in [0usize, 5, 31] {
+            let logits = run.forward_token(t);
+            assert_eq!(logits.len(), 32);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn attention_carries_context() {
+        let m = tiny();
+        let mut run = LlamaRunner::new(&m);
+        let _ = run.forward_token(1);
+        let with_ctx = run.forward_token(2);
+        run.reset();
+        let without_ctx = run.forward_token(2);
+        let diff: f32 = with_ctx
+            .iter()
+            .zip(&without_ctx)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-5, "context must change logits (diff={diff})");
+    }
+
+    #[test]
+    fn reset_restores_determinism() {
+        let m = tiny();
+        let mut run = LlamaRunner::new(&m);
+        let a = run.forward_sequence(&[3, 1, 4, 1, 5]);
+        run.reset();
+        let b = run.forward_sequence(&[3, 1, 4, 1, 5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn position_matters_through_rope() {
+        // the same token at positions 0 and 1 must attend differently —
+        // RoPE rotates its key/query, so the logits cannot coincide
+        let m = tiny();
+        let mut run = LlamaRunner::new(&m);
+        let first = run.forward_token(4);
+        let second = run.forward_token(4);
+        let diff: f32 = first.iter().zip(&second).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-6, "RoPE must distinguish positions (diff={diff})");
+    }
+
+    #[test]
+    fn sliding_window_stays_stable_past_the_window() {
+        let m = tiny();
+        let mut run = LlamaRunner::with_window(&m, 4);
+        let toks: Vec<usize> = (0..40).map(|i| i % 32).collect();
+        let out = run.forward_sequence(&toks);
+        assert_eq!(run.pos, 40);
+        assert!(out.last().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn window_edge_attends_only_to_cached_positions() {
+        // once the window slides, an evicted position must stop
+        // influencing the output. In a 1-layer model the cached K/V of
+        // position j depend only on (token_j, j) — no attention feeds
+        // them — so two different prefixes followed by the same
+        // window-filling suffix must converge to identical logits the
+        // moment the prefix is evicted.
+        let m = init_params(&ModelConfig::llama(1, 16, 32), &mut Rng::new(11));
+        let suffix: Vec<usize> = (0..4).map(|i| (i * 5 + 1) % 32).collect();
+        let mut run_a = LlamaRunner::with_window(&m, 4);
+        let mut run_b = LlamaRunner::with_window(&m, 4);
+        let _ = run_a.forward_token(9);
+        let _ = run_b.forward_token(23);
+        let mut last_a = Vec::new();
+        let mut last_b = Vec::new();
+        for &t in &suffix {
+            last_a = run_a.forward_token(t);
+            last_b = run_b.forward_token(t);
+        }
+        // the final step sees an identical 4-token window at identical
+        // absolute positions 1..=4 in both runs
+        assert_eq!(last_a, last_b, "evicted positions must not leak into the window");
+    }
+
+    #[test]
+    fn runner_over_quantized_provider_matches_dense_on_fp32_layers() {
+        use crate::model::QuantizedModel;
+        use std::collections::HashMap as Map;
+        // a QuantizedModel with no quantized layers must reproduce the
+        // dense forward exactly (all entries fall back to Dense copies)
+        let m = tiny();
+        let qm = QuantizedModel::from_parts(&m, &Map::new());
+        let mut dense = LlamaRunner::new(&m);
+        let mut served = LlamaRunner::new(&qm);
+        for t in [1usize, 9, 30, 2] {
+            assert_eq!(dense.forward_token(t), served.forward_token(t));
+        }
+    }
+
+    #[test]
+    fn rms_norm_scales_to_unit_rms() {
+        let x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let g = vec![1.0f32; 4];
+        let mut y = vec![0.0f32; 4];
+        rms_norm_into(&x, &g, &mut y);
+        let rms: f32 = (y.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3, "rms={rms}");
+    }
 
     #[test]
     fn inventory_has_seven_matmuls_per_block() {

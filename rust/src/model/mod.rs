@@ -17,9 +17,13 @@
 //!   mixing), generic over `WeightProvider`. Used by the eval harness,
 //!   the serving stack, and as the numeric oracle for the PJRT-executed
 //!   HLO graphs.
-//! * [`llama`] — a minimal LLaMA-like comparator (weights + layer
-//!   inventory only; used for the Table 1 / Fig. 5 distribution
-//!   comparisons and the Fig. 9 op/byte accounting).
+//! * [`llama`] — a minimal LLaMA-like architecture: the comparator
+//!   weights for the Table 1 / Fig. 5 distribution comparisons and the
+//!   Fig. 9 op/byte accounting, plus a full sliding-window serving
+//!   forward pass ([`llama::LlamaRunner`]: RoPE attention over a fixed
+//!   KV ring, SiLU-gated FFN) generic over `WeightProvider` — the
+//!   second architecture through the packed-serve path, dispatched by
+//!   [`crate::coordinator::serve::decoder_for`].
 //! * [`synthetic`] — weight-family generators with controlled
 //!   distribution archetypes (uniform / uniform+outliers / Gaussian /
 //!   clustered), calibrated to the paper's RWKV-vs-LLaMA findings.

@@ -283,6 +283,14 @@ impl QuantizedModel {
         store::open_rwkvq2(path, mode)
     }
 
+    /// Open an RWKVQ2 checkpoint from an in-memory byte buffer — the
+    /// loader for hosts with no filesystem or mmap (wasm32 edge builds
+    /// fetch or embed the pack and hand the bytes here). Payloads are
+    /// copied out, so `bytes` may be dropped afterwards.
+    pub fn open_bytes(bytes: &[u8]) -> crate::Result<QuantizedModel> {
+        store::open_rwkvq2_bytes(bytes)
+    }
+
     pub fn get(&self, name: &str) -> Option<&ServedParam> {
         self.index.get(name).map(|&i| &self.entries[i].1)
     }

@@ -852,6 +852,15 @@ pub fn open_rwkvq2(path: &std::path::Path, mode: LoadMode) -> Result<QuantizedMo
     }
 }
 
+/// Parse an RWKVQ2 checkpoint from a caller-supplied byte buffer. This
+/// is the filesystem-less entry point for hosts without `std::fs` or
+/// mmap (wasm32: fetched over the network or embedded in the bundle) —
+/// every payload is copied out of `bytes`, so the buffer may be dropped
+/// after the call.
+pub fn open_rwkvq2_bytes(bytes: &[u8]) -> Result<QuantizedModel> {
+    parse_rwkvq2(bytes, None).context("parsing RWKVQ2 byte buffer")
+}
+
 fn parse_rwkvq2(buf: &[u8], map: Option<&Arc<Mmap>>) -> Result<QuantizedModel> {
     let mut r = ByteReader { buf, pos: 0 };
     if r.take(8)? != MAGIC_V2.as_slice() {

@@ -1,0 +1,80 @@
+//! Platform capability flags — the single place that answers "what can
+//! this build of the decode stack actually do at runtime?".
+//!
+//! `wasm32-unknown-unknown` (and other minimal targets) compile the full
+//! `std` surface, but threads, sockets, signals and `mmap` either error
+//! or trap at runtime. Rather than scattering `cfg!` probes through the
+//! serving stack, every platform-dependent subsystem declares its
+//! capability here and the coordinator consults these consts:
+//!
+//! * [`HAS_THREADS`] — can `std::thread::spawn` run? Gates the
+//!   [`crate::coordinator::serve::TickPool`] worker lanes and the fleet
+//!   engine threads; without it `resolve_tick_threads` collapses every
+//!   request to the sequential single-lane path.
+//! * [`HAS_MMAP`] — can checkpoints be memory-mapped
+//!   ([`crate::util::mmap`])? Without it `LoadMode::Auto` takes the
+//!   buffered read, and on filesystem-less hosts the caller supplies the
+//!   bytes itself ([`crate::model::QuantizedModel::open_bytes`]).
+//! * [`HAS_SIGNALS`] — can `signal(2)` handlers be installed
+//!   ([`crate::server::signal`])? Without it the gateway runs with no
+//!   graceful-drain hook.
+//! * [`HAS_AFFINITY`] — can tick lanes be pinned to CPUs
+//!   ([`crate::util::affinity`])? Linux-only; a no-op elsewhere.
+//! * [`HAS_SOCKETS`] — can `std::net` listeners bind? Gates the HTTP
+//!   gateway; edge builds drive [`crate::coordinator::edge`] directly.
+//!
+//! The wasm32 **decode core** — buffered/bytes loading plus the
+//! sequential tick path ([`crate::coordinator::edge::EdgeSession`]) —
+//! needs none of these, which is what `cargo check --target
+//! wasm32-unknown-unknown` gates in CI.
+
+/// Whether OS threads exist on this target (wasm32-unknown-unknown has
+/// a compiling `std::thread` whose `spawn` fails at runtime).
+pub const HAS_THREADS: bool = !cfg!(target_family = "wasm");
+
+/// Whether checkpoint files can be memory-mapped (64-bit little-endian
+/// unix — mirrors [`crate::util::mmap::SUPPORTED`]).
+pub const HAS_MMAP: bool = crate::util::mmap::SUPPORTED;
+
+/// Whether `signal(2)` shutdown handlers can be installed (unix).
+pub const HAS_SIGNALS: bool = cfg!(unix);
+
+/// Whether tick lanes can be pinned to CPUs (`sched_setaffinity`,
+/// Linux-only).
+pub const HAS_AFFINITY: bool = cfg!(target_os = "linux");
+
+/// Whether `std::net` sockets work on this target.
+pub const HAS_SOCKETS: bool = !cfg!(target_family = "wasm");
+
+/// One-line capability report (printed by `rwkvquant info`).
+pub fn summary() -> String {
+    format!(
+        "threads={} mmap={} signals={} affinity={} sockets={}",
+        HAS_THREADS, HAS_MMAP, HAS_SIGNALS, HAS_AFFINITY, HAS_SOCKETS
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_reports_every_capability() {
+        let s = summary();
+        for key in ["threads=", "mmap=", "signals=", "affinity=", "sockets="] {
+            assert!(s.contains(key), "missing '{key}' in '{s}'");
+        }
+    }
+
+    #[test]
+    fn native_test_hosts_have_threads() {
+        // the test suite itself runs threaded, so a host executing this
+        // test by definition has threads — the flag must agree
+        assert!(HAS_THREADS);
+    }
+
+    #[test]
+    fn mmap_flag_mirrors_the_mmap_module() {
+        assert_eq!(HAS_MMAP, crate::util::mmap::Mmap::supported());
+    }
+}

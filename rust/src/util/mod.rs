@@ -4,6 +4,7 @@
 
 pub mod affinity;
 pub mod benchkit;
+pub mod caps;
 pub mod cli;
 pub mod mmap;
 pub mod ptest;

@@ -69,6 +69,25 @@ fn vision_scores_track_quantization_quality() {
 }
 
 #[test]
+fn vision_eval_runs_over_packed_weights() {
+    use rwkvquant::model::QuantizedModel;
+    // the table3_vision bench path: divergence measured against the
+    // packed serving artifact (bitstreams + f16 dense), not a dense
+    // dequantized copy — scores must stay sane and below the fp anchor
+    let cfg = ModelConfig::rwkv6(1, 32, 128);
+    let m = generate_rwkv(&cfg, Family::Rwkv, 27);
+    let qc = QuantConfig { method: Method::Rtn, sq_bits: 4, ..Default::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 0);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    assert!(qm.n_packed() > 0, "pack must carry quantized payloads");
+    let s = vision::evaluate(&m, &qm, "RWKV-T", 9);
+    assert!(s.divergence.is_finite() && s.divergence >= 0.0);
+    assert!(s.cls > 0.0 && s.cls <= 75.10 + 1e-9);
+    assert!(s.det > 0.0 && s.seg > 0.0);
+}
+
+#[test]
 fn perplexity_tracks_quantization_on_synthetic_corpus() {
     let cfg = ModelConfig::rwkv6(1, 32, 128);
     let m = generate_rwkv(&cfg, Family::Rwkv, 24);

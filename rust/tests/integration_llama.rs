@@ -1,0 +1,97 @@
+//! Cross-architecture parity: a small LLaMA config runs the full
+//! quantize → RWKVQ2 pack → serve path and must emit greedy tokens
+//! identical to its dense twin — the same identity contract the RWKV
+//! stores are held to, through the identical tick machinery
+//! (`decoder_for` dispatches on the store's arch header).
+
+use rwkvquant::config::{ModelConfig, QuantConfig};
+use rwkvquant::coordinator::edge::EdgeSession;
+use rwkvquant::coordinator::quantize_model;
+use rwkvquant::coordinator::serve::{decoder_for, serve_collect, Request};
+use rwkvquant::model::llama::init_params;
+use rwkvquant::model::store::LoadMode;
+use rwkvquant::model::{QuantizedModel, WeightProvider};
+use rwkvquant::util::rng::Rng;
+use std::collections::HashMap;
+use std::time::Duration;
+
+const VOCAB: usize = 48;
+
+fn small_llama() -> rwkvquant::model::ModelWeights {
+    init_params(&ModelConfig::llama(2, 16, VOCAB), &mut Rng::new(2025))
+}
+
+fn greedy_requests() -> Vec<Request> {
+    (0..6u64)
+        .map(|id| Request::new(id, vec![(id as usize * 7 + 1) % VOCAB, 2, 5], 8))
+        .collect()
+}
+
+/// Serve the fixed greedy request set through the arch-dispatched
+/// decoder and return each request's generated tokens (sorted by id).
+fn serve_tokens<W: WeightProvider>(w: &W) -> Vec<Vec<usize>> {
+    let mut dec = decoder_for(w).unwrap();
+    let (stats, resp) =
+        serve_collect(&mut dec, greedy_requests(), 4, Duration::from_millis(1)).unwrap();
+    assert_eq!(stats.completed, 6);
+    resp.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn dense_twin_and_all_dense_pack_serve_identical_tokens() {
+    // a QuantizedModel with zero quantized layers is the dense model in
+    // the serving container — the twin must be exactly token-identical
+    let m = small_llama();
+    let twin = QuantizedModel::from_parts(&m, &HashMap::new());
+    assert_eq!(serve_tokens(&m), serve_tokens(&twin));
+}
+
+#[test]
+fn packed_llama_roundtrips_token_identical_through_disk() {
+    // the real pipeline: proxy-guided hybrid quantization, f16 dense
+    // narrowing, RWKVQ2 serialization — the in-memory pack and every
+    // reopened form (buffered read, auto/mmap, raw bytes) must serve
+    // the same greedy tokens
+    let m = small_llama();
+    let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 2);
+    assert!(!q.is_empty(), "hybrid must quantize some llama layers");
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    let reference = serve_tokens(&qm);
+
+    let path = std::env::temp_dir().join("itest_llama_pack.rwkvq2");
+    qm.save(&path).unwrap();
+    for mode in [LoadMode::Buffered, LoadMode::Auto] {
+        let back = QuantizedModel::open_with(&path, mode).unwrap();
+        assert_eq!(back.config.arch, "llama", "arch survives the pack header");
+        assert_eq!(serve_tokens(&back), reference, "mode {mode:?}");
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    let from_bytes = QuantizedModel::open_bytes(&bytes).unwrap();
+    assert_eq!(serve_tokens(&from_bytes), reference, "bytes loader");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn edge_session_matches_native_serve_greedy_tokens() {
+    // the wasm-shaped path (bytes in, sequential EdgeSession decode) and
+    // the native serve loop must agree token-for-token
+    let m = small_llama();
+    let qc = QuantConfig { kmeans_iters: 4, vq_bits: 6, ..QuantConfig::default() };
+    let (q, _) = quantize_model(&m, None, &qc, 2);
+    let mut qm = QuantizedModel::from_parts(&m, &q);
+    qm.dense_to_f16();
+    let path = std::env::temp_dir().join("itest_llama_edge.rwkvq2");
+    qm.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let edge_model = QuantizedModel::open_bytes(&bytes).unwrap();
+    let mut edge = EdgeSession::new(&edge_model).unwrap();
+    let native = serve_tokens(&qm);
+    for (i, req) in greedy_requests().into_iter().enumerate() {
+        edge.reset();
+        assert_eq!(edge.generate(&req.prompt, 8), native[i], "request {i}");
+    }
+}
