@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition (format 0.0.4) linter.
+
+Python mirror of `rust/src/server/metrics.rs::lint_exposition`, so the
+CI smoke can hold the *live* `/metrics` endpoint to the same rules the
+Rust unit tests enforce on the render paths:
+
+  - every sample's family carries exactly one `# HELP` and one `# TYPE`
+    line (with a known type) before its samples,
+  - label sets parse: `name{k="v",k2="v2"} value` with balanced quotes
+    and only `\\\\`, `\\"`, `\\n` escapes inside values,
+  - sample values parse as floats,
+  - no series (name + label set) appears twice,
+  - `_count` / `_sum` / `_bucket` children resolve to their parent
+    summary/histogram family.
+
+Importable (`lint_exposition(text) -> list[str]`, empty means clean) and
+runnable: `python3 check_metrics.py dump.prom` or pipe on stdin.
+"""
+
+import re
+import sys
+
+KNOWN_TYPES = {"counter", "gauge", "summary", "histogram", "untyped"}
+_LABEL_NAME = re.compile(r"^[A-Za-z0-9_]+$")
+
+
+def _parse_label_body(body: str) -> str | None:
+    """Parse `k="v",k2="v2"`; return a problem string or None."""
+    i, n = 0, len(body)
+    while True:
+        eq = body.find("=", i)
+        name = body[i:eq] if eq != -1 else ""
+        if not name or not _LABEL_NAME.match(name):
+            return f"bad label name {name!r}"
+        i = eq + 1
+        if i >= n or body[i] != '"':
+            return f"label {name} value not quoted"
+        i += 1
+        closed = False
+        while i < n:
+            c = body[i]
+            if c == "\\":
+                if i + 1 >= n or body[i + 1] not in ('\\', '"', "n"):
+                    esc = body[i + 1] if i + 1 < n else None
+                    return f"bad escape {esc!r} in label {name}"
+                i += 2
+                continue
+            i += 1
+            if c == '"':
+                closed = True
+                break
+        if not closed:
+            return f"unterminated value for label {name}"
+        if i == n:
+            return None
+        if body[i] != ",":
+            return f"unexpected {body[i]!r} after label {name}"
+        i += 1
+
+
+def lint_exposition(text: str) -> list[str]:
+    """Return the list of problems in a text exposition (empty = clean)."""
+    problems: list[str] = []
+    help_count: dict[str, int] = {}
+    type_count: dict[str, int] = {}
+    seen_series: dict[str, int] = {}
+    for ln, line in enumerate(text.splitlines(), start=1):
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            parts = line[len("# HELP "):].split()
+            if not parts:
+                problems.append(f"line {ln}: HELP without a family name")
+                continue
+            help_count[parts[0]] = help_count.get(parts[0], 0) + 1
+            continue
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE "):].split()
+            if len(parts) < 2:
+                problems.append(f"line {ln}: malformed TYPE line")
+                continue
+            name, kind = parts[0], parts[1]
+            if kind not in KNOWN_TYPES:
+                problems.append(f"line {ln}: unknown type {kind!r} for {name}")
+            type_count[name] = type_count.get(name, 0) + 1
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+        # sample line: name{labels}? value
+        series, sep, value = line.rpartition(" ")
+        if not sep:
+            problems.append(f"line {ln}: sample without a value")
+            continue
+        try:
+            float(value)
+        except ValueError:
+            problems.append(f"line {ln}: unparsable sample value {value!r}")
+        name = series
+        if "{" in series:
+            name, _, labels = series.partition("{")
+            if labels.endswith("}"):
+                err = _parse_label_body(labels[:-1])
+                if err is not None:
+                    problems.append(f"line {ln}: bad label set: {err}")
+            else:
+                problems.append(f"line {ln}: unclosed label set")
+        family = name
+        for suf in ("_count", "_sum", "_bucket"):
+            if name.endswith(suf) and name[: -len(suf)] in type_count:
+                family = name[: -len(suf)]
+                break
+        if family not in type_count:
+            problems.append(f"line {ln}: sample {name} has no preceding # TYPE")
+        if family not in help_count:
+            problems.append(f"line {ln}: sample {name} has no preceding # HELP")
+        if series in seen_series:
+            problems.append(
+                f"line {ln}: duplicate series {series} (first at line {seen_series[series]})"
+            )
+        else:
+            seen_series[series] = ln
+    for name, n in help_count.items():
+        if n > 1:
+            problems.append(f"family {name}: {n} HELP lines")
+    for name, n in type_count.items():
+        if n > 1:
+            problems.append(f"family {name}: {n} TYPE lines")
+    return sorted(problems)
+
+
+def _selftest() -> None:
+    clean = (
+        "# HELP a_total Things.\n# TYPE a_total counter\n"
+        'a_total{model="x",lane="0"} 3\na_total{model="y\\"z"} 1\n'
+        "# HELP lat Latency.\n# TYPE lat summary\n"
+        'lat{quantile="0.5"} 0.1\nlat_count 2\nlat_sum 0.4\n'
+    )
+    assert lint_exposition(clean) == [], lint_exposition(clean)
+    bad = 'orphan_total 1\n# TYPE b gauge\nb{k="v} 2\nb 1\nb 1\nb nope\n'
+    found = "\n".join(lint_exposition(bad))
+    for needle in ("no preceding # TYPE", "unterminated value", "duplicate series", "unparsable"):
+        assert needle in found, f"{needle!r} not caught:\n{found}"
+
+
+def main(argv: list[str]) -> int:
+    _selftest()
+    if len(argv) > 1:
+        text = open(argv[1], encoding="utf-8").read()
+    else:
+        text = sys.stdin.read()
+    problems = lint_exposition(text)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"FAIL: {len(problems)} problem(s)")
+        return 1
+    samples = sum(
+        1 for l in text.splitlines() if l and not l.startswith("#")
+    )
+    print(f"OK: {samples} samples lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

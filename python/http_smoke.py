@@ -12,9 +12,16 @@ Stdlib only. The script:
      path and requires `0 < ttft_ms < latency_ms` in the response,
   5. runs the in-process twin (`serve --prompt ... --print-tokens`) on
      the same store and **gates on token-identical output**,
-  6. scrapes /metrics and checks the serving counters,
-  7. sends SIGTERM and requires a graceful exit with code 0,
-  8. then re-serves as a two-model fleet (`--model a=… --model b=…`):
+  6. observability: the server runs with `--log-json` — the request id
+     from the SSE `done` event must also appear in a structured
+     `request done` log line on stderr and resolve on
+     `GET /admin/trace/{id}`; a long request is observed mid-decode on
+     `GET /admin/inflight`,
+  7. scrapes /metrics, checks the serving counters plus the lane
+     utilization and kernel attribution families, and lints the whole
+     exposition with `check_metrics.lint_exposition`,
+  8. sends SIGTERM and requires a graceful exit with code 0,
+  9. then re-serves as a two-model fleet (`--model a=… --model b=…`):
      requests route by their `"model"` field (model `a` must reproduce
      the single-model tokens from step 3 on the same store),
      `GET /v1/models` lists both, `/metrics` carries `model="…"` labels,
@@ -39,8 +46,14 @@ import threading
 import time
 from pathlib import Path
 
+import check_metrics
+
 GEN_LEN = 8
 PROMPT = [3, 1, 2]
+
+# request id of the most recent generate() response (SSE done event /
+# JSON document), for the structured-log and /admin/trace assertions
+last_request_id: int | None = None
 
 
 def log(msg: str) -> None:
@@ -81,10 +94,13 @@ def generate(port: int, stream: bool) -> list[int]:
     resp = conn.getresponse()
     body = resp.read().decode()
     conn.close()
+    global last_request_id
     if resp.status != 200:
         raise SystemExit(f"/v1/generate (stream={stream}) answered {resp.status}: {body}")
     if not stream:
-        return json.loads(body)["tokens"]
+        doc = json.loads(body)
+        last_request_id = doc.get("id")
+        return doc["tokens"]
     if "text/event-stream" not in (resp.getheader("Content-Type") or ""):
         raise SystemExit(f"streamed response has wrong content type: {resp.getheader('Content-Type')}")
     events = [json.loads(line[len("data: "):]) for line in body.splitlines() if line.startswith("data: ")]
@@ -96,6 +112,7 @@ def generate(port: int, stream: bool) -> list[int]:
         raise SystemExit(
             f"incremental tokens {incremental} disagree with done event {done[0]['tokens']}"
         )
+    last_request_id = done[0].get("id")
     return incremental
 
 
@@ -137,6 +154,77 @@ def api(port: int, method: str, path: str, payload: dict | None = None, timeout:
         return resp.status, json.loads(text)
     except ValueError:
         return resp.status, text
+
+
+def lint_metrics(text: str, where: str) -> None:
+    problems = check_metrics.lint_exposition(text)
+    if problems:
+        listing = "\n".join(problems)
+        raise SystemExit(f"/metrics ({where}) failed the Prometheus lint:\n{listing}\n{text}")
+
+
+def wait_log_line(logpath: Path, needle: str, timeout: float = 15.0) -> str:
+    """First stderr log line containing `needle` (the writes are
+    unbuffered line appends, so polling the file is race-free)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        for line in logpath.read_text().splitlines():
+            if needle in line:
+                return line
+        time.sleep(0.05)
+    raise SystemExit(f"log line containing {needle!r} never appeared:\n{logpath.read_text()}")
+
+
+def observability_checks(port: int, logpath: Path) -> None:
+    """Step 6: request ids thread HTTP → logs → trace; inflight is live."""
+    if not isinstance(last_request_id, int):
+        raise SystemExit(f"done event carried no integer request id: {last_request_id!r}")
+    rid = last_request_id
+
+    # the id from the SSE done event appears in a structured JSON log
+    line = wait_log_line(logpath, f'"id":{rid}')
+    entry = json.loads(line)  # must be one valid JSON document per line
+    if entry.get("msg") != "request done" or entry.get("level") != "info":
+        raise SystemExit(f"unexpected log entry for request {rid}: {line}")
+    log(f"request id {rid} found in the JSON log stream OK")
+
+    # ... and resolves to spans on the trace endpoint
+    status, doc = api(port, "GET", f"/admin/trace/{rid}")
+    if status != 200 or doc.get("id") != rid or not doc.get("spans"):
+        raise SystemExit(f"/admin/trace/{rid} answered {status}: {doc}")
+    stages = {s["stage"] for s in doc["spans"]}
+    if not {"queue", "decode"} <= stages:
+        raise SystemExit(f"trace for {rid} misses core stages: {sorted(stages)}")
+    log(f"/admin/trace/{rid} serves {len(doc['spans'])} spans ({sorted(stages)}) OK")
+
+    # a long request is visible on /admin/inflight while it decodes
+    result: dict = {}
+
+    def long_request() -> None:
+        status, doc = api(
+            port, "POST", "/v1/generate",
+            {"prompt": PROMPT, "gen_len": 64, "stream": False},
+        )
+        result["status"], result["doc"] = status, doc
+
+    t = threading.Thread(target=long_request)
+    t.start()
+    seq = None
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline and seq is None:
+        status, doc = api(port, "GET", "/admin/inflight", timeout=10)
+        if status != 200:
+            raise SystemExit(f"/admin/inflight answered {status}: {doc}")
+        if doc["sequences"]:
+            seq = doc["sequences"][0]
+    t.join(timeout=120)
+    if seq is None:
+        raise SystemExit("the long request never showed up on /admin/inflight")
+    if result.get("status") != 200 or len(result["doc"]["tokens"]) != 64:
+        raise SystemExit(f"long request failed under inflight polling: {result}")
+    if seq["gen_len"] != 64 or seq["stage"] not in ("prefill", "decode", "parked"):
+        raise SystemExit(f"malformed inflight entry: {seq}")
+    log(f"/admin/inflight saw the live sequence (stage {seq['stage']}) OK")
 
 
 def fleet_generate(port: int, model: str, gen_len: int = GEN_LEN) -> list[int]:
@@ -218,12 +306,14 @@ def fleet_smoke(binary: str, store_a: Path, store_b: Path, single_tokens: list[i
         log("post-swap output matches the new store OK")
 
         text = scrape_metrics(port)
+        lint_metrics(text, "fleet")
         for model in ("a", "b"):
             labeled_metric(text, "rwkvquant_generate_requests_total", model)
             labeled_metric(text, "rwkvquant_served_tokens_total", model)
             labeled_metric(text, "rwkvquant_queue_depth", model)
+            labeled_metric(text, "rwkvquant_mapped_stores", model)
         metric_value(text, "rwkvquant_http_requests_total")  # gateway-level, unlabeled
-        log("per-model /metrics labels OK")
+        log("per-model /metrics labels OK (fleet exposition lints clean)")
 
         log("sending SIGTERM for a graceful fleet drain …")
         server.send_signal(signal.SIGTERM)
@@ -252,15 +342,18 @@ def main() -> None:
     )
 
     port = free_port()
-    log(f"starting gateway on 127.0.0.1:{port} …")
-    server = subprocess.Popen(
-        [
-            binary, "serve", "--store", str(store),
-            "--http", f"127.0.0.1:{port}",
-            "--max-queue", "8", "--batch", "4", "--tick-threads", "2",
-            "--prefill-chunk", "16",
-        ]
-    )
+    logpath = tmp / "gateway.stderr.jsonl"
+    log(f"starting gateway on 127.0.0.1:{port} (--log-json → {logpath.name}) …")
+    with open(logpath, "w", encoding="utf-8") as logfile:
+        server = subprocess.Popen(
+            [
+                binary, "serve", "--store", str(store),
+                "--http", f"127.0.0.1:{port}",
+                "--max-queue", "8", "--batch", "4", "--tick-threads", "2",
+                "--prefill-chunk", "16", "--log-json",
+            ],
+            stderr=logfile,
+        )
     try:
         wait_healthy(port, server)
         log("healthz OK")
@@ -317,7 +410,10 @@ def main() -> None:
             )
         log("token-identical to the in-process twin OK")
 
+        observability_checks(port, logpath)
+
         text = scrape_metrics(port)
+        lint_metrics(text, "single-model")
         served = metric_value(text, "rwkvquant_served_tokens_total")
         if served < 2 * GEN_LEN:
             raise SystemExit(f"served_tokens_total {served} < {2 * GEN_LEN}")
@@ -329,7 +425,28 @@ def main() -> None:
             raise SystemExit(f"prefill_tokens_total {prefill} < {len(long_prompt)}")
         if metric_value(text, "rwkvquant_ttft_seconds_count") < 3:
             raise SystemExit("ttft summary saw fewer requests than we sent")
-        log("metrics OK")
+        # observability families: lane utilization (2 tick threads →
+        # lead lane 0 + worker lane 1), kernel attribution over the
+        # packed store, and the process gauges
+        for lane in (0, 1):
+            if not re.search(
+                rf'^rwkvquant_lane_busy_seconds_total{{lane="{lane}"}} ', text, re.MULTILINE
+            ):
+                raise SystemExit(f"lane {lane} busy series missing from /metrics:\n{text}")
+        kernel_calls = 0.0
+        for m in re.finditer(
+            r'^rwkvquant_kernel_matvec_calls_total\{op="(?:sq|vq)",kernel="\w+"\} (\S+)$',
+            text, re.MULTILINE,
+        ):
+            kernel_calls += float(m.group(1))
+        if kernel_calls <= 0:
+            raise SystemExit(f"no Sq/Vq matvecs attributed on /metrics:\n{text}")
+        metric_value(text, "rwkvquant_mapped_stores")
+        metric_value(text, "rwkvquant_inflight_sequences")
+        if sys.platform.startswith("linux"):
+            if metric_value(text, "rwkvquant_process_resident_bytes") <= 0:
+                raise SystemExit("resident-set gauge is zero on Linux")
+        log("metrics OK (incl. lane/kernel/process observability families)")
 
         log("sending SIGTERM for a graceful drain …")
         server.send_signal(signal.SIGTERM)

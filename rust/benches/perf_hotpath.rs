@@ -131,6 +131,80 @@ fn main() {
         );
     }
 
+    // observability overhead: identical serve runs with tracing off
+    // (NoopObserver → disabled TraceHub fast path, kstats cold) vs on
+    // (Metrics observer with an enabled hub + kernel attribution). The
+    // off run is the tier-1 hot path and must not regress; the on run
+    // prices the spans + counters for docs/OBSERVABILITY.md.
+    {
+        use rwkvquant::coordinator::serve::{
+            decoder_for, serve_pool_with, NoopObserver, Response, ServeStats,
+        };
+        use rwkvquant::model::QuantizedModel;
+        use rwkvquant::quant::exec::kstats;
+        use rwkvquant::server::Metrics;
+        use std::sync::mpsc;
+
+        // quantized decoder so the traced run exercises the instrumented
+        // Sq/Vq/DenseF16 matvecs, not the dense reference runner
+        let mq = generate_rwkv(&ModelConfig::rwkv6(6, 256, 512), Family::Rwkv, 19);
+        let qc = QuantConfig { kmeans_iters: 3, ..Default::default() };
+        let (q, _) = quantize_model(&mq, None, &qc, 0);
+        let qm = QuantizedModel::from_parts(&mq, &q);
+        let vocab = qm.config.vocab;
+        let requests = || -> Vec<Request> {
+            (0..8u64)
+                .map(|id| Request::new(id, vec![(id as usize * 31 + 1) % vocab, 4, 5], 8))
+                .collect()
+        };
+        let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(2, 4);
+        let mut decs = (0..lanes)
+            .map(|_| decoder_for(&qm))
+            .collect::<rwkvquant::Result<Vec<_>>>()
+            .unwrap();
+        let run = |decs: &mut Vec<_>,
+                   obs: &dyn rwkvquant::coordinator::serve::ServeObserver|
+         -> (ServeStats, Vec<Response>) {
+            let (tx_req, rx_req) = mpsc::channel();
+            let (tx_resp, rx_resp) = mpsc::channel();
+            for r in requests() {
+                tx_req.send(r).unwrap();
+            }
+            drop(tx_req);
+            let opts = ServeOpts::new(4, Duration::from_millis(1)).with_prefill_chunk(16);
+            let stats = serve_pool_with(decs, rx_req, tx_resp, &opts, obs).unwrap();
+            let mut out: Vec<Response> = rx_resp.iter().collect();
+            out.sort_by_key(|r| r.id);
+            (stats, out)
+        };
+        run(&mut decs, &NoopObserver); // warm-up
+        let ((off, off_toks), t_off) = b.once(&format!("serve quantized tracing off x{lanes}"), || {
+            run(&mut decs, &NoopObserver)
+        });
+        let metrics = Metrics::new();
+        metrics.trace().set_enabled(true);
+        kstats::set_enabled(true);
+        let ((on, on_toks), t_on) = b.once(&format!("serve quantized tracing on x{lanes}"), || {
+            run(&mut decs, &metrics)
+        });
+        kstats::set_enabled(false);
+        // tracing must never perturb the token stream (twin identity)
+        for (a, c) in off_toks.iter().zip(&on_toks) {
+            assert_eq!(a.tokens, c.tokens, "tracing changed tokens for request {}", a.id);
+        }
+        let attributed: u64 = kstats::snapshot().iter().map(|&(_, _, calls, _)| calls).sum();
+        println!(
+            "tracing overhead at batch 4 (quantized L6 d256, {lanes} lanes): \
+             {:.1} tok/s off vs {:.1} tok/s on \
+             ({:.2}x, wall {:.0} ms vs {:.0} ms, {attributed} matvecs attributed)",
+            off.tokens_per_sec(),
+            on.tokens_per_sec(),
+            on.tokens_per_sec() / off.tokens_per_sec().max(1e-9),
+            t_off.as_secs_f64() * 1e3,
+            t_on.as_secs_f64() * 1e3,
+        );
+    }
+
     // proxy cost on a realistic layer
     let mut w = Matrix::zeros(512, 512);
     rng.fill_normal(&mut w.data, 0.0, 0.05);

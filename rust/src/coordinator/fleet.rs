@@ -54,6 +54,11 @@ pub struct FleetConfig {
     /// models keep requests in flight long enough to swap under them.
     /// Zero (the default) adds no overhead.
     pub step_delay: Duration,
+    /// Enable per-request span tracing on every engine's metrics
+    /// registry (`/admin/trace/{id}`, `/admin/inflight`). Must be
+    /// decided at load time — each engine resolves its trace hub once
+    /// per serve session. `--no-trace` clears it.
+    pub trace: bool,
 }
 
 impl Default for FleetConfig {
@@ -66,6 +71,7 @@ impl Default for FleetConfig {
             popts: PoolOpts::default(),
             load_mode: LoadMode::Auto,
             step_delay: Duration::ZERO,
+            trace: true,
         }
     }
 }
@@ -152,6 +158,10 @@ pub struct ModelOverrides {
     /// Admission-queue bound for this engine only — a small model can
     /// keep a deep queue while a big one sheds early.
     pub max_queue: Option<usize>,
+    /// Decoder lanes for this engine only (overrides
+    /// [`FleetConfig::lanes`]) — a hot small model can fan its ticks
+    /// out while big models stay single-lane.
+    pub tick_threads: Option<usize>,
 }
 
 /// Arch-dispatched decoder lane with the fleet's optional test throttle.
@@ -265,14 +275,21 @@ impl Fleet {
             .map(|d| d.as_secs())
             .unwrap_or(0);
         let metrics = Arc::new(Metrics::new());
+        metrics.mapped_stores.store(model.n_mapped() as u64, Ordering::Relaxed);
+        // trace must be decided before the engine thread starts: the
+        // serve loop resolves its hub once at session start
+        metrics.trace().set_enabled(self.cfg.trace);
         let (tx_req, rx_req) = mpsc::channel::<Request>();
         let (tx_resp, rx_resp) = mpsc::channel::<Response>();
         // handlers consume their own event streams; the serve loop
         // tolerates a closed response channel
         drop(rx_resp);
-        let FleetConfig { lanes, mut opts, popts, step_delay, .. } = self.cfg;
+        let FleetConfig { mut lanes, mut opts, popts, step_delay, .. } = self.cfg;
         if let Some(cap) = ov.max_queue {
             opts = opts.with_max_queue(cap);
+        }
+        if let Some(n) = ov.tick_threads {
+            lanes = n.max(1);
         }
         let obs = metrics.clone();
         let thread = std::thread::Builder::new()
@@ -520,11 +537,37 @@ mod tests {
 
         let fleet = Fleet::new(FleetConfig::default());
         let e = fleet
-            .load_with("lm", &p, ModelOverrides { max_queue: Some(2) })
+            .load_with("lm", &p, ModelOverrides { max_queue: Some(2), ..Default::default() })
             .unwrap();
         assert_eq!(e.vocab(), 32);
         let toks = run_once(&fleet, "lm", vec![1, 2, 3], 4);
         assert_eq!(toks.len(), 4);
+        fleet.drain();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn per_model_tick_threads_override_adds_lanes() {
+        let p = pack_store("lanes", 17);
+        let fleet = Fleet::new(FleetConfig::default()); // fleet-wide: 1 lane
+        let e = fleet
+            .load_with("m", &p, ModelOverrides { tick_threads: Some(3), ..Default::default() })
+            .unwrap();
+        let toks = run_once(&fleet, "m", vec![3, 1, 4], 5);
+        assert_eq!(toks.len(), 5);
+        // a 3-lane pool reports busy time for lanes 0..3 once a traced
+        // tick ran — the override visibly reached with_tick_pool_opts
+        let text = e.metrics().render_prometheus();
+        assert!(text.contains("rwkvquant_lane_busy_seconds_total{lane=\"2\"}"), "{text}");
+        // an engine without the override stays on the fleet-wide single
+        // lane (no per-lane accounting at all)
+        let e1 = fleet.load_with("s", &p, ModelOverrides::default()).unwrap();
+        let toks = run_once(&fleet, "s", vec![3, 1, 4], 2);
+        assert_eq!(toks.len(), 2);
+        let text = e1.metrics().render_prometheus();
+        assert!(!text.contains("rwkvquant_lane_busy_seconds_total{lane="), "{text}");
+        // mapped-store gauge reflects the packed store's mmap
+        assert!(e.metrics().render_prometheus().contains("rwkvquant_mapped_stores"));
         fleet.drain();
         std::fs::remove_file(p).ok();
     }

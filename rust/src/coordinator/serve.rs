@@ -53,9 +53,10 @@ use super::sampler::{SampleParams, Sampler};
 use super::statepool::StatePool;
 use crate::model::WeightProvider;
 use crate::tensor::stats;
+use crate::util::trace::{SeqStage, Stage, TraceHub, CONTROL_LANE};
 use crate::Result;
 use std::collections::HashSet;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::ThreadId;
 use std::time::{Duration, Instant};
@@ -401,6 +402,27 @@ pub trait ServeObserver: Sync {
     /// A tick produced `n` tokens through the stochastic sampler (the
     /// greedy/argmax path does not count).
     fn on_sampled_tokens(&self, _n: usize) {}
+    /// The observer's span sink, if it records traces. The serve loop
+    /// resolves this once per session and skips every trace/inflight
+    /// call site when it is `None` or disabled, so observers without
+    /// tracing pay nothing.
+    fn trace_hub(&self) -> Option<&TraceHub> {
+        None
+    }
+    /// A request (by gateway id) entered the active set. Only called
+    /// while the observer's [`TraceHub`] is enabled.
+    fn on_seq_admitted(&self, _id: u64, _prompt_len: usize, _gen_len: usize) {}
+    /// Per-tick position of an active sequence (stage, generated count,
+    /// resident slab slot or `None` while parked). Trace-gated like
+    /// [`ServeObserver::on_seq_admitted`].
+    fn on_seq_progress(&self, _id: u64, _stage: SeqStage, _generated: usize, _slab: Option<usize>) {}
+    /// A request left the active set (completed or cancelled).
+    /// Trace-gated like [`ServeObserver::on_seq_admitted`].
+    fn on_seq_done(&self, _id: u64) {}
+    /// Cumulative per-lane busy time (nanoseconds, index = lane) of the
+    /// tick engine, reported once per serve-loop iteration while
+    /// tracing is enabled. Empty on single-lane engines.
+    fn on_lane_busy(&self, _busy_ns: &[u64]) {}
 }
 
 /// The do-nothing [`ServeObserver`].
@@ -461,12 +483,42 @@ struct Active {
 // `StatePool::slab_ptr`.
 unsafe impl Send for Active {}
 
+/// Nullable `Copy` handle to the observer's [`TraceHub`], threaded to
+/// the tick lanes inside [`TickParams`] (and hence [`Chunk`]) — the
+/// workers' only channel to the serve loop's observer. Null when the
+/// observer records no traces.
+#[derive(Debug, Clone, Copy)]
+struct TracePtr(*const TraceHub);
+
+impl TracePtr {
+    fn of(hub: Option<&TraceHub>) -> TracePtr {
+        TracePtr(hub.map_or(std::ptr::null(), |h| h as *const TraceHub))
+    }
+
+    /// SAFETY (caller-free, argued here once): the pointer is derived
+    /// from the `obs` borrow held across the whole `serve_loop` call,
+    /// and every `TickParams` copy lives inside a tick — chunks are
+    /// fully acknowledged before `TickPool::tick` returns (see
+    /// [`Chunk`]), which itself returns into `serve_loop` — so the hub
+    /// outlives every dereference.
+    fn get<'a>(self) -> Option<&'a TraceHub> {
+        unsafe { self.0.as_ref() }
+    }
+}
+
+// SAFETY: the raw pointer targets a `TraceHub`, which is `Sync` (atomics
+// + mutex shards), so shared references to it may cross threads; the
+// lifetime argument is on `TracePtr::get`.
+unsafe impl Send for TracePtr {}
+
 /// Per-tick parameters every chunk job carries (workers have no other
 /// channel to the serve loop's options).
 #[derive(Debug, Clone, Copy)]
 struct TickParams {
     prefill_chunk: usize,
     state_len: usize,
+    /// Span sink for per-stage tick spans (null = tracing off).
+    trace: TracePtr,
 }
 
 /// What one tick (or one chunk of it) accomplished.
@@ -506,7 +558,15 @@ impl std::iter::Sum for TickWork {
 /// change the generated tokens — only how many ticks the prompt costs.
 /// With the slab resident and the logits buffer reused (`step_into`), a
 /// warmed-up sequence ticks without allocating.
-fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickParams) -> TickWork {
+fn tick_one<D: Decoder + ?Sized>(
+    decoder: &mut D,
+    a: &mut Active,
+    params: TickParams,
+    lane: u32,
+) -> TickWork {
+    // tracing: one relaxed load on the disabled path, no clock reads
+    let hub = params.trace.get().filter(|h| h.enabled());
+    let t0 = hub.map(|_| Instant::now());
     // SAFETY: `state_ptr` names this sequence's exclusive arena slab of
     // `state_len` floats, refreshed for this tick by the serve loop; no
     // other lane touches it (chunks are disjoint) and the serve thread
@@ -514,6 +574,8 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickPa
     let state = unsafe { std::slice::from_raw_parts_mut(a.state_ptr, params.state_len) };
     decoder.load_state_flat(state);
     let mut work = TickWork::default();
+    let mut sample_at: Option<Instant> = None;
+    let mut sample_dur = Duration::ZERO;
     if a.prompt_pos < a.req.prompt.len() {
         let n = params.prefill_chunk.max(1).min(a.req.prompt.len() - a.prompt_pos);
         for _ in 0..n {
@@ -523,6 +585,7 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickPa
         }
         work.prefill = n;
     } else {
+        sample_at = t0.map(|_| Instant::now());
         let next = match a.sampler.as_mut() {
             Some(s) if !s.params().is_greedy() => {
                 work.sampled = 1;
@@ -530,11 +593,28 @@ fn tick_one<D: Decoder + ?Sized>(decoder: &mut D, a: &mut Active, params: TickPa
             }
             _ => stats::argmax(&a.logits),
         };
+        if let Some(s0) = sample_at {
+            sample_dur = s0.elapsed();
+        }
         a.generated.push(next);
         decoder.step_into(next, &mut a.logits);
         work.generated = 1;
     }
     decoder.save_state_into(state);
+    if let (Some(hub), Some(t0)) = (hub, t0) {
+        let total = t0.elapsed();
+        if work.prefill > 0 {
+            hub.record_at(a.req.id, Stage::Prefill, lane, t0, total);
+        } else {
+            // decode + sample tile the tick without overlap: the decode
+            // span's duration excludes the sample span's, so per-stage
+            // sums add up to the tick's wall time
+            if let Some(s0) = sample_at {
+                hub.record_at(a.req.id, Stage::Sample, lane, s0, sample_dur);
+            }
+            hub.record_at(a.req.id, Stage::Decode, lane, t0, total.saturating_sub(sample_dur));
+        }
+    }
     work
 }
 
@@ -589,6 +669,11 @@ trait TickEngine {
     /// Advance every active sequence one tick; every sequence must have
     /// a live `state_ptr` (the serve loop guarantees residency).
     fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork;
+    /// Cumulative busy nanoseconds per lane (index = lane; lane 0 is
+    /// the lead). Empty on engines without lane accounting.
+    fn lane_busy_ns(&self) -> Vec<u64> {
+        Vec::new()
+    }
 }
 
 struct Sequential<'d, D: Decoder>(&'d mut D);
@@ -608,7 +693,7 @@ impl<D: Decoder> TickEngine for Sequential<'_, D> {
     }
 
     fn tick(&mut self, active: &mut [Active], params: TickParams) -> TickWork {
-        active.iter_mut().map(|a| tick_one(self.0, a, params)).sum()
+        active.iter_mut().map(|a| tick_one(self.0, a, params, 0)).sum()
     }
 }
 
@@ -638,7 +723,7 @@ impl<D: Decoder + Send> TickEngine for SpawnPerTick<'_, D> {
         let workers = self.0.len().min(active.len());
         if workers <= 1 {
             let dec = &mut self.0[0];
-            return active.iter_mut().map(|a| tick_one(dec, a, params)).sum();
+            return active.iter_mut().map(|a| tick_one(dec, a, params, 0)).sum();
         }
         // equal-count split kept on purpose: this engine is the measured
         // baseline, including for the cost-weighted split above it
@@ -647,9 +732,13 @@ impl<D: Decoder + Send> TickEngine for SpawnPerTick<'_, D> {
             let handles: Vec<_> = active
                 .chunks_mut(chunk)
                 .zip(self.0.iter_mut())
-                .map(|(slice, dec)| {
+                .enumerate()
+                .map(|(lane, (slice, dec))| {
                     s.spawn(move || {
-                        slice.iter_mut().map(|a| tick_one(dec, a, params)).sum::<TickWork>()
+                        slice
+                            .iter_mut()
+                            .map(|a| tick_one(dec, a, params, lane as u32))
+                            .sum::<TickWork>()
                     })
                 })
                 .collect();
@@ -761,14 +850,24 @@ impl Injector {
     }
 }
 
-fn pool_worker<D: Decoder>(dec: &mut D, injector: &Injector, done: &mpsc::Sender<Ack>) {
+fn pool_worker<D: Decoder>(
+    lane: u32,
+    dec: &mut D,
+    injector: &Injector,
+    done: &mpsc::Sender<Ack>,
+    busy: &AtomicU64,
+) {
     while let Some(chunk) = injector.claim_blocking() {
         // SAFETY: see `Chunk` — disjoint window, alive until acked.
         let slice = unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.len) };
         let params = chunk.params;
+        let claimed = Instant::now();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            slice.iter_mut().map(|a| tick_one(dec, a, params)).sum::<TickWork>()
+            slice.iter_mut().map(|a| tick_one(dec, a, params, lane)).sum::<TickWork>()
         }));
+        // claim-to-ack busy time: two clock reads per chunk, orders of
+        // magnitude under the decode work the chunk carries
+        busy.fetch_add(claimed.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let ack = match outcome {
             Ok(work) => Ack::Done { work, worker: std::thread::current().id() },
             Err(_) => Ack::Panicked,
@@ -801,6 +900,9 @@ pub struct TickPool<'p, D: Decoder> {
     done_rx: Option<mpsc::Receiver<Ack>>,
     ticks: u64,
     seen_workers: HashSet<ThreadId>,
+    /// Cumulative busy nanoseconds, index = lane (0 = lead); shared
+    /// with the worker threads. `None` on single-lane pools.
+    busy: Option<&'p [AtomicU64]>,
 }
 
 impl<D: Decoder> Drop for TickPool<'_, D> {
@@ -879,10 +981,15 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
         self.ticks += 1;
         let (Some(injector), Some(done_rx)) = (self.injector, self.done_rx.as_ref()) else {
             // single-lane pool: tick sequentially on the lead decoder
-            return active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params)).sum();
+            return active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params, 0)).sum();
         };
         if active.len() <= 1 {
-            return active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params)).sum();
+            let t0 = Instant::now();
+            let work = active.iter_mut().map(|a| tick_one(&mut *self.lead, a, params, 0)).sum();
+            if let Some(busy) = self.busy {
+                busy[0].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            return work;
         }
         let lanes = self.spawned + 1;
         let max_chunks = active.len().min(lanes * CHUNK_OVERSUB);
@@ -908,17 +1015,22 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
         let mut work = TickWork::default();
         let claimed_by_lead = std::cell::Cell::new(0usize);
         let lead = &mut *self.lead;
+        let lead_busy = self.busy.map(|b| &b[0]);
         let lead_outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut w = TickWork::default();
             while let Some(job) = injector.claim() {
                 claimed_by_lead.set(claimed_by_lead.get() + 1);
+                let t0 = Instant::now();
                 // SAFETY: see `Chunk` — disjoint window, alive until the
                 // ack accounting below completes.
                 let slice = unsafe { std::slice::from_raw_parts_mut(job.ptr, job.len) };
                 w += slice
                     .iter_mut()
-                    .map(|a| tick_one(&mut *lead, a, job.params))
+                    .map(|a| tick_one(&mut *lead, a, job.params, 0))
                     .sum::<TickWork>();
+                if let Some(busy) = lead_busy {
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             }
             w
         }));
@@ -956,6 +1068,12 @@ impl<D: Decoder + Send> TickEngine for TickPool<'_, D> {
             panic!("tick worker panicked");
         }
         work
+    }
+
+    fn lane_busy_ns(&self) -> Vec<u64> {
+        self.busy
+            .map(|b| b.iter().map(|n| n.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default()
     }
 }
 
@@ -1007,20 +1125,23 @@ pub fn with_tick_pool_opts<D: Decoder + Send, R>(
             done_rx: None,
             ticks: 0,
             seen_workers: HashSet::new(),
+            busy: None,
         };
         return f(&mut pool);
     }
     let injector = Injector::new();
+    let busy: Vec<AtomicU64> = (0..rest.len() + 1).map(|_| AtomicU64::new(0)).collect();
     let (done_tx, done_rx) = mpsc::channel::<Ack>();
     std::thread::scope(|s| {
         for (i, dec) in rest.iter_mut().enumerate() {
             let done = done_tx.clone();
             let injector = &injector;
+            let lane_busy = &busy[i + 1];
             s.spawn(move || {
                 if popts.pin_workers {
                     crate::util::affinity::pin_current_thread(i + 1);
                 }
-                pool_worker(dec, injector, &done)
+                pool_worker((i + 1) as u32, dec, injector, &done, lane_busy)
             });
         }
         // workers hold the only Ack senders: a vanished worker surfaces
@@ -1033,6 +1154,7 @@ pub fn with_tick_pool_opts<D: Decoder + Send, R>(
             done_rx: Some(done_rx),
             ticks: 0,
             seen_workers: HashSet::new(),
+            busy: Some(busy.as_slice()),
         };
         f(&mut pool)
         // `pool` drops here (closing the injector); the scope then joins
@@ -1070,7 +1192,12 @@ fn serve_loop(
     // state lives in one of its slabs (or in a parked heap snapshot
     // while evicted). Default sizing keeps every batch slot resident.
     let state_len = engine.state_len();
-    let params = TickParams { prefill_chunk: prefill_chunk.max(1), state_len };
+    // span tracing: resolved once — when the observer carries no hub (or
+    // it is disabled) every per-tick trace site degrades to a null-ptr /
+    // bool check and the loop stays allocation-free
+    let hub = obs.trace_hub().filter(|h| h.enabled());
+    let params =
+        TickParams { prefill_chunk: prefill_chunk.max(1), state_len, trace: TracePtr::of(hub) };
     let mut pool = StatePool::new(state_len, state_slots.unwrap_or(max_batch).max(1));
     // the fresh-sequence state is identical for every admission —
     // compute it once and copy it into each new sequence's staging
@@ -1127,6 +1254,14 @@ fn serve_loop(
             let wait = now.duration_since(pending.arrived);
             admission_waits.push(wait);
             obs.on_admitted(wait);
+            if let Some(h) = hub {
+                h.record_at(pending.item.id, Stage::Queue, CONTROL_LANE, pending.arrived, wait);
+                obs.on_seq_admitted(
+                    pending.item.id,
+                    pending.item.prompt.len(),
+                    pending.item.gen_len,
+                );
+            }
             if let Some(s) = &pending.item.stream {
                 let _ = s.send(StreamEvent::Admitted { queued: wait });
             }
@@ -1163,6 +1298,9 @@ fn serve_loop(
             }
             cancelled += 1;
             obs.on_cancelled();
+            if hub.is_some() {
+                obs.on_seq_done(a.req.id);
+            }
             let latency = a.started.elapsed();
             let ttft = a.ttft.unwrap_or(Duration::ZERO);
             if let Some(s) = &a.req.stream {
@@ -1233,13 +1371,24 @@ fn serve_loop(
                         .min_by_key(|(_, a)| a.last_wave)
                         .map(|(j, _)| j)
                         .expect("full pool + unresident wave member => outside resident");
+                    let vid = active[victim].req.id;
+                    let vgen = active[victim].generated.len();
                     let slab = active[victim].slab.take().expect("victim was filtered resident");
                     let snapshot = &mut active[victim].parked;
+                    let t0 = hub.map(|_| Instant::now());
                     pool.park(slab, snapshot);
+                    if let (Some(h), Some(t0)) = (hub, t0) {
+                        h.record_at(vid, Stage::Park, CONTROL_LANE, t0, t0.elapsed());
+                        obs.on_seq_progress(vid, SeqStage::Parked, vgen, None);
+                    }
                 }
+                let t0 = hub.map(|_| Instant::now());
                 let slab = pool
                     .resume(&active[i].parked)
                     .expect("a slot was just freed or was already available");
+                if let (Some(h), Some(t0)) = (hub, t0) {
+                    h.record_at(active[i].req.id, Stage::Resume, CONTROL_LANE, t0, t0.elapsed());
+                }
                 active[i].slab = Some(slab);
             }
             wave_serial += 1;
@@ -1260,10 +1409,24 @@ fn serve_loop(
         if produced.sampled > 0 {
             obs.on_sampled_tokens(produced.sampled);
         }
+        if hub.is_some() {
+            obs.on_lane_busy(&engine.lane_busy_ns());
+        }
 
         // flush newly generated tokens to each request's event stream
         // (serve thread only — workers never touch the senders)
         for a in active.iter_mut() {
+            if hub.is_some() {
+                let stage = if a.slab.is_none() {
+                    SeqStage::Parked
+                } else if a.prompt_pos < a.req.prompt.len() {
+                    SeqStage::Prefill
+                } else {
+                    SeqStage::Decode
+                };
+                let slab = a.slab.as_ref().map(|s| s.slot());
+                obs.on_seq_progress(a.req.id, stage, a.generated.len(), slab);
+            }
             if a.ttft.is_none() && !a.generated.is_empty() {
                 let t = a.started.elapsed();
                 a.ttft = Some(t);
@@ -1301,6 +1464,9 @@ fn serve_loop(
             latencies.push(latency);
             completed += 1;
             obs.on_completed(latency);
+            if hub.is_some() {
+                obs.on_seq_done(a.req.id);
+            }
             if let Some(s) = &a.req.stream {
                 let _ = s.send(StreamEvent::Done { latency, ttft, finish });
             }

@@ -58,8 +58,8 @@ fn help() -> String {
         )
         .opt(
             "model",
-            "serve --http: register NAME=PATH.rwkvq2[,max_queue=N] in the fleet \
-             (repeatable); requests route by their \"model\" field, \
+            "serve --http: register NAME=PATH.rwkvq2[,max_queue=N,tick_threads=N] in \
+             the fleet (repeatable); requests route by their \"model\" field, \
              /admin/models/{name} hot-swaps; per-model options override the \
              fleet-wide flags",
         )
@@ -80,6 +80,13 @@ fn help() -> String {
         .opt("pin-workers", "serve: pin tick worker lanes to CPUs, Linux only (flag)")
         .opt("http", "serve: run the HTTP gateway on ADDR (bare flag = 127.0.0.1:8080)")
         .opt("max-queue", "serve --http: admission queue bound, overflow shed with 429 (default 64)")
+        .opt("log-json", "serve --http: emit structured logs as JSON lines on stderr (flag)")
+        .opt("log-level", "serve --http: log threshold debug|info|warn|error (default info)")
+        .opt(
+            "no-trace",
+            "serve --http: disable per-request span tracing and kernel attribution \
+             (/admin/trace returns 404; kernel counters stay zero) (flag)",
+        )
         .opt("max-gen-len", "serve --http: per-request gen_len cap (default 512)")
         .opt("vocab", "serve --http: tokenizer vocab JSON for the text endpoints (default synthetic)")
         .opt("temperature", "serve: sampling temperature, 0 = greedy (default 0)")
@@ -256,7 +263,21 @@ fn cmd_pack(args: &Args) -> rwkvquant::Result<()> {
     Ok(())
 }
 
+/// `--log-json` / `--log-level` configure the process-wide structured
+/// logger before any gateway thread starts emitting.
+fn configure_logging(args: &Args) -> rwkvquant::Result<()> {
+    use rwkvquant::util::log;
+    log::set_json(args.flag("log-json"));
+    if let Some(s) = args.get("log-level") {
+        let level = log::Level::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--log-level expects debug|info|warn|error, got '{s}'"))?;
+        log::set_level(level);
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
+    configure_logging(args)?;
     let model_specs = args.get_all("model");
     if !model_specs.is_empty() {
         return cmd_serve_fleet(args, &model_specs);
@@ -336,6 +357,7 @@ fn cmd_serve(args: &Args) -> rwkvquant::Result<()> {
         gcfg.state_slots = state_slots;
         gcfg.pin_workers = pin_workers;
         gcfg.heed_signals = heeding;
+        gcfg.trace = !args.flag("no-trace");
         let mut gateway = Gateway::bind(gcfg, vocab)?;
         let vocab_note = match args.get("vocab") {
             Some(path) => {
@@ -454,12 +476,14 @@ fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
     if state_slots > 0 {
         opts = opts.with_state_slots(state_slots);
     }
+    let trace = !args.flag("no-trace");
     let fleet = Fleet::new(FleetConfig {
         lanes: tick_threads,
         opts,
         popts: PoolOpts::default().with_pin_workers(pin_workers),
         load_mode: mode,
         step_delay: Duration::ZERO,
+        trace,
     });
 
     let mut named: Vec<(String, std::path::PathBuf, ModelOverrides)> = Vec::new();
@@ -491,8 +515,16 @@ fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
                         anyhow::anyhow!("--model: max_queue expects an integer, got '{v}' in '{spec}'")
                     })?);
                 }
+                "tick_threads" => {
+                    ov.tick_threads = Some(v.trim().parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--model: tick_threads expects an integer, got '{v}' in '{spec}'"
+                        )
+                    })?);
+                }
                 other => anyhow::bail!(
-                    "--model: unknown per-model option '{other}' in '{spec}' (supported: max_queue)"
+                    "--model: unknown per-model option '{other}' in '{spec}' \
+                     (supported: max_queue, tick_threads)"
                 ),
             }
         }
@@ -513,9 +545,11 @@ fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
             path.display(),
             entry.vocab(),
             entry.version(),
-            match ov.max_queue {
-                Some(n) => format!(", max_queue {n}"),
-                None => String::new(),
+            match (ov.max_queue, ov.tick_threads) {
+                (Some(q), Some(t)) => format!(", max_queue {q}, tick_threads {t}"),
+                (Some(q), None) => format!(", max_queue {q}"),
+                (None, Some(t)) => format!(", tick_threads {t}"),
+                (None, None) => String::new(),
             },
         );
     }
@@ -530,6 +564,7 @@ fn cmd_serve_fleet(args: &Args, specs: &[&str]) -> rwkvquant::Result<()> {
     gcfg.state_slots = state_slots;
     gcfg.pin_workers = pin_workers;
     gcfg.heed_signals = heeding;
+    gcfg.trace = trace;
     let mut gateway = Gateway::bind(gcfg, vocab)?;
     if let Some(path) = args.get("vocab") {
         let tok = Tokenizer::load(std::path::Path::new(path))
@@ -581,6 +616,19 @@ fn print_serve_summary(stats: &ServeStats) {
         stats.state_parks,
         stats.state_resumes,
     );
+    // per-kernel matvec attribution (process-global; populated only
+    // while tracing is enabled)
+    let rows: Vec<_> = rwkvquant::quant::exec::kstats::snapshot()
+        .into_iter()
+        .filter(|&(_, _, calls, _)| calls > 0)
+        .collect();
+    if !rows.is_empty() {
+        let parts: Vec<String> = rows
+            .iter()
+            .map(|(op, kernel, calls, secs)| format!("{op}/{kernel} {calls} calls {secs:.3}s"))
+            .collect();
+        println!("kernel attribution: {}", parts.join(" | "));
+    }
 }
 
 fn cmd_proxy(args: &Args) -> rwkvquant::Result<()> {

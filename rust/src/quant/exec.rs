@@ -89,6 +89,110 @@ impl Kernel {
             Kernel::Neon => "neon",
         }
     }
+
+    /// Dense index into the [`kstats`] attribution grid.
+    fn index(self) -> usize {
+        match self {
+            Kernel::Scalar => 0,
+            Kernel::Avx2 => 1,
+            Kernel::Neon => 2,
+        }
+    }
+}
+
+/// Per-kernel matvec attribution: call counts and accumulated wall time
+/// split by payload kind (SQ / VQ / dense f16) × instruction set
+/// (scalar / AVX2 / NEON). This is the measured answer to "where does
+/// decode time go per quantization kind" — the CPU baseline the
+/// accelerator backend will be judged against — surfaced as
+/// `rwkvquant_kernel_matvec_*` Prometheus families and in the serve
+/// summary.
+///
+/// Process-global (the kernels are free functions with no registry to
+/// hang state on) and **gated**: while disabled — the default — every
+/// matvec pays exactly one relaxed atomic load and no clock read, so
+/// the counters can ship enabled-in-production without a fast-path tax
+/// (`perf_hotpath` measures both states). Enabling is monotonic
+/// counting only; it cannot change tokens.
+pub mod kstats {
+    use super::Kernel;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::Instant;
+
+    /// Payload-kind axis of the grid, in index order.
+    pub const OPS: [&str; 3] = ["sq", "vq", "f16"];
+    /// Instruction-set axis of the grid, in index order
+    /// ([`Kernel::name`] spellings).
+    pub const KERNELS: [&str; 3] = ["scalar", "avx2", "neon"];
+
+    /// Which matvec family a sample attributes to.
+    #[derive(Clone, Copy, Debug)]
+    pub enum Op {
+        Sq = 0,
+        Vq = 1,
+        F16 = 2,
+    }
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+
+    const fn row() -> [AtomicU64; 3] {
+        [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)]
+    }
+    /// `[op][kernel]` call counts.
+    static CALLS: [[AtomicU64; 3]; 3] = [row(), row(), row()];
+    /// `[op][kernel]` accumulated nanoseconds.
+    static NANOS: [[AtomicU64; 3]; 3] = [row(), row(), row()];
+
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// Start a sample — `None` (no clock read) while disabled.
+    #[inline]
+    pub(super) fn begin() -> Option<Instant> {
+        enabled().then(Instant::now)
+    }
+
+    /// Land a sample started by [`begin`].
+    #[inline]
+    pub(super) fn finish(op: Op, kernel: Kernel, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            let (o, k) = (op as usize, kernel.index());
+            CALLS[o][k].fetch_add(1, Ordering::Relaxed);
+            NANOS[o][k].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// The full grid as `(op, kernel, calls, seconds)` rows, zero rows
+    /// included (a stable series set for the exposition).
+    pub fn snapshot() -> Vec<(&'static str, &'static str, u64, f64)> {
+        let mut out = Vec::with_capacity(9);
+        for (o, op) in OPS.iter().enumerate() {
+            for (k, kernel) in KERNELS.iter().enumerate() {
+                out.push((
+                    *op,
+                    *kernel,
+                    CALLS[o][k].load(Ordering::Relaxed),
+                    NANOS[o][k].load(Ordering::Relaxed) as f64 * 1e-9,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Zero the grid (tests and bench sections isolate their windows).
+    pub fn reset() {
+        for o in 0..3 {
+            for k in 0..3 {
+                CALLS[o][k].store(0, Ordering::Relaxed);
+                NANOS[o][k].store(0, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 /// The kernel the serving stack uses, selected once (first call) by
@@ -576,6 +680,7 @@ pub fn matvec_sq_scratch(
     y: &mut [f32],
     scratch: &mut MatvecScratch,
 ) {
+    let kt = kstats::begin();
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     assert!(
@@ -594,6 +699,7 @@ pub fn matvec_sq_scratch(
     codes_row.clear();
     codes_row.resize(l.cols, 0);
     matvec_sq_body(kernel, l, x_eff, y, codes_row, group_xsum);
+    kstats::finish(kstats::Op::Sq, kernel, kt);
 }
 
 fn matvec_sq_body(
@@ -676,6 +782,7 @@ pub fn matvec_vq_scratch(
     y: &mut [f32],
     scratch: &mut MatvecScratch,
 ) {
+    let kt = kstats::begin();
     assert_eq!(x.len(), l.cols);
     assert_eq!(y.len(), l.rows);
     let d = l.d;
@@ -692,6 +799,7 @@ pub fn matvec_vq_scratch(
         }
         y[r] = dot_f32(kernel, row, x);
     }
+    kstats::finish(kstats::Op::Vq, kernel, kt);
 }
 
 /// y = W x for a half-precision dense tensor (RWKVQ2-resident
@@ -719,6 +827,7 @@ pub fn matvec_f16_scratch(
     y: &mut [f32],
     scratch: &mut MatvecScratch,
 ) {
+    let kt = kstats::begin();
     assert_eq!(x.len(), t.cols);
     assert_eq!(y.len(), t.rows);
     let row = &mut scratch.f16_row;
@@ -729,6 +838,7 @@ pub fn matvec_f16_scratch(
         widen_f16_into(kernel, &bits[r * t.cols..(r + 1) * t.cols], row);
         *slot = dot_f32(kernel, row, x);
     }
+    kstats::finish(kstats::Op::F16, kernel, kt);
 }
 
 impl LinearOp for F16Tensor {
@@ -1051,5 +1161,35 @@ mod tests {
         // dense storage is 32 bits/weight; packed is far smaller
         assert_eq!(LinearOp::storage_bits(&w), 16 * 64 * 32);
         assert!(LinearOp::storage_bits(&sq) < 16 * 64 * 8);
+    }
+
+    #[test]
+    fn kstats_attributes_calls_when_enabled_only() {
+        let (w, x) = rand(21, 8, 64);
+        let sq = sq::rtn::quantize(&w, 4, 32);
+        let mut y = vec![0.0f32; 8];
+        let calls_at = |snap: &[(&str, &str, u64, f64)], op: &str| -> u64 {
+            snap.iter().filter(|(o, _, _, _)| *o == op).map(|(_, _, c, _)| c).sum()
+        };
+        // disabled (the default): counters do not move
+        let before = calls_at(&kstats::snapshot(), "sq");
+        matvec_sq(&sq, &x, &mut y);
+        // other tests may race an enabled window in this process, so only
+        // the enabled direction asserts an exact lower bound
+        kstats::set_enabled(true);
+        let start = calls_at(&kstats::snapshot(), "sq");
+        matvec_sq(&sq, &x, &mut y);
+        matvec_sq(&sq, &x, &mut y);
+        let after = calls_at(&kstats::snapshot(), "sq");
+        kstats::set_enabled(false);
+        assert!(after >= start + 2, "enabled calls must land: {start} -> {after}");
+        assert!(start >= before, "counters are monotonic");
+        // time accrues alongside calls
+        let secs: f64 = kstats::snapshot()
+            .iter()
+            .filter(|(o, _, _, _)| *o == "sq")
+            .map(|(_, _, _, s)| s)
+            .sum();
+        assert!(secs >= 0.0);
     }
 }

@@ -64,10 +64,13 @@ use crate::coordinator::serve::{
     ServeStats, StreamEvent,
 };
 use crate::data::tokenizer::Tokenizer;
+use crate::quant::exec::kstats;
 use crate::report::json::Json;
 use crate::server::http::{self, ChunkedWriter, HttpRequest, Limits};
-use crate::server::metrics::{render_exposition, Metrics};
+use crate::server::metrics::{render_exposition, InflightEntry, Metrics};
 use crate::server::{json, signal};
+use crate::util::log::{self, RateLimit};
+use crate::util::trace::CONTROL_LANE;
 use crate::Result;
 use anyhow::Context;
 use std::io::BufReader;
@@ -118,6 +121,11 @@ pub struct GatewayConfig {
     /// use the explicit handle so a test-raised signal cannot leak into
     /// unrelated gateways).
     pub heed_signals: bool,
+    /// Per-request span tracing + kernel attribution (`/admin/trace`,
+    /// `/admin/inflight`, the `rwkvquant_kernel_*` families). On by
+    /// default; `--no-trace` clears it, leaving every record site one
+    /// relaxed load.
+    pub trace: bool,
 }
 
 impl GatewayConfig {
@@ -133,6 +141,7 @@ impl GatewayConfig {
             state_slots: 0,
             pin_workers: false,
             heed_signals: false,
+            trace: true,
         }
     }
 }
@@ -219,6 +228,10 @@ impl Gateway {
         anyhow::ensure!(!decoders.is_empty(), "the gateway needs at least one decoder");
         let Gateway { listener, cfg, vocab, tokenizer, shutdown, metrics } = self;
         listener.set_nonblocking(true).context("set listener non-blocking")?;
+        // before the engine spawns: the serve loop resolves its trace
+        // hub once at session start
+        metrics.trace().set_enabled(cfg.trace);
+        kstats::set_enabled(cfg.trace);
         let (tx_req, rx_req) = mpsc::channel::<Request>();
         let (tx_resp, rx_resp) = mpsc::channel::<Response>();
         // final Responses are redundant here — every handler consumes
@@ -285,7 +298,7 @@ impl Gateway {
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(e) => {
-                        eprintln!("gateway: accept error: {e}");
+                        log_accept_error(&e);
                         std::thread::sleep(ACCEPT_POLL);
                     }
                 }
@@ -311,6 +324,9 @@ impl Gateway {
     pub fn serve_fleet(self, fleet: &Fleet) -> Result<()> {
         let Gateway { listener, cfg, vocab, tokenizer, shutdown, metrics } = self;
         listener.set_nonblocking(true).context("set listener non-blocking")?;
+        // per-model hubs are enabled at Fleet::load (FleetConfig::trace);
+        // the kernel grid is process-global
+        kstats::set_enabled(cfg.trace);
         let next_id = AtomicU64::new(0);
         let shared = Shared {
             vocab,
@@ -348,7 +364,7 @@ impl Gateway {
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(e) => {
-                        eprintln!("gateway: accept error: {e}");
+                        log_accept_error(&e);
                         std::thread::sleep(ACCEPT_POLL);
                     }
                 }
@@ -358,6 +374,22 @@ impl Gateway {
             drop(listener);
         });
         Ok(())
+    }
+}
+
+/// Flood control for the accept loops: an error storm (fd exhaustion,
+/// say) repeats the same failure once per poll tick, so the structured
+/// line is budgeted — at most 5 per 10-second window, the overflow
+/// folded into the next line's `suppressed` count.
+static ACCEPT_ERR_LIMIT: RateLimit = RateLimit::new(5, 10);
+
+fn log_accept_error(e: &std::io::Error) {
+    if let Some(suppressed) = ACCEPT_ERR_LIMIT.allow() {
+        log::warn(
+            "gateway",
+            "accept error",
+            &[("err", e.to_string()), ("suppressed", suppressed.to_string())],
+        );
     }
 }
 
@@ -572,6 +604,8 @@ enum HandlerId {
     ModelsList,
     AdminLoadModel,
     AdminDeleteModel,
+    AdminTrace,
+    AdminInflight,
 }
 
 /// The gateway's entire HTTP surface, declaratively: method + path
@@ -588,6 +622,8 @@ const ROUTES: &[(&str, &str, HandlerId)] = &[
     ("GET", "/v1/models", HandlerId::ModelsList),
     ("POST", "/admin/models/{name}", HandlerId::AdminLoadModel),
     ("DELETE", "/admin/models/{name}", HandlerId::AdminDeleteModel),
+    ("GET", "/admin/trace/{id}", HandlerId::AdminTrace),
+    ("GET", "/admin/inflight", HandlerId::AdminInflight),
 ];
 
 enum RouteMatch {
@@ -684,6 +720,8 @@ fn route(
                 HandlerId::ModelsList => models_list(w, sh, conn),
                 HandlerId::AdminLoadModel => admin_load(w, req, sh, conn, param("name")),
                 HandlerId::AdminDeleteModel => admin_delete(w, sh, conn, param("name")),
+                HandlerId::AdminTrace => admin_trace(w, sh, conn, param("id")),
+                HandlerId::AdminInflight => admin_inflight(w, sh, conn),
             }
         }
     }
@@ -803,6 +841,99 @@ fn admin_delete(
     }
 }
 
+/// `GET /admin/trace/{id}` — every retained span for one request, in
+/// start order, with the per-stage durations and their sum. Answers
+/// `404` when no spans survive in the ring buffers (tracing off, or the
+/// request's spans have been overwritten). Request ids are unique
+/// across a fleet (one gateway counter), so merging the per-model hubs
+/// cannot mix two requests.
+fn admin_trace(
+    w: &mut TcpStream,
+    sh: &Shared<'_>,
+    conn: &Conn<'_>,
+    id: &str,
+) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let Ok(id) = id.parse::<u64>() else {
+        return write_error(w, sh, 400, "request id must be an integer", None, &[]);
+    };
+    let mut spans = match conn {
+        Conn::Single(_) => sh.metrics.trace().spans_for(id),
+        Conn::Fleet(fleet) => {
+            let mut all = Vec::new();
+            for (_, m) in fleet.model_metrics() {
+                all.extend(m.trace().spans_for(id));
+            }
+            all
+        }
+    };
+    spans.sort_by_key(|s| (s.start_us, s.dur_us));
+    if spans.is_empty() {
+        let msg = format!("no spans retained for request {id} (tracing off, or evicted)");
+        return write_error(w, sh, 404, &msg, None, &[]);
+    }
+    let total_us: u64 = spans.iter().map(|s| s.dur_us).sum();
+    let mut body = String::with_capacity(80 * spans.len() + 64);
+    let _ = write!(body, "{{\"id\":{id},\"spans\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        // the control thread's spans (queue/park/resume) carry lane -1
+        let lane: i64 = if s.lane == CONTROL_LANE { -1 } else { s.lane as i64 };
+        let _ = write!(
+            body,
+            "{{\"stage\":\"{}\",\"lane\":{lane},\"start_us\":{},\"dur_us\":{}}}",
+            s.stage.name(),
+            s.start_us,
+            s.dur_us
+        );
+    }
+    let _ = write!(body, "],\"total_us\":{total_us}}}");
+    http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
+}
+
+/// `GET /admin/inflight` — every sequence currently in an active set:
+/// stage (`prefill`/`decode`/`parked`), generated-token count, resident
+/// slab slot (or `null` while parked), and age since admission. Empty
+/// list when tracing is off or nothing is decoding.
+fn admin_inflight(w: &mut TcpStream, sh: &Shared<'_>, conn: &Conn<'_>) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let groups: Vec<(String, Vec<InflightEntry>)> = match conn {
+        Conn::Single(_) => vec![(DEFAULT_MODEL.to_string(), sh.metrics.inflight_snapshot())],
+        Conn::Fleet(fleet) => fleet
+            .model_metrics()
+            .into_iter()
+            .map(|(n, m)| (n, m.inflight_snapshot()))
+            .collect(),
+    };
+    let mut body = String::from("{\"sequences\":[");
+    let mut first = true;
+    for (model, entries) in &groups {
+        for e in entries {
+            if !first {
+                body.push(',');
+            }
+            first = false;
+            let slab = e.slab.map_or("null".to_string(), |s| s.to_string());
+            let _ = write!(
+                body,
+                "{{\"id\":{},\"model\":\"{}\",\"stage\":\"{}\",\"generated\":{},\
+                 \"prompt_len\":{},\"gen_len\":{},\"slab\":{slab},\"age_ms\":{:.3}}}",
+                e.id,
+                model,
+                e.stage,
+                e.generated,
+                e.prompt_len,
+                e.gen_len,
+                ms(e.age),
+            );
+        }
+    }
+    body.push_str("]}");
+    http::write_response(w, 200, &[("Content-Type", "application/json")], body.as_bytes())
+}
+
 /// Pre-parse pass for the `model` field alone (the raw-token endpoint
 /// has no other use for the field). A body that is not JSON resolves
 /// to the default model so the endpoint's own parser produces the real
@@ -919,11 +1050,19 @@ fn generate(
             write_error(w, sh, 429, "admission queue full", None, &[("Retry-After", "1")])
         }
         Ok(first) => {
-            if gen.stream {
+            let r = if gen.stream {
                 stream_sse(w, id, first, rx_ev)
             } else {
                 collect_json(w, id, first, rx_ev)
-            }
+            };
+            // `id` is the join key: same number in the SSE done event,
+            // the X-Request-Id header and /admin/trace/{id}
+            log::info(
+                "gateway",
+                "request done",
+                &[("id", id.to_string()), ("model", target.model)],
+            );
+            r
         }
     }
 }
@@ -1211,6 +1350,11 @@ fn completions(
                 // orphan to completion
                 cancel.store(true, Ordering::Relaxed);
             }
+            log::info(
+                "gateway",
+                "request done",
+                &[("id", id.to_string()), ("model", target.model)],
+            );
             r
         }
     }

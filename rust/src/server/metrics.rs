@@ -10,6 +10,9 @@
 //! ceil-rank [`percentile`] convention as `ServeStats`.
 
 use crate::coordinator::serve::{percentile, ServeObserver};
+use crate::quant::exec::kstats;
+use crate::util::trace::{SeqStage, TraceHub};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -76,9 +79,46 @@ pub struct Metrics {
     pub queue_hwm: AtomicU64,
     /// Currently open client connections (gauge).
     pub open_connections: AtomicU64,
+    /// Memory-mapped weight stores behind this registry's model (gauge;
+    /// 0 for a fully heap-loaded model).
+    pub mapped_stores: AtomicU64,
     latencies: Mutex<Window>,
     admission_waits: Mutex<Window>,
     ttfts: Mutex<Window>,
+    /// Per-request span sink (`/admin/trace/{id}`); starts disabled.
+    trace: TraceHub,
+    /// Live per-sequence positions (`/admin/inflight`), keyed by request
+    /// id. Maintained only while `trace` is enabled.
+    inflight: Mutex<HashMap<u64, Inflight>>,
+    /// Latest cumulative per-lane busy nanoseconds from the tick engine
+    /// (index = lane, 0 = lead). Empty until a traced tick reports.
+    lane_busy: Mutex<Vec<u64>>,
+}
+
+/// What [`Metrics`] tracks per in-flight sequence.
+struct Inflight {
+    stage: SeqStage,
+    generated: usize,
+    slab: Option<usize>,
+    prompt_len: usize,
+    gen_len: usize,
+    admitted: Instant,
+}
+
+/// One row of [`Metrics::inflight_snapshot`] — the `/admin/inflight`
+/// response shape.
+pub struct InflightEntry {
+    pub id: u64,
+    /// Wire spelling of the sequence's stage (`prefill`/`decode`/`parked`).
+    pub stage: &'static str,
+    /// Generated tokens so far.
+    pub generated: usize,
+    /// Resident state-arena slab slot, or `None` while parked.
+    pub slab: Option<usize>,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Time since admission.
+    pub age: Duration,
 }
 
 impl Default for Metrics {
@@ -98,9 +138,13 @@ impl Default for Metrics {
             queue_depth: AtomicU64::new(0),
             queue_hwm: AtomicU64::new(0),
             open_connections: AtomicU64::new(0),
+            mapped_stores: AtomicU64::new(0),
             latencies: Mutex::new(Window::new()),
             admission_waits: Mutex::new(Window::new()),
             ttfts: Mutex::new(Window::new()),
+            trace: TraceHub::new(),
+            inflight: Mutex::new(HashMap::new()),
+            lane_busy: Mutex::new(Vec::new()),
         }
     }
 }
@@ -113,6 +157,32 @@ impl Metrics {
     /// Lifetime-average served tokens per second.
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens.load(Ordering::Relaxed) as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// This registry's span sink — the gateway enables it at startup
+    /// (unless `--no-trace`) and `/admin/trace/{id}` reads it.
+    pub fn trace(&self) -> &TraceHub {
+        &self.trace
+    }
+
+    /// Snapshot of every in-flight sequence, sorted by request id — the
+    /// `/admin/inflight` payload. Empty unless tracing is enabled.
+    pub fn inflight_snapshot(&self) -> Vec<InflightEntry> {
+        let map = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<InflightEntry> = map
+            .iter()
+            .map(|(&id, f)| InflightEntry {
+                id,
+                stage: f.stage.name(),
+                generated: f.generated,
+                slab: f.slab,
+                prompt_len: f.prompt_len,
+                gen_len: f.gen_len,
+                age: f.admitted.elapsed(),
+            })
+            .collect();
+        out.sort_by_key(|e| e.id);
+        out
     }
 
     /// Render the Prometheus text exposition format (version 0.0.4) for
@@ -289,7 +359,211 @@ pub fn render_exposition(gateway: &Metrics, models: &[(&str, &Metrics)]) -> Stri
         "Admission-to-first-generated-token delay (last 512 requests).",
         &|m| &m.ttfts,
     );
+    // --- observability families ---
+    let _ = writeln!(out, "# HELP rwkvquant_inflight_sequences Sequences currently in the active set (tracing on).");
+    let _ = writeln!(out, "# TYPE rwkvquant_inflight_sequences gauge");
+    for (model, m) in models {
+        let n = m.inflight.lock().unwrap_or_else(|e| e.into_inner()).len();
+        let _ = writeln!(out, "rwkvquant_inflight_sequences{} {n}", model_label(model));
+    }
+    let _ = writeln!(out, "# HELP rwkvquant_mapped_stores Memory-mapped weight stores behind the model.");
+    let _ = writeln!(out, "# TYPE rwkvquant_mapped_stores gauge");
+    for (model, m) in models {
+        let v = m.mapped_stores.load(Ordering::Relaxed);
+        let _ = writeln!(out, "rwkvquant_mapped_stores{} {v}", model_label(model));
+    }
+    let _ = writeln!(out, "# HELP rwkvquant_lane_busy_seconds_total Cumulative tick-lane busy time (lane 0 is the lead).");
+    let _ = writeln!(out, "# TYPE rwkvquant_lane_busy_seconds_total counter");
+    for (model, m) in models {
+        let lanes = m.lane_busy.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        for (lane, ns) in lanes.iter().enumerate() {
+            // lane joins the model label inside one brace set, like the
+            // summary quantiles above
+            let series = if model.is_empty() {
+                format!("{{lane=\"{lane}\"}}")
+            } else {
+                format!("{{model=\"{}\",lane=\"{lane}\"}}", escape_label(model))
+            };
+            let _ = writeln!(
+                out,
+                "rwkvquant_lane_busy_seconds_total{series} {}",
+                *ns as f64 / 1e9
+            );
+        }
+    }
+    if let Some(bytes) = resident_set_bytes() {
+        // Linux only — the family is absent where procfs is
+        let _ = writeln!(out, "# HELP rwkvquant_process_resident_bytes Resident-set size of the gateway process.");
+        let _ = writeln!(out, "# TYPE rwkvquant_process_resident_bytes gauge");
+        let _ = writeln!(out, "rwkvquant_process_resident_bytes {bytes}");
+    }
+    // per-kernel matvec attribution is process-global (the kernel grid
+    // is shared by every model), so it renders once, unlabeled by model
+    let kern = kstats::snapshot();
+    let _ = writeln!(out, "# HELP rwkvquant_kernel_matvec_calls_total Matvec calls by quantization op and SIMD kernel.");
+    let _ = writeln!(out, "# TYPE rwkvquant_kernel_matvec_calls_total counter");
+    for (op, kernel, calls, _) in &kern {
+        let _ = writeln!(
+            out,
+            "rwkvquant_kernel_matvec_calls_total{{op=\"{op}\",kernel=\"{kernel}\"}} {calls}"
+        );
+    }
+    let _ = writeln!(out, "# HELP rwkvquant_kernel_matvec_seconds_total Matvec wall time by quantization op and SIMD kernel.");
+    let _ = writeln!(out, "# TYPE rwkvquant_kernel_matvec_seconds_total counter");
+    for (op, kernel, _, secs) in &kern {
+        let _ = writeln!(
+            out,
+            "rwkvquant_kernel_matvec_seconds_total{{op=\"{op}\",kernel=\"{kernel}\"}} {secs}"
+        );
+    }
     out
+}
+
+/// Resident-set size of this process in bytes, from the second field of
+/// `/proc/self/statm` (pages; the kernel's page size on every Linux
+/// target this crate builds for is 4096). `None` where that procfs
+/// surface does not exist (macOS, wasm32).
+pub fn resident_set_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
+/// Lint a Prometheus text exposition (format 0.0.4): every sample's
+/// family must carry exactly one `# HELP` and one `# TYPE` (with a known
+/// type), label sets must parse with balanced quotes and escaped values,
+/// and no series (name + label set) may appear twice. Returns the list
+/// of problems — empty means clean. Used by the metrics tests and
+/// mirrored by `python/check_metrics.py` for the live endpoint.
+pub fn lint_exposition(text: &str) -> Vec<String> {
+    let mut problems = Vec::new();
+    let mut help: HashMap<&str, usize> = HashMap::new();
+    let mut types: HashMap<&str, usize> = HashMap::new();
+    let mut seen_series: HashMap<String, usize> = HashMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let Some(name) = rest.split_whitespace().next() else {
+                problems.push(format!("line {ln}: HELP without a family name"));
+                continue;
+            };
+            *help.entry(name).or_insert(0) += 1;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(kind)) = (it.next(), it.next()) else {
+                problems.push(format!("line {ln}: malformed TYPE line"));
+                continue;
+            };
+            if !["counter", "gauge", "summary", "histogram", "untyped"].contains(&kind) {
+                problems.push(format!("line {ln}: unknown type {kind:?} for {name}"));
+            }
+            *types.entry(name).or_insert(0) += 1;
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // sample line: name{labels}? value
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(parts) => parts,
+            None => {
+                problems.push(format!("line {ln}: sample without a value"));
+                continue;
+            }
+        };
+        if value.parse::<f64>().is_err() {
+            problems.push(format!("line {ln}: unparsable sample value {value:?}"));
+        }
+        let name = match series.split_once('{') {
+            Some((name, labels)) => {
+                match labels.strip_suffix('}') {
+                    Some(body) => {
+                        if let Err(e) = parse_label_body(body) {
+                            problems.push(format!("line {ln}: bad label set: {e}"));
+                        }
+                    }
+                    None => problems.push(format!("line {ln}: unclosed label set")),
+                }
+                name
+            }
+            None => series,
+        };
+        // summary/histogram child series belong to the parent family
+        let family = ["_count", "_sum", "_bucket"]
+            .iter()
+            .find_map(|suf| name.strip_suffix(suf).filter(|base| types.contains_key(base)))
+            .unwrap_or(name);
+        if !types.contains_key(family) {
+            problems.push(format!("line {ln}: sample {name} has no preceding # TYPE"));
+        }
+        if !help.contains_key(family) {
+            problems.push(format!("line {ln}: sample {name} has no preceding # HELP"));
+        }
+        if let Some(first) = seen_series.insert(series.to_string(), ln) {
+            problems.push(format!("line {ln}: duplicate series {series} (first at line {first})"));
+        }
+    }
+    for (name, n) in &help {
+        if *n > 1 {
+            problems.push(format!("family {name}: {n} HELP lines"));
+        }
+    }
+    for (name, n) in &types {
+        if *n > 1 {
+            problems.push(format!("family {name}: {n} TYPE lines"));
+        }
+    }
+    problems.sort();
+    problems
+}
+
+/// Parse `k="v",k2="v2"` (the inside of a label brace set), enforcing
+/// quote balance and `\\`/`\"`/`\n` escaping.
+fn parse_label_body(body: &str) -> std::result::Result<(), String> {
+    let mut chars = body.chars();
+    loop {
+        // label name up to '='
+        let mut name = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            name.push(c);
+        }
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(format!("bad label name {name:?}"));
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label {name} value not quoted"));
+        }
+        let mut closed = false;
+        while let Some(c) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some('\\') | Some('"') | Some('n') => {}
+                    other => return Err(format!("bad escape {other:?} in label {name}")),
+                },
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        if !closed {
+            return Err(format!("unterminated value for label {name}"));
+        }
+        match chars.next() {
+            None => return Ok(()),
+            Some(',') => continue,
+            Some(c) => return Err(format!("unexpected {c:?} after label {name}")),
+        }
+    }
 }
 
 impl ServeObserver for Metrics {
@@ -329,6 +603,42 @@ impl ServeObserver for Metrics {
 
     fn on_sampled_tokens(&self, n: usize) {
         self.sampled_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn trace_hub(&self) -> Option<&TraceHub> {
+        Some(&self.trace)
+    }
+
+    fn on_seq_admitted(&self, id: u64, prompt_len: usize, gen_len: usize) {
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner()).insert(
+            id,
+            Inflight {
+                stage: SeqStage::Prefill,
+                generated: 0,
+                slab: None,
+                prompt_len,
+                gen_len,
+                admitted: Instant::now(),
+            },
+        );
+    }
+
+    fn on_seq_progress(&self, id: u64, stage: SeqStage, generated: usize, slab: Option<usize>) {
+        if let Some(f) = self.inflight.lock().unwrap_or_else(|e| e.into_inner()).get_mut(&id) {
+            f.stage = stage;
+            f.generated = generated;
+            f.slab = slab;
+        }
+    }
+
+    fn on_seq_done(&self, id: u64) {
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+    }
+
+    fn on_lane_busy(&self, busy_ns: &[u64]) {
+        let mut lanes = self.lane_busy.lock().unwrap_or_else(|e| e.into_inner());
+        lanes.resize(busy_ns.len(), 0);
+        lanes.copy_from_slice(busy_ns);
     }
 }
 
@@ -413,6 +723,97 @@ mod tests {
     fn label_values_are_escaped() {
         assert_eq!(model_label("a\"b\\c"), "{model=\"a\\\"b\\\\c\"}");
         assert_eq!(model_label(""), "");
+    }
+
+    #[test]
+    fn lint_passes_both_render_paths() {
+        let m = Metrics::new();
+        m.on_tokens(5);
+        m.on_completed(Duration::from_millis(2));
+        m.on_lane_busy(&[1_000_000, 2_000_000]);
+        assert_eq!(lint_exposition(&m.render_prometheus()), Vec::<String>::new());
+        let gw = Metrics::new();
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.on_lane_busy(&[5_000_000]);
+        let text = render_exposition(&gw, &[("alpha", &a), ("be\"ta", &b)]);
+        assert_eq!(lint_exposition(&text), Vec::<String>::new());
+    }
+
+    #[test]
+    fn lint_catches_malformed_expositions() {
+        // sample without a TYPE header
+        let p = lint_exposition("orphan_total 3\n");
+        assert!(p.iter().any(|e| e.contains("no preceding # TYPE")), "{p:?}");
+        // duplicate series
+        let text = "# HELP x_total x.\n# TYPE x_total counter\nx_total 1\nx_total 2\n";
+        let p = lint_exposition(text);
+        assert!(p.iter().any(|e| e.contains("duplicate series")), "{p:?}");
+        // unescaped quote inside a label value
+        let text = "# HELP y y.\n# TYPE y gauge\ny{model=\"a\"b\"} 1\n";
+        assert!(!lint_exposition(text).is_empty());
+        // unparsable value
+        let text = "# HELP z z.\n# TYPE z gauge\nz NaNish\n";
+        let p = lint_exposition(text);
+        assert!(p.iter().any(|e| e.contains("unparsable")), "{p:?}");
+    }
+
+    #[test]
+    fn inflight_tracks_admit_progress_done() {
+        let m = Metrics::new();
+        m.trace().set_enabled(true);
+        m.on_seq_admitted(7, 12, 32);
+        m.on_seq_admitted(9, 4, 8);
+        m.on_seq_progress(7, SeqStage::Decode, 3, Some(1));
+        m.on_seq_progress(9, SeqStage::Parked, 0, None);
+        let snap = m.inflight_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].id, 7);
+        assert_eq!(snap[0].stage, "decode");
+        assert_eq!(snap[0].generated, 3);
+        assert_eq!(snap[0].slab, Some(1));
+        assert_eq!(snap[1].stage, "parked");
+        assert_eq!(snap[1].slab, None);
+        assert_eq!(snap[1].prompt_len, 4);
+        let text = m.render_prometheus();
+        assert!(text.contains("rwkvquant_inflight_sequences 2"), "{text}");
+        m.on_seq_done(7);
+        m.on_seq_done(9);
+        assert!(m.inflight_snapshot().is_empty());
+    }
+
+    #[test]
+    fn new_families_render_with_expected_labels() {
+        let m = Metrics::new();
+        m.mapped_stores.store(3, Ordering::Relaxed);
+        m.on_lane_busy(&[2_000_000_000, 500_000_000]);
+        let text = m.render_prometheus();
+        assert!(text.contains("rwkvquant_mapped_stores 3"), "{text}");
+        assert!(text.contains("rwkvquant_lane_busy_seconds_total{lane=\"0\"} 2"));
+        assert!(text.contains("rwkvquant_lane_busy_seconds_total{lane=\"1\"} 0.5"));
+        // the kernel grid renders all nine op × kernel series
+        for op in kstats::OPS {
+            for kernel in kstats::KERNELS {
+                let series =
+                    format!("rwkvquant_kernel_matvec_calls_total{{op=\"{op}\",kernel=\"{kernel}\"}}");
+                assert!(text.contains(&series), "missing {series} in {text}");
+            }
+        }
+        assert!(text.contains("rwkvquant_kernel_matvec_seconds_total{op=\"sq\",kernel=\"scalar\"}"));
+        // fleet render keeps the model label first in the brace set
+        let gw = Metrics::new();
+        let text = render_exposition(&gw, &[("alpha", &m)]);
+        assert!(text.contains("rwkvquant_lane_busy_seconds_total{model=\"alpha\",lane=\"1\"} 0.5"));
+        assert!(text.contains("rwkvquant_mapped_stores{model=\"alpha\"} 3"));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn resident_set_is_reported_on_linux() {
+        let rss = resident_set_bytes().expect("procfs statm present on linux");
+        assert!(rss > 0);
+        let m = Metrics::new();
+        assert!(m.render_prometheus().contains("rwkvquant_process_resident_bytes "));
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Structured, leveled, rate-limitable logging — dependency-free.
+//!
+//! One line per event on stderr, in either keyed-text
+//! (`ts=… level=… target=… msg=… k=v`) or JSON (`--log-json`) form, so
+//! a log collector can parse the stream without guessing at free-text
+//! formats. Request-scoped lines carry the request id as an `id` field
+//! — the same id the SSE `done` event and the `X-Request-Id` header
+//! carry, which is the join key across logs, traces
+//! (`/admin/trace/{id}`) and client-side records.
+//!
+//! The global level/format switches are relaxed atomics set once at
+//! startup (`--log-json`, `--log-level`); a disabled level costs one
+//! atomic load. [`RateLimit`] is a const-constructible per-site token
+//! bucket so repeated identical failures (an accept loop in an error
+//! storm, say) emit a bounded number of lines per window with a
+//! `suppressed=N` count on the next emitted line, instead of flooding
+//! stderr.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Severity, lowest to highest. The global threshold drops everything
+/// below it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse a `--log-level` argument.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static JSON: AtomicBool = AtomicBool::new(false);
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Switch the process to JSON log lines (`--log-json`).
+pub fn set_json(on: bool) {
+    JSON.store(on, Ordering::Relaxed);
+}
+
+pub fn json() -> bool {
+    JSON.load(Ordering::Relaxed)
+}
+
+/// Set the global severity threshold (`--log-level`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a line at `level` be emitted right now?
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Milliseconds since the unix epoch (wall clock — log lines are for
+/// humans and collectors, not for latency math; spans use `Instant`).
+pub fn now_unix_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+fn escape_json(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Is `v` already a valid bare JSON token (integer)? Numeric fields —
+/// request ids above all — are emitted unquoted so collectors see
+/// numbers, and so `"id":42` matches the SSE done event's spelling.
+fn bare_number(v: &str) -> bool {
+    !v.is_empty() && v.len() <= 19 && v.bytes().all(|b| b.is_ascii_digit())
+}
+
+/// Render one log line (no trailing newline). Pure — the unit under
+/// test; [`emit`] adds the clock and the stderr write.
+pub fn format_line(
+    json: bool,
+    ts_ms: u64,
+    level: Level,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, String)],
+) -> String {
+    let mut out = String::with_capacity(96);
+    if json {
+        out.push_str("{\"ts\":");
+        out.push_str(&ts_ms.to_string());
+        out.push_str(",\"level\":\"");
+        out.push_str(level.name());
+        out.push_str("\",\"target\":\"");
+        escape_json(target, &mut out);
+        out.push_str("\",\"msg\":\"");
+        escape_json(msg, &mut out);
+        out.push('"');
+        for (k, v) in fields {
+            out.push_str(",\"");
+            escape_json(k, &mut out);
+            out.push_str("\":");
+            if bare_number(v) {
+                out.push_str(v);
+            } else {
+                out.push('"');
+                escape_json(v, &mut out);
+                out.push('"');
+            }
+        }
+        out.push('}');
+    } else {
+        use std::fmt::Write as _;
+        let _ = write!(out, "ts={ts_ms} level={} target={target}", level.name());
+        let _ = write!(out, " msg={}", quote_text(msg));
+        for (k, v) in fields {
+            let _ = write!(out, " {k}={}", quote_text(v));
+        }
+    }
+    out
+}
+
+/// Keyed-text value: bare when it has no spaces/quotes, double-quoted
+/// (with `"` and `\` escaped) otherwise.
+fn quote_text(v: &str) -> String {
+    if !v.is_empty() && !v.contains([' ', '"', '\\', '\n', '\t', '=']) {
+        return v.to_string();
+    }
+    let mut out = String::with_capacity(v.len() + 2);
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Emit one line to stderr if `level` clears the threshold.
+pub fn emit(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!("{}", format_line(json(), now_unix_ms(), level, target, msg, fields));
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Debug, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Info, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Warn, target, msg, fields);
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Error, target, msg, fields);
+}
+
+/// Per-call-site emission budget: at most `max` lines per `window_secs`
+/// wall-clock window; excess calls are counted, and the count is handed
+/// to the next allowed call as a `suppressed` figure. Const-
+/// constructible so a call site owns its limiter as a `static`.
+///
+/// Counters are relaxed — under a race a window may emit one line more
+/// or fewer than the budget, which is exactly as much precision as
+/// flood control needs.
+pub struct RateLimit {
+    max: u64,
+    window_secs: u64,
+    window: AtomicU64,
+    emitted: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl RateLimit {
+    pub const fn new(max: u64, window_secs: u64) -> RateLimit {
+        RateLimit {
+            max,
+            window_secs: if window_secs == 0 { 1 } else { window_secs },
+            window: AtomicU64::new(0),
+            emitted: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+
+    /// May this call emit? `Some(n)` = yes, with `n` calls suppressed
+    /// since the last allowed one; `None` = over budget, stay silent.
+    pub fn allow(&self) -> Option<u64> {
+        self.allow_at(now_unix_ms() / 1000)
+    }
+
+    /// [`RateLimit::allow`] at an explicit clock (tests).
+    pub fn allow_at(&self, now_secs: u64) -> Option<u64> {
+        let w = now_secs / self.window_secs;
+        if self.window.swap(w, Ordering::Relaxed) != w {
+            self.emitted.store(0, Ordering::Relaxed);
+        }
+        if self.emitted.fetch_add(1, Ordering::Relaxed) < self.max {
+            Some(self.suppressed.swap(0, Ordering::Relaxed))
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_line_quotes_only_when_needed() {
+        let line = format_line(
+            false,
+            1000,
+            Level::Warn,
+            "gateway",
+            "accept error",
+            &[("err", "too many files".to_string()), ("id", "42".to_string())],
+        );
+        assert_eq!(line, "ts=1000 level=warn target=gateway msg=\"accept error\" err=\"too many files\" id=42");
+    }
+
+    #[test]
+    fn json_line_escapes_and_keeps_numbers_bare() {
+        let line = format_line(
+            true,
+            1000,
+            Level::Info,
+            "gateway",
+            "request done",
+            &[("id", "42".to_string()), ("note", "a\"b\\c\n".to_string())],
+        );
+        assert_eq!(
+            line,
+            "{\"ts\":1000,\"level\":\"info\",\"target\":\"gateway\",\
+             \"msg\":\"request done\",\"id\":42,\"note\":\"a\\\"b\\\\c\\n\"}"
+        );
+    }
+
+    #[test]
+    fn level_threshold_filters() {
+        // process-global switches: restore around the assertion
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn rate_limit_bounds_a_window_and_reports_suppression() {
+        let rl = RateLimit::new(2, 1);
+        assert_eq!(rl.allow_at(100), Some(0));
+        assert_eq!(rl.allow_at(100), Some(0));
+        assert_eq!(rl.allow_at(100), None);
+        assert_eq!(rl.allow_at(100), None);
+        // next window: allowed again, carrying the suppressed count
+        assert_eq!(rl.allow_at(101), Some(2));
+        assert_eq!(rl.allow_at(101), Some(0));
+        assert_eq!(rl.allow_at(101), None);
+    }
+
+    #[test]
+    fn level_parse_round_trips() {
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+        assert_eq!(Level::parse("chatty"), None);
+    }
+}

@@ -6,6 +6,8 @@ pub mod affinity;
 pub mod benchkit;
 pub mod caps;
 pub mod cli;
+pub mod log;
 pub mod mmap;
 pub mod ptest;
 pub mod rng;
+pub mod trace;

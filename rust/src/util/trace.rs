@@ -1,0 +1,287 @@
+//! Per-request span tracing for the serving stack.
+//!
+//! Every request gets its ID at the gateway (`Shared::next_id`); the
+//! serve loop and the tick lanes record **spans** — (request, stage,
+//! lane, start, duration) tuples — into a [`TraceHub`] as the sequence
+//! moves through admission, prefill chunks, decode ticks, sampling and
+//! state park/resume. `GET /admin/trace/{id}` dumps a request's spans
+//! after (or while) it runs, so a slow request can be broken down into
+//! its stages without a debugger or a rebuild.
+//!
+//! Design constraints, in order:
+//!
+//! * **Disabled means free.** The hub starts disabled; every record
+//!   site checks one relaxed [`AtomicBool`] before touching a clock or
+//!   a lock, so the instrumentation can be compiled in everywhere and
+//!   switched off (`--no-trace`) at a cost of one load per site
+//!   (`perf_hotpath` measures both states).
+//! * **Lock-cheap when enabled.** Spans land in per-lane ring-buffer
+//!   shards: each tick lane writes to its own shard's mutex, so lanes
+//!   never contend with each other — only with a concurrent
+//!   `/admin/trace` reader, which is rare and O(ring).
+//! * **Bounded memory.** Each shard is a fixed [`RING_SPANS`]-slot ring;
+//!   old spans are overwritten, never reallocated. A trace dump is a
+//!   recent-history view, not an unbounded log.
+//!
+//! Recording never changes tokens — spans are pure clock reads around
+//! the existing code paths (the twin tests run with tracing enabled to
+//! prove it).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Lane number used for spans recorded by the serve/control thread
+/// itself (admission, park, resume) rather than a tick lane.
+pub const CONTROL_LANE: u32 = u32::MAX;
+
+/// Spans kept per shard before the ring wraps.
+pub const RING_SPANS: usize = 4096;
+
+/// Tick-lane shards; lane `n` writes shard `n % LANE_SHARDS`, the
+/// control lane has its own shard on top.
+const LANE_SHARDS: usize = 16;
+
+/// What a span measures. `name()` is the wire spelling used by the
+/// trace endpoint and the docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Arrival → admission into the active set (the bounded-queue wait).
+    Queue,
+    /// One prefill tick: up to `prefill_chunk` prompt tokens consumed.
+    Prefill,
+    /// One decode tick: state load + token step + state save
+    /// (sampling excluded — that is its own [`Stage::Sample`] span, so
+    /// per-stage durations add without double counting).
+    Decode,
+    /// Drawing one token through the stochastic sampler.
+    Sample,
+    /// Evicting this sequence's state slab to a heap snapshot.
+    Park,
+    /// Copying a parked snapshot back into an arena slab.
+    Resume,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+            Stage::Sample => "sample",
+            Stage::Park => "park",
+            Stage::Resume => "resume",
+        }
+    }
+}
+
+/// Coarse position of an in-flight sequence, for `GET /admin/inflight`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqStage {
+    /// Still consuming its prompt.
+    Prefill,
+    /// Generating tokens.
+    Decode,
+    /// State evicted to a heap snapshot (no arena slab).
+    Parked,
+}
+
+impl SeqStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            SeqStage::Prefill => "prefill",
+            SeqStage::Decode => "decode",
+            SeqStage::Parked => "parked",
+        }
+    }
+}
+
+/// One recorded interval. Timestamps are microseconds since the hub's
+/// construction (one shared epoch, so spans from different lanes
+/// order and subtract correctly).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub request: u64,
+    pub stage: Stage,
+    /// Tick lane that did the work, or [`CONTROL_LANE`].
+    pub lane: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Fixed-capacity overwrite-oldest span buffer.
+struct Ring {
+    spans: Vec<Span>,
+    next: usize,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { spans: Vec::new(), next: 0 }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.spans.len() < RING_SPANS {
+            self.spans.push(s);
+        } else {
+            self.spans[self.next] = s;
+            self.next = (self.next + 1) % RING_SPANS;
+        }
+    }
+}
+
+/// The span sink: one per metrics registry (per model in fleet mode),
+/// shared by the serve loop, the tick lanes and the trace endpoint.
+pub struct TraceHub {
+    enabled: AtomicBool,
+    epoch: Instant,
+    /// `LANE_SHARDS` tick-lane shards plus one control shard.
+    shards: Vec<Mutex<Ring>>,
+}
+
+impl Default for TraceHub {
+    fn default() -> TraceHub {
+        TraceHub::new()
+    }
+}
+
+impl TraceHub {
+    /// A disabled hub — recording is a no-op until [`TraceHub::set_enabled`].
+    pub fn new() -> TraceHub {
+        TraceHub {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            shards: (0..LANE_SHARDS + 1).map(|_| Mutex::new(Ring::new())).collect(),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The one check every record site makes first. Relaxed: a late or
+    /// early span around a toggle is harmless.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the hub epoch (saturating, monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn shard(&self, lane: u32) -> &Mutex<Ring> {
+        if lane == CONTROL_LANE {
+            &self.shards[LANE_SHARDS]
+        } else {
+            &self.shards[lane as usize % LANE_SHARDS]
+        }
+    }
+
+    /// Record one span. No-op while disabled; callers on hot paths
+    /// should still gate their clock reads on [`TraceHub::enabled`].
+    pub fn record(&self, request: u64, stage: Stage, lane: u32, start_us: u64, dur: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        let span = Span { request, stage, lane, start_us, dur_us: dur.as_micros() as u64 };
+        self.shard(lane).lock().unwrap_or_else(|e| e.into_inner()).push(span);
+    }
+
+    /// [`TraceHub::record`] from an [`Instant`] taken at span start.
+    pub fn record_at(&self, request: u64, stage: Stage, lane: u32, start: Instant, dur: Duration) {
+        // saturating: an Instant taken before the hub existed maps to 0
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.record(request, stage, lane, start_us, dur);
+    }
+
+    /// Every retained span for `request`, across all shards, in start
+    /// order. O(total ring occupancy) — an admin-endpoint cost.
+    pub fn spans_for(&self, request: u64) -> Vec<Span> {
+        let mut out: Vec<Span> = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(ring.spans.iter().filter(|s| s.request == request).copied());
+        }
+        out.sort_by_key(|s| (s.start_us, s.dur_us));
+        out
+    }
+
+    /// Total retained spans (tests and capacity checks).
+    pub fn span_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).spans.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hub_records_nothing() {
+        let hub = TraceHub::new();
+        hub.record(1, Stage::Decode, 0, 10, Duration::from_micros(5));
+        assert_eq!(hub.span_count(), 0);
+        hub.set_enabled(true);
+        hub.record(1, Stage::Decode, 0, 10, Duration::from_micros(5));
+        assert_eq!(hub.span_count(), 1);
+    }
+
+    #[test]
+    fn spans_for_merges_lanes_in_start_order() {
+        let hub = TraceHub::new();
+        hub.set_enabled(true);
+        hub.record(7, Stage::Decode, 3, 200, Duration::from_micros(10));
+        hub.record(7, Stage::Queue, CONTROL_LANE, 0, Duration::from_micros(50));
+        hub.record(8, Stage::Decode, 3, 210, Duration::from_micros(10));
+        hub.record(7, Stage::Prefill, 1, 60, Duration::from_micros(100));
+        let spans = hub.spans_for(7);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].stage, Stage::Queue);
+        assert_eq!(spans[1].stage, Stage::Prefill);
+        assert_eq!(spans[2].stage, Stage::Decode);
+        assert!(spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+    }
+
+    #[test]
+    fn request_id_survives_park_resume_cycle() {
+        // a sequence that parks and resumes keeps one request id across
+        // every stage — the trace endpoint's join key
+        let hub = TraceHub::new();
+        hub.set_enabled(true);
+        let id = 42u64;
+        hub.record(id, Stage::Queue, CONTROL_LANE, 0, Duration::from_micros(5));
+        hub.record(id, Stage::Prefill, 0, 10, Duration::from_micros(30));
+        hub.record(id, Stage::Park, CONTROL_LANE, 50, Duration::from_micros(2));
+        hub.record(id, Stage::Resume, CONTROL_LANE, 90, Duration::from_micros(2));
+        hub.record(id, Stage::Decode, 1, 95, Duration::from_micros(20));
+        let spans = hub.spans_for(id);
+        assert_eq!(spans.len(), 5);
+        assert!(spans.iter().all(|s| s.request == id));
+        // park/resume bracket the lane change
+        let stages: Vec<Stage> = spans.iter().map(|s| s.stage).collect();
+        assert_eq!(
+            stages,
+            [Stage::Queue, Stage::Prefill, Stage::Park, Stage::Resume, Stage::Decode]
+        );
+    }
+
+    #[test]
+    fn ring_wraps_at_capacity_dropping_oldest() {
+        let hub = TraceHub::new();
+        hub.set_enabled(true);
+        // everything on one lane → one shard exercises the wrap
+        for i in 0..(RING_SPANS + 16) as u64 {
+            hub.record(i, Stage::Decode, 2, i, Duration::from_micros(1));
+        }
+        assert_eq!(hub.span_count(), RING_SPANS);
+        // the 16 oldest requests were overwritten, the newest retained
+        assert!(hub.spans_for(0).is_empty());
+        assert!(hub.spans_for(15).is_empty());
+        assert_eq!(hub.spans_for(16).len(), 1);
+        assert_eq!(hub.spans_for((RING_SPANS + 15) as u64).len(), 1);
+    }
+}
